@@ -1,0 +1,118 @@
+//! End-to-end driver — the full stack on a real workload.
+//!
+//! Loads a real corpus (this repository's own Rust + Python sources),
+//! writes it to the cluster **three times** under distinct snapshot names
+//! (a classic backup workload — the second and third generations are pure
+//! duplicates), through the **XLA/Pallas fingerprint engine** when
+//! artifacts are available. Reports the paper's headline metrics —
+//! cluster-wide space savings, write bandwidth, per-server balance — then
+//! kills a server and proves every file is still readable (degraded
+//! reads), and finally audits the refcount invariant cluster-wide.
+//!
+//! Recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example e2e_cluster
+//! ```
+
+use snss_dedup::api::{Cluster, ClusterConfig, DedupMode, FingerprintBackend};
+use snss_dedup::cluster::ServerId;
+use snss_dedup::dedup::Chunking;
+use snss_dedup::workload::corpus;
+use std::time::Instant;
+
+fn main() {
+    println!("== e2e_cluster: real corpus, 3 backup generations, 6 servers ==");
+    let fingerprint = if std::path::Path::new("artifacts/manifest.tsv").exists() {
+        println!("fingerprint engine: XLA (AOT Pallas SHA-1 kernel)");
+        FingerprintBackend::Xla {
+            artifacts_dir: "artifacts".into(),
+        }
+    } else {
+        println!("fingerprint engine: scalar Rust SHA-1 (run `make artifacts` for XLA)");
+        FingerprintBackend::RustSha1
+    };
+
+    let cluster = Cluster::new(ClusterConfig {
+        servers: 6,
+        replication: 2,
+        dedup: DedupMode::ClusterWide,
+        chunking: Chunking::Fixed { size: 4096 },
+        fingerprint,
+        ..Default::default()
+    })
+    .expect("boot");
+    let client = cluster.client();
+
+    // real corpus: this repo's sources
+    let mut objects = corpus::load_dir("rust/src", 1 << 20).expect("load corpus");
+    objects.extend(corpus::load_dir("python", 1 << 20).expect("load python corpus"));
+    let corpus_bytes: u64 = objects.iter().map(|o| o.data.len() as u64).sum();
+    println!(
+        "corpus: {} files, {:.2} MiB",
+        objects.len(),
+        corpus_bytes as f64 / (1 << 20) as f64
+    );
+    assert!(objects.len() > 20, "corpus too small");
+
+    // three backup generations
+    let t0 = Instant::now();
+    for generation in 0..3 {
+        for obj in &objects {
+            let name = format!("backup{generation}/{}", obj.name);
+            client.put_object(&name, &obj.data).expect("put");
+        }
+    }
+    let dt = t0.elapsed();
+    cluster.flush_consistency().ok();
+
+    let stats = cluster.stats();
+    let logical_mib = stats.logical_bytes as f64 / (1 << 20) as f64;
+    println!(
+        "wrote {logical_mib:.2} MiB logical in {:.2}s -> {:.1} MiB/s",
+        dt.as_secs_f64(),
+        logical_mib / dt.as_secs_f64()
+    );
+    println!(
+        "stored {:.2} MiB unique -> savings {:.1}% (3 generations => >= 66.7% floor)",
+        stats.stored_bytes as f64 / (1 << 20) as f64,
+        stats.savings() * 100.0
+    );
+    let per: Vec<u64> = stats.per_server.iter().map(|s| s.bytes_stored >> 10).collect();
+    println!("per-server KiB: {per:?}");
+    assert!(
+        stats.savings() > 0.60,
+        "three identical generations must dedup: {}",
+        stats.savings()
+    );
+
+    // spot-verify readback
+    for obj in objects.iter().take(25) {
+        let back = client.get_object(&format!("backup1/{}", obj.name)).expect("get");
+        assert_eq!(back, obj.data, "{}", obj.name);
+    }
+    println!("readback spot-check (25 files) OK");
+
+    // kill a server; every generation-2 file must still be readable
+    cluster.kill_server(ServerId(2)).expect("kill");
+    let mut degraded_ok = 0usize;
+    for obj in objects.iter() {
+        let back = client
+            .get_object(&format!("backup2/{}", obj.name))
+            .expect("degraded get");
+        assert_eq!(back, obj.data, "{}", obj.name);
+        degraded_ok += 1;
+    }
+    println!("degraded reads with osd.2 dead: {degraded_ok}/{} files OK", objects.len());
+    cluster.restart_server(ServerId(2)).expect("restart");
+    cluster.flush_consistency().ok();
+
+    let audit = cluster.audit().expect("audit");
+    assert!(audit.is_ok(), "audit violations: {:?}", audit.violations);
+    println!(
+        "audit: {} fingerprints, {} references, OK",
+        audit.fingerprints, audit.references
+    );
+    cluster.shutdown();
+    println!("e2e_cluster OK");
+}

@@ -1,0 +1,79 @@
+//! Quickstart: boot a cluster, write duplicated objects, read them back,
+//! inspect savings — with both fingerprint engines (scalar Rust SHA-1 and
+//! the AOT Pallas kernel through PJRT when `artifacts/` is present).
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use snss_dedup::api::{Cluster, ClusterConfig, DedupMode, FingerprintBackend};
+use snss_dedup::dedup::Chunking;
+use snss_dedup::workload::{Generator, WorkloadSpec};
+use std::time::Instant;
+
+fn run(label: &str, fingerprint: FingerprintBackend) {
+    let cluster = Cluster::new(ClusterConfig {
+        servers: 4,
+        replication: 2,
+        dedup: DedupMode::ClusterWide,
+        chunking: Chunking::Fixed { size: 4096 },
+        fingerprint,
+        ..Default::default()
+    })
+    .expect("boot cluster");
+    let client = cluster.client();
+
+    // a 25%-duplicate workload of 16 x 1 MiB objects
+    let gen = Generator::new(WorkloadSpec {
+        object_size: 1 << 20,
+        unit: 4096,
+        dedup_pct: 25,
+        pool_blocks: 64,
+        ..Default::default()
+    });
+
+    let t0 = Instant::now();
+    for i in 0..16 {
+        let (name, data) = gen.named_object(i);
+        client.put_object(&name, &data).expect("put");
+    }
+    let write_dt = t0.elapsed();
+
+    // read everything back and verify
+    for i in 0..16 {
+        let (name, data) = gen.named_object(i);
+        assert_eq!(client.get_object(&name).expect("get"), data, "readback {name}");
+    }
+
+    cluster.flush_consistency().ok();
+    let stats = cluster.stats();
+    let audit = cluster.audit().expect("audit");
+    println!(
+        "[{label:<10}] wrote {} MiB in {:>6.1} ms ({:>7.1} MiB/s) | savings {:>4.1}% | \
+         dedup hits {:>4} | audit {}",
+        stats.logical_bytes >> 20,
+        write_dt.as_secs_f64() * 1e3,
+        (stats.logical_bytes as f64 / (1 << 20) as f64) / write_dt.as_secs_f64(),
+        stats.savings() * 100.0,
+        stats.dedup_hits,
+        if audit.is_ok() { "OK" } else { "VIOLATIONS" }
+    );
+    assert!(audit.is_ok(), "{:?}", audit.violations);
+    cluster.shutdown();
+}
+
+fn main() {
+    println!("== quickstart: 4-server cluster-wide dedup ==");
+    run("rust-sha1", FingerprintBackend::RustSha1);
+    if std::path::Path::new("artifacts/manifest.tsv").exists() {
+        run(
+            "xla-pallas",
+            FingerprintBackend::Xla {
+                artifacts_dir: "artifacts".into(),
+            },
+        );
+    } else {
+        println!("[xla-pallas] skipped: run `make artifacts` first");
+    }
+    println!("quickstart OK");
+}

@@ -1,0 +1,104 @@
+"""AOT pipeline: lower the Layer-2 model to HLO *text* artifacts.
+
+Python runs exactly once (``make artifacts``); the Rust coordinator loads
+``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and executes
+them on the PJRT CPU client.  HLO text — not ``.serialize()`` — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are accompanied by ``artifacts/manifest.tsv`` with one line per
+artifact::
+
+    name\tkind\tbatch\tchunk_bytes\ttile\tmask\tfile
+
+which the Rust runtime parses to pick the right executable for a request
+shape (no serde dependency on either side — plain TSV).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, batch, chunk_bytes, tile) fingerprint variants.  The default hot
+# path is fp_b64_c4096; the larger-chunk variants serve the paper's
+# 64KB-512KB sweep (Fig. 4a) in batched form.
+FP_VARIANTS = [
+    ("fp_b64_c4096", 64, 4096, 16),
+    ("fp_b32_c8192", 32, 8192, 16),
+    ("fp_b16_c65536", 16, 65536, 8),
+]
+
+# (name, batch, n_bytes, mask) gear-hash CDC variants.  mask 0x1FFF ~ 8KB
+# mean chunk size.
+GEAR_VARIANTS = [
+    ("gear_b4_n65536", 4, 65536, 0x1FFF),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fingerprint(batch: int, chunk_bytes: int, tile: int) -> str:
+    spec = jax.ShapeDtypeStruct((batch, chunk_bytes // 4), jnp.uint32)
+    fn = lambda w: model.fingerprint_pipeline(w, tile=tile)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_gear(batch: int, n_bytes: int, mask: int) -> str:
+    spec = jax.ShapeDtypeStruct((batch, n_bytes), jnp.uint32)
+    fn = lambda d: (model.gear_boundaries(d, mask),)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="build a single named variant")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for name, batch, chunk_bytes, tile in FP_VARIANTS:
+        if args.only and name != args.only:
+            continue
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = lower_fingerprint(batch, chunk_bytes, tile)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append((name, "fingerprint", batch, chunk_bytes, tile, 0, f"{name}.hlo.txt"))
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for name, batch, n_bytes, mask in GEAR_VARIANTS:
+        if args.only and name != args.only:
+            continue
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = lower_gear(batch, n_bytes, mask)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append((name, "gear", batch, n_bytes, 0, mask, f"{name}.hlo.txt"))
+        print(f"wrote {path} ({len(text)} chars)")
+
+    if not args.only:
+        with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+            f.write("# name\tkind\tbatch\tchunk_bytes\ttile\tmask\tfile\n")
+            for row in manifest:
+                f.write("\t".join(str(x) for x in row) + "\n")
+        print(f"wrote {os.path.join(args.out_dir, 'manifest.tsv')} ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Layer-1 Pallas kernel: gear-hash rolling fingerprint for CDC.
+
+Content-defined chunking (CDC) is the standard alternative to the paper's
+fixed-size chunking ("small fixed or variable chunk-based transactions",
+§1); the Rust chunker exposes both, and this kernel is the accelerated
+boundary scan for the variable-size mode.
+
+The gear hash is a linear scan ``h = (h << 1) + GEAR[byte]``; byte ``i`` is
+a cut-point *candidate* when ``h & mask == 0``.  Because ``<<`` discards
+high bits, ``h_i`` depends only on the trailing 32 bytes — so the scan
+parallelizes into 32 shifted gather-adds, which is how we map a seemingly
+sequential recurrence onto the TPU VPU (each lane processes a different
+stream position; no cross-lane dependency remains).
+
+The kernel emits the dense candidate bitmap; min/max chunk-size enforcement
+is inherently sequential and cheap, so it stays in the Rust coordinator
+(``dedup::chunker``), exactly as a GPU implementation would leave it on the
+host.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _gear_kernel(x_ref, table_ref, o_ref, *, mask: int):
+    """Kernel body: candidate bitmap over one [TILE, n] uint32 byte tile.
+
+    ``x_ref`` holds the payload as uint32 (one byte per element — the CPU
+    interpret path and the xla crate's literal API are friendliest to
+    32-bit lanes; a real Mosaic build would pack 4 bytes/lane).
+    ``table_ref`` is the 256-entry gear table, VMEM-resident for the whole
+    grid (Pallas requires captured constants to be explicit inputs).
+    """
+    data = x_ref[...]
+    tile, n = data.shape
+    table = table_ref[...]
+    g = table[data.astype(jnp.int32)]
+    acc = jnp.zeros((tile, n), dtype=jnp.uint32)
+    for back in range(32):
+        shifted = g << back
+        if back:
+            shifted = jnp.pad(shifted, ((0, 0), (back, 0)))[:, :n]
+        acc = acc + shifted
+    o_ref[...] = ((acc & jnp.uint32(mask)) == 0).astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("mask",))
+def gearhash_pallas(data: jnp.ndarray, mask: int) -> jnp.ndarray:
+    """CDC boundary candidates via the Pallas kernel.
+
+    ``data``: uint32[batch, n] with one payload byte per element.
+    Returns uint32[batch, n] — 1 where ``gear_hash & mask == 0``.
+    Bit-equal to ``ref.gearhash_boundaries_ref``.
+    """
+    batch, n = data.shape
+    kernel = functools.partial(_gear_kernel, mask=mask)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((batch, n), lambda i: (0, 0)),
+            pl.BlockSpec((256,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((batch, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n), jnp.uint32),
+        interpret=True,
+    )(data, jnp.asarray(ref.GEAR))

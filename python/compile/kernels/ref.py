@@ -1,0 +1,173 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must produce bit-identical results to the functions here, and the SHA-1
+reference itself is validated against :mod:`hashlib` in the pytest suite.
+
+All functions operate on *batched, fixed-size* chunks: the AOT pipeline
+compiles one HLO artifact per (batch, chunk_size) shape, so shapes are
+static by construction.
+
+Data layout
+-----------
+A chunk of ``chunk_bytes`` bytes is packed big-endian into ``chunk_bytes //
+4`` uint32 words (SHA-1 is defined over big-endian words).  A batch is a
+``[batch, chunk_bytes // 4]`` uint32 array.  Digests are ``[batch, 5]``
+uint32 arrays (the 5 SHA-1 state words, big-endian order).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# SHA-1 round constants (one per 20-round stage).
+K = (0x5A827999, 0x6ED9EBA1, 0x8F1BBCDC, 0xCA62C1D6)
+
+# SHA-1 initial state.
+H0 = (0x67452301, 0xEFCDAB89, 0x98BADCFE, 0x10325476, 0xC3D2E1F0)
+
+
+def gear_table() -> np.ndarray:
+    """256-entry uint32 gear table derived from splitmix64(seed=golden).
+
+    Deterministically derived so the Rust implementation
+    (``rust/src/dedup/chunker.rs``) regenerates the identical table.
+    """
+    out = np.zeros(256, dtype=np.uint64)
+    x = np.uint64(0x9E3779B97F4A7C15)
+    mask64 = np.uint64(0xFFFFFFFFFFFFFFFF)
+    with np.errstate(over="ignore"):
+        for i in range(256):
+            x = (x + np.uint64(0x9E3779B97F4A7C15)) & mask64
+            z = x
+            z = ((z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)) & mask64
+            z = ((z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)) & mask64
+            z = z ^ (z >> np.uint64(31))
+            out[i] = z
+    return (out & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+
+
+GEAR = gear_table()
+
+
+def rotl(x, n: int):
+    """Rotate-left on uint32 lanes."""
+    n = n % 32
+    if n == 0:
+        return x
+    return (x << n) | (x >> (32 - n))
+
+
+def pack_chunks(data: bytes, chunk_bytes: int) -> np.ndarray:
+    """Pack raw bytes into a [batch, chunk_bytes//4] big-endian uint32 array.
+
+    ``data`` is zero-padded up to a whole number of chunks.  This mirrors
+    the packing the Rust runtime performs before invoking the AOT artifact.
+    """
+    if chunk_bytes % 64 != 0:
+        raise ValueError("chunk_bytes must be a multiple of 64")
+    n = (len(data) + chunk_bytes - 1) // chunk_bytes
+    n = max(n, 1)
+    buf = np.zeros(n * chunk_bytes, dtype=np.uint8)
+    buf[: len(data)] = np.frombuffer(data, dtype=np.uint8)
+    words = buf.reshape(n, chunk_bytes // 4, 4)
+    w = (
+        words[..., 0].astype(np.uint32) << 24
+        | words[..., 1].astype(np.uint32) << 16
+        | words[..., 2].astype(np.uint32) << 8
+        | words[..., 3].astype(np.uint32)
+    )
+    return w
+
+
+def _compress(state, block):
+    """One SHA-1 compression over a batch: state 5x[batch], block 16x[batch]."""
+    w = list(block)
+    a, b, c, d, e = state
+    for t in range(80):
+        if t >= 16:
+            wt = rotl(w[(t - 3) % 16] ^ w[(t - 8) % 16] ^ w[(t - 14) % 16] ^ w[t % 16], 1)
+            w[t % 16] = wt
+        else:
+            wt = w[t]
+        if t < 20:
+            f = (b & c) | ((jnp.uint32(0xFFFFFFFF) ^ b) & d)
+            k = K[0]
+        elif t < 40:
+            f = b ^ c ^ d
+            k = K[1]
+        elif t < 60:
+            f = (b & c) | (b & d) | (c & d)
+            k = K[2]
+        else:
+            f = b ^ c ^ d
+            k = K[3]
+        tmp = rotl(a, 5) + f + e + jnp.uint32(k) + wt
+        e, d, c, b, a = d, c, rotl(b, 30), a, tmp
+    return (
+        state[0] + a,
+        state[1] + b,
+        state[2] + c,
+        state[3] + d,
+        state[4] + e,
+    )
+
+
+def sha1_ref(words: jnp.ndarray) -> jnp.ndarray:
+    """Batched SHA-1 over fixed-size chunks; pure-jnp oracle.
+
+    ``words``: uint32[batch, n_words] big-endian packed chunk contents,
+    where ``n_words * 4`` is the chunk size in bytes (multiple of 64).
+    Returns uint32[batch, 5] digests, identical to ``hashlib.sha1`` over
+    the corresponding ``n_words * 4``-byte messages.
+
+    The (constant) padding block for a ``c``-byte message with ``c % 64 ==
+    0`` is ``0x80000000, 0...0, bitlen_hi, bitlen_lo``.
+    """
+    batch, n_words = words.shape
+    if n_words % 16 != 0:
+        raise ValueError("n_words must be a multiple of 16")
+    n_blocks = n_words // 16
+    bitlen = n_words * 4 * 8
+
+    state = tuple(jnp.full((batch,), h, dtype=jnp.uint32) for h in H0)
+    for blk in range(n_blocks):
+        block = tuple(words[:, blk * 16 + i] for i in range(16))
+        state = _compress(state, block)
+    pad = [jnp.full((batch,), 0x80000000, dtype=jnp.uint32)] + [
+        jnp.zeros((batch,), dtype=jnp.uint32) for _ in range(13)
+    ]
+    pad.append(jnp.full((batch,), (bitlen >> 32) & 0xFFFFFFFF, dtype=jnp.uint32))
+    pad.append(jnp.full((batch,), bitlen & 0xFFFFFFFF, dtype=jnp.uint32))
+    state = _compress(state, tuple(pad))
+    return jnp.stack(state, axis=1)
+
+
+def gearhash_boundaries_ref(data: jnp.ndarray, mask: int) -> jnp.ndarray:
+    """Gear-hash CDC boundary detector; pure-jnp oracle.
+
+    ``data``: uint8[batch, n] chunk payloads.  The gear hash is the linear
+    scan ``h = (h << 1) + GEAR[byte]`` (uint32 wraparound); position ``i``
+    is a cut-point candidate iff ``h_i & mask == 0`` after absorbing byte
+    ``i``.  Returns uint32[batch, n] with 1 at candidate positions.
+
+    Uses a windowed formulation: ``h_i = sum_j GEAR[b_j] << (i-j)``
+    truncated to uint32 — only the last 32 bytes contribute, so the hash is
+    a stack of 32 shifted contributions (bit-exact vs the sequential
+    definition because ``<<`` drops high bits).
+    """
+    batch, n = data.shape
+    g = jnp.asarray(GEAR)[data.astype(jnp.int32)]  # uint32[batch, n]
+    acc = jnp.zeros((batch, n), dtype=jnp.uint32)
+    for back in range(32):
+        shifted = g << back
+        rolled = jnp.pad(shifted, ((0, 0), (back, 0)))[:, :n] if back else shifted
+        acc = acc + rolled
+    hits = (acc & jnp.uint32(mask)) == 0
+    return hits.astype(jnp.uint32)
+
+
+def sha1_hex(digest_row) -> str:
+    """Format one uint32[5] digest row as the canonical 40-char hex string."""
+    return "".join(f"{int(w) & 0xFFFFFFFF:08x}" for w in digest_row)

@@ -1,0 +1,66 @@
+"""Layer-2 JAX compute graph: the fingerprint + dedup-preprocessing model.
+
+This is the full build-time computation the Rust coordinator invokes on its
+hot path (per batch of chunks), lowered once by :mod:`compile.aot`:
+
+``fingerprint_pipeline``
+    1. SHA-1 digest per chunk (the Pallas kernel, :mod:`kernels.sha1`);
+    2. intra-batch duplicate detection: for every chunk, the index of the
+       first batch row with an identical digest.  The coordinator uses this
+       to collapse duplicates *before* issuing CIT lookups over the
+       (simulated) network — a batch-local form of the paper's cluster-wide
+       dedup that removes redundant fingerprint-lookup I/Os;
+    3. placement bucket per chunk: the first digest word, which the Rust
+       side feeds to the CRUSH-like straw2 placement (content-based
+       placement, §2.3 of the paper).
+
+``gear_boundaries``
+    CDC cut-point candidate bitmap (the gear-hash Pallas kernel) for the
+    variable-size chunking mode.
+
+Everything here is shape-static; one HLO artifact is produced per
+(batch, chunk_bytes) variant listed in :data:`compile.aot.VARIANTS`.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import sha1 as sha1_kernel
+from .kernels import gearhash as gear_kernel
+
+
+def intra_batch_first_index(digests: jnp.ndarray) -> jnp.ndarray:
+    """For each row of uint32[batch, 5] digests, the first row with an
+    identical digest (``first[i] <= i``; unique rows map to themselves).
+
+    O(batch^2) word comparisons — for the hot-path batch sizes (<=128)
+    this is far cheaper than a device sort and fuses into a handful of
+    XLA ops.
+    """
+    batch = digests.shape[0]
+    eq = (digests[:, None, :] == digests[None, :, :]).all(axis=-1)  # [b, b]
+    lower = jnp.tril(jnp.ones((batch, batch), dtype=bool))
+    eq = eq & lower
+    idx = jnp.arange(batch, dtype=jnp.int32)[None, :]
+    big = jnp.full((batch, batch), batch, dtype=jnp.int32)
+    first = jnp.where(eq, idx, big).min(axis=1)
+    return first.astype(jnp.int32)
+
+
+def fingerprint_pipeline(words: jnp.ndarray, tile: int = 0):
+    """Digest + first-duplicate-index + placement bucket for one batch.
+
+    ``words``: uint32[batch, chunk_bytes//4] big-endian packed chunks.
+    Returns ``(digests u32[batch,5], first_idx i32[batch],
+    bucket u32[batch])``.
+    """
+    digests = sha1_kernel.sha1_pallas(words, tile=tile)
+    first = intra_batch_first_index(digests)
+    bucket = digests[:, 0]
+    return digests, first, bucket
+
+
+def gear_boundaries(data: jnp.ndarray, mask: int) -> jnp.ndarray:
+    """CDC cut-point candidates; see :func:`kernels.gearhash.gearhash_pallas`."""
+    return gear_kernel.gearhash_pallas(data, mask)

@@ -1,0 +1,83 @@
+"""Gear-hash CDC kernel vs ref vs sequential scalar definition."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, gearhash
+
+
+def sequential_gear(buf: np.ndarray, mask: int) -> np.ndarray:
+    """The scalar definition: h = (h << 1) + GEAR[b]; hit iff h & mask == 0."""
+    out = np.zeros(buf.shape, dtype=np.uint32)
+    with np.errstate(over="ignore"):
+        for b in range(buf.shape[0]):
+            h = np.uint64(0)
+            for i in range(buf.shape[1]):
+                h = (h << np.uint64(1)) + np.uint64(ref.GEAR[buf[b, i]])
+                h &= np.uint64(0xFFFFFFFF)
+                out[b, i] = 1 if (h & np.uint64(mask)) == 0 else 0
+    return out
+
+
+class TestGearTable:
+    def test_table_shape_and_determinism(self):
+        t1, t2 = ref.gear_table(), ref.gear_table()
+        assert t1.shape == (256,) and t1.dtype == np.uint32
+        np.testing.assert_array_equal(t1, t2)
+
+    def test_table_known_first_entries(self):
+        # Pinned values so the Rust reimplementation can assert the same
+        # constants (see rust/src/hash/gear.rs tests).
+        t = ref.gear_table()
+        assert int(t[0]) == 0xA1B965F4
+        assert int(t[255]) == 0xB7C7534D
+
+    def test_table_entropy(self):
+        t = ref.gear_table()
+        assert len(np.unique(t)) == 256  # no collisions in 256 draws
+
+
+class TestRefOracle:
+    @pytest.mark.parametrize("mask", [0x0F, 0xFF, 0x1FFF])
+    def test_matches_sequential(self, mask):
+        rng = np.random.default_rng(mask)
+        buf = rng.integers(0, 256, size=(3, 300), dtype=np.uint8)
+        got = np.asarray(ref.gearhash_boundaries_ref(jnp.asarray(buf), mask))
+        np.testing.assert_array_equal(got, sequential_gear(buf, mask))
+
+    def test_zero_mask_all_hits(self):
+        buf = np.zeros((1, 10), dtype=np.uint8)
+        got = np.asarray(ref.gearhash_boundaries_ref(jnp.asarray(buf), 0))
+        assert (got == 1).all()
+
+
+class TestPallasKernel:
+    @pytest.mark.parametrize("batch,n,mask", [(1, 64, 0x0F), (4, 1024, 0xFF), (2, 4096, 0x1FF)])
+    def test_matches_ref(self, batch, n, mask):
+        rng = np.random.default_rng(n + mask)
+        buf = rng.integers(0, 256, size=(batch, n), dtype=np.uint8)
+        got = np.asarray(gearhash.gearhash_pallas(jnp.asarray(buf, dtype=jnp.uint32), mask))
+        exp = np.asarray(ref.gearhash_boundaries_ref(jnp.asarray(buf), mask))
+        np.testing.assert_array_equal(got, exp)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(min_value=33, max_value=512),
+        mask=st.sampled_from([0x07, 0x3F, 0x1FF]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, n, mask, seed):
+        rng = np.random.default_rng(seed)
+        buf = rng.integers(0, 256, size=(2, n), dtype=np.uint8)
+        got = np.asarray(gearhash.gearhash_pallas(jnp.asarray(buf, dtype=jnp.uint32), mask))
+        np.testing.assert_array_equal(got, sequential_gear(buf, mask))
+
+    def test_expected_cut_density(self):
+        # mask with k bits set → candidate probability ~2^-k.
+        rng = np.random.default_rng(42)
+        buf = rng.integers(0, 256, size=(4, 8192), dtype=np.uint8)
+        hits = np.asarray(gearhash.gearhash_pallas(jnp.asarray(buf, dtype=jnp.uint32), 0x3F))
+        density = hits.mean()
+        assert 0.5 / 64 < density < 2.0 / 64

@@ -1,0 +1,170 @@
+//! Shared bench harness (criterion is unavailable offline; this is a
+//! purpose-built workload driver that reports the same quantities the
+//! paper's figures plot: aggregate client bandwidth and space savings).
+//!
+//! Every bench binary (`harness = false`) builds a fresh cluster per data
+//! point, drives it with `threads` concurrent clients from the
+//! deterministic FIO-substitute generator, and prints one table row per
+//! point. Results are also appended to `bench_out/<bench>.tsv` for
+//! plotting.
+
+use snss_dedup::api::{Cluster, ClusterConfig, Consistency, DedupMode, FingerprintBackend};
+use snss_dedup::dedup::Chunking;
+use snss_dedup::workload::{Generator, WorkloadSpec};
+use std::io::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One bench data point's configuration.
+#[derive(Clone)]
+pub struct RunCfg {
+    pub servers: usize,
+    pub threads: usize,
+    pub objects: u64,
+    pub object_size: usize,
+    pub chunk: usize,
+    pub dedup_pct: u8,
+    pub pool_blocks: u64,
+    pub zipf_theta: f64,
+    pub mode: DedupMode,
+    pub consistency: Consistency,
+    pub replication: usize,
+    pub fingerprint_xla: bool,
+    /// Modeled DM-Shard write latency in microseconds (0 = free). The
+    /// paper's DM-Shard backend is SQLite on SSD; benches that measure
+    /// consistency/metadata serialization set this to a few hundred µs.
+    pub meta_io_us: u64,
+    pub seed: u64,
+}
+
+impl Default for RunCfg {
+    fn default() -> Self {
+        RunCfg {
+            servers: 8,
+            threads: 8,
+            objects: 24,
+            object_size: 4 << 20,
+            chunk: 512 << 10,
+            dedup_pct: 0,
+            pool_blocks: 512,
+            zipf_theta: 0.0,
+            mode: DedupMode::ClusterWide,
+            consistency: Consistency::AsyncTagged,
+            replication: 1,
+            fingerprint_xla: false,
+            meta_io_us: 0,
+            seed: 0xBEEF,
+        }
+    }
+}
+
+/// One bench data point's results.
+#[derive(Clone, Copy, Debug)]
+pub struct RunResult {
+    pub mib_per_s: f64,
+    pub savings_pct: f64,
+    pub dedup_hits: u64,
+    pub logical_mib: f64,
+    pub secs: f64,
+}
+
+/// Execute one data point: boot, drive, quiesce, audit, tear down.
+pub fn run_point(cfg: &RunCfg) -> RunResult {
+    let fingerprint = if cfg.fingerprint_xla {
+        FingerprintBackend::Xla {
+            artifacts_dir: "artifacts".into(),
+        }
+    } else {
+        FingerprintBackend::RustSha1
+    };
+    let cluster = Cluster::new(ClusterConfig {
+        servers: cfg.servers,
+        replication: cfg.replication,
+        dedup: cfg.mode,
+        consistency: cfg.consistency,
+        chunking: Chunking::Fixed { size: cfg.chunk },
+        fingerprint,
+        meta_io: (cfg.meta_io_us > 0)
+            .then(|| std::time::Duration::from_micros(cfg.meta_io_us)),
+        ..Default::default()
+    })
+    .expect("boot cluster");
+
+    let gen = Arc::new(Generator::new(WorkloadSpec {
+        object_size: cfg.object_size,
+        unit: cfg.chunk,
+        dedup_pct: cfg.dedup_pct,
+        pool_blocks: cfg.pool_blocks,
+        zipf_theta: cfg.zipf_theta,
+        seed: cfg.seed,
+    }));
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..cfg.threads {
+        let client = cluster.client();
+        let gen = gen.clone();
+        let objects = cfg.objects;
+        let threads = cfg.threads as u64;
+        handles.push(std::thread::spawn(move || {
+            let mut written = 0u64;
+            let mut idx = t as u64;
+            while idx < objects {
+                let (name, data) = gen.named_object(idx);
+                client.put_object(&name, &data).expect("bench put");
+                written += data.len() as u64;
+                idx += threads;
+            }
+            written
+        }));
+    }
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let secs = t0.elapsed().as_secs_f64();
+    cluster.flush_consistency().ok();
+    let stats = cluster.stats();
+    let audit = cluster.audit().expect("audit");
+    assert!(audit.is_ok(), "bench audit violations: {:?}", audit.violations);
+    let result = RunResult {
+        mib_per_s: total as f64 / (1 << 20) as f64 / secs,
+        savings_pct: stats.savings() * 100.0,
+        dedup_hits: stats.dedup_hits,
+        logical_mib: total as f64 / (1 << 20) as f64,
+        secs,
+    };
+    cluster.shutdown();
+    result
+}
+
+/// Append one TSV row under `bench_out/`.
+pub fn record(bench: &str, header: &str, row: &str) {
+    let _ = std::fs::create_dir_all("bench_out");
+    let path = format!("bench_out/{bench}.tsv");
+    let new = !std::path::Path::new(&path).exists();
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        if new {
+            let _ = writeln!(f, "{header}");
+        }
+        let _ = writeln!(f, "{row}");
+    }
+}
+
+/// Pretty size for labels.
+pub fn fmt_size(bytes: usize) -> String {
+    if bytes >= 1 << 20 {
+        format!("{}M", bytes >> 20)
+    } else {
+        format!("{}K", bytes >> 10)
+    }
+}
+
+/// Smoke-scale knob: `BENCH_SCALE=small cargo bench` shrinks the volume
+/// ~8x for CI-style runs; default reproduces the figure shapes.
+pub fn scale() -> u64 {
+    match std::env::var("BENCH_SCALE").as_deref() {
+        Ok("small") => 1,
+        _ => 8,
+    }
+}
+
+#[allow(dead_code)]
+fn main() {}

@@ -1,0 +1,52 @@
+//! Figure 4(a): write bandwidth vs chunk size, dedup ratio 0%, 8 client
+//! threads — Baseline (no dedup) vs Central dedup vs Cluster-wide dedup.
+//!
+//! Paper shape: baseline ≈ cluster-wide, both well above central; the
+//! dedup overhead (fingerprinting + chunk redirection) is largest at
+//! small chunk sizes and shrinks as chunks grow.
+//!
+//! ```text
+//! cargo bench --bench fig4a_chunk_size        # full volume
+//! BENCH_SCALE=small cargo bench --bench fig4a_chunk_size
+//! ```
+
+mod common;
+use common::{fmt_size, record, run_point, RunCfg};
+use snss_dedup::api::DedupMode;
+
+fn main() {
+    let chunk_sizes = [64 << 10, 256 << 10, 512 << 10, 1 << 20, 4 << 20];
+    let systems = [
+        ("baseline", DedupMode::None),
+        ("central", DedupMode::Central),
+        ("cluster-wide", DedupMode::ClusterWide),
+    ];
+    let volume_mib = 12 * common::scale(); // logical MiB per point
+
+    println!("== Fig 4(a): bandwidth vs chunk size (dedup 0%, 8 threads) ==");
+    println!("{:<10} {:>14} {:>14} {:>14}", "chunk", "baseline", "central", "cluster-wide");
+    for &chunk in &chunk_sizes {
+        let mut row = format!("{:<10}", fmt_size(chunk));
+        let mut tsv = format!("{}", chunk);
+        for (_, mode) in systems {
+            let object_size = (4 << 20).max(chunk);
+            let objects = ((volume_mib as usize) << 20) / object_size;
+            let r = run_point(&RunCfg {
+                chunk,
+                mode,
+                object_size,
+                objects: objects.max(8) as u64,
+                dedup_pct: 0,
+                ..Default::default()
+            });
+            row += &format!(" {:>10.1} MB/s", r.mib_per_s);
+            tsv += &format!("\t{:.2}", r.mib_per_s);
+        }
+        println!("{row}");
+        record("fig4a", "chunk_bytes\tbaseline\tcentral\tcluster_wide", &tsv);
+    }
+    println!(
+        "\nexpected shape: baseline ≈ cluster-wide >> central; dedup overhead\n\
+         largest at 64K (fingerprint + redirection per small chunk)."
+    );
+}

@@ -1,0 +1,63 @@
+//! Figure 5(a): write bandwidth vs number of client threads, chunk
+//! 512 KiB — Central vs Cluster-wide.
+//!
+//! Paper shape: central *degrades* as threads grow (the single dedup
+//! metadata server serializes all chunking/fingerprinting/lookup work;
+//! at 32 threads it collapses), while cluster-wide *scales up* (CRUSH
+//! spreads chunks and DM-Shards over all servers).
+//!
+//! ```text
+//! cargo bench --bench fig5a_scalability
+//! ```
+
+mod common;
+use common::{record, run_point, RunCfg};
+use snss_dedup::api::DedupMode;
+
+fn main() {
+    let threads = [1usize, 2, 4, 8, 16, 32];
+    let per_thread_mib = 8 * common::scale() / 2;
+
+    println!("== Fig 5(a): bandwidth vs client threads (chunk 512K) ==");
+    println!(
+        "{:<9} {:>14} {:>14} {:>10}",
+        "threads", "central", "cluster-wide", "ratio"
+    );
+    for &t in &threads {
+        // volume scales with threads so each point saturates its clients
+        let objects = ((per_thread_mib as usize * t) << 20) / (4 << 20);
+        let base = RunCfg {
+            threads: t,
+            chunk: 512 << 10,
+            object_size: 4 << 20,
+            objects: objects.max(t) as u64,
+            dedup_pct: 0,
+            // SQLite-on-SSD DM-Shard model (see fig4b) — the central
+            // server's serialized metadata I/O is the contended resource
+            // the paper's Fig 5(a) exposes with rising thread counts.
+            meta_io_us: 400,
+            ..Default::default()
+        };
+        let central = run_point(&RunCfg {
+            mode: DedupMode::Central,
+            ..base.clone()
+        });
+        let cluster = run_point(&RunCfg {
+            mode: DedupMode::ClusterWide,
+            ..base
+        });
+        println!(
+            "{:<9} {:>10.1} MB/s {:>10.1} MB/s {:>9.2}x",
+            t,
+            central.mib_per_s,
+            cluster.mib_per_s,
+            cluster.mib_per_s / central.mib_per_s
+        );
+        record(
+            "fig5a",
+            "threads\tcentral\tcluster_wide",
+            &format!("{t}\t{:.2}\t{:.2}", central.mib_per_s, cluster.mib_per_s),
+        );
+    }
+    println!("\nexpected shape: central flat/degrading with threads; cluster-wide scaling up.");
+}

@@ -1,0 +1,663 @@
+//! Public entry point: [`ClusterConfig`] → [`Cluster`] → [`Client`].
+//!
+//! A `Cluster` assembles the monitor, the placement layer, one OSD
+//! thread-group per server and the shared metrics, then hands out cheap
+//! clonable [`Client`] handles. Admin operations (add/kill/restart server,
+//! rebalance, GC, audit) live on the cluster object; data operations live
+//! on clients.
+
+use crate::cluster::{Monitor, ServerId};
+use crate::dedup::consistency::ConsistencyMode;
+use crate::dedup::dmshard::DmShard;
+use crate::dedup::fingerprint::{FingerprintProvider, RustSha1Provider};
+use crate::dedup::{Chunker, Chunking};
+use crate::error::{Error, Result};
+use crate::failure::{CrashPoint, FailureInjector};
+use crate::kvstore::{LogKv, MemKv};
+use crate::metrics::Metrics;
+use crate::net::{Lane, NetProfile};
+use crate::placement::pg::PgMap;
+use crate::placement::{rendezvous::Rendezvous, straw2::Straw2, PlacementPolicy};
+use crate::storage::backend::{FileStore, MemStore};
+use crate::storage::osd::{Clock, Osd, OsdConfig, OsdShared};
+use crate::storage::proto::{AuditDump, Dir, OsdStats, Req, Resp};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, RwLock};
+
+pub use crate::dedup::consistency::ConsistencyMode as Consistency;
+pub use crate::dedup::engine::DedupMode;
+
+/// Placement policy choice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// CRUSH-like straw2 (default, as in Ceph).
+    Straw2,
+    /// Rendezvous/HRW (ablation).
+    Rendezvous,
+}
+
+/// Durable-storage backends for chunk data and DM-Shards.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Durability {
+    /// Everything in memory (fast; still survives *simulated* crashes —
+    /// kill/restart models a process crash, not power loss).
+    Memory,
+    /// Chunk data and DM-Shards persisted under this directory
+    /// (file-per-chunk + bitcask logs) — survives real process restarts.
+    Disk(PathBuf),
+}
+
+/// Fingerprint engine choice.
+#[derive(Clone, Debug)]
+pub enum FingerprintBackend {
+    /// From-scratch scalar SHA-1 on each frontend thread (default).
+    RustSha1,
+    /// The AOT Pallas batched kernel through PJRT; falls back to scalar
+    /// SHA-1 for shapes without a compiled variant.
+    Xla { artifacts_dir: PathBuf },
+}
+
+/// Full cluster configuration.
+#[derive(Clone)]
+pub struct ClusterConfig {
+    /// Number of storage servers.
+    pub servers: usize,
+    /// Replica count for chunk data + OMAP copies (1 = no replication).
+    pub replication: usize,
+    /// Placement groups (power of two).
+    pub pg_count: u32,
+    /// Dedup architecture.
+    pub dedup: DedupMode,
+    /// Commit-flag consistency mode.
+    pub consistency: ConsistencyMode,
+    /// Chunking policy.
+    pub chunking: Chunking,
+    /// Placement policy.
+    pub placement: Placement,
+    /// Storage durability.
+    pub durability: Durability,
+    /// Fingerprint engine.
+    pub fingerprint: FingerprintBackend,
+    /// Optional wire-cost model.
+    pub net: Option<NetProfile>,
+    /// Optional modeled latency per synchronous DM-Shard write (the
+    /// paper's SQLite-on-SSD backend; see `OsdConfig::meta_io`).
+    pub meta_io: Option<std::time::Duration>,
+    /// Verify chunk digests on read.
+    pub verify_read: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            servers: 4,
+            replication: 2,
+            pg_count: 128,
+            dedup: DedupMode::ClusterWide,
+            consistency: ConsistencyMode::AsyncTagged,
+            chunking: Chunking::Fixed { size: 64 * 1024 },
+            placement: Placement::Straw2,
+            durability: Durability::Memory,
+            fingerprint: FingerprintBackend::RustSha1,
+            net: None,
+            meta_io: None,
+            verify_read: false,
+        }
+    }
+}
+
+/// Aggregated cluster statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterStats {
+    pub logical_bytes: u64,
+    pub stored_bytes: u64,
+    pub replica_bytes: u64,
+    pub dedup_hits: u64,
+    pub unique_chunks: u64,
+    pub cit_lookups: u64,
+    pub repairs: u64,
+    pub gc_reclaimed: u64,
+    pub tx_aborts: u64,
+    pub per_server: Vec<OsdStats>,
+}
+
+impl ClusterStats {
+    /// Space savings: 1 - stored/logical.
+    pub fn savings(&self) -> f64 {
+        if self.logical_bytes == 0 {
+            0.0
+        } else {
+            1.0 - self.stored_bytes as f64 / self.logical_bytes as f64
+        }
+    }
+}
+
+/// Cluster-wide invariant-check report (see DESIGN.md §5).
+#[derive(Clone, Debug, Default)]
+pub struct AuditReport {
+    /// Human-readable violations; empty = healthy.
+    pub violations: Vec<String>,
+    /// Fingerprints audited.
+    pub fingerprints: usize,
+    /// Total OMAP references seen.
+    pub references: u64,
+}
+
+impl AuditReport {
+    /// No violations found.
+    pub fn is_ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// A running cluster.
+pub struct Cluster {
+    cfg: ClusterConfig,
+    monitor: Monitor,
+    pgmap: Arc<PgMap>,
+    dir: Dir,
+    metrics: Arc<Metrics>,
+    clock: Arc<Clock>,
+    provider: Arc<dyn FingerprintProvider>,
+    osds: Mutex<HashMap<ServerId, Osd>>,
+}
+
+impl Cluster {
+    /// Boot a cluster.
+    pub fn new(cfg: ClusterConfig) -> Result<Cluster> {
+        if cfg.servers == 0 {
+            return Err(Error::Invalid("servers must be > 0".into()));
+        }
+        if cfg.replication == 0 {
+            return Err(Error::Invalid("replication must be >= 1".into()));
+        }
+        let monitor = Monitor::new(cfg.servers);
+        let policy: Box<dyn PlacementPolicy> = match cfg.placement {
+            Placement::Straw2 => Box::new(Straw2),
+            Placement::Rendezvous => Box::new(Rendezvous),
+        };
+        let pgmap = Arc::new(PgMap::new(policy, cfg.pg_count, cfg.replication.max(2)));
+        let dir: Dir = Dir::new();
+        let metrics = Arc::new(Metrics::new());
+        let clock = Arc::new(Clock::default());
+        let provider: Arc<dyn FingerprintProvider> = match &cfg.fingerprint {
+            FingerprintBackend::RustSha1 => Arc::new(RustSha1Provider),
+            FingerprintBackend::Xla { artifacts_dir } => {
+                Arc::new(crate::runtime::XlaFingerprintService::start(artifacts_dir)?)
+            }
+        };
+        let cluster = Cluster {
+            cfg,
+            monitor,
+            pgmap,
+            dir,
+            metrics,
+            clock,
+            provider,
+            osds: Mutex::new(HashMap::new()),
+        };
+        let ids: Vec<ServerId> = cluster.monitor.map().servers.iter().map(|s| s.id).collect();
+        for id in ids {
+            cluster.spawn_osd(id)?;
+        }
+        Ok(cluster)
+    }
+
+    fn spawn_osd(&self, id: ServerId) -> Result<()> {
+        let (omap, cit, store, replica): (
+            Box<dyn crate::kvstore::KvStore>,
+            Box<dyn crate::kvstore::KvStore>,
+            Box<dyn crate::storage::backend::StorageBackend>,
+            Box<dyn crate::storage::backend::StorageBackend>,
+        ) = match &self.cfg.durability {
+            Durability::Memory => (
+                Box::new(MemKv::new()),
+                Box::new(MemKv::new()),
+                Box::new(MemStore::new()),
+                Box::new(MemStore::new()),
+            ),
+            Durability::Disk(root) => {
+                let base = root.join(format!("osd{}", id.0));
+                (
+                    Box::new(LogKv::open(base.join("omap.log"))?),
+                    Box::new(LogKv::open(base.join("cit.log"))?),
+                    Box::new(FileStore::open(base.join("data"))?),
+                    Box::new(FileStore::open(base.join("replica"))?),
+                )
+            }
+        };
+        let shared = Arc::new(OsdShared {
+            id,
+            cfg: OsdConfig {
+                dedup: self.cfg.dedup,
+                consistency: self.cfg.consistency,
+                chunker: Chunker::new(self.cfg.chunking),
+                replication: self.cfg.replication,
+                verify_read: self.cfg.verify_read,
+                meta_io: self.cfg.meta_io,
+            },
+            map: self.monitor.map_handle(),
+            pgmap: self.pgmap.clone(),
+            shard: DmShard::new(omap, cit),
+            store,
+            replica_store: replica,
+            pending: crate::dedup::consistency::PendingFlags::new(),
+            injector: FailureInjector::new(),
+            metrics: self.metrics.clone(),
+            dir: self.dir.clone(),
+            provider: self.provider.clone(),
+            clock: self.clock.clone(),
+            obj_lock: Mutex::new(()),
+        });
+        let osd = Osd::spawn(shared, self.cfg.net);
+        self.osds.lock().unwrap().insert(id, osd);
+        Ok(())
+    }
+
+    /// A clonable data-path handle.
+    pub fn client(&self) -> Client {
+        Client {
+            dedup: self.cfg.dedup,
+            map: self.monitor.map_handle(),
+            pgmap: self.pgmap.clone(),
+            dir: self.dir.clone(),
+        }
+    }
+
+    /// The cluster configuration in effect.
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// Shared metrics handle.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Current map epoch.
+    pub fn epoch(&self) -> u64 {
+        self.monitor.map().epoch
+    }
+
+    // ---- membership / failure admin ----
+
+    /// Add a server and rebalance the whole cluster onto the new map.
+    pub fn add_server(&self) -> Result<ServerId> {
+        let (id, _) = self.monitor.add_server(1.0);
+        self.spawn_osd(id)?;
+        self.rebalance()?;
+        Ok(id)
+    }
+
+    /// Abrupt, silent crash of a server (map unchanged — failure
+    /// detection is the monitor's separate concern).
+    pub fn kill_server(&self, id: ServerId) -> Result<()> {
+        let osds = self.osds.lock().unwrap();
+        let osd = osds.get(&id).ok_or(Error::ServerDown(id.0))?;
+        osd.kill();
+        Ok(())
+    }
+
+    /// Arm a crash point on a server (fires once, then the server is dead).
+    pub fn arm_crash(&self, id: ServerId, point: CrashPoint) -> Result<()> {
+        let osds = self.osds.lock().unwrap();
+        let osd = osds.get(&id).ok_or(Error::ServerDown(id.0))?;
+        osd.shared.injector.arm(point);
+        Ok(())
+    }
+
+    /// Is this server currently dead (killed or crashed via a fired
+    /// crash point)?
+    pub fn is_dead(&self, id: ServerId) -> bool {
+        self.osds
+            .lock()
+            .unwrap()
+            .get(&id)
+            .map(|o| o.shared.injector.is_dead())
+            .unwrap_or(true)
+    }
+
+    /// Restart a killed/crashed server (revive + recovery scan).
+    pub fn restart_server(&self, id: ServerId) -> Result<()> {
+        let osds = self.osds.lock().unwrap();
+        let osd = osds.get(&id).ok_or(Error::ServerDown(id.0))?;
+        osd.restart();
+        Ok(())
+    }
+
+    /// Mark a server Down in the map (placement skips it; rebalance moves
+    /// its PGs' primaries).
+    pub fn mark_down(&self, id: ServerId) {
+        self.monitor.mark_down(id);
+    }
+
+    /// Mark a server Up again.
+    pub fn mark_up(&self, id: ServerId) {
+        self.monitor.mark_up(id);
+    }
+
+    // ---- maintenance ----
+
+    fn control(&self, id: ServerId, req: Req) -> Result<Resp> {
+        let addr = self.dir.lookup(id, Lane::Control)?;
+        let size = req.wire_size();
+        addr.call(req, size)
+    }
+
+    fn live_ids(&self) -> Vec<ServerId> {
+        self.osds.lock().unwrap().keys().copied().collect()
+    }
+
+    /// Drain every server's async-consistency queue (quiesce for tests).
+    pub fn flush_consistency(&self) -> Result<()> {
+        for id in self.live_ids() {
+            let _ = self.control(id, Req::FlushConsistency);
+        }
+        Ok(())
+    }
+
+    /// Run a GC pass everywhere with the given age threshold.
+    pub fn run_gc(&self, threshold_ms: u64) -> Result<()> {
+        for id in self.live_ids() {
+            let _ = self.control(id, Req::RunGc { threshold_ms });
+        }
+        Ok(())
+    }
+
+    /// Trigger the rebalance scan on every server (after map changes).
+    pub fn rebalance(&self) -> Result<()> {
+        for id in self.live_ids() {
+            let _ = self.control(id, Req::Rebalance)?;
+        }
+        Ok(())
+    }
+
+    /// Aggregate statistics.
+    pub fn stats(&self) -> ClusterStats {
+        let m = &self.metrics;
+        let mut s = ClusterStats {
+            logical_bytes: Metrics::get(&m.bytes_logical),
+            stored_bytes: Metrics::get(&m.bytes_stored),
+            replica_bytes: Metrics::get(&m.bytes_replica),
+            dedup_hits: Metrics::get(&m.dedup_hits),
+            unique_chunks: Metrics::get(&m.unique_chunks),
+            cit_lookups: Metrics::get(&m.cit_lookups),
+            repairs: Metrics::get(&m.repairs),
+            gc_reclaimed: Metrics::get(&m.gc_reclaimed),
+            tx_aborts: Metrics::get(&m.tx_aborts),
+            per_server: Vec::new(),
+        };
+        let mut ids = self.live_ids();
+        ids.sort();
+        for id in ids {
+            if let Ok(Resp::Stats(st)) = self.control(id, Req::GetStats) {
+                s.per_server.push(st);
+            }
+        }
+        if !s.per_server.is_empty() {
+            // ground truth from the backends beats the running counter
+            // (migration/GC would otherwise need perfectly paired
+            // increments and decrements to stay exact).
+            s.stored_bytes = s.per_server.iter().map(|p| p.bytes_stored).sum();
+            s.replica_bytes = s.per_server.iter().map(|p| p.replica_bytes).sum();
+        }
+        s
+    }
+
+    /// Cluster-wide invariant check: for every CIT entry, the refcount
+    /// must equal the number of OMAP references across the cluster, valid
+    /// entries must have data present, and every referenced fingerprint
+    /// must have a CIT entry.
+    pub fn audit(&self) -> Result<AuditReport> {
+        let mut dumps: Vec<AuditDump> = Vec::new();
+        let mut ids = self.live_ids();
+        ids.sort();
+        for id in ids {
+            match self.control(id, Req::Audit) {
+                Ok(Resp::Audit(d)) => dumps.push(d),
+                Ok(_) => {}
+                Err(Error::ServerDown(_)) => {} // dead servers skipped
+                Err(e) => return Err(e),
+            }
+        }
+        // Disk-local dedup keeps an independent CIT per server: the same
+        // fingerprint legitimately has one refcount per server, matched by
+        // that server's own OMAP references. Cluster-wide and central
+        // dedup have exactly one CIT entry per fingerprint, matched by the
+        // cluster-wide reference count.
+        let per_server = self.cfg.dedup == DedupMode::DiskLocal;
+        let mut report = AuditReport::default();
+        let scopes: Vec<Vec<&AuditDump>> = if per_server {
+            dumps.iter().map(|d| vec![d]).collect()
+        } else {
+            vec![dumps.iter().collect()]
+        };
+        for scope in scopes {
+            let mut refs: HashMap<crate::dedup::fingerprint::Fingerprint, u64> = HashMap::new();
+            for d in &scope {
+                for (fp, n) in &d.omap_refs {
+                    *refs.entry(*fp).or_insert(0) += n;
+                }
+            }
+            let present: std::collections::HashSet<_> =
+                scope.iter().flat_map(|d| d.data_fps.iter().copied()).collect();
+            report.references += refs.values().sum::<u64>();
+            let mut seen = std::collections::HashSet::new();
+            for d in &scope {
+                for (fp, rfc, valid) in &d.cit {
+                    report.fingerprints += 1;
+                    seen.insert(*fp);
+                    let expected = refs.get(fp).copied().unwrap_or(0);
+                    if *rfc != expected {
+                        report.violations.push(format!(
+                            "osd.{}: {fp:?} refcount {rfc} != {expected} omap references",
+                            d.server
+                        ));
+                    }
+                    if *valid && !present.contains(fp) {
+                        report.violations.push(format!(
+                            "osd.{}: {fp:?} valid flag but data missing",
+                            d.server
+                        ));
+                    }
+                }
+            }
+            for fp in refs.keys() {
+                if !seen.contains(fp) {
+                    report
+                        .violations
+                        .push(format!("{fp:?} referenced but no CIT entry in scope"));
+                }
+            }
+        }
+        Ok(report)
+    }
+
+    /// Scrub: recompute every CIT refcount from the cluster-wide OMAP
+    /// references and repair mismatches (the paper's GC cross-match
+    /// generalized to reference leaks — e.g. a failed transaction whose
+    /// rollback could not reach a crashed chunk server). Run quiesced.
+    /// Returns the number of entries repaired.
+    pub fn scrub(&self) -> Result<usize> {
+        let mut dumps: Vec<AuditDump> = Vec::new();
+        for id in self.live_ids() {
+            if let Ok(Resp::Audit(d)) = self.control(id, Req::Audit) {
+                dumps.push(d);
+            }
+        }
+        let mut refs: HashMap<crate::dedup::fingerprint::Fingerprint, u64> = HashMap::new();
+        for d in &dumps {
+            for (fp, n) in &d.omap_refs {
+                *refs.entry(*fp).or_insert(0) += n;
+            }
+        }
+        let mut repaired = 0usize;
+        for d in &dumps {
+            for (fp, rfc, _) in &d.cit {
+                let expected = refs.get(fp).copied().unwrap_or(0);
+                if *rfc != expected {
+                    let addr = self.dir.lookup(ServerId(d.server), Lane::Backend)?;
+                    if matches!(
+                        addr.call(Req::SetRef { fp: *fp, refs: expected }, 96)?,
+                        Resp::Ok
+                    ) {
+                        repaired += 1;
+                    }
+                }
+            }
+        }
+        Ok(repaired)
+    }
+
+    /// Graceful teardown: stop every OSD thread.
+    pub fn shutdown(self) {
+        let mut osds = self.osds.lock().unwrap();
+        let ids: Vec<ServerId> = osds.keys().copied().collect();
+        for id in ids {
+            if let Some(osd) = osds.remove(&id) {
+                osd.stop();
+            }
+        }
+    }
+}
+
+/// Data-path handle: routes object ops to the right server with degraded
+/// fallback to replicas.
+#[derive(Clone)]
+pub struct Client {
+    dedup: DedupMode,
+    map: Arc<RwLock<crate::cluster::ClusterMap>>,
+    pgmap: Arc<PgMap>,
+    dir: Dir,
+}
+
+impl Client {
+    fn chain_for(&self, name: &str) -> Vec<ServerId> {
+        if self.dedup == DedupMode::Central {
+            return vec![ServerId(0)];
+        }
+        let key = crate::hash::fnv1a64(name.as_bytes());
+        let map = self.map.read().unwrap();
+        self.pgmap.select(&map, key)
+    }
+
+    fn frontend_call(&self, name: &str, mk: impl Fn() -> Req) -> Result<Resp> {
+        let chain = self.chain_for(name);
+        let mut last = Error::NoQuorum;
+        for id in chain {
+            match self.dir.lookup(id, Lane::Frontend) {
+                Ok(addr) => {
+                    let req = mk();
+                    let size = req.wire_size();
+                    match addr.call(req, size) {
+                        Ok(resp) => return Ok(resp),
+                        Err(e) => last = e,
+                    }
+                }
+                Err(e) => last = e,
+            }
+        }
+        Err(last)
+    }
+
+    /// Write an object. Returns (logical bytes, unique bytes stored).
+    pub fn put_object(&self, name: &str, data: &[u8]) -> Result<(u64, u64)> {
+        // writes do NOT fall back: the primary owns the transaction (a
+        // down primary is the monitor's job to mark out).
+        let chain = self.chain_for(name);
+        let primary = *chain.first().ok_or(Error::NoQuorum)?;
+        let addr = self.dir.lookup(primary, Lane::Frontend)?;
+        let req = Req::PutObject {
+            name: name.to_string(),
+            data: data.to_vec(),
+        };
+        let size = req.wire_size();
+        match addr.call(req, size)? {
+            Resp::PutAck { logical, unique } => Ok((logical, unique)),
+            Resp::Err(e) => Err(Error::TxAborted(e)),
+            other => Err(Error::TxAborted(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Read an object (degraded fallback to replica holders).
+    pub fn get_object(&self, name: &str) -> Result<Vec<u8>> {
+        match self.frontend_call(name, || Req::GetObject {
+            name: name.to_string(),
+        })? {
+            Resp::Object(data) => Ok(data),
+            Resp::NotFound => Err(Error::ObjectNotFound(name.to_string())),
+            Resp::Err(e) => Err(Error::TxAborted(e)),
+            other => Err(Error::TxAborted(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// Delete an object.
+    pub fn delete_object(&self, name: &str) -> Result<()> {
+        match self.frontend_call(name, || Req::DeleteObject {
+            name: name.to_string(),
+        })? {
+            Resp::Ok => Ok(()),
+            Resp::NotFound => Err(Error::ObjectNotFound(name.to_string())),
+            Resp::Err(e) => Err(Error::TxAborted(e)),
+            other => Err(Error::TxAborted(format!("unexpected reply {other:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation() {
+        assert!(Cluster::new(ClusterConfig {
+            servers: 0,
+            ..Default::default()
+        })
+        .is_err());
+        assert!(Cluster::new(ClusterConfig {
+            replication: 0,
+            servers: 1,
+            ..Default::default()
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn boot_write_read_shutdown() {
+        let cluster = Cluster::new(ClusterConfig {
+            servers: 3,
+            replication: 2,
+            chunking: Chunking::Fixed { size: 1024 },
+            ..Default::default()
+        })
+        .unwrap();
+        let client = cluster.client();
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        let (logical, unique) = client.put_object("hello", &data).unwrap();
+        assert_eq!(logical, 10_000);
+        assert!(unique > 0);
+        assert_eq!(client.get_object("hello").unwrap(), data);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn duplicate_objects_dedup() {
+        let cluster = Cluster::new(ClusterConfig {
+            servers: 4,
+            replication: 1,
+            chunking: Chunking::Fixed { size: 512 },
+            ..Default::default()
+        })
+        .unwrap();
+        let client = cluster.client();
+        let data = vec![42u8; 8192];
+        client.put_object("a", &data).unwrap();
+        let (_, unique_second) = client.put_object("b", &data).unwrap();
+        assert_eq!(unique_second, 0, "second copy should store nothing");
+        let stats = cluster.stats();
+        assert!(stats.savings() > 0.45, "savings {}", stats.savings());
+        cluster.shutdown();
+    }
+}

@@ -1,0 +1,144 @@
+//! The epoch-versioned cluster map.
+
+/// Identifier of an object storage server (OSS/OSD).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ServerId(pub u32);
+
+impl std::fmt::Display for ServerId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "osd.{}", self.0)
+    }
+}
+
+/// Liveness / membership state of a server in the map.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServerState {
+    /// In the map and serving I/O.
+    Up,
+    /// In the map but not responding (crashed / killed); placement skips it.
+    Down,
+    /// Administratively removed; pending data migration off of it.
+    Out,
+}
+
+/// Per-server entry in the cluster map.
+#[derive(Clone, Debug)]
+pub struct ServerInfo {
+    pub id: ServerId,
+    /// CRUSH-style weight (relative capacity); straw2 draws scale with it.
+    pub weight: f64,
+    pub state: ServerState,
+}
+
+/// The shared-nothing cluster's view of membership, versioned by epoch.
+/// Placement is a pure function of (map, key), so any holder of the same
+/// epoch computes identical locations — no central lookup table exists.
+#[derive(Clone, Debug)]
+pub struct ClusterMap {
+    pub epoch: u64,
+    pub servers: Vec<ServerInfo>,
+}
+
+impl ClusterMap {
+    /// A fresh map with `n` up servers of equal weight.
+    pub fn new(n: usize) -> Self {
+        ClusterMap {
+            epoch: 1,
+            servers: (0..n as u32)
+                .map(|i| ServerInfo {
+                    id: ServerId(i),
+                    weight: 1.0,
+                    state: ServerState::Up,
+                })
+                .collect(),
+        }
+    }
+
+    /// Servers eligible for placement (Up only).
+    pub fn up_servers(&self) -> impl Iterator<Item = &ServerInfo> {
+        self.servers
+            .iter()
+            .filter(|s| s.state == ServerState::Up && s.weight > 0.0)
+    }
+
+    /// Number of Up servers.
+    pub fn up_count(&self) -> usize {
+        self.up_servers().count()
+    }
+
+    /// Look up a server entry.
+    pub fn server(&self, id: ServerId) -> Option<&ServerInfo> {
+        self.servers.iter().find(|s| s.id == id)
+    }
+
+    /// Next unused server id.
+    pub fn next_id(&self) -> ServerId {
+        ServerId(self.servers.iter().map(|s| s.id.0 + 1).max().unwrap_or(0))
+    }
+
+    /// Add a server (epoch bump); returns its id.
+    pub fn add_server(&mut self, weight: f64) -> ServerId {
+        let id = self.next_id();
+        self.servers.push(ServerInfo {
+            id,
+            weight,
+            state: ServerState::Up,
+        });
+        self.epoch += 1;
+        id
+    }
+
+    /// Transition a server's state (epoch bump).
+    pub fn set_state(&mut self, id: ServerId, state: ServerState) {
+        if let Some(s) = self.servers.iter_mut().find(|s| s.id == id) {
+            s.state = state;
+            self.epoch += 1;
+        }
+    }
+
+    /// Change a server's weight (epoch bump).
+    pub fn set_weight(&mut self, id: ServerId, weight: f64) {
+        if let Some(s) = self.servers.iter_mut().find(|s| s.id == id) {
+            s.weight = weight;
+            self.epoch += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_map_all_up() {
+        let m = ClusterMap::new(4);
+        assert_eq!(m.epoch, 1);
+        assert_eq!(m.up_count(), 4);
+        assert_eq!(m.next_id(), ServerId(4));
+    }
+
+    #[test]
+    fn add_and_down() {
+        let mut m = ClusterMap::new(2);
+        let id = m.add_server(2.0);
+        assert_eq!(id, ServerId(2));
+        assert_eq!(m.epoch, 2);
+        assert_eq!(m.up_count(), 3);
+        m.set_state(ServerId(0), ServerState::Down);
+        assert_eq!(m.epoch, 3);
+        assert_eq!(m.up_count(), 2);
+        assert_eq!(m.server(ServerId(0)).unwrap().state, ServerState::Down);
+    }
+
+    #[test]
+    fn zero_weight_excluded_from_placement() {
+        let mut m = ClusterMap::new(3);
+        m.set_weight(ServerId(1), 0.0);
+        assert_eq!(m.up_count(), 2);
+    }
+
+    #[test]
+    fn display_format() {
+        assert_eq!(ServerId(7).to_string(), "osd.7");
+    }
+}

@@ -1,0 +1,14 @@
+//! Cluster membership: the epoch-versioned cluster map and the monitor
+//! service that mutates and distributes it.
+//!
+//! This is the substrate role Ceph's monitor quorum plays for the paper's
+//! testbed (Table 1 lists 3 monitors); a single in-process [`Monitor`] is
+//! sufficient because monitor consensus is orthogonal to the paper's
+//! mechanisms (the dedup metadata never lives on the monitor — that is the
+//! whole point of the DM-Shard design).
+
+pub mod map;
+pub mod monitor;
+
+pub use map::{ClusterMap, ServerId, ServerInfo, ServerState};
+pub use monitor::Monitor;

@@ -1,0 +1,110 @@
+//! The monitor: owns the authoritative cluster map and pushes updates to
+//! subscribers (OSDs and clients hold an `Arc<RwLock<ClusterMap>>` that the
+//! monitor refreshes — standing in for Ceph's map-gossip).
+
+use super::map::{ClusterMap, ServerId, ServerState};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Callback invoked after every map mutation with the new map.
+pub type MapListener = Box<dyn Fn(&ClusterMap) + Send + Sync>;
+
+/// Authoritative map owner.
+pub struct Monitor {
+    map: Arc<RwLock<ClusterMap>>,
+    listeners: Mutex<Vec<MapListener>>,
+}
+
+impl Monitor {
+    /// Start a monitor over a fresh `n`-server map.
+    pub fn new(n: usize) -> Self {
+        Monitor {
+            map: Arc::new(RwLock::new(ClusterMap::new(n))),
+            listeners: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Shared handle to the live map (readers see updates immediately —
+    /// the in-process analogue of OSDs fetching the latest epoch).
+    pub fn map_handle(&self) -> Arc<RwLock<ClusterMap>> {
+        self.map.clone()
+    }
+
+    /// Snapshot of the current map.
+    pub fn map(&self) -> ClusterMap {
+        self.map.read().unwrap().clone()
+    }
+
+    /// Register a listener fired on every mutation.
+    pub fn subscribe(&self, l: MapListener) {
+        self.listeners.lock().unwrap().push(l);
+    }
+
+    fn mutate(&self, f: impl FnOnce(&mut ClusterMap)) -> ClusterMap {
+        let snapshot = {
+            let mut m = self.map.write().unwrap();
+            f(&mut m);
+            m.clone()
+        };
+        for l in self.listeners.lock().unwrap().iter() {
+            l(&snapshot);
+        }
+        snapshot
+    }
+
+    /// Add a server with the given weight; returns (id, new map).
+    pub fn add_server(&self, weight: f64) -> (ServerId, ClusterMap) {
+        let mut id = ServerId(0);
+        let m = self.mutate(|m| id = m.add_server(weight));
+        (id, m)
+    }
+
+    /// Mark a server Down (crash detected) — placement immediately skips it.
+    pub fn mark_down(&self, id: ServerId) -> ClusterMap {
+        self.mutate(|m| m.set_state(id, ServerState::Down))
+    }
+
+    /// Mark a server Up again (recovered).
+    pub fn mark_up(&self, id: ServerId) -> ClusterMap {
+        self.mutate(|m| m.set_state(id, ServerState::Up))
+    }
+
+    /// Administratively remove a server (data should migrate off it).
+    pub fn mark_out(&self, id: ServerId) -> ClusterMap {
+        self.mutate(|m| m.set_state(id, ServerState::Out))
+    }
+
+    /// Reweight a server.
+    pub fn reweight(&self, id: ServerId, weight: f64) -> ClusterMap {
+        self.mutate(|m| m.set_weight(id, weight))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn listeners_fire_on_mutation() {
+        let mon = Monitor::new(2);
+        let fired = Arc::new(AtomicU64::new(0));
+        let f = fired.clone();
+        mon.subscribe(Box::new(move |m| {
+            f.store(m.epoch, Ordering::SeqCst);
+        }));
+        let (id, m) = mon.add_server(1.0);
+        assert_eq!(id, ServerId(2));
+        assert_eq!(m.epoch, 2);
+        assert_eq!(fired.load(Ordering::SeqCst), 2);
+        mon.mark_down(id);
+        assert_eq!(fired.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn map_handle_sees_updates() {
+        let mon = Monitor::new(1);
+        let h = mon.map_handle();
+        mon.add_server(1.0);
+        assert_eq!(h.read().unwrap().up_count(), 2);
+    }
+}

@@ -1,0 +1,205 @@
+//! Object → chunk splitting.
+//!
+//! The paper uses fixed-size chunks ("splitting the object into small
+//! fixed-size data chunks", §2.1); [`Chunking::Cdc`] adds gear-hash
+//! content-defined chunking as the natural extension (it shares the gear
+//! table with the Pallas CDC kernel, so both find identical boundaries).
+
+use crate::hash::gear::Gear;
+
+/// Chunking policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Chunking {
+    /// Fixed-size chunks of `size` bytes (last chunk may be short).
+    Fixed { size: usize },
+    /// Gear-CDC: cut where `gear & mask == 0`, clamped to [min, max].
+    Cdc { min: usize, mask: u32, max: usize },
+}
+
+impl Chunking {
+    /// A sane CDC config for a target mean chunk size (power of two).
+    pub fn cdc_with_mean(mean: usize) -> Self {
+        assert!(mean.is_power_of_two() && mean >= 256);
+        Chunking::Cdc {
+            min: mean / 4,
+            mask: (mean - 1) as u32,
+            max: mean * 4,
+        }
+    }
+}
+
+/// Splits byte slices into chunk ranges according to a [`Chunking`].
+#[derive(Clone, Copy, Debug)]
+pub struct Chunker {
+    policy: Chunking,
+}
+
+impl Chunker {
+    /// New chunker with the given policy.
+    pub fn new(policy: Chunking) -> Self {
+        match policy {
+            Chunking::Fixed { size } => assert!(size > 0, "chunk size must be > 0"),
+            Chunking::Cdc { min, max, .. } => {
+                assert!(min > 0 && max >= min, "bad CDC bounds")
+            }
+        }
+        Chunker { policy }
+    }
+
+    /// The policy in effect.
+    pub fn policy(&self) -> Chunking {
+        self.policy
+    }
+
+    /// Split `data` into contiguous chunk ranges covering it exactly.
+    pub fn split<'a>(&self, data: &'a [u8]) -> Vec<&'a [u8]> {
+        if data.is_empty() {
+            return Vec::new();
+        }
+        match self.policy {
+            Chunking::Fixed { size } => data.chunks(size).collect(),
+            Chunking::Cdc { min, mask, max } => {
+                let mut out = Vec::new();
+                let mut start = 0usize;
+                let mut g = Gear::new();
+                let mut len = 0usize;
+                for (i, &b) in data.iter().enumerate() {
+                    let h = g.roll(b);
+                    len += 1;
+                    let cut = len >= max || (len >= min && (h & mask) == 0);
+                    if cut {
+                        out.push(&data[start..=i]);
+                        start = i + 1;
+                        g = Gear::new();
+                        len = 0;
+                    }
+                }
+                if start < data.len() {
+                    out.push(&data[start..]);
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::XorShift128Plus;
+
+    fn payload(seed: u64, n: usize) -> Vec<u8> {
+        let mut rng = XorShift128Plus::new(seed);
+        let mut v = vec![0u8; n];
+        rng.fill_bytes(&mut v);
+        v
+    }
+
+    #[test]
+    fn fixed_exact_multiple() {
+        let c = Chunker::new(Chunking::Fixed { size: 4 });
+        let chunks = c.split(b"abcdefgh");
+        assert_eq!(chunks, vec![b"abcd".as_slice(), b"efgh".as_slice()]);
+    }
+
+    #[test]
+    fn fixed_short_tail() {
+        let c = Chunker::new(Chunking::Fixed { size: 4 });
+        let chunks = c.split(b"abcdefg");
+        assert_eq!(chunks.len(), 2);
+        assert_eq!(chunks[1], b"efg");
+    }
+
+    #[test]
+    fn empty_input_no_chunks() {
+        for policy in [
+            Chunking::Fixed { size: 8 },
+            Chunking::cdc_with_mean(1024),
+        ] {
+            assert!(Chunker::new(policy).split(b"").is_empty());
+        }
+    }
+
+    #[test]
+    fn cdc_respects_bounds_and_reconstructs() {
+        let data = payload(1, 200_000);
+        let c = Chunker::new(Chunking::cdc_with_mean(4096));
+        let chunks = c.split(&data);
+        let mut rebuilt = Vec::new();
+        for (i, ch) in chunks.iter().enumerate() {
+            if i + 1 < chunks.len() {
+                assert!(ch.len() >= 1024 && ch.len() <= 16384, "chunk {i}: {}", ch.len());
+            }
+            rebuilt.extend_from_slice(ch);
+        }
+        assert_eq!(rebuilt, data);
+        // mean in the right ballpark
+        let mean = data.len() / chunks.len();
+        assert!(mean > 1500 && mean < 10000, "mean {mean}");
+    }
+
+    #[test]
+    fn cdc_boundary_shift_is_local() {
+        // CDC's raison d'être: inserting bytes near the front only changes
+        // nearby chunk boundaries; later chunks re-align.
+        let a = payload(2, 100_000);
+        let mut b = a.clone();
+        b.splice(100..100, [1u8, 2, 3].iter().copied());
+        let c = Chunker::new(Chunking::cdc_with_mean(2048));
+        let ca: Vec<Vec<u8>> = c.split(&a).into_iter().map(<[u8]>::to_vec).collect();
+        let cb: Vec<Vec<u8>> = c.split(&b).into_iter().map(<[u8]>::to_vec).collect();
+        // count identical chunks via set intersection on content
+        let set: std::collections::HashSet<&Vec<u8>> = ca.iter().collect();
+        let shared = cb.iter().filter(|c| set.contains(c)).count();
+        assert!(
+            shared * 10 >= cb.len() * 8,
+            "only {shared}/{} chunks survived a 3-byte insert",
+            cb.len()
+        );
+    }
+
+    #[test]
+    fn property_reconstruction_any_policy() {
+        prop::check(
+            prop::Config { cases: 40, ..Default::default() },
+            |rng, size| {
+                let data = prop::bytes(rng, 1 + size as usize * 200);
+                let policy = if rng.next_u64() % 2 == 0 {
+                    Chunking::Fixed {
+                        size: 1 + rng.below(1000) as usize,
+                    }
+                } else {
+                    Chunking::Cdc {
+                        min: 1 + rng.below(64) as usize,
+                        mask: (1 << (3 + rng.below(6))) - 1,
+                        max: 65 + rng.below(4000) as usize,
+                    }
+                };
+                (data, policy)
+            },
+            |(data, policy)| {
+                let chunks = Chunker::new(*policy).split(data);
+                let rebuilt: Vec<u8> = chunks.concat();
+                if rebuilt != *data {
+                    return Err("reconstruction mismatch".into());
+                }
+                if let Chunking::Cdc { max, .. } = policy {
+                    if chunks.iter().any(|c| c.len() > *max) {
+                        return Err("max violated".into());
+                    }
+                }
+                if data.is_empty() != chunks.is_empty() {
+                    return Err("empty handling".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk size")]
+    fn zero_fixed_size_rejected() {
+        Chunker::new(Chunking::Fixed { size: 0 });
+    }
+}

@@ -1,0 +1,146 @@
+//! Asynchronous tagged consistency (paper §2.4) and its synchronous
+//! comparators.
+//!
+//! Every CIT entry starts with an **invalid** commit flag. In the paper's
+//! design ([`ConsistencyMode::AsyncTagged`]) completed chunk writes are
+//! registered with a per-server consistency manager; a background thread
+//! verifies the chunk is on stable storage and flips the flag to valid —
+//! no transaction lock is ever taken, so the write path pays (almost)
+//! nothing. The comparators of Fig. 5(b) are:
+//!
+//! * [`ConsistencyMode::SyncChunk`] — per-chunk flag switch as a second
+//!   synchronous metadata I/O under the shard transaction lock;
+//! * [`ConsistencyMode::SyncObject`] — one object-granularity flag I/O,
+//!   with the object transaction lock held for the whole object write;
+//! * [`ConsistencyMode::None`] — flags written valid inline (the
+//!   "baseline cluster-wide deduplication" bar of Fig. 5(b)); a crash can
+//!   leave a valid flag pointing at missing data, which is exactly the
+//!   inconsistency the tagged design exists to prevent.
+
+use crate::dedup::fingerprint::Fingerprint;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Consistency policy for commit flags.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConsistencyMode {
+    /// No flag protocol (Fig. 5(b) baseline; not crash-consistent).
+    None,
+    /// The paper's asynchronous tagged consistency.
+    AsyncTagged,
+    /// Synchronous per-chunk flag switch (+ transaction lock).
+    SyncChunk,
+    /// Synchronous per-object flag switch (+ object transaction lock).
+    SyncObject,
+}
+
+impl ConsistencyMode {
+    /// Short name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConsistencyMode::None => "none",
+            ConsistencyMode::AsyncTagged => "async-tagged",
+            ConsistencyMode::SyncChunk => "sync-chunk",
+            ConsistencyMode::SyncObject => "sync-object",
+        }
+    }
+}
+
+/// The queue between write I/Os and the consistency-manager thread
+/// ("all the incoming write I/Os register to consistency manager").
+#[derive(Default)]
+pub struct PendingFlags {
+    q: Mutex<VecDeque<Fingerprint>>,
+    cv: Condvar,
+}
+
+impl PendingFlags {
+    /// Empty queue.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a completed chunk write.
+    pub fn push(&self, fp: Fingerprint) {
+        self.q.lock().unwrap().push_back(fp);
+        self.cv.notify_one();
+    }
+
+    /// Pop one registration, waiting up to `timeout`.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<Fingerprint> {
+        let mut q = self.q.lock().unwrap();
+        if let Some(fp) = q.pop_front() {
+            return Some(fp);
+        }
+        let (mut q, _) = self.cv.wait_timeout(q, timeout).unwrap();
+        q.pop_front()
+    }
+
+    /// Drain everything queued right now (flush / tests).
+    pub fn drain(&self) -> Vec<Fingerprint> {
+        self.q.lock().unwrap().drain(..).collect()
+    }
+
+    /// Discard all registrations (crash: in-memory state is lost).
+    pub fn clear(&self) {
+        self.q.lock().unwrap().clear();
+    }
+
+    /// Queue depth.
+    pub fn len(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+
+    /// True when nothing is pending.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn push_pop() {
+        let p = PendingFlags::new();
+        let fp = Fingerprint::of(b"x");
+        p.push(fp);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.pop_timeout(Duration::from_millis(1)), Some(fp));
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn pop_times_out_empty() {
+        let p = PendingFlags::new();
+        assert_eq!(p.pop_timeout(Duration::from_millis(5)), None);
+    }
+
+    #[test]
+    fn wakes_blocked_popper() {
+        let p = Arc::new(PendingFlags::new());
+        let p2 = p.clone();
+        let t = std::thread::spawn(move || p2.pop_timeout(Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(20));
+        p.push(Fingerprint::of(b"wake"));
+        assert_eq!(t.join().unwrap(), Some(Fingerprint::of(b"wake")));
+    }
+
+    #[test]
+    fn clear_models_crash() {
+        let p = PendingFlags::new();
+        p.push(Fingerprint::of(b"a"));
+        p.push(Fingerprint::of(b"b"));
+        p.clear();
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn mode_names() {
+        assert_eq!(ConsistencyMode::AsyncTagged.name(), "async-tagged");
+        assert_eq!(ConsistencyMode::None.name(), "none");
+    }
+}

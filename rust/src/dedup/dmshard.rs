@@ -1,0 +1,226 @@
+//! The Deduplication Metadata Shard (paper §2.2).
+//!
+//! Every storage server hosts one DM-Shard with two *separate* persistent
+//! structures — the Object Map and the Chunk Information Table — each its
+//! own [`KvStore`] instance with an independent lock ("reduced congestion
+//! on a single data structure when multiple I/Os access the data
+//! structure"). The shard also carries the *transaction lock* used only by
+//! the synchronous consistency comparators of Fig. 5(b); the paper's
+//! asynchronous tagged mode never takes it.
+
+use crate::dedup::cit::{CitEntry, CommitFlag};
+use crate::dedup::fingerprint::Fingerprint;
+use crate::dedup::omap::OmapEntry;
+use crate::error::Result;
+use crate::kvstore::KvStore;
+use std::sync::Mutex;
+
+/// One server's deduplication metadata shard.
+pub struct DmShard {
+    omap: Box<dyn KvStore>,
+    cit: Box<dyn KvStore>,
+    /// Transaction lock for the synchronous consistency comparators.
+    pub tx_lock: Mutex<()>,
+    /// Serializes CIT read-modify-writes: a fingerprint can be updated
+    /// concurrently from the backend lane (remote StoreChunk) and the
+    /// frontend lane (local chunks bypass the fabric), so `cit_update`
+    /// must be atomic.
+    rmw: Mutex<()>,
+}
+
+impl DmShard {
+    /// Build over two KV stores (OMAP, CIT).
+    pub fn new(omap: Box<dyn KvStore>, cit: Box<dyn KvStore>) -> Self {
+        DmShard {
+            omap,
+            cit,
+            tx_lock: Mutex::new(()),
+            rmw: Mutex::new(()),
+        }
+    }
+
+    // ---- OMAP ----
+
+    /// Insert/replace an object's layout entry.
+    pub fn omap_put(&self, entry: &OmapEntry) -> Result<()> {
+        self.omap.put(entry.name.as_bytes(), &entry.encode())
+    }
+
+    /// Fetch an object's layout entry.
+    pub fn omap_get(&self, name: &str) -> Result<Option<OmapEntry>> {
+        match self.omap.get(name.as_bytes())? {
+            Some(v) => Ok(Some(OmapEntry::decode(&v)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Delete an object's layout entry; true if it existed.
+    pub fn omap_delete(&self, name: &str) -> Result<bool> {
+        self.omap.delete(name.as_bytes())
+    }
+
+    /// All object names in this shard.
+    pub fn omap_names(&self) -> Result<Vec<String>> {
+        Ok(self
+            .omap
+            .keys()?
+            .into_iter()
+            .filter_map(|k| String::from_utf8(k).ok())
+            .collect())
+    }
+
+    /// Number of objects in this shard.
+    pub fn omap_len(&self) -> usize {
+        self.omap.len()
+    }
+
+    // ---- CIT ----
+
+    /// Fetch a CIT entry.
+    pub fn cit_get(&self, fp: &Fingerprint) -> Result<Option<CitEntry>> {
+        match self.cit.get(&fp.to_bytes())? {
+            Some(v) => Ok(Some(CitEntry::decode(&v)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Insert/replace a CIT entry.
+    pub fn cit_put(&self, fp: &Fingerprint, entry: &CitEntry) -> Result<()> {
+        self.cit.put(&fp.to_bytes(), &entry.encode())
+    }
+
+    /// Delete a CIT entry; true if it existed.
+    pub fn cit_delete(&self, fp: &Fingerprint) -> Result<bool> {
+        self.cit.delete(&fp.to_bytes())
+    }
+
+    /// Read-modify-write a CIT entry under the CIT store's own lock
+    /// granularity (single key). Returns the updated entry, or `None` if
+    /// absent and `f` declined to create it.
+    pub fn cit_update(
+        &self,
+        fp: &Fingerprint,
+        f: impl FnOnce(Option<CitEntry>) -> Option<CitEntry>,
+    ) -> Result<Option<CitEntry>> {
+        // The store is internally synchronized per-op; cross-op atomicity
+        // (get → modify → put) needs the shard RMW lock because frontend
+        // and backend lanes both mutate the CIT.
+        let _guard = self.rmw.lock().unwrap();
+        let cur = self.cit_get(fp)?;
+        match f(cur) {
+            Some(next) => {
+                self.cit_put(fp, &next)?;
+                Ok(Some(next))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Flip the commit flag of an existing entry.
+    pub fn cit_set_flag(&self, fp: &Fingerprint, flag: CommitFlag, now_ms: u64) -> Result<bool> {
+        Ok(self
+            .cit_update(fp, |cur| {
+                cur.map(|mut e| {
+                    e.flag = flag;
+                    e.flagged_at_ms = now_ms;
+                    e
+                })
+            })?
+            .is_some())
+    }
+
+    /// All fingerprints in the CIT.
+    pub fn cit_fingerprints(&self) -> Result<Vec<Fingerprint>> {
+        Ok(self
+            .cit
+            .keys()?
+            .into_iter()
+            .filter_map(|k| Fingerprint::from_bytes(&k))
+            .collect())
+    }
+
+    /// Number of CIT entries.
+    pub fn cit_len(&self) -> usize {
+        self.cit.len()
+    }
+
+    /// Flush both stores.
+    pub fn sync(&self) -> Result<()> {
+        self.omap.sync()?;
+        self.cit.sync()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::MemKv;
+
+    fn shard() -> DmShard {
+        DmShard::new(Box::new(MemKv::new()), Box::new(MemKv::new()))
+    }
+
+    #[test]
+    fn omap_crud() {
+        let s = shard();
+        let e = OmapEntry::new(
+            "obj".into(),
+            Fingerprint::of(b"obj"),
+            vec![(Fingerprint::of(b"c"), 10)],
+        );
+        s.omap_put(&e).unwrap();
+        assert_eq!(s.omap_get("obj").unwrap().unwrap(), e);
+        assert_eq!(s.omap_len(), 1);
+        assert_eq!(s.omap_names().unwrap(), vec!["obj".to_string()]);
+        assert!(s.omap_delete("obj").unwrap());
+        assert!(s.omap_get("obj").unwrap().is_none());
+    }
+
+    #[test]
+    fn cit_crud_and_update() {
+        let s = shard();
+        let fp = Fingerprint::of(b"chunk");
+        assert!(s.cit_get(&fp).unwrap().is_none());
+        s.cit_put(
+            &fp,
+            &CitEntry {
+                refcount: 1,
+                flag: CommitFlag::Invalid,
+                len: 100,
+                flagged_at_ms: 5,
+            },
+        )
+        .unwrap();
+        let e = s
+            .cit_update(&fp, |cur| {
+                let mut e = cur.unwrap();
+                e.refcount += 2;
+                Some(e)
+            })
+            .unwrap()
+            .unwrap();
+        assert_eq!(e.refcount, 3);
+        assert!(s.cit_set_flag(&fp, CommitFlag::Valid, 9).unwrap());
+        let e = s.cit_get(&fp).unwrap().unwrap();
+        assert_eq!(e.flag, CommitFlag::Valid);
+        assert_eq!(e.flagged_at_ms, 9);
+        assert_eq!(s.cit_fingerprints().unwrap(), vec![fp]);
+        assert!(s.cit_delete(&fp).unwrap());
+        assert_eq!(s.cit_len(), 0);
+    }
+
+    #[test]
+    fn set_flag_on_missing_is_false() {
+        let s = shard();
+        assert!(!s.cit_set_flag(&Fingerprint::of(b"x"), CommitFlag::Valid, 0).unwrap());
+    }
+
+    #[test]
+    fn update_can_decline_creation() {
+        let s = shard();
+        let fp = Fingerprint::of(b"nope");
+        let r = s.cit_update(&fp, |cur| cur).unwrap();
+        assert!(r.is_none());
+        assert!(s.cit_get(&fp).unwrap().is_none());
+    }
+}

@@ -1,0 +1,727 @@
+//! The deduplication I/O engine — the paper's Figure 3 transactions.
+//!
+//! [`put_object`] / [`get_object`] / [`delete_object`] run on an OSD
+//! frontend lane (the object's name-hash primary — "OSS 1" in Figure 2);
+//! [`store_chunk_local`] runs on the backend lane of the chunk's
+//! content-hash home ("OSS 4"). Four dedup modes share these entry points:
+//!
+//! * [`DedupMode::ClusterWide`] — the paper: chunks and their CIT entries
+//!   routed by fingerprint; intra-batch duplicates collapsed before any
+//!   network I/O (the L2 graph's first-duplicate index does this when the
+//!   XLA provider is active; the scalar path does it with a hash map).
+//! * [`DedupMode::Central`] — comparator: one server (osd.0) owns all
+//!   dedup metadata and performs all chunking/fingerprinting; chunk data
+//!   is spread raw across the cluster.
+//! * [`DedupMode::DiskLocal`] — comparator for Table 2: dedup only within
+//!   the object's primary server.
+//! * [`DedupMode::None`] — baseline: whole objects stored raw.
+
+use crate::dedup::cit::{CitEntry, CommitFlag};
+use crate::dedup::consistency::ConsistencyMode;
+use crate::dedup::fingerprint::Fingerprint;
+use crate::dedup::omap::OmapEntry;
+use crate::error::{Error, Result};
+use crate::failure::CrashPoint;
+use crate::metrics::Metrics;
+use crate::net::Lane;
+use crate::storage::osd::OsdShared;
+use crate::storage::proto::{Req, Resp};
+use std::borrow::Cow;
+use std::collections::HashMap;
+
+/// Which deduplication architecture the cluster runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DedupMode {
+    /// No deduplication (baseline Ceph in the paper's figures).
+    None,
+    /// The paper's cluster-wide dedup (DM-Shard + content placement).
+    ClusterWide,
+    /// Central dedup-metadata server (osd.0).
+    Central,
+    /// Per-server local dedup (Table 2's disk-based comparator).
+    DiskLocal,
+}
+
+impl DedupMode {
+    /// Short name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DedupMode::None => "no-dedup",
+            DedupMode::ClusterWide => "cluster-wide",
+            DedupMode::Central => "central",
+            DedupMode::DiskLocal => "disk-local",
+        }
+    }
+}
+
+/// Sentinel for "this server just crashed mid-transaction": the lane loop
+/// checks the injector and drops the reply, so the message text never
+/// reaches a client.
+fn died() -> Error {
+    Error::TxAborted("server crashed".into())
+}
+
+// --------------------------------------------------------------------
+// write path
+// --------------------------------------------------------------------
+
+/// Whole-object write (frontend). Returns (logical bytes, unique bytes
+/// newly stored).
+pub fn put_object(sh: &OsdShared, name: &str, data: &[u8]) -> Result<(u64, u64)> {
+    Metrics::add(&sh.metrics.bytes_logical, data.len() as u64);
+    match sh.cfg.dedup {
+        DedupMode::None => put_nodedup(sh, name, data),
+        DedupMode::ClusterWide => put_dedup(sh, name, data, /*local_only=*/ false),
+        DedupMode::DiskLocal => put_dedup(sh, name, data, /*local_only=*/ true),
+        DedupMode::Central => put_central(sh, name, data),
+    }
+}
+
+/// Baseline: store the whole object raw on this server + replicas.
+fn put_nodedup(sh: &OsdShared, name: &str, data: &[u8]) -> Result<(u64, u64)> {
+    let key = raw_object_key(name);
+    sh.store.put(&key, data)?;
+    Metrics::add(&sh.metrics.bytes_stored, data.len() as u64);
+    replicate(sh, &sh.object_chain(name), &key, data)?;
+    Ok((data.len() as u64, data.len() as u64))
+}
+
+/// Cluster-wide (and, with `local_only`, disk-local) dedup write.
+fn put_dedup(sh: &OsdShared, name: &str, data: &[u8], local_only: bool) -> Result<(u64, u64)> {
+    // SyncObject mode holds the object transaction lock for the whole
+    // write and pays one extra synchronous flag I/O at the end.
+    let _obj_guard = if sh.cfg.consistency == ConsistencyMode::SyncObject {
+        Some(sh.obj_lock.lock().unwrap())
+    } else {
+        None
+    };
+
+    // 1. split + fingerprint
+    let chunks = sh.cfg.chunker.split(data);
+    let digests = sh.provider.digests(&chunks);
+
+    // 2. collapse intra-batch duplicates (multiplicity per unique fp);
+    //    first occurrence keeps the payload.
+    let mut order: Vec<Fingerprint> = Vec::new();
+    let mut uniq: HashMap<Fingerprint, (usize, u64)> = HashMap::new();
+    for (i, fp) in digests.iter().enumerate() {
+        match uniq.get_mut(fp) {
+            Some((_, refs)) => *refs += 1,
+            None => {
+                uniq.insert(*fp, (i, 1));
+                order.push(*fp);
+            }
+        }
+    }
+
+    // 3. route every unique chunk to its content home (scatter), gather
+    //    acks. Local chunks bypass the fabric — same-machine shortcut.
+    let mut pendings = Vec::new();
+    let mut stored: Vec<(Fingerprint, u64, bool)> = Vec::new(); // (fp, refs, dedup_hit)
+    let mut failed: Option<Error> = None;
+    for fp in &order {
+        let (idx, refs) = uniq[fp];
+        let target = if local_only {
+            sh.id
+        } else {
+            sh.chunk_chain(fp.placement_key())[0]
+        };
+        if target == sh.id {
+            match store_chunk_local(sh, fp, Cow::Borrowed(chunks[idx]), refs) {
+                Ok(hit) => stored.push((*fp, refs, hit)),
+                Err(e) => {
+                    failed = Some(e);
+                    break;
+                }
+            }
+        } else {
+            let addr = sh.dir.lookup(target, Lane::Backend)?;
+            let req = Req::StoreChunk {
+                fp: *fp,
+                data: chunks[idx].to_vec(),
+                refs,
+            };
+            let size = req.wire_size();
+            match addr.send(req, size) {
+                Ok(p) => pendings.push((*fp, refs, p)),
+                Err(e) => {
+                    failed = Some(e);
+                    break;
+                }
+            }
+        }
+    }
+    for (fp, refs, p) in pendings {
+        match p.wait() {
+            Ok(Resp::StoreAck { dedup_hit }) => stored.push((fp, refs, dedup_hit)),
+            Ok(Resp::Err(e)) => failed = Some(Error::TxAborted(e)),
+            Ok(_) => failed = Some(Error::TxAborted("bad store reply".into())),
+            Err(e) => failed = Some(e),
+        }
+    }
+    if let Some(e) = failed {
+        // abort: roll back references we already took.
+        rollback(sh, &stored, local_only);
+        Metrics::add(&sh.metrics.tx_aborts, 1);
+        return Err(Error::TxAborted(format!("chunk store failed: {e}")));
+    }
+
+    if sh.injector.maybe_crash(CrashPoint::BeforeOmapWrite) {
+        return Err(died());
+    }
+
+    // 4. OMAP entry (object layout) — object fp is the Merkle digest of
+    //    the chunk fingerprints (reconstruction needs chunk fps, §2.2).
+    // An overwrite replaces the layout: the old version's chunk
+    // references must be released (after the new entry is durable).
+    let old_entry = sh.shard.omap_get(name)?;
+    let object_fp = object_fingerprint(&digests);
+    let entry = OmapEntry::new(
+        name.to_string(),
+        object_fp,
+        digests
+            .iter()
+            .zip(&chunks)
+            .map(|(fp, c)| (*fp, c.len() as u32))
+            .collect(),
+    );
+    sh.charge_meta_io(); // modeled DM-Shard write
+    sh.shard.omap_put(&entry)?;
+
+    // SyncObject: the single synchronous object-flag I/O.
+    if sh.cfg.consistency == ConsistencyMode::SyncObject {
+        sh.charge_meta_io(); // modeled DM-Shard write
+        sh.store.put(&object_flag_key(name), &[1u8])?;
+    }
+
+    if sh.injector.maybe_crash(CrashPoint::AfterOmapWrite) {
+        return Err(died());
+    }
+
+    // 5. replicate the OMAP record for read availability.
+    let chain = sh.object_chain(name);
+    replicate(sh, &chain, &omap_copy_key(name), &entry.encode())?;
+
+    // 6. release the overwritten version's chunk references.
+    if let Some(old) = old_entry {
+        release_refs(sh, &old, local_only);
+    }
+
+    let unique: u64 = stored
+        .iter()
+        .filter(|(_, _, hit)| !hit)
+        .map(|(fp, _, _)| chunks[uniq[fp].0].len() as u64)
+        .sum();
+    Ok((data.len() as u64, unique))
+}
+
+/// Central-dedup write (runs on osd.0's frontend): all metadata local,
+/// chunk data spread raw by fingerprint.
+fn put_central(sh: &OsdShared, name: &str, data: &[u8]) -> Result<(u64, u64)> {
+    let chunks = sh.cfg.chunker.split(data);
+    let digests = sh.provider.digests(&chunks);
+
+    let mut unique_bytes = 0u64;
+    let mut entry_chunks = Vec::with_capacity(chunks.len());
+    for (i, fp) in digests.iter().enumerate() {
+        entry_chunks.push((*fp, chunks[i].len() as u32));
+        Metrics::add(&sh.metrics.cit_lookups, 1);
+        let now = sh.now_ms();
+        let existing = sh.shard.cit_get(fp)?;
+        match existing {
+            Some(mut e) => {
+                e.refcount += 1;
+                sh.charge_meta_io(); // modeled DM-Shard write
+                sh.shard.cit_put(fp, &e)?;
+                Metrics::add(&sh.metrics.dedup_hits, 1);
+            }
+            None => {
+                // place the data raw on the content-derived server
+                let target = sh.chunk_chain(fp.placement_key())[0];
+                let key = fp.to_bytes().to_vec();
+                if target == sh.id {
+                    sh.store.put(&key, chunks[i])?;
+                    Metrics::add(&sh.metrics.bytes_stored, chunks[i].len() as u64);
+                } else {
+                    let addr = sh.dir.lookup(target, Lane::Backend)?;
+                    let req = Req::StoreRaw {
+                        key,
+                        data: chunks[i].to_vec(),
+                    };
+                    let size = req.wire_size();
+                    match addr.call(req, size)? {
+                        Resp::Ok => {}
+                        Resp::Err(e) => return Err(Error::TxAborted(e)),
+                        _ => return Err(Error::TxAborted("bad raw store reply".into())),
+                    }
+                }
+                sh.charge_meta_io(); // modeled DM-Shard write
+                sh.shard.cit_put(
+                    fp,
+                    &CitEntry {
+                        refcount: 1,
+                        flag: CommitFlag::Valid,
+                        len: chunks[i].len() as u32,
+                        flagged_at_ms: now,
+                    },
+                )?;
+                Metrics::add(&sh.metrics.unique_chunks, 1);
+                unique_bytes += chunks[i].len() as u64;
+            }
+        }
+    }
+    let old_entry = sh.shard.omap_get(name)?;
+    let entry = OmapEntry::new(name.to_string(), object_fingerprint(&digests), entry_chunks);
+    sh.charge_meta_io(); // modeled DM-Shard write
+    sh.shard.omap_put(&entry)?;
+    if let Some(old) = old_entry {
+        // central keeps all CIT entries locally
+        let mut counts: HashMap<Fingerprint, u64> = HashMap::new();
+        for (fp, _) in &old.chunks {
+            *counts.entry(*fp).or_insert(0) += 1;
+        }
+        for (fp, refs) in counts {
+            dec_ref_local(sh, &fp, refs)?;
+        }
+    }
+    Ok((data.len() as u64, unique_bytes))
+}
+
+/// The chunk-home transaction ("OSS 4"): CIT lookup → refcount grant /
+/// unique store, under the configured consistency mode. Returns
+/// `dedup_hit`.
+pub fn store_chunk_local(
+    sh: &OsdShared,
+    fp: &Fingerprint,
+    data: Cow<'_, [u8]>,
+    refs: u64,
+) -> Result<bool> {
+    Metrics::add(&sh.metrics.cit_lookups, 1);
+    let now = sh.now_ms();
+    let mode = sh.cfg.consistency;
+
+    // SyncChunk holds the shard transaction lock across the whole chunk
+    // transaction (the comparator's cost); other modes take no lock.
+    let _tx_guard = if mode == ConsistencyMode::SyncChunk {
+        Some(sh.shard.tx_lock.lock().unwrap())
+    } else {
+        None
+    };
+
+    // Atomic CIT upsert (the same fingerprint can arrive concurrently on
+    // the frontend and backend lanes): existing entries get the refcount
+    // grant; absent ones are inserted with the mode's initial flag.
+    let initial_flag = match mode {
+        // inline-valid modes (object-granularity flags live on the
+        // frontend; None is the no-consistency baseline)
+        ConsistencyMode::None | ConsistencyMode::SyncObject => CommitFlag::Valid,
+        _ => CommitFlag::Invalid,
+    };
+    let mut prior: Option<CommitFlag> = None;
+    sh.charge_meta_io(); // modeled DM-Shard write
+    sh.shard.cit_update(fp, |cur| match cur {
+        Some(mut e) => {
+            prior = Some(e.flag);
+            e.refcount += refs;
+            Some(e)
+        }
+        None => Some(CitEntry {
+            refcount: refs,
+            flag: initial_flag,
+            len: data.len() as u32,
+            flagged_at_ms: now,
+        }),
+    })?;
+
+    if let Some(prior_flag) = prior {
+        // duplicate write.
+        if prior_flag == CommitFlag::Invalid {
+            // the paper's consistency check: stat the chunk; repair a
+            // missing one from the payload in hand, then validate.
+            if !sh.store.stat(&fp.to_bytes())? {
+                Metrics::add(&sh.metrics.bytes_stored, data.len() as u64);
+                replicate_chunk(sh, fp, &data)?;
+                sh.store.put_owned(&fp.to_bytes(), data.into_owned())?;
+            }
+            sh.charge_meta_io(); // modeled DM-Shard write
+            sh.shard.cit_set_flag(fp, CommitFlag::Valid, now)?;
+            Metrics::add(&sh.metrics.repairs, 1);
+        }
+        Metrics::add(&sh.metrics.dedup_hits, refs);
+        return Ok(true);
+    }
+
+    // unique chunk: store the data; flag handling per consistency mode.
+    if sh.injector.maybe_crash(CrashPoint::AfterCitInsert) {
+        return Err(died());
+    }
+    sh.store.put(&fp.to_bytes(), &data)?;
+    if sh.injector.maybe_crash(CrashPoint::AfterDataStore) {
+        return Err(died());
+    }
+    match mode {
+        ConsistencyMode::None | ConsistencyMode::SyncObject => {}
+        ConsistencyMode::AsyncTagged => {
+            // register with the consistency manager; the flag flips off
+            // the critical path. No lock, no extra synchronous I/O.
+            sh.pending.push(*fp);
+        }
+        ConsistencyMode::SyncChunk => {
+            // the second synchronous flag I/O, under the tx lock.
+            sh.charge_meta_io(); // modeled DM-Shard write
+            sh.shard.cit_set_flag(fp, CommitFlag::Valid, now)?;
+        }
+    }
+    Metrics::add(&sh.metrics.bytes_stored, data.len() as u64);
+    Metrics::add(&sh.metrics.unique_chunks, 1);
+
+    if sh.injector.maybe_crash(CrashPoint::BeforeReplicate) {
+        return Err(died());
+    }
+    replicate_chunk(sh, fp, &data)?;
+    Ok(false)
+}
+
+/// Refcount decrement (delete path / write rollback). Refcount-zero
+/// entries are left for the GC pass to reclaim.
+pub fn dec_ref_local(sh: &OsdShared, fp: &Fingerprint, refs: u64) -> Result<()> {
+    sh.shard.cit_update(fp, |cur| {
+        cur.map(|mut e| {
+            e.refcount = e.refcount.saturating_sub(refs);
+            e
+        })
+    })?;
+    Ok(())
+}
+
+/// Rebalance receiver: adopt a chunk + CIT entry that now belongs here.
+pub fn absorb_migrated_chunk(
+    sh: &OsdShared,
+    fp: &Fingerprint,
+    data: &[u8],
+    refcount: u64,
+    valid: bool,
+) -> Result<()> {
+    let now = sh.now_ms();
+    sh.shard.cit_update(fp, |cur| match cur {
+        Some(mut e) => {
+            e.refcount += refcount;
+            Some(e)
+        }
+        None => Some(CitEntry {
+            refcount,
+            flag: if valid {
+                CommitFlag::Valid
+            } else {
+                CommitFlag::Invalid
+            },
+            len: data.len() as u32,
+            flagged_at_ms: now,
+        }),
+    })?;
+    if !sh.store.stat(&fp.to_bytes())? {
+        sh.store.put(&fp.to_bytes(), data)?;
+        Metrics::add(&sh.metrics.bytes_stored, data.len() as u64);
+    }
+    replicate_chunk(sh, fp, data)?;
+    Ok(())
+}
+
+// --------------------------------------------------------------------
+// read path
+// --------------------------------------------------------------------
+
+/// Whole-object read (frontend). `Ok(None)` when unknown.
+pub fn get_object(sh: &OsdShared, name: &str) -> Result<Option<Vec<u8>>> {
+    match sh.cfg.dedup {
+        DedupMode::None => {
+            if let Some(d) = sh.store.get(&raw_object_key(name))? {
+                return Ok(Some(d));
+            }
+            // degraded read from a replica copy of the raw object
+            Ok(sh.replica_store.get(&raw_object_key(name))?)
+        }
+        _ => {
+            // OMAP lookup: local shard, else a replica copy we hold.
+            let entry = match sh.shard.omap_get(name)? {
+                Some(e) => Some(e),
+                None => sh
+                    .replica_store
+                    .get(&omap_copy_key(name))?
+                    .map(|v| OmapEntry::decode(&v))
+                    .transpose()?,
+            };
+            let Some(entry) = entry else {
+                return Ok(None);
+            };
+            let mut out = Vec::with_capacity(entry.size as usize);
+            for (fp, len) in &entry.chunks {
+                let data = fetch_chunk(sh, fp)?;
+                if data.len() != *len as usize {
+                    return Err(Error::Corrupt(format!(
+                        "chunk {fp} length {} != {}",
+                        data.len(),
+                        len
+                    )));
+                }
+                if sh.cfg.verify_read && Fingerprint::of(&data) != *fp {
+                    return Err(Error::Corrupt(format!("chunk {fp} digest mismatch")));
+                }
+                out.extend_from_slice(&data);
+            }
+            Ok(Some(out))
+        }
+    }
+}
+
+/// Fetch one chunk: local, then its content home, then replica copies
+/// (degraded read path — "robust fault tolerance").
+fn fetch_chunk(sh: &OsdShared, fp: &Fingerprint) -> Result<Vec<u8>> {
+    let key = fp.to_bytes().to_vec();
+    // central mode keeps data placement identical (raw by fp), so this
+    // path is shared by all dedup modes.
+    let chain = sh.chunk_chain(fp.placement_key());
+    if chain.first() == Some(&sh.id) || sh.cfg.dedup == DedupMode::DiskLocal {
+        if let Some(d) = sh.store.get(&key)? {
+            return Ok(d);
+        }
+    }
+    if sh.cfg.dedup == DedupMode::DiskLocal {
+        return Err(Error::ChunkMissing(fp.to_hex()));
+    }
+    // primary over the fabric
+    if chain.first() != Some(&sh.id) {
+        if let Some(primary) = chain.first() {
+            if let Ok(addr) = sh.dir.lookup(*primary, Lane::Backend) {
+                let req = Req::FetchChunk { fp: *fp };
+                let size = req.wire_size();
+                match addr.call(req, size) {
+                    Ok(Resp::Data(d)) => return Ok(d),
+                    Ok(_) | Err(_) => {} // fall through to replicas
+                }
+            }
+        }
+    }
+    // replica copies
+    for peer in chain.iter().skip(1) {
+        let fetch = if *peer == sh.id {
+            sh.replica_store.get(&chunk_copy_key(fp))?
+        } else if let Ok(addr) = sh.dir.lookup(*peer, Lane::Replica) {
+            let req = Req::FetchCopy {
+                key: chunk_copy_key(fp),
+            };
+            let size = req.wire_size();
+            match addr.call(req, size) {
+                Ok(Resp::Data(d)) => Some(d),
+                _ => None,
+            }
+        } else {
+            None
+        };
+        if let Some(d) = fetch {
+            return Ok(d);
+        }
+    }
+    Err(Error::ChunkMissing(fp.to_hex()))
+}
+
+// --------------------------------------------------------------------
+// delete path
+// --------------------------------------------------------------------
+
+/// Whole-object delete (frontend); decrements chunk references. Returns
+/// false when the object was unknown.
+pub fn delete_object(sh: &OsdShared, name: &str) -> Result<bool> {
+    match sh.cfg.dedup {
+        DedupMode::None => {
+            let existed = sh.store.delete(&raw_object_key(name))?;
+            for peer in sh.object_chain(name).iter().skip(1) {
+                if let Ok(addr) = sh.dir.lookup(*peer, Lane::Replica) {
+                    let _ = addr.call(
+                        Req::DeleteCopy {
+                            key: raw_object_key(name),
+                        },
+                        64,
+                    );
+                }
+            }
+            Ok(existed)
+        }
+        _ => {
+            let Some(entry) = sh.shard.omap_get(name)? else {
+                return Ok(false);
+            };
+            let local_only =
+                sh.cfg.dedup == DedupMode::DiskLocal || sh.cfg.dedup == DedupMode::Central;
+            release_refs(sh, &entry, local_only);
+            sh.shard.omap_delete(name)?;
+            for peer in sh.object_chain(name).iter().skip(1) {
+                if let Ok(addr) = sh.dir.lookup(*peer, Lane::Replica) {
+                    let _ = addr.call(
+                        Req::DeleteCopy {
+                            key: omap_copy_key(name),
+                        },
+                        64,
+                    );
+                }
+            }
+            Ok(true)
+        }
+    }
+}
+
+// --------------------------------------------------------------------
+// helpers
+// --------------------------------------------------------------------
+
+/// Key for a whole raw object (no-dedup mode).
+pub fn raw_object_key(name: &str) -> Vec<u8> {
+    let mut k = b"obj:".to_vec();
+    k.extend_from_slice(name.as_bytes());
+    k
+}
+
+/// Key for a replica copy of a chunk.
+pub fn chunk_copy_key(fp: &Fingerprint) -> Vec<u8> {
+    let mut k = b"c:".to_vec();
+    k.extend_from_slice(&fp.to_bytes());
+    k
+}
+
+/// Key for a replica copy of an OMAP record.
+pub fn omap_copy_key(name: &str) -> Vec<u8> {
+    let mut k = b"o:".to_vec();
+    k.extend_from_slice(name.as_bytes());
+    k
+}
+
+/// Key for the SyncObject commit-flag record.
+pub fn object_flag_key(name: &str) -> Vec<u8> {
+    let mut k = b"of:".to_vec();
+    k.extend_from_slice(name.as_bytes());
+    k
+}
+
+/// Whole-object fingerprint: Merkle digest over the chunk fingerprints.
+pub fn object_fingerprint(digests: &[Fingerprint]) -> Fingerprint {
+    let mut buf = Vec::with_capacity(digests.len() * 20);
+    for d in digests {
+        buf.extend_from_slice(&d.to_bytes());
+    }
+    Fingerprint::of(&buf)
+}
+
+/// Replicate a chunk's data to the rest of its placement chain.
+fn replicate_chunk(sh: &OsdShared, fp: &Fingerprint, data: &[u8]) -> Result<()> {
+    let chain = sh.chunk_chain(fp.placement_key());
+    replicate(sh, &chain, &chunk_copy_key(fp), data)
+}
+
+/// Replicate `key → data` to every chain member except ourselves.
+/// Replication failures are non-fatal (degraded durability, like Ceph
+/// acking with min_size); dead peers are skipped.
+fn replicate(
+    sh: &OsdShared,
+    chain: &[crate::cluster::ServerId],
+    key: &[u8],
+    data: &[u8],
+) -> Result<()> {
+    if sh.cfg.replication <= 1 {
+        return Ok(());
+    }
+    let mut pendings = Vec::new();
+    for peer in chain.iter().skip(1).take(sh.cfg.replication - 1) {
+        if *peer == sh.id {
+            continue;
+        }
+        if let Ok(addr) = sh.dir.lookup(*peer, Lane::Replica) {
+            let req = Req::PutCopy {
+                key: key.to_vec(),
+                data: data.to_vec(),
+            };
+            let size = req.wire_size();
+            if let Ok(p) = addr.send(req, size) {
+                pendings.push(p);
+            }
+        }
+    }
+    for p in pendings {
+        let _ = p.wait();
+    }
+    Ok(())
+}
+
+/// Release every chunk reference held by an OMAP entry (delete path and
+/// overwrite replacement): collapse multiplicity, then decrement at each
+/// chunk home. Dead homes are skipped (scrub reconciles later).
+fn release_refs(sh: &OsdShared, entry: &OmapEntry, local_only: bool) {
+    let mut counts: HashMap<Fingerprint, u64> = HashMap::new();
+    for (fp, _) in &entry.chunks {
+        *counts.entry(*fp).or_insert(0) += 1;
+    }
+    for (fp, refs) in counts {
+        let target = if local_only {
+            sh.id
+        } else {
+            sh.chunk_chain(fp.placement_key())[0]
+        };
+        if target == sh.id {
+            let _ = dec_ref_local(sh, &fp, refs);
+        } else if let Ok(addr) = sh.dir.lookup(target, Lane::Backend) {
+            let _ = addr.call(Req::DecRef { fp, refs }, 96);
+        }
+    }
+}
+
+/// Write-abort rollback: undo reference increments already granted.
+fn rollback(sh: &OsdShared, stored: &[(Fingerprint, u64, bool)], local_only: bool) {
+    for (fp, refs, _) in stored {
+        let target = if local_only {
+            sh.id
+        } else {
+            sh.chunk_chain(fp.placement_key())[0]
+        };
+        if target == sh.id {
+            let _ = dec_ref_local(sh, fp, *refs);
+        } else if let Ok(addr) = sh.dir.lookup(target, Lane::Backend) {
+            let _ = addr.call(Req::DecRef { fp: *fp, refs: *refs }, 96);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn object_fingerprint_depends_on_order() {
+        let a = Fingerprint::of(b"a");
+        let b = Fingerprint::of(b"b");
+        assert_ne!(object_fingerprint(&[a, b]), object_fingerprint(&[b, a]));
+        assert_eq!(object_fingerprint(&[a, b]), object_fingerprint(&[a, b]));
+    }
+
+    #[test]
+    fn key_namespaces_disjoint() {
+        let fp = Fingerprint::of(b"x");
+        let keys = [
+            raw_object_key("n"),
+            chunk_copy_key(&fp),
+            omap_copy_key("n"),
+            object_flag_key("n"),
+        ];
+        for (i, a) in keys.iter().enumerate() {
+            for (j, b) in keys.iter().enumerate() {
+                if i != j {
+                    assert_ne!(a, b);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mode_names() {
+        assert_eq!(DedupMode::ClusterWide.name(), "cluster-wide");
+        assert_eq!(DedupMode::None.name(), "no-dedup");
+    }
+}

@@ -1,0 +1,126 @@
+//! Chunk content fingerprints and fingerprint computation providers.
+
+use crate::hash::sha1::sha1_words;
+use crate::util::hex;
+
+/// SHA-1 content fingerprint, stored as the 5 big-endian state words (the
+/// layout shared with the Pallas kernel and the XLA runtime).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(pub [u32; 5]);
+
+impl Fingerprint {
+    /// Fingerprint of a chunk's content.
+    pub fn of(data: &[u8]) -> Self {
+        Fingerprint(sha1_words(data))
+    }
+
+    /// The placement key: the first digest word extended to 64 bits with
+    /// the second (content-based placement, paper §2.3).
+    pub fn placement_key(&self) -> u64 {
+        ((self.0[0] as u64) << 32) | self.0[1] as u64
+    }
+
+    /// 20-byte big-endian digest.
+    pub fn to_bytes(&self) -> [u8; 20] {
+        let mut out = [0u8; 20];
+        for (i, w) in self.0.iter().enumerate() {
+            out[i * 4..i * 4 + 4].copy_from_slice(&w.to_be_bytes());
+        }
+        out
+    }
+
+    /// Parse from 20 bytes.
+    pub fn from_bytes(b: &[u8]) -> Option<Self> {
+        if b.len() != 20 {
+            return None;
+        }
+        let mut w = [0u32; 5];
+        for i in 0..5 {
+            w[i] = u32::from_be_bytes([b[i * 4], b[i * 4 + 1], b[i * 4 + 2], b[i * 4 + 3]]);
+        }
+        Some(Fingerprint(w))
+    }
+
+    /// Canonical 40-char hex form.
+    pub fn to_hex(&self) -> String {
+        hex::encode(&self.to_bytes())
+    }
+}
+
+impl std::fmt::Debug for Fingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "fp:{}", &self.to_hex()[..12])
+    }
+}
+
+impl std::fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.to_hex())
+    }
+}
+
+/// A fingerprint computation engine.
+///
+/// Implementations: [`RustSha1Provider`] (scalar, per-frontend-thread) and
+/// `runtime::BatchFingerprinter` (the AOT Pallas kernel through PJRT).
+pub trait FingerprintProvider: Send + Sync {
+    /// Digest a batch of chunks (arbitrary sizes).
+    fn digests(&self, chunks: &[&[u8]]) -> Vec<Fingerprint>;
+
+    /// Provider name for configs/reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Scalar from-scratch SHA-1 (the default provider; runs on the calling
+/// OSD frontend thread, so it parallelizes across servers).
+pub struct RustSha1Provider;
+
+impl FingerprintProvider for RustSha1Provider {
+    fn digests(&self, chunks: &[&[u8]]) -> Vec<Fingerprint> {
+        chunks.iter().map(|c| Fingerprint::of(c)).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-sha1"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp_of_known_vector() {
+        let fp = Fingerprint::of(b"abc");
+        assert_eq!(fp.to_hex(), "a9993e364706816aba3e25717850c26c9cd0d89d");
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let fp = Fingerprint::of(b"roundtrip");
+        let b = fp.to_bytes();
+        assert_eq!(Fingerprint::from_bytes(&b).unwrap(), fp);
+        assert!(Fingerprint::from_bytes(&b[..19]).is_none());
+    }
+
+    #[test]
+    fn placement_key_uses_leading_words() {
+        let fp = Fingerprint([0x11223344, 0x55667788, 0, 0, 0]);
+        assert_eq!(fp.placement_key(), 0x1122334455667788);
+    }
+
+    #[test]
+    fn provider_batches() {
+        let chunks: Vec<&[u8]> = vec![b"a", b"b", b"a"];
+        let d = RustSha1Provider.digests(&chunks);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d[0], d[2]);
+        assert_ne!(d[0], d[1]);
+    }
+
+    #[test]
+    fn debug_is_short() {
+        let s = format!("{:?}", Fingerprint::of(b"x"));
+        assert!(s.starts_with("fp:") && s.len() == 15);
+    }
+}

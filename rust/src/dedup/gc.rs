@@ -1,0 +1,176 @@
+//! Garbage collection and flag confirmation (paper §2.4).
+//!
+//! Three related passes over a server's CIT:
+//!
+//! * [`confirm_flag`] — the consistency-manager step: verify a registered
+//!   chunk is on stable storage, then flip its flag to valid.
+//! * [`run`] — the periodic GC: fingerprints whose flag has been invalid
+//!   for longer than the threshold are *cross-matched* (re-checked); if
+//!   still invalid they are reclaimed — CIT entry, chunk data and replica
+//!   copies. Referenced-but-invalid entries are repaired instead of
+//!   reclaimed (stat → flip, or restore from a replica copy — "recover
+//!   reference errors and lost data chunks"). Valid entries whose
+//!   refcount dropped to zero (deleted objects) age out the same way.
+//! * [`recovery_scan`] — after a restart: the in-memory registration
+//!   queue died with the server, so every invalid CIT entry is re-examined
+//!   (present → re-register for confirmation; missing → left for GC).
+
+use crate::dedup::cit::CommitFlag;
+use crate::dedup::engine::chunk_copy_key;
+use crate::dedup::fingerprint::Fingerprint;
+use crate::error::Result;
+use crate::metrics::Metrics;
+use crate::net::Lane;
+use crate::storage::osd::OsdShared;
+use crate::storage::proto::{Req, Resp};
+
+/// Outcome of a GC pass.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GcReport {
+    /// CIT entries + chunks reclaimed.
+    pub reclaimed: usize,
+    /// Invalid entries repaired (data present or restored from replica).
+    pub repaired: usize,
+    /// Entries skipped (not yet past the threshold).
+    pub young: usize,
+    /// Referenced entries whose data could not be found anywhere.
+    pub lost: usize,
+}
+
+/// Consistency-manager confirmation: chunk present → flag valid.
+pub fn confirm_flag(sh: &OsdShared, fp: &Fingerprint) -> Result<()> {
+    let present = sh.store.stat(&fp.to_bytes())?;
+    if present {
+        sh.charge_meta_io(); // modeled DM-Shard write
+        sh.shard.cit_set_flag(fp, CommitFlag::Valid, sh.now_ms())?;
+    }
+    Ok(())
+}
+
+/// One GC pass; `threshold_ms` is the paper's "pre-defined threshold"
+/// between collection and cross-match.
+pub fn run(sh: &OsdShared, threshold_ms: u64) -> Result<GcReport> {
+    let now = sh.now_ms();
+    let mut report = GcReport::default();
+    for fp in sh.shard.cit_fingerprints()? {
+        let Some(e) = sh.shard.cit_get(&fp)? else {
+            continue;
+        };
+        let aged = now.saturating_sub(e.flagged_at_ms) >= threshold_ms;
+        match (e.flag, e.refcount) {
+            (CommitFlag::Valid, 0) if aged => {
+                // deleted-object remnant: reclaim.
+                reclaim(sh, &fp)?;
+                report.reclaimed += 1;
+            }
+            (CommitFlag::Valid, _) => {}
+            (CommitFlag::Invalid, _) if !aged => report.young += 1,
+            (CommitFlag::Invalid, 0) => {
+                // cross-match: nothing re-validated it → garbage of a
+                // failed transaction.
+                reclaim(sh, &fp)?;
+                report.reclaimed += 1;
+            }
+            (CommitFlag::Invalid, _) => {
+                // referenced but invalid: repair rather than reclaim.
+                if repair(sh, &fp)? {
+                    report.repaired += 1;
+                } else {
+                    report.lost += 1;
+                }
+            }
+        }
+    }
+    Metrics::add(&sh.metrics.gc_reclaimed, report.reclaimed as u64);
+    Ok(report)
+}
+
+/// Post-restart scan: re-register every invalid entry whose data is
+/// actually present (the registration queue is volatile and died with the
+/// server); leaves truly-missing chunks for GC / repair.
+pub fn recovery_scan(sh: &OsdShared) -> Result<usize> {
+    let mut re_registered = 0usize;
+    for fp in sh.shard.cit_fingerprints()? {
+        let Some(e) = sh.shard.cit_get(&fp)? else {
+            continue;
+        };
+        if e.flag == CommitFlag::Invalid && sh.store.stat(&fp.to_bytes())? {
+            sh.pending.push(fp);
+            re_registered += 1;
+        }
+    }
+    Ok(re_registered)
+}
+
+fn reclaim(sh: &OsdShared, fp: &Fingerprint) -> Result<()> {
+    sh.shard.cit_delete(fp)?;
+    if let Ok(Some(data)) = sh.store.get(&fp.to_bytes()) {
+        sh.store.delete(&fp.to_bytes())?;
+        let stored = &sh.metrics.bytes_stored;
+        // saturating decrement of the space accounting
+        let mut cur = Metrics::get(stored);
+        loop {
+            let next = cur.saturating_sub(data.len() as u64);
+            match stored.compare_exchange_weak(
+                cur,
+                next,
+                std::sync::atomic::Ordering::Relaxed,
+                std::sync::atomic::Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(v) => cur = v,
+            }
+        }
+    }
+    // drop replica copies
+    for peer in sh.chunk_chain(fp.placement_key()).iter().skip(1) {
+        if let Ok(addr) = sh.dir.lookup(*peer, Lane::Replica) {
+            let _ = addr.call(
+                Req::DeleteCopy {
+                    key: chunk_copy_key(fp),
+                },
+                64,
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Repair a referenced-but-invalid entry: stat → flip; else restore the
+/// data from a replica copy, then flip. Returns false when the data is
+/// unrecoverable.
+fn repair(sh: &OsdShared, fp: &Fingerprint) -> Result<bool> {
+    if sh.store.stat(&fp.to_bytes())? {
+        sh.charge_meta_io(); // modeled DM-Shard write
+        sh.shard.cit_set_flag(fp, CommitFlag::Valid, sh.now_ms())?;
+        Metrics::add(&sh.metrics.repairs, 1);
+        return Ok(true);
+    }
+    // try replica copies on the rest of the chain
+    for peer in sh.chunk_chain(fp.placement_key()).iter().skip(1) {
+        let data = if *peer == sh.id {
+            sh.replica_store.get(&chunk_copy_key(fp))?
+        } else if let Ok(addr) = sh.dir.lookup(*peer, Lane::Replica) {
+            match addr.call(
+                Req::FetchCopy {
+                    key: chunk_copy_key(fp),
+                },
+                64,
+            ) {
+                Ok(Resp::Data(d)) => Some(d),
+                _ => None,
+            }
+        } else {
+            None
+        };
+        if let Some(data) = data {
+            sh.store.put(&fp.to_bytes(), &data)?;
+            Metrics::add(&sh.metrics.bytes_stored, data.len() as u64);
+            sh.charge_meta_io(); // modeled DM-Shard write
+            sh.shard.cit_set_flag(fp, CommitFlag::Valid, sh.now_ms())?;
+            Metrics::add(&sh.metrics.repairs, 1);
+            return Ok(true);
+        }
+    }
+    Ok(false)
+}

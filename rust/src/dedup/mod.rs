@@ -1,0 +1,26 @@
+//! The paper's contribution: cluster-wide deduplication.
+//!
+//! * [`chunker`] — fixed-size and gear-CDC object splitting (§2.1).
+//! * [`fingerprint`] — SHA-1 content fingerprints and the provider
+//!   abstraction over the scalar CPU path and the XLA-batched kernel.
+//! * [`omap`] / [`cit`] / [`dmshard`] — the DM-Shard (§2.2): Object Map
+//!   and Chunk Information Table as *separate* synchronized KV stores.
+//! * [`engine`] — the write/read/delete transactions of Figure 3,
+//!   executed by OSD frontends (and by the central server in the
+//!   central-dedup baseline).
+//! * [`consistency`] — asynchronous tagged consistency plus the sync
+//!   chunk-/object-granularity comparators of Figure 5(b) (§2.4).
+//! * [`gc`] — the garbage-collection pass over invalid commit flags.
+
+pub mod chunker;
+pub mod cit;
+pub mod consistency;
+pub mod dmshard;
+pub mod engine;
+pub mod fingerprint;
+pub mod gc;
+pub mod omap;
+
+pub use chunker::{Chunker, Chunking};
+pub use consistency::ConsistencyMode;
+pub use fingerprint::{Fingerprint, FingerprintProvider, RustSha1Provider};

@@ -1,0 +1,73 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Errors surfaced by the storage cluster and its substrates.
+#[derive(Debug)]
+pub enum Error {
+    /// Object name not present in any OMAP.
+    ObjectNotFound(String),
+    /// A chunk referenced by an OMAP entry could not be fetched anywhere.
+    ChunkMissing(String),
+    /// The target server is down / not responding (killed or crashed).
+    ServerDown(u32),
+    /// The cluster has no live server able to serve the request.
+    NoQuorum,
+    /// A write transaction was aborted (partial failure, rolled back).
+    TxAborted(String),
+    /// Corrupt on-disk record (CRC mismatch, truncated record, bad magic).
+    Corrupt(String),
+    /// Underlying I/O error.
+    Io(std::io::Error),
+    /// XLA runtime error (artifact load / compile / execute).
+    Xla(String),
+    /// Invalid configuration or argument.
+    Invalid(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::ObjectNotFound(name) => write!(f, "object not found: {name}"),
+            Error::ChunkMissing(fp) => write!(f, "chunk missing: {fp}"),
+            Error::ServerDown(id) => write!(f, "server osd.{id} is down"),
+            Error::NoQuorum => write!(f, "no live server available"),
+            Error::TxAborted(why) => write!(f, "transaction aborted: {why}"),
+            Error::Corrupt(what) => write!(f, "corrupt record: {what}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(e) => write!(f, "xla runtime error: {e}"),
+            Error::Invalid(what) => write!(f, "invalid: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(Error::ServerDown(3).to_string(), "server osd.3 is down");
+        assert!(Error::ObjectNotFound("x".into()).to_string().contains("x"));
+        let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "boom").into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

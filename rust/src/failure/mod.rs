@@ -1,0 +1,118 @@
+//! Crash-point failure injection.
+//!
+//! The paper's robustness claim is about *sudden server failure in the
+//! middle of a write transaction* (§2.4). [`FailureInjector`] lets tests
+//! and examples arm a named point inside the transaction; when execution
+//! reaches it the server flips to dead **at exactly that point** — the
+//! remaining steps never run, in-flight requests never get replies, and
+//! only state already persisted survives (the backing stores model disk).
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// Named instants inside the dedup write transaction where a server can
+/// be made to die.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CrashPoint {
+    /// Chunk server: after the CIT entry (flag=0) is inserted, before the
+    /// chunk data is stored — leaves a dangling invalid CIT entry.
+    AfterCitInsert,
+    /// Chunk server: after the chunk data is stored, before the commit
+    /// flag is flipped — leaves a stored-but-invalid chunk (the classic
+    /// tagged-consistency case).
+    AfterDataStore,
+    /// Chunk server: after local store, before replication fan-out.
+    BeforeReplicate,
+    /// Primary frontend: after all chunk stores succeeded, before the
+    /// OMAP entry is written — whole-object transaction failure.
+    BeforeOmapWrite,
+    /// Primary frontend: after the OMAP write, before replying to the
+    /// client — committed but unacknowledged.
+    AfterOmapWrite,
+}
+
+/// Per-server failure injector.
+#[derive(Default)]
+pub struct FailureInjector {
+    armed: Mutex<HashSet<CrashPoint>>,
+    /// Set when a crash fired; the OSD lanes watch this and go silent.
+    dead: AtomicBool,
+}
+
+impl FailureInjector {
+    /// No failures armed.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Arm a crash point (fires once).
+    pub fn arm(&self, p: CrashPoint) {
+        self.armed.lock().unwrap().insert(p);
+    }
+
+    /// Called from transaction code at each named point. Returns `true`
+    /// (and marks the server dead) when the point was armed.
+    pub fn maybe_crash(&self, p: CrashPoint) -> bool {
+        if self.dead.load(Ordering::SeqCst) {
+            return true;
+        }
+        let fired = self.armed.lock().unwrap().remove(&p);
+        if fired {
+            self.dead.store(true, Ordering::SeqCst);
+        }
+        fired
+    }
+
+    /// Is the server dead (crashed or killed)?
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::SeqCst)
+    }
+
+    /// Kill unconditionally (admin kill / `Cluster::kill_server`).
+    pub fn kill(&self) {
+        self.dead.store(true, Ordering::SeqCst);
+    }
+
+    /// Revive (admin restart); disarms nothing — unfired points stay armed.
+    pub fn revive(&self) {
+        self.dead.store(false, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_once_and_marks_dead() {
+        let f = FailureInjector::new();
+        assert!(!f.maybe_crash(CrashPoint::AfterDataStore));
+        f.arm(CrashPoint::AfterDataStore);
+        assert!(f.maybe_crash(CrashPoint::AfterDataStore));
+        assert!(f.is_dead());
+        // once dead, every point reports dead
+        assert!(f.maybe_crash(CrashPoint::BeforeOmapWrite));
+    }
+
+    #[test]
+    fn revive_clears_death_not_armed_points() {
+        let f = FailureInjector::new();
+        f.arm(CrashPoint::AfterCitInsert);
+        f.arm(CrashPoint::BeforeOmapWrite);
+        assert!(f.maybe_crash(CrashPoint::AfterCitInsert));
+        f.revive();
+        assert!(!f.is_dead());
+        // the other armed point still fires after revival
+        assert!(f.maybe_crash(CrashPoint::BeforeOmapWrite));
+    }
+
+    #[test]
+    fn kill_and_revive() {
+        let f = FailureInjector::new();
+        f.kill();
+        assert!(f.is_dead());
+        f.revive();
+        assert!(!f.is_dead());
+    }
+}

@@ -1,0 +1,52 @@
+//! FNV-1a 64-bit — cheap stable hash for object names and placement draws.
+
+const OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const PRIME: u64 = 0x100_0000_01B3;
+
+/// FNV-1a over a byte slice.
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h = OFFSET;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Hash two 64-bit values together (used for per-(key, server) placement
+/// draws — a cheap keyed hash with good avalanche via an extra mix).
+pub fn fnv1a64_pair(a: u64, b: u64) -> u64 {
+    let mut buf = [0u8; 16];
+    buf[..8].copy_from_slice(&a.to_le_bytes());
+    buf[8..].copy_from_slice(&b.to_le_bytes());
+    let h = fnv1a64(&buf);
+    // finalize with a splitmix-style mix: raw FNV has weak high bits.
+    let mut z = h;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv1a64(b""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xAF63_DC4C_8601_EC8C);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171F73967E8);
+    }
+
+    #[test]
+    fn pair_is_deterministic_and_spread() {
+        assert_eq!(fnv1a64_pair(1, 2), fnv1a64_pair(1, 2));
+        assert_ne!(fnv1a64_pair(1, 2), fnv1a64_pair(2, 1));
+        // avalanche sanity: flipping one input bit flips ~half the output
+        let base = fnv1a64_pair(0x1234, 7);
+        let flip = fnv1a64_pair(0x1235, 7);
+        let dist = (base ^ flip).count_ones();
+        assert!(dist > 16 && dist < 48, "poor avalanche: {dist}");
+    }
+}

@@ -1,0 +1,102 @@
+//! Gear rolling hash for content-defined chunking.
+//!
+//! The table derivation mirrors `python/compile/kernels/ref.py::gear_table`
+//! byte-for-byte (splitmix64 from the golden-ratio seed), so the Rust
+//! chunker and the Pallas kernel find identical cut points.
+
+use crate::util::rng::SplitMix64;
+use std::sync::OnceLock;
+
+/// The 256-entry gear table (lazily derived, deterministic).
+pub fn gear_table() -> &'static [u32; 256] {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut sm = SplitMix64::new(0x9E37_79B9_7F4A_7C15);
+        let mut t = [0u32; 256];
+        for e in t.iter_mut() {
+            *e = (sm.next_u64() & 0xFFFF_FFFF) as u32;
+        }
+        t
+    })
+}
+
+/// Incremental gear state: `h = (h << 1) + GEAR[b]`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Gear {
+    h: u32,
+}
+
+impl Gear {
+    /// Fresh state (h = 0).
+    pub fn new() -> Self {
+        Gear { h: 0 }
+    }
+
+    /// Absorb one byte, returning the updated hash.
+    #[inline]
+    pub fn roll(&mut self, b: u8) -> u32 {
+        self.h = (self.h << 1).wrapping_add(gear_table()[b as usize]);
+        self.h
+    }
+
+    /// Current hash value.
+    pub fn value(&self) -> u32 {
+        self.h
+    }
+}
+
+/// Dense candidate bitmap over `data`: 1 where `h & mask == 0`.
+/// Matches `kernels.gearhash.gearhash_pallas` bit-for-bit.
+pub fn boundaries(data: &[u8], mask: u32) -> Vec<bool> {
+    let mut g = Gear::new();
+    data.iter().map(|&b| g.roll(b) & mask == 0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_pinned_to_python() {
+        // Pinned in python/tests/test_gearhash_kernel.py as well.
+        let t = gear_table();
+        assert_eq!(t[0], 0xA1B9_65F4);
+        assert_eq!(t[255], 0xB7C7_534D);
+    }
+
+    #[test]
+    fn table_has_no_collisions() {
+        let mut v: Vec<u32> = gear_table().to_vec();
+        v.sort_unstable();
+        v.dedup();
+        assert_eq!(v.len(), 256);
+    }
+
+    #[test]
+    fn roll_is_shift_add() {
+        let mut g = Gear::new();
+        let h1 = g.roll(0);
+        assert_eq!(h1, gear_table()[0]);
+        let h2 = g.roll(1);
+        assert_eq!(h2, (h1 << 1).wrapping_add(gear_table()[1]));
+    }
+
+    #[test]
+    fn boundary_density_tracks_mask() {
+        let data: Vec<u8> = (0..65536u32).map(|i| (i.wrapping_mul(2654435761) >> 13) as u8).collect();
+        let hits = boundaries(&data, 0x3F).iter().filter(|&&b| b).count();
+        let density = hits as f64 / data.len() as f64;
+        assert!(density > 0.5 / 64.0 && density < 2.0 / 64.0, "density {density}");
+    }
+
+    #[test]
+    fn only_trailing_32_bytes_matter() {
+        // h_i depends on at most the 32 trailing bytes (u32 shift-out).
+        let a: Vec<u8> = (0..100).map(|i| i as u8).collect();
+        let mut b = a.clone();
+        b[0] = 0xFF; // differs only at position 0
+        let ba = boundaries(&a, 0x07);
+        let bb = boundaries(&b, 0x07);
+        assert_eq!(&ba[32..], &bb[32..]);
+    }
+}

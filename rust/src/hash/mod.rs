@@ -1,0 +1,14 @@
+//! Hashing substrates: SHA-1 (content fingerprints), the gear rolling hash
+//! (CDC chunk boundaries) and FNV-1a (object-name hashing / placement
+//! draws).
+//!
+//! SHA-1 and the gear table are implemented from scratch and are
+//! bit-identical to the Pallas kernels in `python/compile/kernels/`
+//! (cross-checked in tests, and against the RustCrypto `sha1` crate).
+
+pub mod fnv;
+pub mod gear;
+pub mod sha1;
+
+pub use fnv::fnv1a64;
+pub use sha1::sha1;

@@ -1,0 +1,219 @@
+//! SHA-1, from scratch.
+//!
+//! This is the scalar CPU fingerprint path of the deduplication engine
+//! (the paper's §2.1: "computes the fingerprint for each chunk's
+//! content"). The batched hot path runs the same function as a Pallas
+//! kernel through XLA (see `runtime::BatchFingerprinter`); both are
+//! asserted bit-identical in tests, and this implementation is further
+//! cross-checked against the RustCrypto `sha1` crate.
+
+const H0: [u32; 5] = [0x67452301, 0xEFCDAB89, 0x98BADCFE, 0x10325476, 0xC3D2E1F0];
+const K: [u32; 4] = [0x5A827999, 0x6ED9EBA1, 0x8F1BBCDC, 0xCA62C1D6];
+
+/// Streaming SHA-1 state.
+#[derive(Clone)]
+pub struct Sha1 {
+    state: [u32; 5],
+    buf: [u8; 64],
+    buf_len: usize,
+    total_len: u64,
+}
+
+impl Default for Sha1 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sha1 {
+    /// Fresh hasher.
+    pub fn new() -> Self {
+        Sha1 {
+            state: H0,
+            buf: [0u8; 64],
+            buf_len: 0,
+            total_len: 0,
+        }
+    }
+
+    /// Absorb bytes.
+    pub fn update(&mut self, mut data: &[u8]) {
+        self.total_len += data.len() as u64;
+        if self.buf_len > 0 {
+            let need = 64 - self.buf_len;
+            let take = need.min(data.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == 64 {
+                let block = self.buf;
+                compress(&mut self.state, &block);
+                self.buf_len = 0;
+            }
+            if data.is_empty() {
+                // everything fit in the buffer; don't fall through (the
+                // remainder logic below would reset buf_len).
+                return;
+            }
+        }
+        let mut blocks = data.chunks_exact(64);
+        for b in &mut blocks {
+            compress(&mut self.state, b.try_into().unwrap());
+        }
+        let rem = blocks.remainder();
+        self.buf[..rem.len()].copy_from_slice(rem);
+        self.buf_len = rem.len();
+    }
+
+    /// Finish and return the 20-byte digest.
+    pub fn finalize(mut self) -> [u8; 20] {
+        let bitlen = self.total_len * 8;
+        self.update(&[0x80]);
+        while self.buf_len != 56 {
+            self.update(&[0]);
+        }
+        // length goes straight into the buffer (no total_len update needed
+        // but update() is simplest and padding already accounted for).
+        self.buf[56..64].copy_from_slice(&bitlen.to_be_bytes());
+        let block = self.buf;
+        compress(&mut self.state, &block);
+        let mut out = [0u8; 20];
+        for (i, w) in self.state.iter().enumerate() {
+            out[i * 4..i * 4 + 4].copy_from_slice(&w.to_be_bytes());
+        }
+        out
+    }
+}
+
+/// One-shot SHA-1 digest.
+pub fn sha1(data: &[u8]) -> [u8; 20] {
+    let mut h = Sha1::new();
+    h.update(data);
+    h.finalize()
+}
+
+/// One-shot SHA-1 digest as 5 big-endian u32 words (the kernel layout).
+pub fn sha1_words(data: &[u8]) -> [u32; 5] {
+    let d = sha1(data);
+    let mut w = [0u32; 5];
+    for i in 0..5 {
+        w[i] = u32::from_be_bytes([d[i * 4], d[i * 4 + 1], d[i * 4 + 2], d[i * 4 + 3]]);
+    }
+    w
+}
+
+#[inline]
+fn compress(state: &mut [u32; 5], block: &[u8; 64]) {
+    let mut w = [0u32; 16];
+    for (i, wi) in w.iter_mut().enumerate() {
+        *wi = u32::from_be_bytes([
+            block[i * 4],
+            block[i * 4 + 1],
+            block[i * 4 + 2],
+            block[i * 4 + 3],
+        ]);
+    }
+    let [mut a, mut b, mut c, mut d, mut e] = *state;
+    for t in 0..80 {
+        let wt = if t < 16 {
+            w[t]
+        } else {
+            let v = (w[(t - 3) % 16] ^ w[(t - 8) % 16] ^ w[(t - 14) % 16] ^ w[t % 16]).rotate_left(1);
+            w[t % 16] = v;
+            v
+        };
+        let f = match t / 20 {
+            0 => (b & c) | (!b & d),
+            1 | 3 => b ^ c ^ d,
+            _ => (b & c) | (b & d) | (c & d),
+        };
+        let tmp = a
+            .rotate_left(5)
+            .wrapping_add(f)
+            .wrapping_add(e)
+            .wrapping_add(K[t / 20])
+            .wrapping_add(wt);
+        e = d;
+        d = c;
+        c = b.rotate_left(30);
+        b = a;
+        a = tmp;
+    }
+    state[0] = state[0].wrapping_add(a);
+    state[1] = state[1].wrapping_add(b);
+    state[2] = state[2].wrapping_add(c);
+    state[3] = state[3].wrapping_add(d);
+    state[4] = state[4].wrapping_add(e);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hex;
+    use sha1 as rc_sha1;
+    use sha1::Digest as _;
+
+    fn rustcrypto(data: &[u8]) -> [u8; 20] {
+        let mut h = rc_sha1::Sha1::new();
+        h.update(data);
+        h.finalize().into()
+    }
+
+    #[test]
+    fn fips_vectors() {
+        assert_eq!(
+            hex::encode(&sha1(b"abc")),
+            "a9993e364706816aba3e25717850c26c9cd0d89d"
+        );
+        assert_eq!(
+            hex::encode(&sha1(b"")),
+            "da39a3ee5e6b4b0d3255bfef95601890afd80709"
+        );
+        assert_eq!(
+            hex::encode(&sha1(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq")),
+            "84983e441c3bd26ebaae4aa1f95129e5e54670f1"
+        );
+    }
+
+    #[test]
+    fn matches_rustcrypto_across_sizes() {
+        for n in [0usize, 1, 55, 56, 57, 63, 64, 65, 127, 128, 1000, 4096] {
+            let data: Vec<u8> = (0..n).map(|i| (i * 37 % 251) as u8).collect();
+            assert_eq!(sha1(&data), rustcrypto(&data), "size {n}");
+        }
+    }
+
+    #[test]
+    fn streaming_equals_oneshot() {
+        let data: Vec<u8> = (0..5000).map(|i| (i % 256) as u8).collect();
+        for split in [0usize, 1, 63, 64, 65, 2500, 4999] {
+            let mut h = Sha1::new();
+            h.update(&data[..split]);
+            h.update(&data[split..]);
+            assert_eq!(h.finalize(), sha1(&data), "split {split}");
+        }
+    }
+
+    #[test]
+    fn words_layout_big_endian() {
+        let w = sha1_words(b"abc");
+        assert_eq!(w[0], 0xa9993e36);
+        assert_eq!(w[4], 0x9cd0d89d);
+    }
+
+    #[test]
+    fn property_matches_rustcrypto() {
+        use crate::util::prop;
+        prop::check(
+            prop::Config::default(),
+            |rng, size| prop::bytes(rng, size as usize * 40),
+            |data| {
+                if sha1(data) == rustcrypto(data) {
+                    Ok(())
+                } else {
+                    Err(format!("mismatch at len {}", data.len()))
+                }
+            },
+        );
+    }
+}

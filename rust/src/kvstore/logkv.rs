@@ -1,0 +1,401 @@
+//! Bitcask-style persistent KV store (the SQLite-substitute DM-Shard
+//! backend).
+//!
+//! On-disk format — a single append-only log of records:
+//!
+//! ```text
+//! record  := crc32(u32 LE over payload) payload
+//! payload := kind(u8: 1=put 2=del) klen(u32 LE) vlen(u32 LE) key value
+//! ```
+//!
+//! The in-memory index maps live keys to (offset, vlen) of their latest
+//! record; values are read back from the file (a small value cache is a
+//! perf knob left to the OS page cache). Recovery scans the log and stops
+//! at the first corrupt/truncated record, truncating the tail — a torn
+//! final write is thereby dropped, which is exactly the crash semantics
+//! the paper's tagged-consistency design assumes (the lost CIT flag flip
+//! re-marks the chunk invalid).
+
+use super::KvStore;
+use crate::error::{Error, Result};
+use crate::util::codec::crc32;
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+const KIND_PUT: u8 = 1;
+const KIND_DEL: u8 = 2;
+const HEADER: usize = 4 + 1 + 4 + 4; // crc + kind + klen + vlen
+
+struct Inner {
+    file: File,
+    index: HashMap<Vec<u8>, (u64, u32)>, // key -> (value offset, vlen)
+    tail: u64,                           // append position
+    dead_bytes: u64,                     // garbage from overwrites/deletes
+}
+
+/// Persistent append-only KV store with crash recovery and compaction.
+pub struct LogKv {
+    path: PathBuf,
+    inner: Mutex<Inner>,
+}
+
+impl LogKv {
+    /// Open (or create) the log at `path`, replaying it to rebuild the
+    /// index. A torn tail (bad CRC / truncated record) is truncated.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(&path)?;
+        let mut data = Vec::new();
+        file.read_to_end(&mut data)?;
+
+        let mut index = HashMap::new();
+        let mut dead_bytes = 0u64;
+        let mut pos = 0usize;
+        let valid_end = loop {
+            if pos + HEADER > data.len() {
+                break pos;
+            }
+            let crc = u32::from_le_bytes(data[pos..pos + 4].try_into().unwrap());
+            let kind = data[pos + 4];
+            let klen = u32::from_le_bytes(data[pos + 5..pos + 9].try_into().unwrap()) as usize;
+            let vlen = u32::from_le_bytes(data[pos + 9..pos + 13].try_into().unwrap()) as usize;
+            let body_end = pos + HEADER + klen + vlen;
+            if body_end > data.len() || (kind != KIND_PUT && kind != KIND_DEL) {
+                break pos;
+            }
+            if crc32(&data[pos + 4..body_end]) != crc {
+                break pos;
+            }
+            let key = data[pos + HEADER..pos + HEADER + klen].to_vec();
+            match kind {
+                KIND_PUT => {
+                    let voff = (pos + HEADER + klen) as u64;
+                    if let Some((_, old_vlen)) = index.insert(key, (voff, vlen as u32)) {
+                        dead_bytes += HEADER as u64 + old_vlen as u64;
+                    }
+                }
+                _ => {
+                    if let Some((_, old_vlen)) = index.remove(&key) {
+                        dead_bytes += 2 * HEADER as u64 + old_vlen as u64 + klen as u64;
+                    }
+                }
+            }
+            pos = body_end;
+        };
+        if valid_end < data.len() {
+            // torn tail: drop it.
+            file.set_len(valid_end as u64)?;
+        }
+        file.seek(SeekFrom::Start(valid_end as u64))?;
+        Ok(LogKv {
+            path,
+            inner: Mutex::new(Inner {
+                file,
+                index,
+                tail: valid_end as u64,
+                dead_bytes,
+            }),
+        })
+    }
+
+    fn append(inner: &mut Inner, kind: u8, key: &[u8], value: &[u8]) -> Result<u64> {
+        let mut payload = Vec::with_capacity(HEADER - 4 + key.len() + value.len());
+        payload.push(kind);
+        payload.extend_from_slice(&(key.len() as u32).to_le_bytes());
+        payload.extend_from_slice(&(value.len() as u32).to_le_bytes());
+        payload.extend_from_slice(key);
+        payload.extend_from_slice(value);
+        let crc = crc32(&payload);
+        inner.file.seek(SeekFrom::Start(inner.tail))?;
+        inner.file.write_all(&crc.to_le_bytes())?;
+        inner.file.write_all(&payload)?;
+        let rec_start = inner.tail;
+        inner.tail += 4 + payload.len() as u64;
+        Ok(rec_start)
+    }
+
+    /// Bytes of garbage (overwritten/deleted records) currently in the log.
+    pub fn dead_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().dead_bytes
+    }
+
+    /// Rewrite the log keeping only live records. Returns bytes reclaimed.
+    pub fn compact(&self) -> Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let tmp_path = self.path.with_extension("compact");
+        let mut tmp = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&tmp_path)?;
+        // copy live records
+        let keys: Vec<Vec<u8>> = inner.index.keys().cloned().collect();
+        let mut new_index = HashMap::with_capacity(keys.len());
+        let mut new_tail = 0u64;
+        for key in keys {
+            let (voff, vlen) = inner.index[&key];
+            let mut value = vec![0u8; vlen as usize];
+            inner.file.seek(SeekFrom::Start(voff))?;
+            inner.file.read_exact(&mut value)?;
+            let mut payload = Vec::with_capacity(HEADER - 4 + key.len() + value.len());
+            payload.push(KIND_PUT);
+            payload.extend_from_slice(&(key.len() as u32).to_le_bytes());
+            payload.extend_from_slice(&(value.len() as u32).to_le_bytes());
+            payload.extend_from_slice(&key);
+            payload.extend_from_slice(&value);
+            let crc = crc32(&payload);
+            tmp.write_all(&crc.to_le_bytes())?;
+            tmp.write_all(&payload)?;
+            let voff_new = new_tail + HEADER as u64 + key.len() as u64;
+            new_index.insert(key, (voff_new, vlen));
+            new_tail += 4 + payload.len() as u64;
+        }
+        tmp.sync_all()?;
+        let reclaimed = inner.tail.saturating_sub(new_tail);
+        std::fs::rename(&tmp_path, &self.path)?;
+        inner.file = OpenOptions::new().read(true).write(true).open(&self.path)?;
+        inner.file.seek(SeekFrom::Start(new_tail))?;
+        inner.index = new_index;
+        inner.tail = new_tail;
+        inner.dead_bytes = 0;
+        Ok(reclaimed)
+    }
+}
+
+impl KvStore for LogKv {
+    fn put(&self, key: &[u8], value: &[u8]) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let rec_start = Self::append(&mut inner, KIND_PUT, key, value)?;
+        let voff = rec_start + HEADER as u64 + key.len() as u64;
+        if let Some((_, old_vlen)) = inner.index.insert(key.to_vec(), (voff, value.len() as u32)) {
+            inner.dead_bytes += HEADER as u64 + old_vlen as u64 + key.len() as u64;
+        }
+        Ok(())
+    }
+
+    fn get(&self, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(&(voff, vlen)) = inner.index.get(key) else {
+            return Ok(None);
+        };
+        let mut value = vec![0u8; vlen as usize];
+        inner.file.seek(SeekFrom::Start(voff))?;
+        inner.file.read_exact(&mut value)?;
+        // restore append position for the next write
+        let tail = inner.tail;
+        inner.file.seek(SeekFrom::Start(tail))?;
+        Ok(Some(value))
+    }
+
+    fn delete(&self, key: &[u8]) -> Result<bool> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.index.contains_key(key) {
+            return Ok(false);
+        }
+        Self::append(&mut inner, KIND_DEL, key, b"")?;
+        if let Some((_, old_vlen)) = inner.index.remove(key) {
+            inner.dead_bytes += 2 * (HEADER as u64 + key.len() as u64) + old_vlen as u64;
+        }
+        Ok(true)
+    }
+
+    fn keys(&self) -> Result<Vec<Vec<u8>>> {
+        Ok(self.inner.lock().unwrap().index.keys().cloned().collect())
+    }
+
+    fn len(&self) -> usize {
+        self.inner.lock().unwrap().index.len()
+    }
+
+    fn sync(&self) -> Result<()> {
+        self.inner
+            .lock()
+            .unwrap()
+            .file
+            .sync_all()
+            .map_err(Error::Io)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::conformance;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("snss-logkv-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn conformance_basic() {
+        let d = tmpdir("basic");
+        conformance::basic_ops(&LogKv::open(d.join("kv.log")).unwrap());
+    }
+
+    #[test]
+    fn conformance_binary() {
+        let d = tmpdir("binary");
+        conformance::binary_safety(&LogKv::open(d.join("kv.log")).unwrap());
+    }
+
+    #[test]
+    fn reopen_recovers_state() {
+        let d = tmpdir("reopen");
+        let path = d.join("kv.log");
+        {
+            let kv = LogKv::open(&path).unwrap();
+            kv.put(b"a", b"1").unwrap();
+            kv.put(b"b", b"2").unwrap();
+            kv.put(b"a", b"3").unwrap();
+            kv.delete(b"b").unwrap();
+            kv.sync().unwrap();
+        }
+        let kv = LogKv::open(&path).unwrap();
+        assert_eq!(kv.get(b"a").unwrap().unwrap(), b"3");
+        assert_eq!(kv.get(b"b").unwrap(), None);
+        assert_eq!(kv.len(), 1);
+    }
+
+    #[test]
+    fn torn_tail_truncated() {
+        let d = tmpdir("torn");
+        let path = d.join("kv.log");
+        {
+            let kv = LogKv::open(&path).unwrap();
+            kv.put(b"a", b"1").unwrap();
+            kv.put(b"b", b"2").unwrap();
+            kv.sync().unwrap();
+        }
+        // corrupt: chop 3 bytes off the tail (torn final record)
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 3).unwrap();
+        drop(f);
+        let kv = LogKv::open(&path).unwrap();
+        assert_eq!(kv.get(b"a").unwrap().unwrap(), b"1");
+        assert_eq!(kv.get(b"b").unwrap(), None, "torn record dropped");
+    }
+
+    #[test]
+    fn corrupt_crc_stops_replay() {
+        let d = tmpdir("crc");
+        let path = d.join("kv.log");
+        let second_rec_at;
+        {
+            let kv = LogKv::open(&path).unwrap();
+            kv.put(b"a", b"1").unwrap();
+            second_rec_at = std::fs::metadata(&path).unwrap().len();
+            kv.put(b"b", b"2").unwrap();
+            kv.put(b"c", b"3").unwrap();
+            kv.sync().unwrap();
+        }
+        // flip a byte inside the second record's value
+        let mut data = std::fs::read(&path).unwrap();
+        data[second_rec_at as usize + HEADER + 1] ^= 0xFF;
+        std::fs::write(&path, &data).unwrap();
+        let kv = LogKv::open(&path).unwrap();
+        assert_eq!(kv.get(b"a").unwrap().unwrap(), b"1");
+        assert_eq!(kv.get(b"b").unwrap(), None);
+        assert_eq!(kv.get(b"c").unwrap(), None, "everything after corruption dropped");
+    }
+
+    #[test]
+    fn compaction_reclaims_and_preserves() {
+        let d = tmpdir("compact");
+        let path = d.join("kv.log");
+        let kv = LogKv::open(&path).unwrap();
+        for i in 0..50u32 {
+            kv.put(b"hot", format!("version-{i}").as_bytes()).unwrap();
+        }
+        kv.put(b"cold", b"keep-me").unwrap();
+        kv.delete(b"hot").unwrap();
+        assert!(kv.dead_bytes() > 0);
+        let reclaimed = kv.compact().unwrap();
+        assert!(reclaimed > 0);
+        assert_eq!(kv.dead_bytes(), 0);
+        assert_eq!(kv.get(b"cold").unwrap().unwrap(), b"keep-me");
+        assert_eq!(kv.get(b"hot").unwrap(), None);
+        // and still durable across reopen
+        drop(kv);
+        let kv = LogKv::open(&path).unwrap();
+        assert_eq!(kv.get(b"cold").unwrap().unwrap(), b"keep-me");
+    }
+
+    #[test]
+    fn property_model_check_vs_btreemap() {
+        use crate::util::prop;
+        use std::collections::BTreeMap;
+        let d = tmpdir("model");
+        let mut case = 0u32;
+        prop::check(
+            prop::Config { cases: 24, ..Default::default() },
+            |rng, size| {
+                // a script of (op, key, value) steps
+                let steps = 5 + (size as usize) / 2;
+                (0..steps)
+                    .map(|_| {
+                        let op = rng.below(3) as u8;
+                        let key = prop::ident(rng, 4);
+                        let val = prop::bytes(rng, 32);
+                        (op, key, val)
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |script| {
+                case += 1;
+                let path = d.join(format!("model-{case}.log"));
+                let kv = LogKv::open(&path).unwrap();
+                let mut model: BTreeMap<Vec<u8>, Vec<u8>> = BTreeMap::new();
+                for (op, key, val) in script {
+                    let k = key.as_bytes();
+                    match op {
+                        0 => {
+                            kv.put(k, val).unwrap();
+                            model.insert(k.to_vec(), val.clone());
+                        }
+                        1 => {
+                            let got = kv.delete(k).unwrap();
+                            let exp = model.remove(k).is_some();
+                            if got != exp {
+                                return Err(format!("delete({key}) {got} != {exp}"));
+                            }
+                        }
+                        _ => {
+                            let got = kv.get(k).unwrap();
+                            let exp = model.get(k).cloned();
+                            if got != exp {
+                                return Err(format!("get({key}) mismatch"));
+                            }
+                        }
+                    }
+                }
+                // reopen and compare the full map
+                drop(kv);
+                let kv = LogKv::open(&path).unwrap();
+                if kv.len() != model.len() {
+                    return Err(format!("reopen len {} != {}", kv.len(), model.len()));
+                }
+                for (k, v) in &model {
+                    if kv.get(k).unwrap().as_deref() != Some(v.as_slice()) {
+                        return Err("reopen value mismatch".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

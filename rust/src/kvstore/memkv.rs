@@ -1,0 +1,82 @@
+//! In-memory KV store (BTreeMap behind a mutex).
+
+use super::KvStore;
+use crate::error::Result;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// In-memory `KvStore`; the default DM-Shard backend for tests and for
+/// benches that isolate protocol costs from disk costs.
+#[derive(Default)]
+pub struct MemKv {
+    map: Mutex<BTreeMap<Vec<u8>, Vec<u8>>>,
+}
+
+impl MemKv {
+    /// New empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl KvStore for MemKv {
+    fn put(&self, key: &[u8], value: &[u8]) -> Result<()> {
+        self.map.lock().unwrap().insert(key.to_vec(), value.to_vec());
+        Ok(())
+    }
+
+    fn get(&self, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        Ok(self.map.lock().unwrap().get(key).cloned())
+    }
+
+    fn delete(&self, key: &[u8]) -> Result<bool> {
+        Ok(self.map.lock().unwrap().remove(key).is_some())
+    }
+
+    fn keys(&self) -> Result<Vec<Vec<u8>>> {
+        Ok(self.map.lock().unwrap().keys().cloned().collect())
+    }
+
+    fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    fn sync(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::conformance;
+
+    #[test]
+    fn conformance_basic() {
+        conformance::basic_ops(&MemKv::new());
+    }
+
+    #[test]
+    fn conformance_binary() {
+        conformance::binary_safety(&MemKv::new());
+    }
+
+    #[test]
+    fn concurrent_writers() {
+        use std::sync::Arc;
+        let kv = Arc::new(MemKv::new());
+        let mut handles = vec![];
+        for t in 0..4 {
+            let kv = kv.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100 {
+                    kv.put(format!("k{t}-{i}").as_bytes(), b"v").unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(kv.len(), 400);
+    }
+}

@@ -1,0 +1,235 @@
+//! `snss-dedup` CLI — demo driver and workload runner for the cluster-wide
+//! deduplication system.
+//!
+//! ```text
+//! snss-dedup demo                          # tiny end-to-end demo
+//! snss-dedup workload [opts]               # FIO-like run, prints bandwidth
+//! snss-dedup artifacts [--dir artifacts]   # inspect AOT artifacts
+//! snss-dedup help
+//! ```
+//!
+//! Workload options (all `--key value`):
+//! `--mode cluster-wide|central|disk-local|no-dedup`, `--servers N`,
+//! `--threads N`, `--objects N`, `--object-mb N`, `--chunk-kb N`,
+//! `--dedup-pct P`, `--consistency async-tagged|sync-chunk|sync-object|none`,
+//! `--replication N`, `--fingerprint rust|xla`, `--seed S`.
+
+use snss_dedup::api::{
+    Cluster, ClusterConfig, Consistency, DedupMode, FingerprintBackend,
+};
+use snss_dedup::dedup::Chunking;
+use snss_dedup::workload::{Generator, WorkloadSpec};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let code = match cmd {
+        "demo" => demo(),
+        "workload" => workload(rest),
+        "artifacts" => artifacts(rest),
+        _ => {
+            print!("{}", HELP);
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+snss-dedup — cluster-wide deduplication for shared-nothing storage
+
+USAGE:
+  snss-dedup demo                tiny end-to-end demo
+  snss-dedup workload [opts]     FIO-like run, prints bandwidth + savings
+  snss-dedup artifacts [--dir D] inspect AOT artifacts
+  snss-dedup help
+
+WORKLOAD OPTIONS (defaults in parens):
+  --mode M          cluster-wide | central | disk-local | no-dedup (cluster-wide)
+  --servers N       storage servers (8)
+  --threads N       client threads (8)
+  --objects N       objects to write (32)
+  --object-mb N     object size in MiB (4)
+  --chunk-kb N      chunk size in KiB (512)
+  --dedup-pct P     duplicate-block percentage (0)
+  --consistency C   async-tagged | sync-chunk | sync-object | none (async-tagged)
+  --replication N   replica count (1)
+  --fingerprint F   rust | xla (rust)
+  --seed S          workload seed (0x5EED)
+";
+
+fn opt(args: &[String], key: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn opt_u64(args: &[String], key: &str, default: u64) -> u64 {
+    opt(args, key)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn parse_mode(s: &str) -> DedupMode {
+    match s {
+        "central" => DedupMode::Central,
+        "disk-local" => DedupMode::DiskLocal,
+        "no-dedup" => DedupMode::None,
+        _ => DedupMode::ClusterWide,
+    }
+}
+
+fn parse_consistency(s: &str) -> Consistency {
+    match s {
+        "sync-chunk" => Consistency::SyncChunk,
+        "sync-object" => Consistency::SyncObject,
+        "none" => Consistency::None,
+        _ => Consistency::AsyncTagged,
+    }
+}
+
+fn demo() -> i32 {
+    println!("== snss-dedup demo: 4 servers, cluster-wide dedup ==");
+    let cluster = Cluster::new(ClusterConfig {
+        servers: 4,
+        replication: 2,
+        chunking: Chunking::Fixed { size: 4096 },
+        ..Default::default()
+    })
+    .expect("boot cluster");
+    let client = cluster.client();
+    let payload = vec![7u8; 1 << 20];
+    client.put_object("alpha", &payload).expect("put alpha");
+    client.put_object("beta", &payload).expect("put beta (duplicate)");
+    let back = client.get_object("beta").expect("get beta");
+    assert_eq!(back, payload);
+    cluster.flush_consistency().ok();
+    let stats = cluster.stats();
+    println!(
+        "logical={} MiB stored={} KiB savings={:.1}% dedup_hits={}",
+        stats.logical_bytes >> 20,
+        stats.stored_bytes >> 10,
+        stats.savings() * 100.0,
+        stats.dedup_hits
+    );
+    let audit = cluster.audit().expect("audit");
+    println!("audit: {} fingerprints, ok={}", audit.fingerprints, audit.is_ok());
+    cluster.shutdown();
+    println!("demo OK");
+    0
+}
+
+fn workload(args: &[String]) -> i32 {
+    let servers = opt_u64(args, "--servers", 8) as usize;
+    let threads = opt_u64(args, "--threads", 8) as usize;
+    let objects = opt_u64(args, "--objects", 32);
+    let object_mb = opt_u64(args, "--object-mb", 4) as usize;
+    let chunk_kb = opt_u64(args, "--chunk-kb", 512) as usize;
+    let dedup_pct = opt_u64(args, "--dedup-pct", 0).min(100) as u8;
+    let seed = opt_u64(args, "--seed", 0x5EED);
+    let replication = opt_u64(args, "--replication", 1) as usize;
+    let mode = parse_mode(&opt(args, "--mode").unwrap_or_default());
+    let consistency = parse_consistency(&opt(args, "--consistency").unwrap_or_default());
+    let fingerprint = match opt(args, "--fingerprint").as_deref() {
+        Some("xla") => FingerprintBackend::Xla {
+            artifacts_dir: "artifacts".into(),
+        },
+        _ => FingerprintBackend::RustSha1,
+    };
+
+    let cluster = Cluster::new(ClusterConfig {
+        servers,
+        replication,
+        dedup: mode,
+        consistency,
+        chunking: Chunking::Fixed {
+            size: chunk_kb * 1024,
+        },
+        fingerprint,
+        ..Default::default()
+    })
+    .expect("boot cluster");
+
+    let gen = Arc::new(Generator::new(WorkloadSpec {
+        object_size: object_mb << 20,
+        unit: chunk_kb * 1024,
+        dedup_pct,
+        seed,
+        ..Default::default()
+    }));
+
+    println!(
+        "== workload: mode={} servers={servers} threads={threads} objects={objects} \
+         object={object_mb}MiB chunk={chunk_kb}KiB dedup={dedup_pct}% consistency={} ==",
+        mode.name(),
+        consistency.name()
+    );
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let client = cluster.client();
+        let gen = gen.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut written = 0u64;
+            let mut idx = t as u64;
+            while idx < objects {
+                let (name, data) = gen.named_object(idx);
+                match client.put_object(&name, &data) {
+                    Ok((logical, _)) => written += logical,
+                    Err(e) => eprintln!("put {name}: {e}"),
+                }
+                idx += threads as u64;
+            }
+            written
+        }));
+    }
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let dt = t0.elapsed();
+    cluster.flush_consistency().ok();
+    let stats = cluster.stats();
+    let mbps = total as f64 / (1 << 20) as f64 / dt.as_secs_f64();
+    println!(
+        "wrote {} MiB in {:.2}s -> {:.1} MiB/s | stored {} MiB | savings {:.1}% | hits {}",
+        total >> 20,
+        dt.as_secs_f64(),
+        mbps,
+        stats.stored_bytes >> 20,
+        stats.savings() * 100.0,
+        stats.dedup_hits
+    );
+    let audit = cluster.audit().expect("audit");
+    if !audit.is_ok() {
+        eprintln!("AUDIT VIOLATIONS: {:?}", audit.violations);
+        return 1;
+    }
+    cluster.shutdown();
+    0
+}
+
+fn artifacts(args: &[String]) -> i32 {
+    let dir = opt(args, "--dir").unwrap_or_else(|| "artifacts".into());
+    match snss_dedup::runtime::parse_manifest(std::path::Path::new(&dir)) {
+        Ok(specs) => {
+            println!("{} artifacts in {dir}:", specs.len());
+            for s in specs {
+                println!(
+                    "  {:<16} kind={:<12} batch={:<3} chunk={:<7} tile={} file={}",
+                    s.name,
+                    s.kind,
+                    s.batch,
+                    s.chunk_bytes,
+                    s.tile,
+                    s.file.display()
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("cannot read manifest in {dir}: {e} (run `make artifacts`)");
+            1
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Cluster metrics: atomic counters plus a fixed-bucket latency histogram.
+//! All counters are cheap relaxed atomics — safe to bump from any lane.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Cluster-wide counters (one shared instance per cluster).
+#[derive(Default)]
+pub struct Metrics {
+    /// Logical bytes accepted from clients (pre-dedup).
+    pub bytes_logical: AtomicU64,
+    /// Unique chunk bytes stored (primary copies).
+    pub bytes_stored: AtomicU64,
+    /// Replica chunk bytes stored.
+    pub bytes_replica: AtomicU64,
+    /// CIT lookups served.
+    pub cit_lookups: AtomicU64,
+    /// Duplicate hits (refcount increments granted).
+    pub dedup_hits: AtomicU64,
+    /// Unique chunks written.
+    pub unique_chunks: AtomicU64,
+    /// Fabric messages sent.
+    pub messages: AtomicU64,
+    /// Repair events (invalid-flag consistency checks that restored state).
+    pub repairs: AtomicU64,
+    /// Chunks reclaimed by GC.
+    pub gc_reclaimed: AtomicU64,
+    /// Write transactions aborted.
+    pub tx_aborts: AtomicU64,
+    /// Write-path latency histogram.
+    pub put_latency: Histogram,
+}
+
+impl Metrics {
+    /// Fresh metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// add helper
+    #[inline]
+    pub fn add(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// read helper
+    #[inline]
+    pub fn get(counter: &AtomicU64) -> u64 {
+        counter.load(Ordering::Relaxed)
+    }
+
+    /// Space savings so far: 1 - stored/logical (0 when nothing written).
+    pub fn savings(&self) -> f64 {
+        let logical = Self::get(&self.bytes_logical);
+        let stored = Self::get(&self.bytes_stored);
+        if logical == 0 {
+            0.0
+        } else {
+            1.0 - stored as f64 / logical as f64
+        }
+    }
+}
+
+/// Log-scaled latency histogram: bucket i covers [2^i, 2^(i+1)) µs.
+pub struct Histogram {
+    buckets: [AtomicU64; 32],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    /// Record one latency sample.
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(31);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Approximate quantile (bucket upper bound) for `q` in [0,1].
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = (n as f64 * q).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1u64 << 32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn savings_math() {
+        let m = Metrics::new();
+        assert_eq!(m.savings(), 0.0);
+        Metrics::add(&m.bytes_logical, 100);
+        Metrics::add(&m.bytes_stored, 15);
+        assert!((m.savings() - 0.85).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let h = Histogram::default();
+        h.record(Duration::from_micros(1));
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_millis(10));
+        assert_eq!(h.count(), 4);
+        assert!(h.mean_us() > 1.0);
+        // p50 should land in the 100µs bucket's range
+        let p50 = h.quantile_us(0.5);
+        assert!((64..=256).contains(&p50), "p50={p50}");
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+}

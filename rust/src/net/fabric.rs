@@ -1,0 +1,334 @@
+//! Typed endpoints, RPC envelopes and the cluster-wide address directory.
+
+use crate::cluster::ServerId;
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+/// Safety net against protocol bugs: no RPC should ever take this long in
+/// an in-process cluster; hitting it means a lane deadlocked or a reply
+/// was dropped without closing the channel.
+pub const RPC_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Service lanes exposed by every OSD (see module docs for the ordering).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Lane {
+    /// Client object ops; may fan out to any backend.
+    Frontend,
+    /// Chunk + dedup-metadata ops; may call replica lanes only.
+    Backend,
+    /// Replica copies; strictly local, never calls out.
+    Replica,
+    /// Admin: map updates, rebalance, GC, stats, audit.
+    Control,
+}
+
+/// One request plus its reply channel.
+pub struct Envelope<Req, Resp> {
+    pub req: Req,
+    reply: Sender<Resp>,
+}
+
+impl<Req, Resp> Envelope<Req, Resp> {
+    /// Answer the caller (ignores a vanished caller).
+    pub fn reply(self, resp: Resp) {
+        let _ = self.reply.send(resp);
+    }
+
+    /// Split into the owned request and a replier, letting handlers move
+    /// payloads out of the message instead of copying them (hot path:
+    /// chunk stores move their data straight into the backend).
+    pub fn split(self) -> (Req, Replier<Resp>) {
+        (self.req, Replier(self.reply))
+    }
+}
+
+/// The reply half of a split envelope.
+pub struct Replier<Resp>(Sender<Resp>);
+
+impl<Resp> Replier<Resp> {
+    /// Answer the caller (ignores a vanished caller).
+    pub fn reply(self, resp: Resp) {
+        let _ = self.0.send(resp);
+    }
+}
+
+/// Receiving side of a lane.
+pub struct Inbox<Req, Resp> {
+    rx: Receiver<Envelope<Req, Resp>>,
+}
+
+impl<Req, Resp> Inbox<Req, Resp> {
+    /// Block for the next envelope; `None` when all senders are gone.
+    pub fn recv(&self) -> Option<Envelope<Req, Resp>> {
+        self.rx.recv().ok()
+    }
+
+    /// Non-blocking receive with timeout (used by lanes that also poll
+    /// shutdown flags).
+    pub fn recv_timeout(&self, d: Duration) -> Option<Envelope<Req, Resp>> {
+        self.rx.recv_timeout(d).ok()
+    }
+}
+
+/// In-flight RPC; `wait` blocks for the response.
+pub struct Pending<Resp> {
+    rx: Receiver<Resp>,
+    target: ServerId,
+}
+
+impl<Resp> Pending<Resp> {
+    /// Await the reply; a dropped envelope (dead server) maps to
+    /// [`Error::ServerDown`].
+    pub fn wait(self) -> Result<Resp> {
+        match self.rx.recv_timeout(RPC_TIMEOUT) {
+            Ok(r) => Ok(r),
+            Err(RecvTimeoutError::Disconnected) => Err(Error::ServerDown(self.target.0)),
+            Err(RecvTimeoutError::Timeout) => Err(Error::ServerDown(self.target.0)),
+        }
+    }
+}
+
+/// Wire-cost model: per-message latency plus per-byte time, charged at the
+/// sender (concurrent senders overlap, like independent NICs on a switch).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetProfile {
+    /// One-way per-message latency.
+    pub latency: Duration,
+    /// Link bandwidth in bytes/second (0 = infinite).
+    pub bytes_per_sec: u64,
+}
+
+impl NetProfile {
+    /// 10 GbE-ish profile scaled for an in-process simulation.
+    pub fn lan_10g() -> Self {
+        NetProfile {
+            latency: Duration::from_micros(50),
+            bytes_per_sec: 1_250_000_000,
+        }
+    }
+
+    fn charge(&self, bytes: usize) {
+        let wire = if self.bytes_per_sec > 0 {
+            Duration::from_nanos((bytes as u64).saturating_mul(1_000_000_000) / self.bytes_per_sec)
+        } else {
+            Duration::ZERO
+        };
+        let total = self.latency + wire;
+        if !total.is_zero() {
+            std::thread::sleep(total);
+        }
+    }
+}
+
+/// Sending side of a lane.
+pub struct Addr<Req, Resp> {
+    tx: Sender<Envelope<Req, Resp>>,
+    target: ServerId,
+    profile: Option<NetProfile>,
+}
+
+impl<Req, Resp> Clone for Addr<Req, Resp> {
+    fn clone(&self) -> Self {
+        Addr {
+            tx: self.tx.clone(),
+            target: self.target,
+            profile: self.profile,
+        }
+    }
+}
+
+impl<Req, Resp> Addr<Req, Resp> {
+    /// Fire a request without blocking on the reply.
+    pub fn send(&self, req: Req, wire_bytes: usize) -> Result<Pending<Resp>> {
+        if let Some(p) = &self.profile {
+            p.charge(wire_bytes);
+        }
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Envelope { req, reply: rtx })
+            .map_err(|_| Error::ServerDown(self.target.0))?;
+        Ok(Pending {
+            rx: rrx,
+            target: self.target,
+        })
+    }
+
+    /// Synchronous RPC.
+    pub fn call(&self, req: Req, wire_bytes: usize) -> Result<Resp> {
+        self.send(req, wire_bytes)?.wait()
+    }
+}
+
+/// Create a connected (addr, inbox) endpoint pair for `server`.
+pub fn endpoint<Req, Resp>(
+    server: ServerId,
+    profile: Option<NetProfile>,
+) -> (Addr<Req, Resp>, Inbox<Req, Resp>) {
+    let (tx, rx) = channel();
+    (
+        Addr {
+            tx,
+            target: server,
+            profile,
+        },
+        Inbox { rx },
+    )
+}
+
+/// Cluster-wide address book, keyed by (server, lane). Entries are
+/// replaced on server restart (new channels), so stale addresses fail fast
+/// with [`Error::ServerDown`] instead of hanging.
+pub struct Directory<Req, Resp> {
+    entries: Arc<RwLock<HashMap<(ServerId, Lane), Addr<Req, Resp>>>>,
+}
+
+impl<Req, Resp> Clone for Directory<Req, Resp> {
+    fn clone(&self) -> Self {
+        Directory {
+            entries: self.entries.clone(),
+        }
+    }
+}
+
+impl<Req, Resp> Default for Directory<Req, Resp> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<Req, Resp> Directory<Req, Resp> {
+    /// Empty directory.
+    pub fn new() -> Self {
+        Directory {
+            entries: Arc::new(RwLock::new(HashMap::new())),
+        }
+    }
+
+    /// Register (or replace) a lane address.
+    pub fn register(&self, server: ServerId, lane: Lane, addr: Addr<Req, Resp>) {
+        self.entries.write().unwrap().insert((server, lane), addr);
+    }
+
+    /// Remove all lanes of a server (final removal, not restart).
+    pub fn deregister(&self, server: ServerId) {
+        self.entries
+            .write()
+            .unwrap()
+            .retain(|(s, _), _| *s != server);
+    }
+
+    /// Look up a lane address.
+    pub fn lookup(&self, server: ServerId, lane: Lane) -> Result<Addr<Req, Resp>> {
+        self.entries
+            .read()
+            .unwrap()
+            .get(&(server, lane))
+            .cloned()
+            .ok_or(Error::ServerDown(server.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rpc_roundtrip() {
+        let (addr, inbox) = endpoint::<u32, u32>(ServerId(0), None);
+        let t = std::thread::spawn(move || {
+            while let Some(env) = inbox.recv() {
+                let v = env.req;
+                env.reply(v * 2);
+            }
+        });
+        assert_eq!(addr.call(21, 4).unwrap(), 42);
+        drop(addr);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn dead_receiver_is_server_down() {
+        let (addr, inbox) = endpoint::<u32, u32>(ServerId(3), None);
+        drop(inbox);
+        match addr.call(1, 4) {
+            Err(Error::ServerDown(3)) => {}
+            other => panic!("expected ServerDown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dropped_envelope_is_server_down() {
+        let (addr, inbox) = endpoint::<u32, u32>(ServerId(5), None);
+        let pending = addr.send(1, 4).unwrap();
+        let env = inbox.recv().unwrap();
+        drop(env); // server died mid-request
+        match pending.wait() {
+            Err(Error::ServerDown(5)) => {}
+            other => panic!("expected ServerDown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scatter_gather() {
+        let (addr, inbox) = endpoint::<u32, u32>(ServerId(0), None);
+        let t = std::thread::spawn(move || {
+            while let Some(env) = inbox.recv() {
+                let v = env.req;
+                env.reply(v + 1);
+            }
+        });
+        let pendings: Vec<_> = (0..16).map(|i| addr.send(i, 4).unwrap()).collect();
+        let sum: u32 = pendings.into_iter().map(|p| p.wait().unwrap()).sum();
+        assert_eq!(sum, (1..=16).sum::<u32>());
+        drop(addr);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn directory_register_lookup_replace() {
+        let dir = Directory::<u32, u32>::new();
+        let (a1, _i1) = endpoint(ServerId(1), None);
+        dir.register(ServerId(1), Lane::Backend, a1);
+        assert!(dir.lookup(ServerId(1), Lane::Backend).is_ok());
+        assert!(matches!(
+            dir.lookup(ServerId(1), Lane::Frontend),
+            Err(Error::ServerDown(1))
+        ));
+        // replace with a live endpoint (restart)
+        let (a2, i2) = endpoint(ServerId(1), None);
+        dir.register(ServerId(1), Lane::Backend, a2);
+        let t = std::thread::spawn(move || {
+            if let Some(env) = i2.recv() {
+                let v = env.req;
+                env.reply(v);
+            }
+        });
+        assert_eq!(dir.lookup(ServerId(1), Lane::Backend).unwrap().call(9, 4).unwrap(), 9);
+        t.join().unwrap();
+        dir.deregister(ServerId(1));
+        assert!(dir.lookup(ServerId(1), Lane::Backend).is_err());
+    }
+
+    #[test]
+    fn net_profile_charges_time() {
+        let profile = NetProfile {
+            latency: Duration::from_millis(5),
+            bytes_per_sec: 0,
+        };
+        let (addr, inbox) = endpoint::<u32, u32>(ServerId(0), Some(profile));
+        let t = std::thread::spawn(move || {
+            while let Some(env) = inbox.recv() {
+                let v = env.req;
+                env.reply(v);
+            }
+        });
+        let t0 = std::time::Instant::now();
+        addr.call(1, 0).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+        drop(addr);
+        t.join().unwrap();
+    }
+}

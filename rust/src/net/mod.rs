@@ -1,0 +1,20 @@
+//! Message-passing fabric between cluster nodes.
+//!
+//! The paper's testbed is 4 OSS machines on 10 GbE; here every server is a
+//! group of OS threads and the "network" is typed channels with an optional
+//! cost model ([`NetProfile`]) that charges per-message latency and
+//! per-byte wire time at the sender — concurrent senders overlap, exactly
+//! like independent NICs.
+//!
+//! ## Lanes and deadlock freedom
+//!
+//! Every OSD exposes several **lanes** (frontend / backend / replica /
+//! control), each a [`Inbox`] drained by its own thread. Request flow is
+//! constrained to the strict order *frontend → backend → replica* (control
+//! is orthogonal and never blocks on data lanes), which makes the wait-for
+//! graph acyclic: a frontend may block on any backend, a backend only on
+//! replica lanes, a replica lane never issues outbound calls.
+
+pub mod fabric;
+
+pub use fabric::{endpoint, Addr, Directory, Envelope, Inbox, Lane, NetProfile, Pending};

@@ -1,0 +1,159 @@
+//! Content-based data placement (the paper's §2.3).
+//!
+//! The paper passes the chunk's SHA-1 fingerprint to CRUSH so that (a) a
+//! fingerprint lookup is a single message to one server, and (b) storage
+//! rebalancing never stales the dedup metadata — the chunk's location is
+//! recomputable from its content under the current map epoch.
+//!
+//! Two interchangeable policies are provided:
+//!
+//! * [`straw2`] — CRUSH's straw2 bucket selection (weighted, minimal
+//!   movement on weight/membership change). The default, as in Ceph.
+//! * [`rendezvous`] — highest-random-weight hashing, the ablation
+//!   comparator for the placement-policy design choice in DESIGN.md.
+//!
+//! Keys are first folded onto a fixed ring of **placement groups**
+//! ([`pg::PgMap`]); policies place PGs, and per-epoch PG→servers tables
+//! are cached so the per-chunk hot path is one hash + one table lookup.
+
+pub mod pg;
+pub mod rendezvous;
+pub mod straw2;
+
+use crate::cluster::{ClusterMap, ServerId};
+
+/// A placement policy maps (map, key, n) → ordered replica chain.
+pub trait PlacementPolicy: Send + Sync {
+    /// Select up to `n` distinct Up servers for `key`; the first entry is
+    /// the primary. Fewer than `n` are returned if the map is too small.
+    fn select(&self, map: &ClusterMap, key: u64, n: usize) -> Vec<ServerId>;
+
+    /// Policy name (for configs / reports).
+    fn name(&self) -> &'static str;
+}
+
+/// The default policy used by the cluster.
+pub fn default_policy() -> Box<dyn PlacementPolicy> {
+    Box::new(straw2::Straw2)
+}
+
+#[cfg(test)]
+pub(crate) mod conformance {
+    //! Properties every placement policy must satisfy.
+    use super::*;
+    use crate::cluster::ServerState;
+    use crate::util::prop;
+
+    /// Determinism + distinctness + up-only.
+    pub fn basic(policy: &dyn PlacementPolicy) {
+        let mut map = ClusterMap::new(6);
+        map.set_state(ServerId(3), ServerState::Down);
+        for key in 0..200u64 {
+            let a = policy.select(&map, key, 3);
+            let b = policy.select(&map, key, 3);
+            assert_eq!(a, b, "non-deterministic at key {key}");
+            assert_eq!(a.len(), 3);
+            let mut uniq = a.clone();
+            uniq.sort();
+            uniq.dedup();
+            assert_eq!(uniq.len(), 3, "duplicate replicas at key {key}");
+            assert!(!a.contains(&ServerId(3)), "placed on Down server");
+        }
+    }
+
+    /// Load balance: over many keys, primary counts are within ±40% of
+    /// fair share for equal weights.
+    pub fn balance(policy: &dyn PlacementPolicy) {
+        let map = ClusterMap::new(8);
+        let mut counts = vec![0usize; 8];
+        let keys = 20_000u64;
+        for key in 0..keys {
+            let sel = policy.select(&map, crate::hash::fnv::fnv1a64_pair(key, 99), 1);
+            counts[sel[0].0 as usize] += 1;
+        }
+        let fair = keys as f64 / 8.0;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64) > fair * 0.6 && (c as f64) < fair * 1.4,
+                "server {i} got {c} of fair {fair}"
+            );
+        }
+    }
+
+    /// Minimal movement: adding one server moves ≈ 1/(n+1) of keys.
+    pub fn minimal_movement(policy: &dyn PlacementPolicy, tolerance: f64) {
+        let map_before = ClusterMap::new(7);
+        let mut map_after = map_before.clone();
+        map_after.add_server(1.0);
+        let keys = 20_000u64;
+        let mut moved = 0usize;
+        for key in 0..keys {
+            let k = crate::hash::fnv::fnv1a64_pair(key, 7);
+            let a = policy.select(&map_before, k, 1)[0];
+            let b = policy.select(&map_after, k, 1)[0];
+            if a != b {
+                moved += 1;
+                // anything that moves must move TO the new server
+                assert_eq!(b, ServerId(7), "moved to an old server");
+            }
+        }
+        let frac = moved as f64 / keys as f64;
+        let expected = 1.0 / 8.0;
+        assert!(
+            (frac - expected).abs() < tolerance,
+            "moved {frac:.3}, expected ~{expected:.3}"
+        );
+    }
+
+    /// Weighted balance: a 2x-weight server gets ~2x the primaries.
+    pub fn weighted(policy: &dyn PlacementPolicy) {
+        let mut map = ClusterMap::new(4);
+        map.set_weight(ServerId(0), 2.0);
+        let keys = 30_000u64;
+        let mut counts = vec![0usize; 4];
+        for key in 0..keys {
+            let sel = policy.select(&map, crate::hash::fnv::fnv1a64_pair(key, 3), 1);
+            counts[sel[0].0 as usize] += 1;
+        }
+        let heavy = counts[0] as f64;
+        let light = counts[1..].iter().sum::<usize>() as f64 / 3.0;
+        let ratio = heavy / light;
+        assert!(ratio > 1.6 && ratio < 2.4, "weight ratio {ratio}");
+    }
+
+    /// Property: replica chains never repeat a server, any map.
+    pub fn prop_distinct(policy: &dyn PlacementPolicy) {
+        prop::check(
+            prop::Config { cases: 48, ..Default::default() },
+            |rng, size| {
+                let n = 1 + rng.below(9) as usize;
+                let mut map = ClusterMap::new(n);
+                // random downs
+                for i in 0..n {
+                    if rng.unit_f64() < 0.2 {
+                        map.set_state(ServerId(i as u32), ServerState::Down);
+                    }
+                }
+                let key = rng.next_u64();
+                let r = 1 + (size as usize % 4);
+                (map, key, r)
+            },
+            |(map, key, r)| {
+                let sel = policy.select(map, *key, *r);
+                let mut uniq = sel.clone();
+                uniq.sort();
+                uniq.dedup();
+                if uniq.len() != sel.len() {
+                    return Err("duplicate server in chain".into());
+                }
+                if sel.len() > map.up_count() {
+                    return Err("selected more than up_count".into());
+                }
+                if sel.len() < (*r).min(map.up_count()) {
+                    return Err("under-selected".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

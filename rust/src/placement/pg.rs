@@ -1,0 +1,152 @@
+//! Placement groups: keys fold onto a fixed ring of PGs; the policy places
+//! PGs onto servers once per map epoch, and the per-key hot path is a mask
+//! plus a table lookup (this is Ceph's PG layer, which the paper inherits
+//! by passing fingerprints to CRUSH).
+
+use super::PlacementPolicy;
+use crate::cluster::{ClusterMap, ServerId};
+use std::sync::RwLock;
+
+/// Cached PG→replica-chain table for one map epoch.
+pub struct PgMap {
+    policy: Box<dyn PlacementPolicy>,
+    pg_count: u32,
+    replicas: usize,
+    cache: RwLock<Cached>,
+}
+
+struct Cached {
+    epoch: u64,
+    table: Vec<Vec<ServerId>>,
+}
+
+impl PgMap {
+    /// Build over a policy; `pg_count` must be a power of two.
+    pub fn new(policy: Box<dyn PlacementPolicy>, pg_count: u32, replicas: usize) -> Self {
+        assert!(pg_count.is_power_of_two(), "pg_count must be a power of two");
+        PgMap {
+            policy,
+            pg_count,
+            replicas,
+            cache: RwLock::new(Cached {
+                epoch: 0,
+                table: Vec::new(),
+            }),
+        }
+    }
+
+    /// PG id for a key.
+    #[inline]
+    pub fn pg_of(&self, key: u64) -> u32 {
+        (key & (self.pg_count as u64 - 1)) as u32
+    }
+
+    /// Number of PGs.
+    pub fn pg_count(&self) -> u32 {
+        self.pg_count
+    }
+
+    /// Replica chain for `key` under `map` (primary first). Rebuilds the
+    /// cached table when the epoch changed.
+    pub fn select(&self, map: &ClusterMap, key: u64) -> Vec<ServerId> {
+        self.ensure(map);
+        let cache = self.cache.read().unwrap();
+        cache.table[self.pg_of(key) as usize].clone()
+    }
+
+    /// Primary server for `key`.
+    pub fn primary(&self, map: &ClusterMap, key: u64) -> Option<ServerId> {
+        self.ensure(map);
+        let cache = self.cache.read().unwrap();
+        cache.table[self.pg_of(key) as usize].first().copied()
+    }
+
+    /// Full chain for a PG id (used by rebalance scans).
+    pub fn chain_of_pg(&self, map: &ClusterMap, pg: u32) -> Vec<ServerId> {
+        self.ensure(map);
+        self.cache.read().unwrap().table[pg as usize].clone()
+    }
+
+    fn ensure(&self, map: &ClusterMap) {
+        {
+            let cache = self.cache.read().unwrap();
+            if cache.epoch == map.epoch {
+                return;
+            }
+        }
+        let mut table = Vec::with_capacity(self.pg_count as usize);
+        for pg in 0..self.pg_count {
+            // salt the pg id so pg 0 and key 0 don't collide trivially
+            let key = crate::hash::fnv::fnv1a64_pair(pg as u64, 0x5047_5047);
+            table.push(self.policy.select(map, key, self.replicas));
+        }
+        let mut cache = self.cache.write().unwrap();
+        if cache.epoch != map.epoch {
+            *cache = Cached {
+                epoch: map.epoch,
+                table,
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::straw2::Straw2;
+
+    fn pgmap(replicas: usize) -> PgMap {
+        PgMap::new(Box::new(Straw2), 128, replicas)
+    }
+
+    #[test]
+    fn select_is_stable_within_epoch() {
+        let map = ClusterMap::new(5);
+        let pm = pgmap(2);
+        for k in 0..100u64 {
+            assert_eq!(pm.select(&map, k), pm.select(&map, k));
+        }
+    }
+
+    #[test]
+    fn cache_refreshes_on_epoch_change() {
+        let mut map = ClusterMap::new(3);
+        let pm = pgmap(1);
+        let before: Vec<_> = (0..1000u64).map(|k| pm.select(&map, k)[0]).collect();
+        map.add_server(1.0);
+        let after: Vec<_> = (0..1000u64).map(|k| pm.select(&map, k)[0]).collect();
+        let moved = before.iter().zip(&after).filter(|(a, b)| a != b).count();
+        assert!(moved > 0, "nothing moved after adding a server");
+        assert!(moved < 600, "too much moved: {moved}/1000");
+        // everything that moved went to the new server
+        for (a, b) in before.iter().zip(&after) {
+            if a != b {
+                assert_eq!(*b, ServerId(3));
+            }
+        }
+    }
+
+    #[test]
+    fn pg_of_masks() {
+        let pm = pgmap(1);
+        assert_eq!(pm.pg_of(0), 0);
+        assert_eq!(pm.pg_of(127), 127);
+        assert_eq!(pm.pg_of(128), 0);
+        assert_eq!(pm.pg_of(u64::MAX), 127);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_pow2() {
+        PgMap::new(Box::new(Straw2), 100, 1);
+    }
+
+    #[test]
+    fn replica_chain_length() {
+        let map = ClusterMap::new(4);
+        let pm = pgmap(3);
+        for k in 0..50u64 {
+            assert_eq!(pm.select(&map, k).len(), 3);
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! Rendezvous (highest-random-weight) hashing — the ablation alternative
+//! to straw2. Weighted via the same logarithmic trick; kept to compare
+//! balance quality and movement behaviour in the placement ablation.
+
+use super::PlacementPolicy;
+use crate::cluster::{ClusterMap, ServerId};
+use crate::hash::fnv::fnv1a64_pair;
+
+/// The HRW policy (stateless).
+pub struct Rendezvous;
+
+impl PlacementPolicy for Rendezvous {
+    fn select(&self, map: &ClusterMap, key: u64, n: usize) -> Vec<ServerId> {
+        let mut scored: Vec<(f64, ServerId)> = map
+            .up_servers()
+            .map(|s| {
+                let h = fnv1a64_pair(key ^ 0xA5A5_5A5A_DEAD_BEEF, s.id.0 as u64);
+                let u = ((h >> 11) as f64 + 1.0) * (1.0 / (1u64 << 53) as f64);
+                (-s.weight / u.ln(), s.id)
+            })
+            .collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        scored.truncate(n);
+        scored.into_iter().map(|(_, id)| id).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "rendezvous"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::conformance;
+
+    #[test]
+    fn conformance_basic() {
+        conformance::basic(&Rendezvous);
+    }
+
+    #[test]
+    fn conformance_balance() {
+        conformance::balance(&Rendezvous);
+    }
+
+    #[test]
+    fn conformance_minimal_movement() {
+        conformance::minimal_movement(&Rendezvous, 0.04);
+    }
+
+    #[test]
+    fn conformance_weighted() {
+        conformance::weighted(&Rendezvous);
+    }
+
+    #[test]
+    fn conformance_prop_distinct() {
+        conformance::prop_distinct(&Rendezvous);
+    }
+
+    #[test]
+    fn differs_from_straw2() {
+        // sanity: it is actually a different mapping
+        use crate::placement::straw2::Straw2;
+        let map = ClusterMap::new(8);
+        let diff = (0..500u64)
+            .filter(|&k| {
+                Rendezvous.select(&map, k, 1) != Straw2.select(&map, k, 1)
+            })
+            .count();
+        assert!(diff > 100);
+    }
+}

@@ -1,0 +1,88 @@
+//! CRUSH straw2 bucket selection.
+//!
+//! Each Up server draws a "straw" `ln(u) / weight` where `u` is a uniform
+//! (0,1] hash of (key, server); the longest straws win. straw2's defining
+//! property (Weil et al., and what the paper relies on for rebalancing):
+//! changing one server's weight only moves keys to/from *that* server.
+
+use super::PlacementPolicy;
+use crate::cluster::{ClusterMap, ServerId};
+use crate::hash::fnv::fnv1a64_pair;
+
+/// The straw2 policy (stateless).
+pub struct Straw2;
+
+#[inline]
+fn draw(key: u64, server: u32, weight: f64) -> f64 {
+    // u in (0, 1]: take 53 bits, avoid 0.
+    let h = fnv1a64_pair(key, server as u64);
+    let u = ((h >> 11) as f64 + 1.0) * (1.0 / (1u64 << 53) as f64);
+    // ln(u) <= 0; dividing by weight shrinks the penalty for heavy servers.
+    u.ln() / weight
+}
+
+impl PlacementPolicy for Straw2 {
+    fn select(&self, map: &ClusterMap, key: u64, n: usize) -> Vec<ServerId> {
+        // Collect (draw, id) for Up servers and take the top-n.
+        let mut straws: Vec<(f64, ServerId)> = map
+            .up_servers()
+            .map(|s| (draw(key, s.id.0, s.weight), s.id))
+            .collect();
+        straws.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        straws.truncate(n);
+        straws.into_iter().map(|(_, id)| id).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "straw2"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::conformance;
+
+    #[test]
+    fn conformance_basic() {
+        conformance::basic(&Straw2);
+    }
+
+    #[test]
+    fn conformance_balance() {
+        conformance::balance(&Straw2);
+    }
+
+    #[test]
+    fn conformance_minimal_movement() {
+        conformance::minimal_movement(&Straw2, 0.04);
+    }
+
+    #[test]
+    fn conformance_weighted() {
+        conformance::weighted(&Straw2);
+    }
+
+    #[test]
+    fn conformance_prop_distinct() {
+        conformance::prop_distinct(&Straw2);
+    }
+
+    #[test]
+    fn down_server_only_moves_its_own_keys() {
+        use crate::cluster::ServerState;
+        let before = ClusterMap::new(5);
+        let mut after = before.clone();
+        after.set_state(ServerId(2), ServerState::Down);
+        for key in 0..2000u64 {
+            let k = fnv1a64_pair(key, 1);
+            let a = Straw2.select(&before, k, 1)[0];
+            let b = Straw2.select(&after, k, 1)[0];
+            if a != ServerId(2) {
+                assert_eq!(a, b, "key not on the failed server moved");
+            } else {
+                assert_ne!(b, ServerId(2));
+            }
+        }
+    }
+}

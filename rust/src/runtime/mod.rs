@@ -1,0 +1,320 @@
+//! PJRT runtime: loads the AOT HLO artifacts produced by
+//! `python/compile/aot.py` and serves batched fingerprint requests on the
+//! request path (Python never runs here).
+//!
+//! The PJRT client and compiled executables live on one dedicated service
+//! thread (the `xla` crate's handles wrap raw pointers, and a single
+//! device is the honest model of the accelerator the paper proposes for
+//! fingerprint offload); OSD frontends submit jobs over a channel.
+//!
+//! Chunks whose size matches a compiled `(batch, chunk_bytes)` variant are
+//! packed big-endian into `u32[batch, words]` literals and digested by the
+//! Pallas SHA-1 kernel; everything else (tail chunks, odd sizes) falls
+//! back to the scalar Rust SHA-1 — both paths are bit-identical, which
+//! `rust/tests/xla_runtime.rs` asserts.
+
+use crate::dedup::fingerprint::{Fingerprint, FingerprintProvider};
+use crate::error::{Error, Result};
+use crate::hash::sha1::sha1_words;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+
+/// One artifact listed in `artifacts/manifest.tsv`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: String,
+    pub batch: usize,
+    pub chunk_bytes: usize,
+    pub tile: usize,
+    pub mask: u32,
+    pub file: PathBuf,
+}
+
+/// Parse `manifest.tsv` (written by `python/compile/aot.py`).
+pub fn parse_manifest(dir: &Path) -> Result<Vec<ArtifactSpec>> {
+    let text = std::fs::read_to_string(dir.join("manifest.tsv"))?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let f: Vec<&str> = line.split('\t').collect();
+        if f.len() != 7 {
+            return Err(Error::Corrupt(format!("manifest line: {line}")));
+        }
+        out.push(ArtifactSpec {
+            name: f[0].to_string(),
+            kind: f[1].to_string(),
+            batch: f[2].parse().map_err(|_| Error::Corrupt("batch".into()))?,
+            chunk_bytes: f[3].parse().map_err(|_| Error::Corrupt("chunk".into()))?,
+            tile: f[4].parse().map_err(|_| Error::Corrupt("tile".into()))?,
+            mask: f[5].parse().map_err(|_| Error::Corrupt("mask".into()))?,
+            file: dir.join(f[6]),
+        });
+    }
+    Ok(out)
+}
+
+/// Pack chunks (all exactly `chunk_bytes` long) big-endian into a flat
+/// u32 buffer of `batch * chunk_bytes/4` words, zero-padding missing rows.
+pub fn pack_batch(chunks: &[&[u8]], batch: usize, chunk_bytes: usize) -> Vec<u32> {
+    let words = chunk_bytes / 4;
+    let mut out = vec![0u32; batch * words];
+    for (r, c) in chunks.iter().enumerate() {
+        debug_assert_eq!(c.len(), chunk_bytes);
+        for w in 0..words {
+            let o = w * 4;
+            out[r * words + w] = u32::from_be_bytes([c[o], c[o + 1], c[o + 2], c[o + 3]]);
+        }
+    }
+    out
+}
+
+enum Job {
+    /// Digest chunks of exactly `chunk_bytes` (one variant).
+    Digest {
+        variant: usize,
+        packed: Vec<u32>,
+        rows: usize,
+        reply: Sender<Result<Vec<Fingerprint>>>,
+    },
+    Shutdown,
+}
+
+/// The accelerator service: a thread owning the PJRT client + compiled
+/// fingerprint executables. Implements [`FingerprintProvider`].
+pub struct XlaFingerprintService {
+    tx: Mutex<Sender<Job>>,
+    variants: Vec<ArtifactSpec>,
+    /// Chunks digested via the accelerator (for perf reporting).
+    pub accel_chunks: AtomicU64,
+    /// Chunks digested via the scalar fallback.
+    pub scalar_chunks: AtomicU64,
+}
+
+impl XlaFingerprintService {
+    /// Load the manifest, compile all fingerprint variants on a service
+    /// thread, and return the provider handle.
+    pub fn start(artifacts_dir: impl AsRef<Path>) -> Result<XlaFingerprintService> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let variants: Vec<ArtifactSpec> = parse_manifest(&dir)?
+            .into_iter()
+            .filter(|a| a.kind == "fingerprint")
+            .collect();
+        if variants.is_empty() {
+            return Err(Error::Xla("no fingerprint artifacts in manifest".into()));
+        }
+        let (tx, rx) = channel::<Job>();
+        let specs = variants.clone();
+        let (boot_tx, boot_rx) = channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("xla-fp-service".into())
+            .spawn(move || {
+                // Build client + executables on the service thread; report
+                // boot status, then serve jobs forever.
+                let built = (|| -> Result<(xla::PjRtClient, Vec<xla::PjRtLoadedExecutable>)> {
+                    let client = xla::PjRtClient::cpu().map_err(|e| Error::Xla(e.to_string()))?;
+                    let mut execs = Vec::new();
+                    for spec in &specs {
+                        let proto = xla::HloModuleProto::from_text_file(
+                            spec.file.to_str().unwrap_or_default(),
+                        )
+                        .map_err(|e| Error::Xla(format!("{}: {e}", spec.name)))?;
+                        let comp = xla::XlaComputation::from_proto(&proto);
+                        let exe = client
+                            .compile(&comp)
+                            .map_err(|e| Error::Xla(format!("compile {}: {e}", spec.name)))?;
+                        execs.push(exe);
+                    }
+                    Ok((client, execs))
+                })();
+                let (_client, execs) = match built {
+                    Ok(ok) => {
+                        let _ = boot_tx.send(Ok(()));
+                        ok
+                    }
+                    Err(e) => {
+                        let _ = boot_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Shutdown => break,
+                        Job::Digest {
+                            variant,
+                            packed,
+                            rows,
+                            reply,
+                        } => {
+                            let spec = &specs[variant];
+                            let result = run_digest(&execs[variant], spec, &packed, rows);
+                            let _ = reply.send(result);
+                        }
+                    }
+                }
+            })
+            .map_err(|e| Error::Xla(format!("spawn service: {e}")))?;
+        boot_rx
+            .recv()
+            .map_err(|_| Error::Xla("service thread died during boot".into()))??;
+        Ok(XlaFingerprintService {
+            tx: Mutex::new(tx),
+            variants,
+            accel_chunks: AtomicU64::new(0),
+            scalar_chunks: AtomicU64::new(0),
+        })
+    }
+
+    /// The compiled variants (for reports and tests).
+    pub fn variants(&self) -> &[ArtifactSpec] {
+        &self.variants
+    }
+
+    fn variant_for(&self, len: usize) -> Option<usize> {
+        self.variants.iter().position(|v| v.chunk_bytes == len)
+    }
+
+    /// Digest `chunks` (all exactly the variant's chunk size) through the
+    /// accelerator, splitting into batches as needed.
+    fn digest_via_xla(&self, variant: usize, chunks: &[&[u8]]) -> Result<Vec<Fingerprint>> {
+        let spec = &self.variants[variant];
+        let mut out = Vec::with_capacity(chunks.len());
+        for group in chunks.chunks(spec.batch) {
+            let packed = pack_batch(group, spec.batch, spec.chunk_bytes);
+            let (rtx, rrx) = channel();
+            self.tx
+                .lock()
+                .unwrap()
+                .send(Job::Digest {
+                    variant,
+                    packed,
+                    rows: group.len(),
+                    reply: rtx,
+                })
+                .map_err(|_| Error::Xla("service gone".into()))?;
+            let digests = rrx.recv().map_err(|_| Error::Xla("service died".into()))??;
+            out.extend(digests);
+        }
+        Ok(out)
+    }
+}
+
+fn run_digest(
+    exe: &xla::PjRtLoadedExecutable,
+    spec: &ArtifactSpec,
+    packed: &[u32],
+    rows: usize,
+) -> Result<Vec<Fingerprint>> {
+    let words = spec.chunk_bytes / 4;
+    let lit = xla::Literal::vec1(packed)
+        .reshape(&[spec.batch as i64, words as i64])
+        .map_err(|e| Error::Xla(e.to_string()))?;
+    let result = exe
+        .execute::<xla::Literal>(&[lit])
+        .map_err(|e| Error::Xla(e.to_string()))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| Error::Xla(e.to_string()))?;
+    let mut tuple = result;
+    let parts = tuple
+        .decompose_tuple()
+        .map_err(|e| Error::Xla(e.to_string()))?;
+    let digests = parts[0]
+        .to_vec::<u32>()
+        .map_err(|e| Error::Xla(e.to_string()))?;
+    let mut out = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let mut w = [0u32; 5];
+        w.copy_from_slice(&digests[r * 5..r * 5 + 5]);
+        out.push(Fingerprint(w));
+    }
+    Ok(out)
+}
+
+impl FingerprintProvider for XlaFingerprintService {
+    fn digests(&self, chunks: &[&[u8]]) -> Vec<Fingerprint> {
+        // Group indices by matching variant; scalar-fallback the rest.
+        let mut out = vec![Fingerprint([0; 5]); chunks.len()];
+        let mut by_variant: std::collections::HashMap<usize, Vec<usize>> =
+            std::collections::HashMap::new();
+        for (i, c) in chunks.iter().enumerate() {
+            match self.variant_for(c.len()) {
+                Some(v) => by_variant.entry(v).or_default().push(i),
+                None => {
+                    out[i] = Fingerprint(sha1_words(c));
+                    self.scalar_chunks.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        for (variant, idxs) in by_variant {
+            let group: Vec<&[u8]> = idxs.iter().map(|&i| chunks[i]).collect();
+            match self.digest_via_xla(variant, &group) {
+                Ok(ds) => {
+                    self.accel_chunks
+                        .fetch_add(idxs.len() as u64, Ordering::Relaxed);
+                    for (k, i) in idxs.into_iter().enumerate() {
+                        out[i] = ds[k];
+                    }
+                }
+                Err(_) => {
+                    // accelerator trouble: stay correct via the scalar path
+                    for i in idxs {
+                        out[i] = Fingerprint(sha1_words(chunks[i]));
+                        self.scalar_chunks.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pallas-sha1"
+    }
+}
+
+impl Drop for XlaFingerprintService {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Job::Shutdown);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_batch_layout() {
+        let a = [0x01u8, 0x02, 0x03, 0x04, 0x05, 0x06, 0x07, 0x08];
+        let packed = pack_batch(&[&a], 2, 8);
+        assert_eq!(packed, vec![0x01020304, 0x05060708, 0, 0]);
+    }
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("snss-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "# header\nfp_b2_c64\tfingerprint\t2\t64\t1\t0\tfp_b2_c64.hlo.txt\n",
+        )
+        .unwrap();
+        let specs = parse_manifest(&dir).unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].batch, 2);
+        assert_eq!(specs[0].chunk_bytes, 64);
+        assert_eq!(specs[0].kind, "fingerprint");
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("snss-manifest-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), "not\ta\tmanifest\n").unwrap();
+        assert!(parse_manifest(&dir).is_err());
+    }
+}

@@ -1,0 +1,268 @@
+//! Chunk/object data stores (the "disk" of each storage server).
+
+use crate::error::Result;
+use crate::util::hex;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Byte store keyed by opaque keys (chunk fingerprints / object names).
+/// Internally synchronized; data survives server kill+restart (it models
+/// the disk, not the process).
+pub trait StorageBackend: Send + Sync {
+    /// Store (overwrite) `key`.
+    fn put(&self, key: &[u8], data: &[u8]) -> Result<()>;
+    /// Store (overwrite) `key`, taking ownership — implementations that
+    /// keep data in memory avoid the copy (hot write path).
+    fn put_owned(&self, key: &[u8], data: Vec<u8>) -> Result<()> {
+        self.put(key, &data)
+    }
+    /// Fetch a value.
+    fn get(&self, key: &[u8]) -> Result<Option<Vec<u8>>>;
+    /// Delete; true if present.
+    fn delete(&self, key: &[u8]) -> Result<bool>;
+    /// Does the key exist (the `stat` used by consistency checks)?
+    fn stat(&self, key: &[u8]) -> Result<bool>;
+    /// All keys (for rebalance scans).
+    fn keys(&self) -> Result<Vec<Vec<u8>>>;
+    /// Total live payload bytes.
+    fn stored_bytes(&self) -> u64;
+    /// Number of stored values.
+    fn len(&self) -> usize;
+    /// True if nothing is stored.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// In-memory backend.
+#[derive(Default)]
+pub struct MemStore {
+    map: Mutex<HashMap<Vec<u8>, Vec<u8>>>,
+    bytes: AtomicU64,
+}
+
+impl MemStore {
+    /// New empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl StorageBackend for MemStore {
+    fn put(&self, key: &[u8], data: &[u8]) -> Result<()> {
+        self.put_owned(key, data.to_vec())
+    }
+
+    fn put_owned(&self, key: &[u8], data: Vec<u8>) -> Result<()> {
+        let len = data.len() as u64;
+        let mut m = self.map.lock().unwrap();
+        if let Some(old) = m.insert(key.to_vec(), data) {
+            self.bytes.fetch_sub(old.len() as u64, Ordering::Relaxed);
+        }
+        self.bytes.fetch_add(len, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn get(&self, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        Ok(self.map.lock().unwrap().get(key).cloned())
+    }
+
+    fn delete(&self, key: &[u8]) -> Result<bool> {
+        let mut m = self.map.lock().unwrap();
+        if let Some(old) = m.remove(key) {
+            self.bytes.fetch_sub(old.len() as u64, Ordering::Relaxed);
+            Ok(true)
+        } else {
+            Ok(false)
+        }
+    }
+
+    fn stat(&self, key: &[u8]) -> Result<bool> {
+        Ok(self.map.lock().unwrap().contains_key(key))
+    }
+
+    fn keys(&self) -> Result<Vec<Vec<u8>>> {
+        Ok(self.map.lock().unwrap().keys().cloned().collect())
+    }
+
+    fn stored_bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+}
+
+/// File-per-key backend under a directory (keys hex-encoded, two-level
+/// fan-out to keep directories small).
+pub struct FileStore {
+    dir: PathBuf,
+    bytes: AtomicU64,
+    count: AtomicU64,
+    // serialize directory mutations; reads go straight to the fs
+    lock: Mutex<()>,
+}
+
+impl FileStore {
+    /// Open (creating) a store rooted at `dir`; scans existing content to
+    /// rebuild the byte/count accounting (restart path).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        let mut bytes = 0u64;
+        let mut count = 0u64;
+        for sub in std::fs::read_dir(&dir)? {
+            let sub = sub?;
+            if sub.file_type()?.is_dir() {
+                for f in std::fs::read_dir(sub.path())? {
+                    let md = f?.metadata()?;
+                    bytes += md.len();
+                    count += 1;
+                }
+            }
+        }
+        Ok(FileStore {
+            dir,
+            bytes: AtomicU64::new(bytes),
+            count: AtomicU64::new(count),
+            lock: Mutex::new(()),
+        })
+    }
+
+    fn path_of(&self, key: &[u8]) -> PathBuf {
+        let h = hex::encode(key);
+        let (fan, rest) = if h.len() >= 2 {
+            (&h[..2], &h[..])
+        } else {
+            ("00", &h[..])
+        };
+        self.dir.join(fan).join(rest)
+    }
+}
+
+impl StorageBackend for FileStore {
+    fn put(&self, key: &[u8], data: &[u8]) -> Result<()> {
+        let p = self.path_of(key);
+        let _g = self.lock.lock().unwrap();
+        if let Some(parent) = p.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let old = std::fs::metadata(&p).map(|m| m.len()).ok();
+        std::fs::write(&p, data)?;
+        if let Some(old) = old {
+            self.bytes.fetch_sub(old, Ordering::Relaxed);
+        } else {
+            self.count.fetch_add(1, Ordering::Relaxed);
+        }
+        self.bytes.fetch_add(data.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn get(&self, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        match std::fs::read(self.path_of(key)) {
+            Ok(v) => Ok(Some(v)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    fn delete(&self, key: &[u8]) -> Result<bool> {
+        let p = self.path_of(key);
+        let _g = self.lock.lock().unwrap();
+        match std::fs::metadata(&p) {
+            Ok(md) => {
+                std::fs::remove_file(&p)?;
+                self.bytes.fetch_sub(md.len(), Ordering::Relaxed);
+                self.count.fetch_sub(1, Ordering::Relaxed);
+                Ok(true)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    fn stat(&self, key: &[u8]) -> Result<bool> {
+        Ok(self.path_of(key).exists())
+    }
+
+    fn keys(&self) -> Result<Vec<Vec<u8>>> {
+        let mut out = Vec::new();
+        for sub in std::fs::read_dir(&self.dir)? {
+            let sub = sub?;
+            if sub.file_type()?.is_dir() {
+                for f in std::fs::read_dir(sub.path())? {
+                    let name = f?.file_name();
+                    if let Some(k) = name.to_str().and_then(hex::decode) {
+                        out.push(k);
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn stored_bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    fn len(&self) -> usize {
+        self.count.load(Ordering::Relaxed) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conformance(store: &dyn StorageBackend) {
+        assert!(store.is_empty());
+        store.put(b"k1", b"hello").unwrap();
+        store.put(b"k2", &vec![7u8; 1000]).unwrap();
+        assert_eq!(store.stored_bytes(), 1005);
+        assert_eq!(store.len(), 2);
+        assert!(store.stat(b"k1").unwrap());
+        assert!(!store.stat(b"nope").unwrap());
+        assert_eq!(store.get(b"k1").unwrap().unwrap(), b"hello");
+        // overwrite adjusts accounting
+        store.put(b"k1", b"hi").unwrap();
+        assert_eq!(store.stored_bytes(), 1002);
+        assert!(store.delete(b"k1").unwrap());
+        assert!(!store.delete(b"k1").unwrap());
+        assert_eq!(store.stored_bytes(), 1000);
+        let keys = store.keys().unwrap();
+        assert_eq!(keys, vec![b"k2".to_vec()]);
+    }
+
+    #[test]
+    fn memstore_conformance() {
+        conformance(&MemStore::new());
+    }
+
+    #[test]
+    fn filestore_conformance() {
+        let d = std::env::temp_dir().join(format!("snss-fs-conf-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        conformance(&FileStore::open(&d).unwrap());
+    }
+
+    #[test]
+    fn filestore_survives_reopen() {
+        let d = std::env::temp_dir().join(format!("snss-fs-reopen-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        {
+            let fs = FileStore::open(&d).unwrap();
+            fs.put(b"\xaa\xbb", &vec![1u8; 128]).unwrap();
+            fs.put(b"\xcc", b"x").unwrap();
+        }
+        let fs = FileStore::open(&d).unwrap();
+        assert_eq!(fs.len(), 2);
+        assert_eq!(fs.stored_bytes(), 129);
+        assert_eq!(fs.get(b"\xaa\xbb").unwrap().unwrap(), vec![1u8; 128]);
+        let mut keys = fs.keys().unwrap();
+        keys.sort();
+        assert_eq!(keys, vec![b"\xaa\xbb".to_vec(), b"\xcc".to_vec()]);
+    }
+}

@@ -1,0 +1,17 @@
+//! Object storage servers (OSS/OSD) — the shared-nothing substrate.
+//!
+//! * [`backend`] — byte-addressed chunk/object stores (memory + file).
+//! * [`proto`] — the typed request/response protocol between lanes.
+//! * [`osd`] — the server: four lanes (frontend / backend / replica /
+//!   control) over shared per-server state, plus the consistency-manager
+//!   and GC threads.
+//! * [`rebalance`] — map-change-driven migration of chunks and OMAP
+//!   entries to their recomputed homes.
+
+pub mod backend;
+pub mod osd;
+pub mod proto;
+pub mod rebalance;
+
+pub use backend::{FileStore, MemStore, StorageBackend};
+pub use osd::{Osd, OsdShared};

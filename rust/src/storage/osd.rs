@@ -1,0 +1,433 @@
+//! The object storage server (OSS/OSD).
+//!
+//! One `Osd` runs five threads over a shared per-server state
+//! ([`OsdShared`], which models everything that survives a crash — the
+//! chunk store, the replica store and the DM-Shard are "disk"; the
+//! pending-flag queue is "memory" and is wiped on crash):
+//!
+//! * **frontend** — client object transactions (the dedup engine entry);
+//! * **backend**  — chunk + dedup-metadata ops from peer frontends;
+//! * **replica**  — replica copies (strictly local; see `net` lane order);
+//! * **control**  — map updates, rebalance, GC, stats, audit;
+//! * **consistency manager** — the asynchronous flag flipper (§2.4).
+//!
+//! Kill/crash semantics: lanes keep running but silently *drop* every
+//! envelope while the injector reports dead — callers observe a closed
+//! reply channel, i.e. [`crate::Error::ServerDown`], exactly like a
+//! machine that stopped answering. Restart revives the injector, clears
+//! volatile state and runs a recovery scan.
+
+use crate::cluster::{ClusterMap, ServerId};
+use crate::dedup::consistency::{ConsistencyMode, PendingFlags};
+use crate::dedup::dmshard::DmShard;
+use crate::dedup::engine::{self, DedupMode};
+use crate::dedup::fingerprint::FingerprintProvider;
+use crate::dedup::gc;
+use crate::dedup::Chunker;
+use crate::failure::FailureInjector;
+use crate::metrics::Metrics;
+use crate::net::{endpoint, Inbox, Lane, NetProfile};
+use crate::placement::pg::PgMap;
+use crate::storage::backend::StorageBackend;
+use crate::storage::proto::{AuditDump, Dir, OsdStats, Req, Resp};
+use crate::storage::rebalance;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// Cluster-start-relative clock (ms); shared by all servers so CIT
+/// timestamps and GC thresholds are comparable cluster-wide.
+pub struct Clock(Instant);
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock(Instant::now())
+    }
+}
+
+impl Clock {
+    /// Milliseconds since cluster start.
+    pub fn now_ms(&self) -> u64 {
+        self.0.elapsed().as_millis() as u64
+    }
+}
+
+/// Per-server configuration (a slice of the cluster config).
+#[derive(Clone)]
+pub struct OsdConfig {
+    pub dedup: DedupMode,
+    pub consistency: ConsistencyMode,
+    pub chunker: Chunker,
+    pub replication: usize,
+    /// Verify chunk digests on read (integrity checking extension).
+    pub verify_read: bool,
+    /// Modeled latency of one synchronous DM-Shard write (the paper's
+    /// backend is SQLite on SSD; a flag flip or CIT insert is a
+    /// synchronous UPDATE). Charged on the thread issuing the write, so
+    /// serialization effects (transaction locks, single metadata server)
+    /// emerge exactly where the paper's do. `None` = free (unit tests).
+    pub meta_io: Option<Duration>,
+}
+
+/// Everything a server owns that survives kill+restart (disk-like), plus
+/// handles to cluster-shared infrastructure.
+pub struct OsdShared {
+    pub id: ServerId,
+    pub cfg: OsdConfig,
+    pub map: Arc<RwLock<ClusterMap>>,
+    pub pgmap: Arc<PgMap>,
+    pub shard: DmShard,
+    /// Primary chunk/object data ("disk").
+    pub store: Box<dyn StorageBackend>,
+    /// Replica copies of peer data + OMAP record copies ("disk").
+    pub replica_store: Box<dyn StorageBackend>,
+    /// Volatile: the async-consistency registration queue.
+    pub pending: PendingFlags,
+    pub injector: FailureInjector,
+    pub metrics: Arc<Metrics>,
+    pub dir: Dir,
+    pub provider: Arc<dyn FingerprintProvider>,
+    pub clock: Arc<Clock>,
+    /// SyncObject-mode transaction lock (held across a whole object write).
+    pub obj_lock: Mutex<()>,
+}
+
+impl OsdShared {
+    /// Replica chain for a chunk fingerprint placement key (primary first).
+    pub fn chunk_chain(&self, key: u64) -> Vec<ServerId> {
+        let map = self.map.read().unwrap();
+        self.pgmap.select(&map, key)
+    }
+
+    /// Replica chain for an object name (primary first).
+    pub fn object_chain(&self, name: &str) -> Vec<ServerId> {
+        self.chunk_chain(crate::hash::fnv1a64(name.as_bytes()))
+    }
+
+    /// Current time in ms.
+    pub fn now_ms(&self) -> u64 {
+        self.clock.now_ms()
+    }
+
+    /// Charge one synchronous DM-Shard write against the metadata I/O
+    /// cost model (no-op when unset).
+    pub fn charge_meta_io(&self) {
+        if let Some(d) = self.cfg.meta_io {
+            std::thread::sleep(d);
+        }
+    }
+}
+
+/// A running server: shared state + lane threads.
+pub struct Osd {
+    pub shared: Arc<OsdShared>,
+    shutdown: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+const POLL: Duration = Duration::from_millis(50);
+
+impl Osd {
+    /// Spawn a server: creates its four lane endpoints, registers them in
+    /// the directory and starts all threads.
+    pub fn spawn(shared: Arc<OsdShared>, profile: Option<NetProfile>) -> Osd {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut threads = Vec::new();
+
+        let lanes = [Lane::Frontend, Lane::Backend, Lane::Replica, Lane::Control];
+        for lane in lanes {
+            let (addr, inbox) = endpoint(shared.id, profile);
+            shared.dir.register(shared.id, lane, addr);
+            let sh = shared.clone();
+            let sd = shutdown.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("{}-{:?}", shared.id, lane))
+                    .spawn(move || lane_loop(sh, sd, lane, inbox))
+                    .expect("spawn lane"),
+            );
+        }
+
+        // consistency-manager thread (only flips flags in AsyncTagged mode,
+        // but runs regardless so FlushConsistency is uniform).
+        {
+            let sh = shared.clone();
+            let sd = shutdown.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("{}-flagmgr", shared.id))
+                    .spawn(move || flag_manager_loop(sh, sd))
+                    .expect("spawn flagmgr"),
+            );
+        }
+
+        Osd {
+            shared,
+            shutdown,
+            threads,
+        }
+    }
+
+    /// Abrupt kill: server stops answering; volatile state is lost.
+    pub fn kill(&self) {
+        self.shared.injector.kill();
+        self.shared.pending.clear();
+    }
+
+    /// Restart after a kill/crash: revive and run the recovery scan
+    /// (re-registers stored-but-invalid chunks with the flag manager).
+    pub fn restart(&self) {
+        self.shared.injector.revive();
+        let _ = gc::recovery_scan(&self.shared);
+    }
+
+    /// Stop all threads and join them (graceful teardown).
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn lane_loop(sh: Arc<OsdShared>, sd: Arc<AtomicBool>, lane: Lane, inbox: Inbox<Req, Resp>) {
+    while !sd.load(Ordering::SeqCst) {
+        let Some(env) = inbox.recv_timeout(POLL) else {
+            continue;
+        };
+        if sh.injector.is_dead() {
+            // crashed/killed server: drop silently (no reply).
+            continue;
+        }
+        let (req, replier) = env.split();
+        let resp = dispatch(&sh, lane, req);
+        // A crash point may have fired mid-request: a dead server must not
+        // reply (the caller sees ServerDown via the dropped channel).
+        if sh.injector.is_dead() {
+            continue;
+        }
+        replier.reply(resp);
+    }
+}
+
+fn err_str(e: crate::error::Error) -> Resp {
+    Resp::Err(e.to_string())
+}
+
+fn dispatch(sh: &Arc<OsdShared>, lane: Lane, req: Req) -> Resp {
+    crate::metrics::Metrics::add(&sh.metrics.messages, 1);
+    match (lane, req) {
+        // ---- frontend ----
+        (Lane::Frontend, Req::PutObject { name, data }) => {
+            let t0 = Instant::now();
+            match engine::put_object(sh, &name, &data) {
+                Ok((logical, unique)) => {
+                    sh.metrics.put_latency.record(t0.elapsed());
+                    Resp::PutAck { logical, unique }
+                }
+                Err(e) => err_str(e),
+            }
+        }
+        (Lane::Frontend, Req::GetObject { name }) => match engine::get_object(sh, &name) {
+            Ok(Some(data)) => Resp::Object(data),
+            Ok(None) => Resp::NotFound,
+            Err(e) => err_str(e),
+        },
+        (Lane::Frontend, Req::DeleteObject { name }) => match engine::delete_object(sh, &name) {
+            Ok(true) => Resp::Ok,
+            Ok(false) => Resp::NotFound,
+            Err(e) => err_str(e),
+        },
+
+        // ---- backend ----
+        (Lane::Backend, Req::StoreChunk { fp, data, refs }) => {
+            match engine::store_chunk_local(sh, &fp, std::borrow::Cow::Owned(data), refs) {
+                Ok(hit) => Resp::StoreAck { dedup_hit: hit },
+                Err(e) => err_str(e),
+            }
+        }
+        (Lane::Backend, Req::FetchChunk { fp }) => match sh.store.get(&fp.to_bytes()) {
+            Ok(Some(d)) => Resp::Data(d),
+            Ok(None) => Resp::NotFound,
+            Err(e) => err_str(e),
+        },
+        (Lane::Backend, Req::DecRef { fp, refs }) => match engine::dec_ref_local(sh, &fp, refs) {
+            Ok(()) => Resp::Ok,
+            Err(e) => err_str(e),
+        },
+        (Lane::Backend, Req::SetRef { fp, refs }) => {
+            match sh.shard.cit_update(&fp, |cur| {
+                cur.map(|mut e| {
+                    e.refcount = refs;
+                    e
+                })
+            }) {
+                Ok(_) => Resp::Ok,
+                Err(e) => err_str(e),
+            }
+        }
+        (Lane::Backend, Req::StatChunk { fp }) => {
+            let exists = sh.store.stat(&fp.to_bytes()).unwrap_or(false);
+            let cit = sh
+                .shard
+                .cit_get(&fp)
+                .ok()
+                .flatten()
+                .map(|e| (e.refcount, e.flag));
+            Resp::ChunkStat {
+                exists_data: exists,
+                cit,
+            }
+        }
+        (Lane::Backend, Req::StoreRaw { key, data }) => {
+            let len = data.len() as u64;
+            match sh.store.put_owned(&key, data) {
+                Ok(()) => {
+                    crate::metrics::Metrics::add(&sh.metrics.bytes_stored, len);
+                    Resp::Ok
+                }
+                Err(e) => err_str(e),
+            }
+        }
+        (Lane::Backend, Req::FetchRaw { key }) => match sh.store.get(&key) {
+            Ok(Some(d)) => Resp::Data(d),
+            Ok(None) => Resp::NotFound,
+            Err(e) => err_str(e),
+        },
+        (Lane::Backend, Req::DeleteRaw { key }) => match sh.store.delete(&key) {
+            Ok(true) => Resp::Ok,
+            Ok(false) => Resp::NotFound,
+            Err(e) => err_str(e),
+        },
+        (Lane::Backend, Req::MigrateChunk {
+            fp,
+            data,
+            refcount,
+            valid,
+        }) => match engine::absorb_migrated_chunk(sh, &fp, &data, refcount, valid) {
+            Ok(()) => Resp::Ok,
+            Err(e) => err_str(e),
+        },
+        (Lane::Backend, Req::MigrateOmap { value }) => {
+            match crate::dedup::omap::OmapEntry::decode(&value) {
+                Ok(entry) => match sh.shard.omap_put(&entry) {
+                    Ok(()) => Resp::Ok,
+                    Err(e) => err_str(e),
+                },
+                Err(e) => err_str(e),
+            }
+        }
+
+        // ---- replica ----
+        (Lane::Replica, Req::PutCopy { key, data }) => {
+            let len = data.len() as u64;
+            match sh.replica_store.put_owned(&key, data) {
+                Ok(()) => {
+                    crate::metrics::Metrics::add(&sh.metrics.bytes_replica, len);
+                    Resp::Ok
+                }
+                Err(e) => err_str(e),
+            }
+        }
+        (Lane::Replica, Req::DeleteCopy { key }) => match sh.replica_store.delete(&key) {
+            Ok(_) => Resp::Ok,
+            Err(e) => err_str(e),
+        },
+        (Lane::Replica, Req::FetchCopy { key }) => match sh.replica_store.get(&key) {
+            Ok(Some(d)) => Resp::Data(d),
+            Ok(None) => Resp::NotFound,
+            Err(e) => err_str(e),
+        },
+
+        // ---- control ----
+        (Lane::Control, Req::ApplyMap(_)) => Resp::Ok, // map is a shared handle
+        (Lane::Control, Req::Rebalance) => match rebalance::run(sh) {
+            Ok(_) => Resp::Ok,
+            Err(e) => err_str(e),
+        },
+        (Lane::Control, Req::FlushConsistency) => {
+            for fp in sh.pending.drain() {
+                let _ = gc::confirm_flag(sh, &fp);
+            }
+            Resp::Ok
+        }
+        (Lane::Control, Req::RunGc { threshold_ms }) => match gc::run(sh, threshold_ms) {
+            Ok(_) => Resp::Ok,
+            Err(e) => err_str(e),
+        },
+        (Lane::Control, Req::RecoveryScan) => match gc::recovery_scan(sh) {
+            Ok(_) => Resp::Ok,
+            Err(e) => err_str(e),
+        },
+        (Lane::Control, Req::GetStats) => Resp::Stats(stats(sh)),
+        (Lane::Control, Req::Audit) => match audit(sh) {
+            Ok(d) => Resp::Audit(d),
+            Err(e) => err_str(e),
+        },
+        (Lane::Control, Req::Sync) => match sh.shard.sync() {
+            Ok(()) => Resp::Ok,
+            Err(e) => err_str(e),
+        },
+
+        // wrong lane
+        (lane, req) => Resp::Err(format!("protocol violation: {req:?} on {lane:?} lane")),
+    }
+}
+
+fn flag_manager_loop(sh: Arc<OsdShared>, sd: Arc<AtomicBool>) {
+    while !sd.load(Ordering::SeqCst) {
+        let Some(fp) = sh.pending.pop_timeout(POLL) else {
+            continue;
+        };
+        if sh.injector.is_dead() {
+            // crash wipes the queue; anything already popped is lost too.
+            sh.pending.clear();
+            continue;
+        }
+        let _ = gc::confirm_flag(&sh, &fp);
+    }
+}
+
+fn stats(sh: &OsdShared) -> OsdStats {
+    OsdStats {
+        server: sh.id.0,
+        map_epoch: sh.map.read().unwrap().epoch,
+        objects: sh.shard.omap_len(),
+        cit_entries: sh.shard.cit_len(),
+        chunks_stored: sh.store.len(),
+        bytes_stored: sh.store.stored_bytes(),
+        replica_keys: sh.replica_store.len(),
+        replica_bytes: sh.replica_store.stored_bytes(),
+        pending_flags: sh.pending.len(),
+    }
+}
+
+fn audit(sh: &OsdShared) -> crate::error::Result<AuditDump> {
+    use crate::dedup::cit::CommitFlag;
+    let mut dump = AuditDump {
+        server: sh.id.0,
+        ..Default::default()
+    };
+    for name in sh.shard.omap_names()? {
+        if let Some(entry) = sh.shard.omap_get(&name)? {
+            let mut counts = std::collections::HashMap::new();
+            for (fp, _) in &entry.chunks {
+                *counts.entry(*fp).or_insert(0u64) += 1;
+            }
+            for (fp, n) in counts {
+                dump.omap_refs.push((fp, n));
+            }
+        }
+    }
+    for fp in sh.shard.cit_fingerprints()? {
+        if let Some(e) = sh.shard.cit_get(&fp)? {
+            dump.cit.push((fp, e.refcount, e.flag == CommitFlag::Valid));
+        }
+    }
+    for key in sh.store.keys()? {
+        if let Some(fp) = crate::dedup::fingerprint::Fingerprint::from_bytes(&key) {
+            dump.data_fps.push(fp);
+        }
+    }
+    Ok(dump)
+}

@@ -1,0 +1,193 @@
+//! The request/response protocol spoken over the fabric.
+//!
+//! One `Req`/`Resp` pair covers all four lanes (the [`crate::net::Lane`]
+//! key in the directory selects the handler); the lane-ordering rules in
+//! `net` still apply. `wire_size` feeds the optional [`NetProfile`]
+//! cost model.
+
+use crate::cluster::ClusterMap;
+use crate::dedup::cit::CommitFlag;
+use crate::dedup::fingerprint::Fingerprint;
+
+/// All messages a server can receive.
+#[derive(Debug)]
+pub enum Req {
+    // ---- frontend lane (clients → object primary) ----
+    /// Write a whole object through the dedup engine.
+    PutObject { name: String, data: Vec<u8> },
+    /// Read a whole object.
+    GetObject { name: String },
+    /// Delete an object (decrements chunk references).
+    DeleteObject { name: String },
+
+    // ---- backend lane (frontends → chunk home) ----
+    /// Dedup-aware chunk store: CIT lookup, refcount/flag logic, data
+    /// store + replication. `refs` is the intra-batch multiplicity.
+    StoreChunk {
+        fp: Fingerprint,
+        data: Vec<u8>,
+        refs: u64,
+    },
+    /// Fetch chunk data by fingerprint.
+    FetchChunk { fp: Fingerprint },
+    /// Decrement a chunk's refcount by `refs` (delete / tx rollback).
+    DecRef { fp: Fingerprint, refs: u64 },
+    /// Existence + CIT state probe (consistency checks, tests).
+    StatChunk { fp: Fingerprint },
+    /// Raw keyed store (no-dedup + central-data paths).
+    StoreRaw { key: Vec<u8>, data: Vec<u8> },
+    /// Raw keyed fetch.
+    FetchRaw { key: Vec<u8> },
+    /// Raw keyed delete.
+    DeleteRaw { key: Vec<u8> },
+    /// Scrub repair: force a CIT entry's refcount to the cluster-wide
+    /// OMAP-derived reference count (the paper's GC "cross-match" applied
+    /// to reference leaks from unrolled-back failed transactions).
+    SetRef { fp: Fingerprint, refs: u64 },
+    /// Rebalance transfer: a chunk plus its CIT entry moving to its new
+    /// content-derived home.
+    MigrateChunk {
+        fp: Fingerprint,
+        data: Vec<u8>,
+        refcount: u64,
+        valid: bool,
+    },
+    /// Rebalance transfer: an OMAP record moving to its new name-derived
+    /// home.
+    MigrateOmap { value: Vec<u8> },
+
+    // ---- replica lane (backends → replica holders; strictly local) ----
+    /// Store a replica copy of a chunk / OMAP record.
+    PutCopy { key: Vec<u8>, data: Vec<u8> },
+    /// Delete a replica copy.
+    DeleteCopy { key: Vec<u8> },
+    /// Fetch a replica copy (degraded reads, repair).
+    FetchCopy { key: Vec<u8> },
+
+    // ---- control lane (admin) ----
+    /// Push a new cluster map epoch.
+    ApplyMap(ClusterMap),
+    /// Scan and migrate data that no longer belongs here.
+    Rebalance,
+    /// Drain the async consistency queue (tests/benches quiesce).
+    FlushConsistency,
+    /// Run a GC pass; entries invalid for longer than `threshold_ms` are
+    /// candidates.
+    RunGc { threshold_ms: u64 },
+    /// Post-restart recovery scan (re-registers stored-but-invalid chunks).
+    RecoveryScan,
+    /// Per-server stats snapshot.
+    GetStats,
+    /// Dump for cluster-wide invariant checks.
+    Audit,
+    /// Flush persistent stores.
+    Sync,
+}
+
+/// All responses.
+#[derive(Debug)]
+pub enum Resp {
+    /// Generic success.
+    Ok,
+    /// Object write accepted: (logical bytes, unique bytes this op).
+    PutAck { logical: u64, unique: u64 },
+    /// Object payload.
+    Object(Vec<u8>),
+    /// Chunk/raw payload.
+    Data(Vec<u8>),
+    /// Store-chunk outcome.
+    StoreAck {
+        /// True when the chunk was already present (refcount bumped).
+        dedup_hit: bool,
+    },
+    /// Stat outcome.
+    ChunkStat {
+        exists_data: bool,
+        cit: Option<(u64, CommitFlag)>,
+    },
+    /// Requested key/object/chunk is unknown.
+    NotFound,
+    /// Per-server statistics.
+    Stats(OsdStats),
+    /// Audit dump.
+    Audit(AuditDump),
+    /// Error string (errors must cross threads; `crate::Error` is not
+    /// `Clone` and carries io errors, so the wire form is a string).
+    Err(String),
+}
+
+/// Per-server statistics snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct OsdStats {
+    pub server: u32,
+    pub map_epoch: u64,
+    pub objects: usize,
+    pub cit_entries: usize,
+    pub chunks_stored: usize,
+    pub bytes_stored: u64,
+    pub replica_keys: usize,
+    pub replica_bytes: u64,
+    pub pending_flags: usize,
+}
+
+/// Audit dump for cluster-wide invariant checking: every OMAP reference
+/// and every CIT entry on this server.
+#[derive(Clone, Debug, Default)]
+pub struct AuditDump {
+    pub server: u32,
+    /// (chunk fp, multiplicity) summed over all local OMAP entries.
+    pub omap_refs: Vec<(Fingerprint, u64)>,
+    /// (fp, refcount, valid) for every CIT entry.
+    pub cit: Vec<(Fingerprint, u64, bool)>,
+    /// Fingerprints whose chunk data is present in the local store
+    /// (presence is resolved cluster-wide by the auditor: in central mode
+    /// the metadata owner and the data holder are different servers).
+    pub data_fps: Vec<Fingerprint>,
+}
+
+impl Req {
+    /// Approximate wire size (payload + small header) for the net model.
+    pub fn wire_size(&self) -> usize {
+        const HDR: usize = 64;
+        HDR + match self {
+            Req::PutObject { name, data } => name.len() + data.len(),
+            Req::GetObject { name } | Req::DeleteObject { name } => name.len(),
+            Req::StoreChunk { data, .. } => 20 + data.len(),
+            Req::FetchChunk { .. } | Req::DecRef { .. } | Req::StatChunk { .. } => 20,
+            Req::StoreRaw { key, data } => key.len() + data.len(),
+            Req::FetchRaw { key } | Req::DeleteRaw { key } => key.len(),
+            Req::MigrateChunk { data, .. } => 20 + 16 + data.len(),
+            Req::MigrateOmap { value } => value.len(),
+            Req::PutCopy { key, data } => key.len() + data.len(),
+            Req::DeleteCopy { key } | Req::FetchCopy { key } => key.len(),
+            Req::ApplyMap(m) => 16 * m.servers.len(),
+            _ => 0,
+        }
+    }
+}
+
+/// Convenience alias for this protocol's directory.
+pub type Dir = crate::net::Directory<Req, Resp>;
+/// Convenience alias for addresses.
+pub type OsdAddr = crate::net::Addr<Req, Resp>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_size_scales_with_payload() {
+        let small = Req::StoreChunk {
+            fp: Fingerprint::of(b"x"),
+            data: vec![0; 10],
+            refs: 1,
+        };
+        let big = Req::StoreChunk {
+            fp: Fingerprint::of(b"x"),
+            data: vec![0; 10_000],
+            refs: 1,
+        };
+        assert!(big.wire_size() > small.wire_size() + 9_000);
+        assert!(Req::GetObject { name: "a".into() }.wire_size() < 100);
+    }
+}

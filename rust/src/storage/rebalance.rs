@@ -1,0 +1,163 @@
+//! Storage rebalancing (paper §2.3 / Figure 1(b)).
+//!
+//! When the cluster map changes (server added/removed/reweighted) every
+//! server scans its local holdings and migrates whatever no longer maps to
+//! it under the new epoch:
+//!
+//! * **chunks + CIT entries** move to the chunk's new content-derived
+//!   home — because placement is a pure function of the fingerprint, *no
+//!   deduplication metadata update is ever needed anywhere else* (the
+//!   paper's key point: location is never stored, so relocation cannot
+//!   stale it);
+//! * **OMAP records** move to the object's new name-derived primary;
+//! * replica copies are re-fanned-out by the receiving server.
+//!
+//! The migration itself uses the normal backend lane, so rebalancing
+//! competes with foreground I/O exactly like Ceph backfill does.
+
+use crate::dedup::engine::omap_copy_key;
+use crate::error::Result;
+use crate::net::Lane;
+use crate::storage::osd::OsdShared;
+use crate::storage::proto::{Req, Resp};
+
+/// Outcome of one server's rebalance scan.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RebalanceReport {
+    pub chunks_moved: usize,
+    pub chunk_bytes_moved: u64,
+    pub omap_moved: usize,
+}
+
+/// Scan local holdings and migrate what no longer belongs here.
+pub fn run(sh: &OsdShared) -> Result<RebalanceReport> {
+    let mut report = RebalanceReport::default();
+
+    // ---- chunks (CIT + data) ----
+    for fp in sh.shard.cit_fingerprints()? {
+        let chain = sh.chunk_chain(fp.placement_key());
+        let new_home = match chain.first() {
+            Some(id) => *id,
+            None => continue,
+        };
+        if new_home == sh.id {
+            continue;
+        }
+        let Some(entry) = sh.shard.cit_get(&fp)? else {
+            continue;
+        };
+        let Some(data) = sh.store.get(&fp.to_bytes())? else {
+            // metadata-only remnant; move the entry anyway so repair can
+            // happen at the new home (replica copies still exist).
+            let addr = sh.dir.lookup(new_home, Lane::Backend)?;
+            let req = Req::MigrateChunk {
+                fp,
+                data: Vec::new(),
+                refcount: entry.refcount,
+                valid: false,
+            };
+            let size = req.wire_size();
+            if matches!(addr.call(req, size)?, Resp::Ok) {
+                sh.shard.cit_delete(&fp)?;
+            }
+            continue;
+        };
+        let addr = sh.dir.lookup(new_home, Lane::Backend)?;
+        let req = Req::MigrateChunk {
+            fp,
+            data: data.clone(),
+            refcount: entry.refcount,
+            valid: entry.flag == crate::dedup::cit::CommitFlag::Valid,
+        };
+        let size = req.wire_size();
+        match addr.call(req, size)? {
+            Resp::Ok => {
+                sh.shard.cit_delete(&fp)?;
+                sh.store.delete(&fp.to_bytes())?;
+                report.chunks_moved += 1;
+                report.chunk_bytes_moved += data.len() as u64;
+            }
+            other => {
+                return Err(crate::error::Error::TxAborted(format!(
+                    "migrate {fp} refused: {other:?}"
+                )))
+            }
+        }
+    }
+
+    // ---- OMAP records ----
+    for name in sh.shard.omap_names()? {
+        let chain = sh.object_chain(&name);
+        let new_primary = match chain.first() {
+            Some(id) => *id,
+            None => continue,
+        };
+        if new_primary == sh.id {
+            continue;
+        }
+        let Some(entry) = sh.shard.omap_get(&name)? else {
+            continue;
+        };
+        let value = entry.encode();
+        let addr = sh.dir.lookup(new_primary, Lane::Backend)?;
+        let req = Req::MigrateOmap {
+            value: value.clone(),
+        };
+        let size = req.wire_size();
+        match addr.call(req, size)? {
+            Resp::Ok => {
+                sh.shard.omap_delete(&name)?;
+                // refresh the read-availability copy placement as well
+                for peer in chain.iter().skip(1).take(sh.cfg.replication.saturating_sub(1)) {
+                    if *peer == sh.id {
+                        sh.replica_store.put(&omap_copy_key(&name), &value)?;
+                    } else if let Ok(r) = sh.dir.lookup(*peer, Lane::Replica) {
+                        let _ = r.call(
+                            Req::PutCopy {
+                                key: omap_copy_key(&name),
+                                data: value.clone(),
+                            },
+                            value.len() + 64,
+                        );
+                    }
+                }
+                report.omap_moved += 1;
+            }
+            other => {
+                return Err(crate::error::Error::TxAborted(format!(
+                    "migrate omap {name} refused: {other:?}"
+                )))
+            }
+        }
+    }
+
+    // ---- raw objects (no-dedup mode) ----
+    for key in sh.store.keys()? {
+        if !key.starts_with(b"obj:") {
+            continue;
+        }
+        let name = String::from_utf8_lossy(&key[4..]).to_string();
+        let chain = sh.object_chain(&name);
+        let new_primary = match chain.first() {
+            Some(id) => *id,
+            None => continue,
+        };
+        if new_primary == sh.id {
+            continue;
+        }
+        if let Some(data) = sh.store.get(&key)? {
+            let addr = sh.dir.lookup(new_primary, Lane::Backend)?;
+            let req = Req::StoreRaw {
+                key: key.clone(),
+                data,
+            };
+            let size = req.wire_size();
+            if matches!(addr.call(req, size)?, Resp::Ok) {
+                sh.store.delete(&key)?;
+                report.chunks_moved += 1;
+            }
+        }
+    }
+
+    Ok(report)
+}

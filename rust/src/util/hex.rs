@@ -1,0 +1,50 @@
+//! Hex encoding/decoding for fingerprints and on-disk object names.
+
+/// Encode bytes as lowercase hex.
+pub fn encode(bytes: &[u8]) -> String {
+    const TABLE: &[u8; 16] = b"0123456789abcdef";
+    let mut out = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        out.push(TABLE[(b >> 4) as usize] as char);
+        out.push(TABLE[(b & 0xF) as usize] as char);
+    }
+    out
+}
+
+/// Decode lowercase/uppercase hex; returns `None` on bad input.
+pub fn decode(s: &str) -> Option<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(s.len() / 2);
+    let b = s.as_bytes();
+    for i in (0..b.len()).step_by(2) {
+        let hi = (b[i] as char).to_digit(16)?;
+        let lo = (b[i + 1] as char).to_digit(16)?;
+        out.push(((hi << 4) | lo) as u8);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let data = [0u8, 1, 0x7f, 0x80, 0xff];
+        assert_eq!(decode(&encode(&data)).unwrap(), data);
+    }
+
+    #[test]
+    fn known_vector() {
+        assert_eq!(encode(b"\xde\xad\xbe\xef"), "deadbeef");
+        assert_eq!(decode("DEADBEEF").unwrap(), b"\xde\xad\xbe\xef");
+    }
+
+    #[test]
+    fn rejects_bad() {
+        assert!(decode("abc").is_none());
+        assert!(decode("zz").is_none());
+    }
+}

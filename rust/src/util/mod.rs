@@ -1,0 +1,13 @@
+//! Small self-contained substrates: RNG, hex, record codec, statistics and
+//! a property-testing harness.
+//!
+//! The offline crate universe has no `rand`, `serde` or `proptest`, so the
+//! pieces the rest of the crate needs are implemented here from scratch.
+
+pub mod codec;
+pub mod hex;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::SplitMix64;

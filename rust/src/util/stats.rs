@@ -1,0 +1,66 @@
+//! Sample statistics for the bench harness and metrics.
+
+/// Summary of a set of f64 samples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stdev: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+/// Compute a [`Summary`]; panics on empty input.
+pub fn summarize(samples: &[f64]) -> Summary {
+    assert!(!samples.is_empty(), "no samples");
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let mean = sorted.iter().sum::<f64>() / n as f64;
+    let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    Summary {
+        n,
+        mean,
+        stdev: var.sqrt(),
+        min: sorted[0],
+        p50: percentile(&sorted, 0.50),
+        p95: percentile(&sorted, 0.95),
+        max: sorted[n - 1],
+    }
+}
+
+/// Nearest-rank percentile over a pre-sorted slice; `q` in [0,1].
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn percentile_edges() {
+        let v = [10.0, 20.0, 30.0];
+        assert_eq!(percentile(&v, 0.0), 10.0);
+        assert_eq!(percentile(&v, 1.0), 30.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_panics() {
+        summarize(&[]);
+    }
+}

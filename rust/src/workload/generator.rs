@@ -1,0 +1,197 @@
+//! Dedup-ratio-controlled synthetic workload (the FIO substitute).
+//!
+//! An object is a sequence of `unit` -byte blocks. Each block is a
+//! duplicate (drawn from a shared pool of `pool_blocks` well-known blocks)
+//! with probability `dedup_pct`%, otherwise globally unique. Everything is
+//! deterministic in (`seed`, object index), so concurrent client threads
+//! can generate disjoint slices of one workload without coordination, and
+//! reruns are reproducible.
+
+use crate::util::rng::{SplitMix64, XorShift128Plus};
+use crate::workload::zipf::Zipf;
+
+/// Workload shape parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadSpec {
+    /// Bytes per object.
+    pub object_size: usize,
+    /// Duplication granularity — should equal the cluster's chunk size so
+    /// "dedup_pct" translates directly into duplicate chunks.
+    pub unit: usize,
+    /// Percentage [0, 100] of blocks drawn from the duplicate pool.
+    pub dedup_pct: u8,
+    /// Number of distinct blocks in the duplicate pool.
+    pub pool_blocks: u64,
+    /// Zipf skew for pool sampling (0.0 = uniform).
+    pub zipf_theta: f64,
+    /// Base seed.
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            object_size: 4 << 20,
+            unit: 64 << 10,
+            dedup_pct: 0,
+            pool_blocks: 1024,
+            zipf_theta: 0.0,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Deterministic workload generator.
+pub struct Generator {
+    spec: WorkloadSpec,
+    zipf: Option<Zipf>,
+}
+
+impl Generator {
+    /// Build a generator (precomputes the Zipf table if skewed).
+    pub fn new(spec: WorkloadSpec) -> Self {
+        assert!(spec.object_size > 0 && spec.unit > 0);
+        assert!(spec.dedup_pct <= 100);
+        let zipf = if spec.zipf_theta > 0.0 && spec.pool_blocks > 1 {
+            Some(Zipf::new(spec.pool_blocks, spec.zipf_theta))
+        } else {
+            None
+        };
+        Generator { spec, zipf }
+    }
+
+    /// The spec in effect.
+    pub fn spec(&self) -> &WorkloadSpec {
+        &self.spec
+    }
+
+    /// Object name for index `idx`.
+    pub fn name(&self, idx: u64) -> String {
+        format!("wl-{:08x}-{idx}", self.spec.seed)
+    }
+
+    /// Generate object `idx`'s payload.
+    pub fn object(&self, idx: u64) -> Vec<u8> {
+        let spec = &self.spec;
+        let mut out = vec![0u8; spec.object_size];
+        let mut decide = SplitMix64::new(spec.seed ^ idx.wrapping_mul(0x9E37_79B9));
+        for (b, block) in out.chunks_mut(spec.unit).enumerate() {
+            let dup = (decide.below(100) as u8) < spec.dedup_pct;
+            let block_seed = if dup {
+                let pool_id = match &self.zipf {
+                    Some(z) => z.sample(&mut decide),
+                    None => decide.below(spec.pool_blocks.max(1)),
+                };
+                // pool blocks share seeds across ALL objects — these are
+                // the cluster-wide duplicates.
+                spec.seed ^ 0xD00D_0000_0000_0000 ^ pool_id
+            } else {
+                // unique everywhere
+                spec.seed
+                    ^ 0x0101_0000_0000_0000
+                    ^ idx.wrapping_mul(1_000_003)
+                    ^ (b as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            };
+            XorShift128Plus::new(block_seed).fill_bytes(block);
+        }
+        out
+    }
+
+    /// (name, payload) convenience.
+    pub fn named_object(&self, idx: u64) -> (String, Vec<u8>) {
+        (self.name(idx), self.object(idx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn unique_blocks(gen: &Generator, objects: u64) -> (usize, usize) {
+        let mut set = HashSet::new();
+        let mut total = 0usize;
+        for i in 0..objects {
+            let data = gen.object(i);
+            for block in data.chunks(gen.spec().unit) {
+                set.insert(crate::hash::sha1::sha1(block));
+                total += 1;
+            }
+        }
+        (set.len(), total)
+    }
+
+    #[test]
+    fn deterministic() {
+        let g1 = Generator::new(WorkloadSpec::default());
+        let g2 = Generator::new(WorkloadSpec::default());
+        assert_eq!(g1.object(3), g2.object(3));
+        assert_eq!(g1.name(3), g2.name(3));
+    }
+
+    #[test]
+    fn zero_pct_all_unique() {
+        let g = Generator::new(WorkloadSpec {
+            object_size: 64 * 1024,
+            unit: 4096,
+            dedup_pct: 0,
+            ..Default::default()
+        });
+        let (uniq, total) = unique_blocks(&g, 8);
+        assert_eq!(uniq, total);
+    }
+
+    #[test]
+    fn hundred_pct_only_pool_blocks() {
+        let g = Generator::new(WorkloadSpec {
+            object_size: 64 * 1024,
+            unit: 4096,
+            dedup_pct: 100,
+            pool_blocks: 10,
+            ..Default::default()
+        });
+        let (uniq, total) = unique_blocks(&g, 8);
+        assert!(uniq <= 10, "{uniq} unique of {total}");
+        assert_eq!(total, 8 * 16);
+    }
+
+    #[test]
+    fn fifty_pct_in_between() {
+        let g = Generator::new(WorkloadSpec {
+            object_size: 256 * 1024,
+            unit: 4096,
+            dedup_pct: 50,
+            pool_blocks: 4,
+            ..Default::default()
+        });
+        let (uniq, total) = unique_blocks(&g, 8);
+        let ratio = uniq as f64 / total as f64;
+        assert!(ratio > 0.35 && ratio < 0.65, "unique ratio {ratio}");
+    }
+
+    #[test]
+    fn different_objects_differ() {
+        let g = Generator::new(WorkloadSpec {
+            dedup_pct: 0,
+            object_size: 8192,
+            unit: 4096,
+            ..Default::default()
+        });
+        assert_ne!(g.object(0), g.object(1));
+    }
+
+    #[test]
+    fn zipf_skews_pool_usage() {
+        let g = Generator::new(WorkloadSpec {
+            object_size: 512 * 1024,
+            unit: 4096,
+            dedup_pct: 100,
+            pool_blocks: 64,
+            zipf_theta: 4.0,
+            ..Default::default()
+        });
+        // with heavy skew, far fewer distinct pool blocks appear
+        let (uniq, _) = unique_blocks(&g, 4);
+        assert!(uniq < 20, "zipf should concentrate: {uniq}");
+    }
+}

@@ -1,0 +1,14 @@
+//! Workload generation — the FIO-substitute (paper §3 uses FIO with a
+//! dedup-percentage knob, varying chunk size and client threads).
+//!
+//! * [`generator`] — synthetic objects with an exact duplicate-chunk
+//!   ratio, deterministic from a seed.
+//! * [`zipf`] — Zipf-distributed duplicate-pool sampling (real dedup
+//!   workloads are skewed; uniform is also available).
+//! * [`corpus`] — objects from a real directory tree (the e2e example).
+
+pub mod corpus;
+pub mod generator;
+pub mod zipf;
+
+pub use generator::{Generator, WorkloadSpec};

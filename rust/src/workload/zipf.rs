@@ -1,0 +1,72 @@
+//! Zipf sampler over `{0, …, n-1}` with skew `theta` (CDF table + binary
+//! search; exact, no rejection).
+
+use crate::util::rng::SplitMix64;
+
+/// Precomputed Zipf distribution.
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Build for `n` items with skew `theta > 0` (larger = more skewed).
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0 && theta > 0.0);
+        let mut cdf = Vec::with_capacity(n as usize);
+        let mut acc = 0.0f64;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(theta);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for v in cdf.iter_mut() {
+            *v /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Draw one sample in `[0, n)`; rank 0 is the most popular.
+    pub fn sample(&self, rng: &mut SplitMix64) -> u64 {
+        let u = rng.unit_f64();
+        match self
+            .cdf
+            .binary_search_by(|p| p.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i as u64,
+            Err(i) => (i as u64).min(self.cdf.len() as u64 - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank0_most_popular() {
+        let z = Zipf::new(100, 1.0);
+        let mut rng = SplitMix64::new(1);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[0] > counts[99] * 5);
+    }
+
+    #[test]
+    fn samples_in_range() {
+        let z = Zipf::new(7, 0.9);
+        let mut rng = SplitMix64::new(2);
+        for _ in 0..1000 {
+            assert!(z.sample(&mut rng) < 7);
+        }
+    }
+
+    #[test]
+    fn single_item() {
+        let z = Zipf::new(1, 1.0);
+        let mut rng = SplitMix64::new(3);
+        assert_eq!(z.sample(&mut rng), 0);
+    }
+}

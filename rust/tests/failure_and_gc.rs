@@ -1,0 +1,212 @@
+//! Integration: crash points, restart recovery, GC, scrub, degraded reads
+//! — the paper's robustness claims, one crash point at a time.
+
+use snss_dedup::api::{Cluster, ClusterConfig, DedupMode};
+use snss_dedup::cluster::ServerId;
+use snss_dedup::dedup::Chunking;
+use snss_dedup::failure::CrashPoint;
+use snss_dedup::workload::{Generator, WorkloadSpec};
+
+fn boot() -> Cluster {
+    Cluster::new(ClusterConfig {
+        servers: 4,
+        replication: 2,
+        dedup: DedupMode::ClusterWide,
+        chunking: Chunking::Fixed { size: 4096 },
+        ..Default::default()
+    })
+    .expect("boot")
+}
+
+/// Full recovery drill for one chunk-server crash point: write fails or
+/// survives, stable data stays readable, restart + scrub + GC restore the
+/// audit invariant, and the doomed object can be rewritten and read.
+fn crash_drill(point: CrashPoint) {
+    let cluster = boot();
+    let client = cluster.client();
+
+    let stable = vec![5u8; 32 << 10];
+    client.put_object("stable", &stable).expect("stable put");
+    cluster.flush_consistency().ok();
+
+    cluster.arm_crash(ServerId(2), point).unwrap();
+    let doomed: Vec<u8> = (0..96u32 << 10).map(|i| (i * 131 >> 3) as u8).collect();
+    let _ = client.put_object("doomed", &doomed); // may fail; that's fine
+
+    // stable object must remain readable regardless (replica fallback)
+    assert_eq!(client.get_object("stable").expect("degraded"), stable, "{point:?}");
+
+    cluster.restart_server(ServerId(2)).unwrap();
+    cluster.flush_consistency().ok();
+    cluster.scrub().expect("scrub");
+    cluster.run_gc(0).expect("gc");
+
+    // rewrite and read the doomed object
+    client.put_object("doomed", &doomed).expect("rewrite");
+    assert_eq!(client.get_object("doomed").expect("read"), doomed, "{point:?}");
+    cluster.flush_consistency().ok();
+    cluster.scrub().expect("scrub2");
+
+    let audit = cluster.audit().expect("audit");
+    assert!(audit.is_ok(), "{point:?}: {:?}", audit.violations);
+    cluster.shutdown();
+}
+
+#[test]
+fn crash_after_cit_insert() {
+    crash_drill(CrashPoint::AfterCitInsert);
+}
+
+#[test]
+fn crash_after_data_store() {
+    crash_drill(CrashPoint::AfterDataStore);
+}
+
+#[test]
+fn crash_before_replicate() {
+    crash_drill(CrashPoint::BeforeReplicate);
+}
+
+#[test]
+fn crash_before_omap_write() {
+    // primary-side crash: the object's primary dies between chunk stores
+    // and the OMAP write. NB the primary for "doomed2" may be any server;
+    // arm all, restart all.
+    let cluster = boot();
+    let client = cluster.client();
+    for i in 0..4 {
+        cluster.arm_crash(ServerId(i), CrashPoint::BeforeOmapWrite).unwrap();
+    }
+    let doomed: Vec<u8> = vec![7u8; 64 << 10];
+    assert!(client.put_object("doomed2", &doomed).is_err(), "must fail");
+    for i in 0..4 {
+        cluster.restart_server(ServerId(i)).unwrap();
+    }
+    cluster.flush_consistency().ok();
+    // the object was never committed
+    assert!(client.get_object("doomed2").is_err());
+    // its chunks are garbage (refcount>0 leak is repaired by scrub, then
+    // refcount-0 invalid entries age out via GC)
+    cluster.scrub().expect("scrub");
+    cluster.run_gc(0).expect("gc");
+    let audit = cluster.audit().expect("audit");
+    assert!(audit.is_ok(), "{:?}", audit.violations);
+    // after scrub+GC nothing may reference the doomed chunks
+    let stats = cluster.stats();
+    assert_eq!(stats.per_server.iter().map(|s| s.objects).sum::<usize>(), 0);
+    cluster.shutdown();
+}
+
+#[test]
+fn gc_reclaims_garbage_but_not_live_data() {
+    let cluster = boot();
+    let client = cluster.client();
+    let gen = Generator::new(WorkloadSpec {
+        object_size: 64 << 10,
+        unit: 4096,
+        dedup_pct: 0,
+        ..Default::default()
+    });
+    for i in 0..6 {
+        let (name, data) = gen.named_object(i);
+        client.put_object(&name, &data).unwrap();
+    }
+    cluster.flush_consistency().ok();
+    // delete three objects → their chunks drop to refcount 0
+    for i in 0..3 {
+        client.delete_object(&gen.name(i)).unwrap();
+    }
+    let before = cluster.stats();
+    cluster.run_gc(0).unwrap();
+    let after = cluster.stats();
+    assert!(
+        after.stored_bytes < before.stored_bytes,
+        "GC reclaimed nothing: {} -> {}",
+        before.stored_bytes,
+        after.stored_bytes
+    );
+    // survivors unharmed
+    for i in 3..6 {
+        let (name, data) = gen.named_object(i);
+        assert_eq!(client.get_object(&name).unwrap(), data);
+    }
+    let audit = cluster.audit().unwrap();
+    assert!(audit.is_ok(), "{:?}", audit.violations);
+    cluster.shutdown();
+}
+
+#[test]
+fn gc_threshold_spares_young_entries() {
+    let cluster = boot();
+    let client = cluster.client();
+    client.put_object("obj", &vec![1u8; 32 << 10]).unwrap();
+    client.delete_object("obj").unwrap();
+    // huge threshold: nothing is old enough to collect
+    cluster.run_gc(3_600_000).unwrap();
+    let stats = cluster.stats();
+    assert!(stats.stored_bytes > 0, "young garbage must survive the pass");
+    cluster.run_gc(0).unwrap();
+    let stats = cluster.stats();
+    assert_eq!(stats.stored_bytes, 0, "aged garbage must be reclaimed");
+    cluster.shutdown();
+}
+
+#[test]
+fn killed_server_reads_fall_back_to_replicas() {
+    let cluster = boot();
+    let client = cluster.client();
+    let gen = Generator::new(WorkloadSpec {
+        object_size: 128 << 10,
+        unit: 4096,
+        dedup_pct: 0,
+        ..Default::default()
+    });
+    for i in 0..8 {
+        let (name, data) = gen.named_object(i);
+        client.put_object(&name, &data).unwrap();
+    }
+    cluster.flush_consistency().ok();
+    cluster.kill_server(ServerId(1)).unwrap();
+    for i in 0..8 {
+        let (name, data) = gen.named_object(i);
+        assert_eq!(
+            client.get_object(&name).expect("degraded read"),
+            data,
+            "{name} lost with one server down"
+        );
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn restart_recovers_pending_flags() {
+    // kill wipes the in-memory registration queue; the restart recovery
+    // scan must re-register stored-but-invalid chunks so they become
+    // valid without waiting for a duplicate-write repair.
+    use snss_dedup::api::Consistency;
+    let cluster = Cluster::new(ClusterConfig {
+        servers: 2,
+        replication: 1,
+        dedup: DedupMode::ClusterWide,
+        consistency: Consistency::AsyncTagged,
+        chunking: Chunking::Fixed { size: 4096 },
+        ..Default::default()
+    })
+    .unwrap();
+    let client = cluster.client();
+    client.put_object("x", &vec![3u8; 64 << 10]).unwrap();
+    // kill immediately — some flags may still be pending (queue wiped)
+    cluster.kill_server(ServerId(0)).unwrap();
+    cluster.kill_server(ServerId(1)).unwrap();
+    cluster.restart_server(ServerId(0)).unwrap();
+    cluster.restart_server(ServerId(1)).unwrap();
+    cluster.flush_consistency().ok();
+    // after recovery, a GC pass must reclaim nothing (all data valid)
+    let before = cluster.stats().stored_bytes;
+    cluster.run_gc(0).unwrap();
+    assert_eq!(cluster.stats().stored_bytes, before);
+    assert_eq!(client.get_object("x").unwrap(), vec![3u8; 64 << 10]);
+    let audit = cluster.audit().unwrap();
+    assert!(audit.is_ok(), "{:?}", audit.violations);
+    cluster.shutdown();
+}

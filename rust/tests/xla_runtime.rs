@@ -1,0 +1,133 @@
+//! Integration: the XLA/Pallas fingerprint engine against the scalar
+//! path, end to end through the cluster. Skipped (cleanly) when
+//! `artifacts/` has not been built.
+
+use snss_dedup::api::{Cluster, ClusterConfig, DedupMode, FingerprintBackend};
+use snss_dedup::dedup::fingerprint::{FingerprintProvider, RustSha1Provider};
+use snss_dedup::dedup::Chunking;
+use snss_dedup::runtime::XlaFingerprintService;
+use snss_dedup::util::rng::XorShift128Plus;
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.tsv").exists()
+}
+
+fn random_chunks(n: usize, len: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = XorShift128Plus::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut v = vec![0u8; len];
+            rng.fill_bytes(&mut v);
+            v
+        })
+        .collect()
+}
+
+#[test]
+fn xla_digests_bit_identical_to_scalar() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let svc = XlaFingerprintService::start("artifacts").expect("start service");
+    // compiled shape (4096) exercises the accelerator; odd shapes fall back
+    for len in [4096usize, 8192, 65536, 100, 4095] {
+        let chunks = random_chunks(70, len, len as u64);
+        let refs: Vec<&[u8]> = chunks.iter().map(|c| c.as_slice()).collect();
+        let xla = svc.digests(&refs);
+        let scalar = RustSha1Provider.digests(&refs);
+        assert_eq!(xla, scalar, "len {len}");
+    }
+    // exercised the accelerator at least once
+    assert!(
+        svc.accel_chunks.load(std::sync::atomic::Ordering::Relaxed) > 0,
+        "accelerator never used"
+    );
+    assert!(
+        svc.scalar_chunks.load(std::sync::atomic::Ordering::Relaxed) > 0,
+        "fallback never used"
+    );
+}
+
+#[test]
+fn xla_service_is_shared_across_threads() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let svc = std::sync::Arc::new(XlaFingerprintService::start("artifacts").unwrap());
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            let chunks = random_chunks(16, 4096, t);
+            let refs: Vec<&[u8]> = chunks.iter().map(|c| c.as_slice()).collect();
+            let a = svc.digests(&refs);
+            let b = RustSha1Provider.digests(&refs);
+            assert_eq!(a, b);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn cluster_parity_between_fingerprint_engines() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // Same workload through both engines → identical stored bytes and
+    // savings (digests are bit-identical, so dedup decisions are too).
+    let mut stored = Vec::new();
+    for fp in [
+        FingerprintBackend::RustSha1,
+        FingerprintBackend::Xla {
+            artifacts_dir: "artifacts".into(),
+        },
+    ] {
+        let cluster = Cluster::new(ClusterConfig {
+            servers: 4,
+            replication: 1,
+            dedup: DedupMode::ClusterWide,
+            chunking: Chunking::Fixed { size: 4096 },
+            fingerprint: fp,
+            ..Default::default()
+        })
+        .unwrap();
+        let client = cluster.client();
+        let gen = snss_dedup::workload::Generator::new(snss_dedup::workload::WorkloadSpec {
+            object_size: 128 << 10,
+            unit: 4096,
+            dedup_pct: 50,
+            pool_blocks: 8,
+            ..Default::default()
+        });
+        for i in 0..8 {
+            let (name, data) = gen.named_object(i);
+            client.put_object(&name, &data).unwrap();
+            assert_eq!(client.get_object(&name).unwrap(), data);
+        }
+        stored.push(cluster.stats().stored_bytes);
+        cluster.shutdown();
+    }
+    assert_eq!(stored[0], stored[1], "engines disagree on dedup");
+}
+
+#[test]
+fn manifest_variants_sane() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let specs = snss_dedup::runtime::parse_manifest(std::path::Path::new("artifacts")).unwrap();
+    assert!(specs.iter().any(|s| s.kind == "fingerprint"));
+    for s in &specs {
+        assert!(s.file.exists(), "{} missing", s.file.display());
+        if s.kind == "fingerprint" {
+            assert_eq!(s.chunk_bytes % 64, 0);
+            assert!(s.batch > 0);
+        }
+    }
+}
