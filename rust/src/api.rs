@@ -27,6 +27,7 @@ use std::sync::{Arc, Mutex, RwLock};
 
 pub use crate::dedup::consistency::ConsistencyMode as Consistency;
 pub use crate::dedup::engine::DedupMode;
+pub use crate::scrub::{ScrubKind, ScrubOptions, ScrubState, ScrubStatus};
 
 /// Placement policy choice.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -119,6 +120,14 @@ pub struct ClusterStats {
     pub repairs: u64,
     pub gc_reclaimed: u64,
     pub tx_aborts: u64,
+    /// CIT entries examined by scrub passes.
+    pub scrub_chunks_checked: u64,
+    /// Chunk bytes re-read and re-fingerprinted by deep scrub.
+    pub scrub_bytes_verified: u64,
+    /// Primary-chunk digest mismatches (bit-rot) found by deep scrub.
+    pub scrub_corruptions_found: u64,
+    /// Scrub repairs applied (primaries and replica copies).
+    pub scrub_repaired: u64,
     pub per_server: Vec<OsdStats>,
 }
 
@@ -148,6 +157,46 @@ impl AuditReport {
     /// No violations found.
     pub fn is_ok(&self) -> bool {
         self.violations.is_empty()
+    }
+}
+
+/// Cluster-wide scrub report: per-server worker snapshots plus their
+/// aggregate (see [`crate::scrub`] for field semantics).
+#[derive(Clone, Debug, Default)]
+pub struct ScrubReport {
+    /// One status per live server polled.
+    pub per_server: Vec<ScrubStatus>,
+    pub chunks_checked: u64,
+    pub bytes_verified: u64,
+    pub corruptions_found: u64,
+    pub repaired: u64,
+    pub flags_confirmed: u64,
+    pub refs_fixed: u64,
+    pub misplaced: u64,
+    pub lost: u64,
+}
+
+impl ScrubReport {
+    /// Is any server's pass still queued or running?
+    pub fn is_running(&self) -> bool {
+        self.per_server
+            .iter()
+            .any(|s| matches!(s.state, ScrubState::Queued | ScrubState::Running))
+    }
+
+    /// Did every polled server finish its pass cleanly?
+    pub fn all_done(&self) -> bool {
+        self.per_server
+            .iter()
+            .all(|s| s.state == ScrubState::Done)
+    }
+
+    /// First per-server failure, if any pass aborted.
+    pub fn first_failure(&self) -> Option<String> {
+        self.per_server.iter().find_map(|s| match &s.state {
+            ScrubState::Failed(e) => Some(format!("osd.{}: {e}", s.server)),
+            _ => None,
+        })
     }
 }
 
@@ -243,6 +292,7 @@ impl Cluster {
             store,
             replica_store: replica,
             pending: crate::dedup::consistency::PendingFlags::new(),
+            scrub: crate::scrub::ScrubCtl::new(),
             injector: FailureInjector::new(),
             metrics: self.metrics.clone(),
             dir: self.dir.clone(),
@@ -337,6 +387,16 @@ impl Cluster {
         self.monitor.mark_up(id);
     }
 
+    /// Run `f` against one server's shared state. Integrity tests and the
+    /// scrub example use this to inject bit-rot into the chunk store or
+    /// drop replica copies — the faults the scrub subsystem exists to
+    /// find and heal.
+    pub fn with_osd<R>(&self, id: ServerId, f: impl FnOnce(&OsdShared) -> R) -> Result<R> {
+        let osds = self.osds.lock().unwrap();
+        let osd = osds.get(&id).ok_or(Error::ServerDown(id.0))?;
+        Ok(f(&osd.shared))
+    }
+
     // ---- maintenance ----
 
     fn control(&self, id: ServerId, req: Req) -> Result<Resp> {
@@ -386,6 +446,10 @@ impl Cluster {
             repairs: Metrics::get(&m.repairs),
             gc_reclaimed: Metrics::get(&m.gc_reclaimed),
             tx_aborts: Metrics::get(&m.tx_aborts),
+            scrub_chunks_checked: Metrics::get(&m.scrub_chunks_checked),
+            scrub_bytes_verified: Metrics::get(&m.scrub_bytes_verified),
+            scrub_corruptions_found: Metrics::get(&m.scrub_corruptions_found),
+            scrub_repaired: Metrics::get(&m.scrub_repaired),
             per_server: Vec::new(),
         };
         let mut ids = self.live_ids();
@@ -474,40 +538,93 @@ impl Cluster {
         Ok(report)
     }
 
-    /// Scrub: recompute every CIT refcount from the cluster-wide OMAP
-    /// references and repair mismatches (the paper's GC cross-match
-    /// generalized to reference leaks — e.g. a failed transaction whose
-    /// rollback could not reach a crashed chunk server). Run quiesced.
-    /// Returns the number of entries repaired.
-    pub fn scrub(&self) -> Result<usize> {
-        let mut dumps: Vec<AuditDump> = Vec::new();
-        for id in self.live_ids() {
-            if let Ok(Resp::Audit(d)) = self.control(id, Req::Audit) {
-                dumps.push(d);
+    /// Start an online scrub pass on every live server (see
+    /// [`crate::scrub`] for the subsystem): first the ensure phase gives
+    /// every referenced fingerprint a CIT entry at its home, then each
+    /// server's scrub worker walks its CIT in fingerprint-ordered
+    /// windows, concurrently with foreground I/O. Dead servers are
+    /// skipped (they converge on their next scrub after restart); every
+    /// other error propagates.
+    pub fn start_scrub(&self, opts: ScrubOptions) -> Result<()> {
+        // refuse up front while any server is still scrubbing, so a
+        // rejection cannot leave half the cluster started (best-effort:
+        // the per-server workers still reject races individually).
+        if self.scrub_status()?.is_running() {
+            return Err(Error::Invalid("scrub already running".into()));
+        }
+        let mut ids = self.live_ids();
+        ids.sort();
+        for id in &ids {
+            match self.control(*id, Req::ScrubEnsure) {
+                Ok(Resp::Err(e)) => return Err(Error::TxAborted(e)),
+                Ok(_) => {}
+                Err(Error::ServerDown(_)) => {}
+                Err(e) => return Err(e),
             }
         }
-        let mut refs: HashMap<crate::dedup::fingerprint::Fingerprint, u64> = HashMap::new();
-        for d in &dumps {
-            for (fp, n) in &d.omap_refs {
-                *refs.entry(*fp).or_insert(0) += n;
+        for id in &ids {
+            match self.control(*id, Req::StartScrub { opts: opts.clone() }) {
+                Ok(Resp::Err(e)) => return Err(Error::Invalid(e)),
+                Ok(_) => {}
+                Err(Error::ServerDown(_)) => {}
+                Err(e) => return Err(e),
             }
         }
-        let mut repaired = 0usize;
-        for d in &dumps {
-            for (fp, rfc, _) in &d.cit {
-                let expected = refs.get(fp).copied().unwrap_or(0);
-                if *rfc != expected {
-                    let addr = self.dir.lookup(ServerId(d.server), Lane::Backend)?;
-                    if matches!(
-                        addr.call(Req::SetRef { fp: *fp, refs: expected }, 96)?,
-                        Resp::Ok
-                    ) {
-                        repaired += 1;
-                    }
+        Ok(())
+    }
+
+    /// Snapshot every live server's scrub progress, aggregated into a
+    /// [`ScrubReport`].
+    pub fn scrub_status(&self) -> Result<ScrubReport> {
+        let mut report = ScrubReport::default();
+        let mut ids = self.live_ids();
+        ids.sort();
+        for id in ids {
+            match self.control(id, Req::ScrubStatus) {
+                Ok(Resp::Scrub(st)) => {
+                    report.chunks_checked += st.chunks_checked;
+                    report.bytes_verified += st.bytes_verified;
+                    report.corruptions_found += st.corruptions_found;
+                    report.repaired += st.repaired;
+                    report.flags_confirmed += st.flags_confirmed;
+                    report.refs_fixed += st.refs_fixed;
+                    report.misplaced += st.misplaced;
+                    report.lost += st.lost;
+                    report.per_server.push(st);
                 }
+                Ok(_) => {}
+                Err(Error::ServerDown(_)) => {} // dead servers skipped
+                Err(e) => return Err(e),
             }
         }
-        Ok(repaired)
+        Ok(report)
+    }
+
+    /// Block until no live server's scrub is queued or running; returns
+    /// the final aggregated report.
+    pub fn scrub_wait(&self) -> Result<ScrubReport> {
+        loop {
+            let report = self.scrub_status()?;
+            if !report.is_running() {
+                return Ok(report);
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+    }
+
+    /// Back-compat convenience: run one full light scrub and block until
+    /// it completes everywhere. Returns the number of repairs applied
+    /// (refcount fixes + data restores) — the old quiesced scrub's
+    /// contract, now served by the online subsystem. A pass that aborted
+    /// on a live server is an error (dead servers are skipped, matching
+    /// [`Cluster::audit`]).
+    pub fn scrub(&self) -> Result<usize> {
+        self.start_scrub(ScrubOptions::light())?;
+        let report = self.scrub_wait()?;
+        if let Some(why) = report.first_failure() {
+            return Err(Error::TxAborted(format!("scrub failed: {why}")));
+        }
+        Ok((report.refs_fixed + report.repaired) as usize)
     }
 
     /// Graceful teardown: stop every OSD thread.

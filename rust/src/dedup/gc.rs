@@ -138,7 +138,8 @@ fn reclaim(sh: &OsdShared, fp: &Fingerprint) -> Result<()> {
 
 /// Repair a referenced-but-invalid entry: stat → flip; else restore the
 /// data from a replica copy, then flip. Returns false when the data is
-/// unrecoverable.
+/// unrecoverable. (The scrub subsystem has its own digest-verifying
+/// variant, `scrub::repair_primary_from_copy`.)
 fn repair(sh: &OsdShared, fp: &Fingerprint) -> Result<bool> {
     if sh.store.stat(&fp.to_bytes())? {
         sh.charge_meta_io(); // modeled DM-Shard write

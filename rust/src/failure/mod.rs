@@ -30,6 +30,13 @@ pub enum CrashPoint {
     /// Primary frontend: after the OMAP write, before replying to the
     /// client — committed but unacknowledged.
     AfterOmapWrite,
+    /// Scrub worker: a defect (bit-rot, missing primary, bad replica
+    /// copy) was detected, but the server dies before the repair write
+    /// lands — the defect must survive for the next scrub to fix.
+    BeforeScrubRepair,
+    /// Scrub worker: the repaired primary data was written, but the
+    /// server dies before replica copies are refreshed.
+    AfterScrubRepair,
 }
 
 /// Per-server failure injector.

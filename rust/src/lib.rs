@@ -21,6 +21,10 @@
 //! * an **accelerated fingerprint engine**: a Pallas batched SHA-1 kernel,
 //!   AOT-lowered by `python/compile/aot.py` to HLO text and executed from
 //!   the request path through the PJRT CPU client ([`runtime`]);
+//! * an **online scrub & repair subsystem**: per-server, rate-limited,
+//!   epoch-aware integrity walks that verify and heal refcounts, commit
+//!   flags, chunk data and replica copies while foreground I/O continues
+//!   ([`scrub`]);
 //! * evaluation machinery: an FIO-like workload generator ([`workload`]),
 //!   crash-point failure injection ([`failure`]) and metrics ([`metrics`]).
 //!
@@ -56,6 +60,7 @@ pub mod metrics;
 pub mod net;
 pub mod placement;
 pub mod runtime;
+pub mod scrub;
 pub mod storage;
 pub mod util;
 pub mod workload;

@@ -27,6 +27,15 @@ pub struct Metrics {
     pub gc_reclaimed: AtomicU64,
     /// Write transactions aborted.
     pub tx_aborts: AtomicU64,
+    /// CIT entries examined by scrub passes (light + deep).
+    pub scrub_chunks_checked: AtomicU64,
+    /// Chunk bytes re-read and re-fingerprinted by deep scrub.
+    pub scrub_bytes_verified: AtomicU64,
+    /// Primary-chunk digest mismatches (bit-rot) found by deep scrub.
+    pub scrub_corruptions_found: AtomicU64,
+    /// Scrub repairs applied (restored primaries, rewritten bit-rot,
+    /// re-pushed replica copies).
+    pub scrub_repaired: AtomicU64,
     /// Write-path latency histogram.
     pub put_latency: Histogram,
 }

@@ -14,6 +14,13 @@
 //! is orthogonal and never blocks on data lanes), which makes the wait-for
 //! graph acyclic: a frontend may block on any backend, a backend only on
 //! replica lanes, a replica lane never issues outbound calls.
+//!
+//! The per-server **scrub worker** ([`crate::scrub`]) is a pure client of
+//! this graph: it calls peer backend lanes (`CountRefs`, `EnsureCit`) and
+//! replica lanes (`VerifyCopy`, `FetchCopy`, `PutCopy`) but serves no
+//! inbound requests itself, so it can never appear in a wait cycle. Its
+//! handlers on the backend/replica lanes do strictly local work (an OMAP
+//! scan, a CIT upsert, a local hash), preserving the lane order above.
 
 pub mod fabric;
 

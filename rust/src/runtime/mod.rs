@@ -74,6 +74,7 @@ pub fn pack_batch(chunks: &[&[u8]], batch: usize, chunk_bytes: usize) -> Vec<u32
     out
 }
 
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
 enum Job {
     /// Digest chunks of exactly `chunk_bytes` (one variant).
     Digest {
@@ -108,8 +109,21 @@ impl XlaFingerprintService {
         if variants.is_empty() {
             return Err(Error::Xla("no fingerprint artifacts in manifest".into()));
         }
+        let tx = Self::spawn_service(variants.clone())?;
+        Ok(XlaFingerprintService {
+            tx: Mutex::new(tx),
+            variants,
+            accel_chunks: AtomicU64::new(0),
+            scalar_chunks: AtomicU64::new(0),
+        })
+    }
+
+    /// Spawn the service thread owning the PJRT client and compiled
+    /// executables (requires the vendored `xla` crate — see the `xla`
+    /// cargo feature).
+    #[cfg(feature = "xla")]
+    fn spawn_service(specs: Vec<ArtifactSpec>) -> Result<Sender<Job>> {
         let (tx, rx) = channel::<Job>();
-        let specs = variants.clone();
         let (boot_tx, boot_rx) = channel::<Result<()>>();
         std::thread::Builder::new()
             .name("xla-fp-service".into())
@@ -162,12 +176,17 @@ impl XlaFingerprintService {
         boot_rx
             .recv()
             .map_err(|_| Error::Xla("service thread died during boot".into()))??;
-        Ok(XlaFingerprintService {
-            tx: Mutex::new(tx),
-            variants,
-            accel_chunks: AtomicU64::new(0),
-            scalar_chunks: AtomicU64::new(0),
-        })
+        Ok(tx)
+    }
+
+    /// Built without the `xla` feature: no PJRT service exists. The
+    /// returned sender dangles (its receiver is dropped), digest jobs are
+    /// never submitted ([`Self::digest_via_xla`] short-circuits) and the
+    /// provider serves every chunk through the scalar fallback.
+    #[cfg(not(feature = "xla"))]
+    fn spawn_service(_specs: Vec<ArtifactSpec>) -> Result<Sender<Job>> {
+        let (tx, _rx) = channel::<Job>();
+        Ok(tx)
     }
 
     /// The compiled variants (for reports and tests).
@@ -181,6 +200,7 @@ impl XlaFingerprintService {
 
     /// Digest `chunks` (all exactly the variant's chunk size) through the
     /// accelerator, splitting into batches as needed.
+    #[cfg(feature = "xla")]
     fn digest_via_xla(&self, variant: usize, chunks: &[&[u8]]) -> Result<Vec<Fingerprint>> {
         let spec = &self.variants[variant];
         let mut out = Vec::with_capacity(chunks.len());
@@ -202,8 +222,16 @@ impl XlaFingerprintService {
         }
         Ok(out)
     }
+
+    /// Without the `xla` feature there is no accelerator; report the
+    /// miss so [`FingerprintProvider::digests`] takes the scalar path.
+    #[cfg(not(feature = "xla"))]
+    fn digest_via_xla(&self, _variant: usize, _chunks: &[&[u8]]) -> Result<Vec<Fingerprint>> {
+        Err(Error::Xla("built without the `xla` feature".into()))
+    }
 }
 
+#[cfg(feature = "xla")]
 fn run_digest(
     exe: &xla::PjRtLoadedExecutable,
     spec: &ArtifactSpec,

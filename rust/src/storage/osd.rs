@@ -1,15 +1,17 @@
 //! The object storage server (OSS/OSD).
 //!
-//! One `Osd` runs five threads over a shared per-server state
+//! One `Osd` runs six threads over a shared per-server state
 //! ([`OsdShared`], which models everything that survives a crash — the
 //! chunk store, the replica store and the DM-Shard are "disk"; the
-//! pending-flag queue is "memory" and is wiped on crash):
+//! pending-flag queue and any in-flight scrub job are "memory" and die
+//! with the process):
 //!
 //! * **frontend** — client object transactions (the dedup engine entry);
 //! * **backend**  — chunk + dedup-metadata ops from peer frontends;
 //! * **replica**  — replica copies (strictly local; see `net` lane order);
-//! * **control**  — map updates, rebalance, GC, stats, audit;
-//! * **consistency manager** — the asynchronous flag flipper (§2.4).
+//! * **control**  — map updates, rebalance, GC, stats, audit, scrub admin;
+//! * **consistency manager** — the asynchronous flag flipper (§2.4);
+//! * **scrub worker** — the online integrity walker ([`crate::scrub`]).
 //!
 //! Kill/crash semantics: lanes keep running but silently *drop* every
 //! envelope while the injector reports dead — callers observe a closed
@@ -83,6 +85,9 @@ pub struct OsdShared {
     pub replica_store: Box<dyn StorageBackend>,
     /// Volatile: the async-consistency registration queue.
     pub pending: PendingFlags,
+    /// Volatile: scrub-worker job hand-off and progress (a crash aborts
+    /// the running pass).
+    pub scrub: crate::scrub::ScrubCtl,
     pub injector: FailureInjector,
     pub metrics: Arc<Metrics>,
     pub dir: Dir,
@@ -161,6 +166,19 @@ impl Osd {
             );
         }
 
+        // scrub worker thread: runs queued integrity passes concurrently
+        // with the foreground lanes (see `crate::scrub`).
+        {
+            let sh = shared.clone();
+            let sd = shutdown.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("{}-scrub", shared.id))
+                    .spawn(move || crate::scrub::scrub_loop(sh, sd))
+                    .expect("spawn scrub"),
+            );
+        }
+
         Osd {
             shared,
             shutdown,
@@ -172,6 +190,7 @@ impl Osd {
     pub fn kill(&self) {
         self.shared.injector.kill();
         self.shared.pending.clear();
+        self.shared.scrub.clear();
     }
 
     /// Restart after a kill/crash: revive and run the recovery scan
@@ -317,6 +336,18 @@ fn dispatch(sh: &Arc<OsdShared>, lane: Lane, req: Req) -> Resp {
                 Err(e) => err_str(e),
             }
         }
+        (Lane::Backend, Req::CountRefs { fps }) => {
+            match crate::scrub::count_refs_local(sh, &fps) {
+                Ok(counts) => Resp::RefCounts(counts),
+                Err(e) => err_str(e),
+            }
+        }
+        (Lane::Backend, Req::EnsureCit { fp, len }) => {
+            match crate::scrub::ensure_cit_local(sh, &fp, len) {
+                Ok(_) => Resp::Ok,
+                Err(e) => err_str(e),
+            }
+        }
 
         // ---- replica ----
         (Lane::Replica, Req::PutCopy { key, data }) => {
@@ -336,6 +367,18 @@ fn dispatch(sh: &Arc<OsdShared>, lane: Lane, req: Req) -> Resp {
         (Lane::Replica, Req::FetchCopy { key }) => match sh.replica_store.get(&key) {
             Ok(Some(d)) => Resp::Data(d),
             Ok(None) => Resp::NotFound,
+            Err(e) => err_str(e),
+        },
+        (Lane::Replica, Req::VerifyCopy { key, fp }) => match sh.replica_store.get(&key) {
+            // hash locally; only the verdict crosses the wire
+            Ok(Some(d)) => Resp::CopyState {
+                present: true,
+                matches: crate::dedup::fingerprint::Fingerprint::of(&d) == fp,
+            },
+            Ok(None) => Resp::CopyState {
+                present: false,
+                matches: false,
+            },
             Err(e) => err_str(e),
         },
 
@@ -364,6 +407,15 @@ fn dispatch(sh: &Arc<OsdShared>, lane: Lane, req: Req) -> Resp {
             Ok(d) => Resp::Audit(d),
             Err(e) => err_str(e),
         },
+        (Lane::Control, Req::ScrubEnsure) => match crate::scrub::ensure_referenced(sh) {
+            Ok(_) => Resp::Ok,
+            Err(e) => err_str(e),
+        },
+        (Lane::Control, Req::StartScrub { opts }) => match sh.scrub.start(opts) {
+            Ok(()) => Resp::Ok,
+            Err(e) => err_str(e),
+        },
+        (Lane::Control, Req::ScrubStatus) => Resp::Scrub(sh.scrub.status()),
         (Lane::Control, Req::Sync) => match sh.shard.sync() {
             Ok(()) => Resp::Ok,
             Err(e) => err_str(e),

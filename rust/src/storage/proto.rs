@@ -8,6 +8,7 @@
 use crate::cluster::ClusterMap;
 use crate::dedup::cit::CommitFlag;
 use crate::dedup::fingerprint::Fingerprint;
+use crate::scrub::{ScrubOptions, ScrubStatus};
 
 /// All messages a server can receive.
 #[derive(Debug)]
@@ -55,6 +56,14 @@ pub enum Req {
     /// Rebalance transfer: an OMAP record moving to its new name-derived
     /// home.
     MigrateOmap { value: Vec<u8> },
+    /// Scrub: count this server's local OMAP references for each
+    /// fingerprint (replaces the old full-dump cross-match: only the
+    /// window's counts cross the wire, never whole tables).
+    CountRefs { fps: Vec<Fingerprint> },
+    /// Scrub ensure-phase: create a zero-ref invalid CIT entry at the
+    /// fingerprint's home if none exists (a reference with no CIT entry
+    /// cannot be seen, reconciled or repaired by the home's walk).
+    EnsureCit { fp: Fingerprint, len: u32 },
 
     // ---- replica lane (backends → replica holders; strictly local) ----
     /// Store a replica copy of a chunk / OMAP record.
@@ -63,6 +72,10 @@ pub enum Req {
     DeleteCopy { key: Vec<u8> },
     /// Fetch a replica copy (degraded reads, repair).
     FetchCopy { key: Vec<u8> },
+    /// Deep scrub: verify a replica copy against its expected
+    /// fingerprint. The holder hashes locally — only the verdict crosses
+    /// the wire, not the data.
+    VerifyCopy { key: Vec<u8>, fp: Fingerprint },
 
     // ---- control lane (admin) ----
     /// Push a new cluster map epoch.
@@ -80,6 +93,13 @@ pub enum Req {
     GetStats,
     /// Dump for cluster-wide invariant checks.
     Audit,
+    /// Run the scrub ensure-phase: every locally referenced fingerprint
+    /// gets a CIT entry at its home (see [`crate::scrub`]).
+    ScrubEnsure,
+    /// Queue an online scrub pass on this server's scrub worker.
+    StartScrub { opts: ScrubOptions },
+    /// Snapshot the scrub worker's progress.
+    ScrubStatus,
     /// Flush persistent stores.
     Sync,
 }
@@ -105,6 +125,13 @@ pub enum Resp {
         exists_data: bool,
         cit: Option<(u64, CommitFlag)>,
     },
+    /// Per-fingerprint local OMAP reference counts (same order as the
+    /// requested fingerprints).
+    RefCounts(Vec<u64>),
+    /// Replica-copy verification verdict.
+    CopyState { present: bool, matches: bool },
+    /// Scrub worker progress snapshot.
+    Scrub(ScrubStatus),
     /// Requested key/object/chunk is unknown.
     NotFound,
     /// Per-server statistics.
@@ -158,6 +185,10 @@ impl Req {
             Req::FetchRaw { key } | Req::DeleteRaw { key } => key.len(),
             Req::MigrateChunk { data, .. } => 20 + 16 + data.len(),
             Req::MigrateOmap { value } => value.len(),
+            Req::CountRefs { fps } => 20 * fps.len(),
+            Req::EnsureCit { .. } => 24,
+            Req::VerifyCopy { key, .. } => key.len() + 20,
+            Req::StartScrub { .. } => 24,
             Req::PutCopy { key, data } => key.len() + data.len(),
             Req::DeleteCopy { key } | Req::FetchCopy { key } => key.len(),
             Req::ApplyMap(m) => 16 * m.servers.len(),

@@ -1,0 +1,141 @@
+//! Property: random interleavings of writes, deletes, kills, restarts,
+//! GC, bit-rot injection and online scrubs never leave the cluster in a
+//! state that a converge sequence (restart-all → flush → scrub → GC)
+//! cannot bring back to a clean audit.
+
+use snss_dedup::api::{Cluster, ClusterConfig, DedupMode, ScrubOptions};
+use snss_dedup::cluster::ServerId;
+use snss_dedup::dedup::Chunking;
+use snss_dedup::util::prop::{check, Config};
+use snss_dedup::util::rng::XorShift128Plus;
+
+const SERVERS: u32 = 3;
+
+#[derive(Debug, Clone)]
+enum Op {
+    /// (name index, payload seed, payload length)
+    Put(u64, u64, usize),
+    Delete(u64),
+    Kill(u32),
+    Restart(u32),
+    Gc,
+    ScrubLight,
+    ScrubDeep,
+    /// Flip a bit in the first chunk stored on this server.
+    Corrupt(u32),
+}
+
+fn payload(seed: u64, len: usize) -> Vec<u8> {
+    let mut rng = XorShift128Plus::new(seed);
+    let mut v = vec![0u8; len];
+    rng.fill_bytes(&mut v);
+    v
+}
+
+fn corrupt_first_chunk(cluster: &Cluster, id: ServerId) {
+    let _ = cluster.with_osd(id, |sh| -> snss_dedup::Result<()> {
+        for key in sh.store.keys()? {
+            if key.len() != 20 {
+                continue;
+            }
+            if let Some(mut data) = sh.store.get(&key)? {
+                if !data.is_empty() {
+                    data[0] ^= 0x80;
+                    sh.store.put(&key, &data)?;
+                    return Ok(());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn run_case(ops: &[Op]) -> Result<(), String> {
+    let cluster = Cluster::new(ClusterConfig {
+        servers: SERVERS as usize,
+        replication: 2,
+        dedup: DedupMode::ClusterWide,
+        chunking: Chunking::Fixed { size: 2048 },
+        ..Default::default()
+    })
+    .map_err(|e| e.to_string())?;
+    let client = cluster.client();
+
+    for op in ops {
+        match op {
+            // data-path errors are expected while servers are down
+            Op::Put(i, seed, len) => {
+                let _ = client.put_object(&format!("obj-{i}"), &payload(*seed, *len));
+            }
+            Op::Delete(i) => {
+                let _ = client.delete_object(&format!("obj-{i}"));
+            }
+            Op::Kill(s) => {
+                let _ = cluster.kill_server(ServerId(s % SERVERS));
+            }
+            Op::Restart(s) => {
+                let _ = cluster.restart_server(ServerId(s % SERVERS));
+            }
+            Op::Gc => {
+                let _ = cluster.run_gc(0);
+            }
+            Op::ScrubLight => {
+                let _ = cluster.start_scrub(ScrubOptions::light());
+                let _ = cluster.scrub_wait();
+            }
+            Op::ScrubDeep => {
+                let _ = cluster.start_scrub(ScrubOptions::deep().with_window(16));
+                let _ = cluster.scrub_wait();
+            }
+            Op::Corrupt(s) => corrupt_first_chunk(&cluster, ServerId(s % SERVERS)),
+        }
+    }
+
+    // converge: revive everything, settle flags, scrub, collect garbage
+    for i in 0..SERVERS {
+        let _ = cluster.restart_server(ServerId(i));
+    }
+    cluster.flush_consistency().map_err(|e| e.to_string())?;
+    cluster
+        .start_scrub(ScrubOptions::deep())
+        .map_err(|e| format!("start_scrub: {e}"))?;
+    cluster.scrub_wait().map_err(|e| format!("scrub_wait: {e}"))?;
+    cluster.run_gc(0).map_err(|e| format!("gc: {e}"))?;
+
+    let audit = cluster.audit().map_err(|e| format!("audit: {e}"))?;
+    if !audit.is_ok() {
+        return Err(format!("audit violations: {:?}", audit.violations));
+    }
+    cluster.shutdown();
+    Ok(())
+}
+
+#[test]
+fn random_fault_and_scrub_interleavings_converge_to_clean_audit() {
+    check(
+        Config {
+            cases: 8,
+            ..Config::default()
+        },
+        |rng, size| {
+            let count = 4 + (size as usize) / 8; // ramps 4 → ~16 ops
+            (0..count)
+                .map(|_| match rng.below(10) {
+                    0 | 1 | 2 => Op::Put(
+                        rng.below(5),
+                        rng.next_u64(),
+                        1024 + rng.below(16 * 1024) as usize,
+                    ),
+                    3 => Op::Delete(rng.below(5)),
+                    4 => Op::Kill(rng.next_u32()),
+                    5 => Op::Restart(rng.next_u32()),
+                    6 => Op::Gc,
+                    7 => Op::ScrubLight,
+                    8 => Op::ScrubDeep,
+                    _ => Op::Corrupt(rng.next_u32()),
+                })
+                .collect::<Vec<Op>>()
+        },
+        |ops| run_case(ops),
+    );
+}

@@ -1,0 +1,204 @@
+//! Integration: the online scrub & repair subsystem — bit-rot detection
+//! and healing under foreground load, replica re-push, and convergence
+//! after a crash in the middle of a repair.
+
+use snss_dedup::api::{Cluster, ClusterConfig, DedupMode, ScrubOptions};
+use snss_dedup::cluster::ServerId;
+use snss_dedup::dedup::Chunking;
+use snss_dedup::failure::CrashPoint;
+use snss_dedup::workload::{Generator, WorkloadSpec};
+
+fn boot() -> Cluster {
+    Cluster::new(ClusterConfig {
+        servers: 4,
+        replication: 2,
+        dedup: DedupMode::ClusterWide,
+        chunking: Chunking::Fixed { size: 4096 },
+        ..Default::default()
+    })
+    .expect("boot")
+}
+
+/// Flip one bit in the first chunk stored on `id`; returns false when the
+/// server holds no chunks.
+fn corrupt_first_chunk(cluster: &Cluster, id: ServerId) -> bool {
+    cluster
+        .with_osd(id, |sh| {
+            let keys = sh.store.keys()?;
+            for key in keys {
+                if key.len() != 20 {
+                    continue; // only content-addressed chunks
+                }
+                let Some(mut data) = sh.store.get(&key)? else {
+                    continue;
+                };
+                if data.is_empty() {
+                    continue;
+                }
+                data[0] ^= 0x01;
+                sh.store.put(&key, &data)?;
+                return Ok(true);
+            }
+            Ok::<bool, snss_dedup::Error>(false)
+        })
+        .expect("with_osd")
+        .expect("store io")
+}
+
+fn write_corpus(cluster: &Cluster, n: u64) -> Generator {
+    let gen = Generator::new(WorkloadSpec {
+        object_size: 64 << 10,
+        unit: 4096,
+        dedup_pct: 0,
+        ..Default::default()
+    });
+    let client = cluster.client();
+    for i in 0..n {
+        let (name, data) = gen.named_object(i);
+        client.put_object(&name, &data).expect("put");
+    }
+    cluster.flush_consistency().ok();
+    gen
+}
+
+#[test]
+fn deep_scrub_repairs_bit_rot_under_load() {
+    let cluster = boot();
+    let gen = write_corpus(&cluster, 8);
+
+    // inject bit-rot into a primary chunk copy
+    assert!(corrupt_first_chunk(&cluster, ServerId(0)), "osd.0 holds chunks");
+
+    // foreground traffic keeps flowing while the scrub runs (no quiesce)
+    let writer = {
+        let client = cluster.client();
+        std::thread::spawn(move || {
+            for i in 0..20u32 {
+                let data: Vec<u8> = (0..32_768u32).map(|j| (j * 31 + i * 7) as u8).collect();
+                client.put_object(&format!("live-{i}"), &data).expect("live put");
+            }
+        })
+    };
+
+    cluster
+        .start_scrub(ScrubOptions::deep().with_window(32))
+        .expect("start deep scrub");
+    let report = cluster.scrub_wait().expect("scrub wait");
+    assert!(report.all_done(), "{report:?}");
+    assert!(report.corruptions_found >= 1, "bit-flip not detected: {report:?}");
+    assert!(report.repaired >= 1, "bit-flip not repaired: {report:?}");
+    assert!(report.chunks_checked > 0 && report.bytes_verified > 0);
+
+    writer.join().expect("writer");
+    cluster.flush_consistency().ok();
+
+    // quiesced reconcile pass settles any drift from in-flight writes
+    cluster.scrub().expect("light scrub");
+    let audit = cluster.audit().expect("audit");
+    assert!(audit.is_ok(), "{:?}", audit.violations);
+
+    // every object — pre-existing and written-during-scrub — reads clean
+    let client = cluster.client();
+    for i in 0..8 {
+        let (name, data) = gen.named_object(i);
+        assert_eq!(client.get_object(&name).expect("read"), data, "{name}");
+    }
+    for i in 0..20u32 {
+        let data: Vec<u8> = (0..32_768u32).map(|j| (j * 31 + i * 7) as u8).collect();
+        assert_eq!(client.get_object(&format!("live-{i}")).expect("read live"), data);
+    }
+
+    // the new counters surface in cluster stats
+    let stats = cluster.stats();
+    assert!(stats.scrub_chunks_checked > 0);
+    assert!(stats.scrub_bytes_verified > 0);
+    assert!(stats.scrub_corruptions_found >= 1);
+    assert!(stats.scrub_repaired >= 1);
+    cluster.shutdown();
+}
+
+#[test]
+fn deep_scrub_repushes_dropped_replica_copy() {
+    let cluster = boot();
+    write_corpus(&cluster, 6);
+
+    // drop one replica copy (disk losing a sector's worth of redundancy)
+    let dropped: Option<Vec<u8>> = cluster
+        .with_osd(ServerId(1), |sh| {
+            for key in sh.replica_store.keys()? {
+                if key.starts_with(b"c:") && key.len() == 22 {
+                    sh.replica_store.delete(&key)?;
+                    return Ok(Some(key));
+                }
+            }
+            Ok::<Option<Vec<u8>>, snss_dedup::Error>(None)
+        })
+        .expect("with_osd")
+        .expect("replica io");
+    let key = dropped.expect("osd.1 holds replica copies");
+
+    cluster.start_scrub(ScrubOptions::deep()).expect("start");
+    let report = cluster.scrub_wait().expect("wait");
+    assert!(report.repaired >= 1, "copy not re-pushed: {report:?}");
+
+    let restored = cluster
+        .with_osd(ServerId(1), |sh| sh.replica_store.stat(&key))
+        .expect("with_osd")
+        .expect("stat");
+    assert!(restored, "replica copy missing after deep scrub");
+    let audit = cluster.audit().expect("audit");
+    assert!(audit.is_ok(), "{:?}", audit.violations);
+    cluster.shutdown();
+}
+
+#[test]
+fn crash_mid_repair_then_rescrub_converges() {
+    let cluster = boot();
+    let gen = write_corpus(&cluster, 6);
+
+    assert!(corrupt_first_chunk(&cluster, ServerId(0)), "osd.0 holds chunks");
+    cluster
+        .arm_crash(ServerId(0), CrashPoint::BeforeScrubRepair)
+        .expect("arm");
+
+    // the scrub detects the rot, then osd.0 dies before the repair lands
+    cluster.start_scrub(ScrubOptions::deep()).expect("start");
+    let _ = cluster.scrub_wait().expect("wait skips the dead server");
+    assert!(cluster.is_dead(ServerId(0)), "crash point must fire");
+
+    // restart + a fresh scrub heals the still-present corruption
+    cluster.restart_server(ServerId(0)).expect("restart");
+    cluster.flush_consistency().ok();
+    cluster.start_scrub(ScrubOptions::deep()).expect("rescrub");
+    let report = cluster.scrub_wait().expect("wait");
+    assert!(report.corruptions_found >= 1, "{report:?}");
+    assert!(report.repaired >= 1, "{report:?}");
+
+    let audit = cluster.audit().expect("audit");
+    assert!(audit.is_ok(), "{:?}", audit.violations);
+    let client = cluster.client();
+    for i in 0..6 {
+        let (name, data) = gen.named_object(i);
+        assert_eq!(client.get_object(&name).expect("read"), data, "{name}");
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn scrub_rejects_concurrent_pass_and_reports_rate_limited_progress() {
+    let cluster = boot();
+    write_corpus(&cluster, 4);
+
+    // slow the pass down enough to observe it running (the bucket's
+    // one-second burst is well below the per-server verify volume)
+    cluster
+        .start_scrub(ScrubOptions::deep().with_rate(16 << 10).with_window(4))
+        .expect("start");
+    // a second scrub while one runs is refused somewhere in the cluster
+    let second = cluster.start_scrub(ScrubOptions::light());
+    assert!(second.is_err(), "concurrent scrub must be rejected");
+    let report = cluster.scrub_wait().expect("wait");
+    assert!(report.all_done(), "{report:?}");
+    assert!(report.chunks_checked > 0);
+    cluster.shutdown();
+}
