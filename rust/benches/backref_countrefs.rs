@@ -1,0 +1,125 @@
+//! Backreference-index micro-bench: local `CountRefs` answered from the
+//! index (`DmShard::backref_refs_many`, O(log n + referrers) per
+//! fingerprint) vs the pre-index full OMAP table walk
+//! (`DmShard::count_refs_scan`, O(objects × chunks) per call), at 10k and
+//! 100k objects — one scrub window (256 fingerprints) per call, the shape
+//! the light-scrub refcount reconcile issues.
+//!
+//! ```text
+//! cargo bench --bench backref_countrefs           # 10k + 100k objects
+//! BENCH_SCALE=small cargo bench --bench backref_countrefs   # 10k only
+//! ```
+//!
+//! Standalone driver (criterion is unavailable offline); results are also
+//! appended to `bench_out/backref_countrefs.tsv`.
+
+use snss_dedup::dedup::dmshard::DmShard;
+use snss_dedup::dedup::omap::OmapEntry;
+use snss_dedup::kvstore::MemKv;
+use snss_dedup::util::rng::SplitMix64;
+use snss_dedup::Fingerprint;
+use std::io::Write as _;
+use std::time::Instant;
+
+/// Chunks per object (the 4 MiB / 512 KiB shape of the paper's figures).
+const CHUNKS_PER_OBJECT: usize = 8;
+/// Fingerprints per `CountRefs` call (one scrub window).
+const WINDOW: usize = 256;
+
+/// Populate a shard with `objects` layouts drawing chunks from a shared
+/// pool (~4 references per chunk on average), plus one query window.
+fn build(objects: usize, rng: &mut SplitMix64) -> (DmShard, Vec<Fingerprint>) {
+    let shard = DmShard::new(
+        Box::new(MemKv::new()),
+        Box::new(MemKv::new()),
+        Box::new(MemKv::new()),
+    );
+    let pool: Vec<Fingerprint> = (0..(objects * CHUNKS_PER_OBJECT / 4).max(WINDOW))
+        .map(|i| Fingerprint::of(format!("chunk-{i}").as_bytes()))
+        .collect();
+    for o in 0..objects {
+        let chunks: Vec<(Fingerprint, u32)> = (0..CHUNKS_PER_OBJECT)
+            .map(|_| (pool[rng.below(pool.len() as u64) as usize], 4096))
+            .collect();
+        let entry = OmapEntry::new(
+            format!("obj-{o}"),
+            Fingerprint::of(format!("obj-{o}").as_bytes()),
+            chunks,
+        );
+        shard.omap_put(&entry).expect("bench omap_put");
+    }
+    let fps: Vec<Fingerprint> = (0..WINDOW)
+        .map(|_| pool[rng.below(pool.len() as u64) as usize])
+        .collect();
+    (shard, fps)
+}
+
+/// Time `reps` calls of `f`; returns mean microseconds per call.
+fn time_us(reps: usize, mut f: impl FnMut()) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() * 1e6 / reps as f64
+}
+
+fn main() {
+    let sizes: &[usize] = match std::env::var("BENCH_SCALE").as_deref() {
+        Ok("small") => &[10_000],
+        _ => &[10_000, 100_000],
+    };
+    println!("== backref index: CountRefs window ({WINDOW} fps) — index vs full scan ==");
+    println!(
+        "{:<10} {:>14} {:>14} {:>10}",
+        "objects", "scan µs/call", "index µs/call", "speedup"
+    );
+    for &objects in sizes {
+        let mut rng = SplitMix64::new(0xBACC_0FF5 ^ objects as u64);
+        let (shard, fps) = build(objects, &mut rng);
+        // sanity: both paths must agree before either is timed
+        let scanned = shard.count_refs_scan(&fps).expect("scan");
+        let indexed = shard.backref_refs_many(&fps).expect("index");
+        assert_eq!(scanned, indexed, "index diverges from scan at {objects}");
+
+        let scan_reps = if objects >= 100_000 { 3 } else { 10 };
+        let scan_us = time_us(scan_reps, || {
+            shard.count_refs_scan(&fps).expect("scan");
+        });
+        let index_us = time_us(100, || {
+            shard.backref_refs_many(&fps).expect("index");
+        });
+        println!(
+            "{:<10} {:>14.1} {:>14.1} {:>9.1}x",
+            objects,
+            scan_us,
+            index_us,
+            scan_us / index_us
+        );
+        record(
+            "backref_countrefs",
+            "objects\twindow\tscan_us\tindex_us\tspeedup",
+            &format!(
+                "{objects}\t{WINDOW}\t{scan_us:.1}\t{index_us:.1}\t{:.1}",
+                scan_us / index_us
+            ),
+        );
+    }
+}
+
+/// Append one TSV row under `bench_out/` (same format as `common::record`;
+/// duplicated so this driver stays free of the cluster-harness module).
+fn record(bench: &str, header: &str, row: &str) {
+    let _ = std::fs::create_dir_all("bench_out");
+    let path = format!("bench_out/{bench}.tsv");
+    let new = !std::path::Path::new(&path).exists();
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+    {
+        if new {
+            let _ = writeln!(f, "{header}");
+        }
+        let _ = writeln!(f, "{row}");
+    }
+}

@@ -111,14 +111,23 @@ impl Default for ClusterConfig {
 /// Aggregated cluster statistics.
 #[derive(Clone, Debug, Default)]
 pub struct ClusterStats {
+    /// Logical bytes accepted from clients (pre-dedup).
     pub logical_bytes: u64,
+    /// Unique chunk bytes stored (primary copies).
     pub stored_bytes: u64,
+    /// Replica chunk bytes stored.
     pub replica_bytes: u64,
+    /// Duplicate hits (refcount increments granted).
     pub dedup_hits: u64,
+    /// Unique chunks written.
     pub unique_chunks: u64,
+    /// CIT lookups served.
     pub cit_lookups: u64,
+    /// Repair events across all subsystems.
     pub repairs: u64,
+    /// Chunks reclaimed by GC.
     pub gc_reclaimed: u64,
+    /// Write transactions aborted.
     pub tx_aborts: u64,
     /// CIT entries examined by scrub passes.
     pub scrub_chunks_checked: u64,
@@ -128,6 +137,15 @@ pub struct ClusterStats {
     pub scrub_corruptions_found: u64,
     /// Scrub repairs applied (primaries and replica copies).
     pub scrub_repaired: u64,
+    /// Backreference-index records written/deleted by OMAP mutations.
+    pub backref_updates: u64,
+    /// Reference counts answered from the backreference index.
+    pub backref_lookups: u64,
+    /// Full index re-derivations (recovery + migration).
+    pub backref_rebuilds: u64,
+    /// Index ↔ OMAP discrepancies found by audits.
+    pub backref_mismatches: u64,
+    /// Per-server snapshots.
     pub per_server: Vec<OsdStats>,
 }
 
@@ -166,13 +184,21 @@ impl AuditReport {
 pub struct ScrubReport {
     /// One status per live server polled.
     pub per_server: Vec<ScrubStatus>,
+    /// CIT entries examined.
     pub chunks_checked: u64,
+    /// Bytes re-read and re-fingerprinted (deep only).
     pub bytes_verified: u64,
+    /// Digest mismatches found on primary chunk data (deep only).
     pub corruptions_found: u64,
+    /// Data repairs applied.
     pub repaired: u64,
+    /// Commit flags confirmed valid against present data.
     pub flags_confirmed: u64,
+    /// CIT refcounts re-synchronized to the cluster-wide count.
     pub refs_fixed: u64,
+    /// Entries skipped because their home moved (rebalancer's job).
     pub misplaced: u64,
+    /// Referenced chunks with no healthy copy anywhere.
     pub lost: u64,
 }
 
@@ -254,13 +280,15 @@ impl Cluster {
     }
 
     fn spawn_osd(&self, id: ServerId) -> Result<()> {
-        let (omap, cit, store, replica): (
+        let (omap, cit, backref, store, replica): (
+            Box<dyn crate::kvstore::KvStore>,
             Box<dyn crate::kvstore::KvStore>,
             Box<dyn crate::kvstore::KvStore>,
             Box<dyn crate::storage::backend::StorageBackend>,
             Box<dyn crate::storage::backend::StorageBackend>,
         ) = match &self.cfg.durability {
             Durability::Memory => (
+                Box::new(MemKv::new()),
                 Box::new(MemKv::new()),
                 Box::new(MemKv::new()),
                 Box::new(MemStore::new()),
@@ -271,11 +299,23 @@ impl Cluster {
                 (
                     Box::new(LogKv::open(base.join("omap.log"))?),
                     Box::new(LogKv::open(base.join("cit.log"))?),
+                    Box::new(LogKv::open(base.join("backref.log"))?),
                     Box::new(FileStore::open(base.join("data"))?),
                     Box::new(FileStore::open(base.join("replica"))?),
                 )
             }
         };
+        let shard = DmShard::new(omap, cit, backref);
+        if shard.omap_len() > 0 {
+            // cold open with existing layouts: a pre-index store has no
+            // backref records at all, and a store from an unclean process
+            // death may hold a torn index (an OMAP write separated from
+            // its index write) that is *non-empty* but wrong. Either way
+            // the OMAP is the source of truth — re-derive before any lane
+            // can consult the index.
+            shard.rebuild_backrefs()?;
+            Metrics::add(&self.metrics.backref_rebuilds, 1);
+        }
         let shared = Arc::new(OsdShared {
             id,
             cfg: OsdConfig {
@@ -288,7 +328,7 @@ impl Cluster {
             },
             map: self.monitor.map_handle(),
             pgmap: self.pgmap.clone(),
-            shard: DmShard::new(omap, cit),
+            shard,
             store,
             replica_store: replica,
             pending: crate::dedup::consistency::PendingFlags::new(),
@@ -368,12 +408,17 @@ impl Cluster {
             .unwrap_or(true)
     }
 
-    /// Restart a killed/crashed server (revive + recovery scan).
+    /// Restart a killed/crashed server (backref-index re-derivation +
+    /// revive + recovery scan). Errors if the index could not be rebuilt
+    /// — the server then stays down rather than serving wrong counts.
+    /// The O(OMAP) rebuild runs after the registry lock is dropped, so
+    /// one recovering server never stalls unrelated admin operations.
     pub fn restart_server(&self, id: ServerId) -> Result<()> {
-        let osds = self.osds.lock().unwrap();
-        let osd = osds.get(&id).ok_or(Error::ServerDown(id.0))?;
-        osd.restart();
-        Ok(())
+        let shared = {
+            let osds = self.osds.lock().unwrap();
+            osds.get(&id).ok_or(Error::ServerDown(id.0))?.shared.clone()
+        };
+        shared.restart()
     }
 
     /// Mark a server Down in the map (placement skips it; rebalance moves
@@ -433,6 +478,59 @@ impl Cluster {
         Ok(())
     }
 
+    /// Audit + re-derive the backreference index on every live server
+    /// (the one-shot migration/repair). Returns `(records, mismatches)`
+    /// summed over the cluster: index records after the rebuild and
+    /// index ↔ OMAP discrepancies the pre-rebuild audits found.
+    pub fn rebuild_backrefs(&self) -> Result<(u64, u64)> {
+        let mut total = (0u64, 0u64);
+        let mut ids = self.live_ids();
+        ids.sort();
+        for id in ids {
+            match self.control(id, Req::RebuildBackrefs) {
+                Ok(Resp::BackrefReport {
+                    records,
+                    mismatches,
+                }) => {
+                    total.0 += records;
+                    total.1 += mismatches;
+                }
+                Ok(Resp::Err(e)) => return Err(Error::TxAborted(e)),
+                Ok(_) => {}
+                Err(Error::ServerDown(_)) => {} // rebuilt on restart anyway
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(total)
+    }
+
+    /// Who references this chunk? Asks every live server's backreference
+    /// index (each server indexes its own OMAP) and returns the merged
+    /// `(object name, reference multiplicity)` list — the admin
+    /// counterpart of the scrub fast path, O(referrers) per server
+    /// instead of a cluster-wide OMAP dump.
+    pub fn referrers(&self, fp: crate::Fingerprint) -> Result<Vec<(String, u64)>> {
+        let mut out: Vec<(String, u64)> = Vec::new();
+        let mut ids = self.live_ids();
+        ids.sort();
+        for id in ids {
+            let Ok(addr) = self.dir.lookup(id, Lane::Backend) else {
+                continue;
+            };
+            let req = Req::ListRefs { fp };
+            let size = req.wire_size();
+            match addr.call(req, size) {
+                Ok(Resp::Referrers(list)) => out.extend(list),
+                Ok(Resp::Err(e)) => return Err(Error::TxAborted(e)),
+                Ok(_) => {}
+                Err(Error::ServerDown(_)) => {} // skipped like audit()
+                Err(e) => return Err(e),
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
     /// Aggregate statistics.
     pub fn stats(&self) -> ClusterStats {
         let m = &self.metrics;
@@ -450,6 +548,10 @@ impl Cluster {
             scrub_bytes_verified: Metrics::get(&m.scrub_bytes_verified),
             scrub_corruptions_found: Metrics::get(&m.scrub_corruptions_found),
             scrub_repaired: Metrics::get(&m.scrub_repaired),
+            backref_updates: Metrics::get(&m.backref_updates),
+            backref_lookups: Metrics::get(&m.backref_lookups),
+            backref_rebuilds: Metrics::get(&m.backref_rebuilds),
+            backref_mismatches: Metrics::get(&m.backref_mismatches),
             per_server: Vec::new(),
         };
         let mut ids = self.live_ids();
@@ -492,6 +594,13 @@ impl Cluster {
         // cluster-wide reference count.
         let per_server = self.cfg.dedup == DedupMode::DiskLocal;
         let mut report = AuditReport::default();
+        // each server's backreference index must be an exact inversion of
+        // its own OMAP (purely local invariant in every dedup mode)
+        for d in &dumps {
+            for m in &d.backref_mismatches {
+                report.violations.push(format!("osd.{}: {m}", d.server));
+            }
+        }
         let scopes: Vec<Vec<&AuditDump>> = if per_server {
             dumps.iter().map(|d| vec![d]).collect()
         } else {

@@ -24,9 +24,11 @@ pub enum ServerState {
 /// Per-server entry in the cluster map.
 #[derive(Clone, Debug)]
 pub struct ServerInfo {
+    /// The server's id.
     pub id: ServerId,
     /// CRUSH-style weight (relative capacity); straw2 draws scale with it.
     pub weight: f64,
+    /// Up/Down/Out membership state.
     pub state: ServerState,
 }
 
@@ -35,7 +37,9 @@ pub struct ServerInfo {
 /// epoch computes identical locations — no central lookup table exists.
 #[derive(Clone, Debug)]
 pub struct ClusterMap {
+    /// Monotonic version; bumped by every membership/weight change.
     pub epoch: u64,
+    /// All known servers (any state).
     pub servers: Vec<ServerInfo>,
 }
 

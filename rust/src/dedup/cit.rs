@@ -10,7 +10,9 @@ use crate::util::codec::{Reader, Writer};
 /// transaction not yet confirmed), 1 = valid (content confirmed present).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CommitFlag {
+    /// Transaction not yet confirmed; the chunk data may be missing.
     Invalid,
+    /// Content confirmed present on stable storage.
     Valid,
 }
 

@@ -1,24 +1,54 @@
 //! The Deduplication Metadata Shard (paper §2.2).
 //!
-//! Every storage server hosts one DM-Shard with two *separate* persistent
-//! structures — the Object Map and the Chunk Information Table — each its
-//! own [`KvStore`] instance with an independent lock ("reduced congestion
-//! on a single data structure when multiple I/Os access the data
-//! structure"). The shard also carries the *transaction lock* used only by
-//! the synchronous consistency comparators of Fig. 5(b); the paper's
-//! asynchronous tagged mode never takes it.
+//! Every storage server hosts one DM-Shard with three *separate*
+//! persistent structures — the Object Map, the Chunk Information Table
+//! and the backreference index — each its own [`KvStore`] instance with
+//! an independent lock ("reduced congestion on a single data structure
+//! when multiple I/Os access the data structure"). The shard also carries
+//! the *transaction lock* used only by the synchronous consistency
+//! comparators of Fig. 5(b); the paper's asynchronous tagged mode never
+//! takes it.
+//!
+//! The **backreference index** (DESIGN.md §6) is the inverted OMAP:
+//! `chunk fingerprint → referring (object, ordinals)` records keyed so
+//! that one prefix range read enumerates a fingerprint's referrers. It is
+//! *derived, non-authoritative* metadata — the OMAP is always the source
+//! of truth — maintained inside [`DmShard::omap_put`] /
+//! [`DmShard::omap_delete`] under the OMAP read-modify-write lock, fully
+//! re-derivable by [`DmShard::rebuild_backrefs`] (run after crash
+//! recovery and as the one-shot migration for pre-index stores) and
+//! cross-checked by [`DmShard::backref_audit`].
 
 use crate::dedup::cit::{CitEntry, CommitFlag};
 use crate::dedup::fingerprint::Fingerprint;
-use crate::dedup::omap::OmapEntry;
+use crate::dedup::omap::{backrefs_of, BackrefEntry, OmapEntry};
 use crate::error::Result;
 use crate::kvstore::KvStore;
+use std::collections::{HashMap, HashSet};
 use std::sync::Mutex;
+
+/// Index mutation counts returned by an OMAP write (for metrics and the
+/// modeled DM-Shard I/O cost).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BackrefDelta {
+    /// Backreference records written (inserted or overwritten).
+    pub added: u64,
+    /// Backreference records deleted (stale referrers of an overwrite).
+    pub removed: u64,
+}
+
+impl BackrefDelta {
+    /// Total index records touched.
+    pub fn total(&self) -> u64 {
+        self.added + self.removed
+    }
+}
 
 /// One server's deduplication metadata shard.
 pub struct DmShard {
     omap: Box<dyn KvStore>,
     cit: Box<dyn KvStore>,
+    backref: Box<dyn KvStore>,
     /// Transaction lock for the synchronous consistency comparators.
     pub tx_lock: Mutex<()>,
     /// Serializes CIT read-modify-writes: a fingerprint can be updated
@@ -26,24 +56,55 @@ pub struct DmShard {
     /// frontend lane (local chunks bypass the fabric), so `cit_update`
     /// must be atomic.
     rmw: Mutex<()>,
+    /// Serializes OMAP read-modify-writes so the backreference index is
+    /// diffed and applied atomically with respect to concurrent OMAP
+    /// mutations of the same object (frontend overwrite racing a
+    /// rebalance migration, rebuild racing a write).
+    omap_rmw: Mutex<()>,
 }
 
 impl DmShard {
-    /// Build over two KV stores (OMAP, CIT).
-    pub fn new(omap: Box<dyn KvStore>, cit: Box<dyn KvStore>) -> Self {
+    /// Build over three KV stores (OMAP, CIT, backreference index).
+    pub fn new(
+        omap: Box<dyn KvStore>,
+        cit: Box<dyn KvStore>,
+        backref: Box<dyn KvStore>,
+    ) -> Self {
         DmShard {
             omap,
             cit,
+            backref,
             tx_lock: Mutex::new(()),
             rmw: Mutex::new(()),
+            omap_rmw: Mutex::new(()),
         }
     }
 
     // ---- OMAP ----
 
-    /// Insert/replace an object's layout entry.
-    pub fn omap_put(&self, entry: &OmapEntry) -> Result<()> {
-        self.omap.put(entry.name.as_bytes(), &entry.encode())
+    /// Insert/replace an object's layout entry, keeping the backreference
+    /// index in step: stale referrer records of an overwritten layout are
+    /// deleted, the new layout's records are written. Returns the index
+    /// mutation counts.
+    pub fn omap_put(&self, entry: &OmapEntry) -> Result<BackrefDelta> {
+        let _guard = self.omap_rmw.lock().unwrap();
+        let old = self.omap_get(&entry.name)?;
+        self.omap.put(entry.name.as_bytes(), &entry.encode())?;
+        let mut delta = BackrefDelta::default();
+        let new_backrefs = backrefs_of(entry);
+        if let Some(old) = old {
+            let keep: HashSet<Fingerprint> = new_backrefs.iter().map(|b| b.fp).collect();
+            for stale in backrefs_of(&old) {
+                if !keep.contains(&stale.fp) && self.backref.delete(&stale.key())? {
+                    delta.removed += 1;
+                }
+            }
+        }
+        for b in new_backrefs {
+            self.backref.put(&b.key(), &b.encode())?;
+            delta.added += 1;
+        }
+        Ok(delta)
     }
 
     /// Fetch an object's layout entry.
@@ -54,9 +115,22 @@ impl DmShard {
         }
     }
 
-    /// Delete an object's layout entry; true if it existed.
-    pub fn omap_delete(&self, name: &str) -> Result<bool> {
-        self.omap.delete(name.as_bytes())
+    /// Delete an object's layout entry and its backreference records.
+    /// Returns the index mutation counts, or `None` when the object did
+    /// not exist (symmetric with [`DmShard::omap_put`]).
+    pub fn omap_delete(&self, name: &str) -> Result<Option<BackrefDelta>> {
+        let _guard = self.omap_rmw.lock().unwrap();
+        let Some(entry) = self.omap_get(name)? else {
+            return Ok(None);
+        };
+        let mut delta = BackrefDelta::default();
+        for b in backrefs_of(&entry) {
+            if self.backref.delete(&b.key())? {
+                delta.removed += 1;
+            }
+        }
+        self.omap.delete(name.as_bytes())?;
+        Ok(Some(delta))
     }
 
     /// All object names in this shard.
@@ -72,6 +146,183 @@ impl DmShard {
     /// Number of objects in this shard.
     pub fn omap_len(&self) -> usize {
         self.omap.len()
+    }
+
+    // ---- backreference index ----
+
+    /// This shard's local reference count for one fingerprint, answered
+    /// from the index in O(log n + referrers) — the `CountRefs` fast
+    /// path. Never touches the OMAP. All index readers take the OMAP
+    /// read-modify-write lock so they can never observe a half-applied
+    /// overwrite diff or a mid-flight [`DmShard::rebuild_backrefs`]
+    /// (which clears the index before repopulating it).
+    pub fn backref_refs(&self, fp: &Fingerprint) -> Result<u64> {
+        let _guard = self.omap_rmw.lock().unwrap();
+        self.backref_refs_locked(fp)
+    }
+
+    fn backref_refs_locked(&self, fp: &Fingerprint) -> Result<u64> {
+        let mut total = 0u64;
+        for (_key, value) in self.backref.scan_prefix(&BackrefEntry::prefix(fp))? {
+            total += BackrefEntry::decode_refs(&value)?;
+        }
+        Ok(total)
+    }
+
+    /// Batched [`DmShard::backref_refs`] (one scrub window's worth),
+    /// answered under one lock acquisition.
+    pub fn backref_refs_many(&self, fps: &[Fingerprint]) -> Result<Vec<u64>> {
+        let _guard = self.omap_rmw.lock().unwrap();
+        fps.iter().map(|fp| self.backref_refs_locked(fp)).collect()
+    }
+
+    /// All referrers of one fingerprint, fully decoded (diagnostics /
+    /// `ListRefs`).
+    pub fn backref_referrers(&self, fp: &Fingerprint) -> Result<Vec<BackrefEntry>> {
+        let _guard = self.omap_rmw.lock().unwrap();
+        self.backref
+            .scan_prefix(&BackrefEntry::prefix(fp))?
+            .into_iter()
+            .map(|(k, v)| BackrefEntry::decode(&k, &v))
+            .collect()
+    }
+
+    /// Every distinct fingerprint referenced by this shard's OMAP, with
+    /// its chunk length — one ordered index walk, no OMAP entry ever
+    /// decoded (the scrub ensure-phase input).
+    pub fn backref_referenced(&self) -> Result<Vec<(Fingerprint, u32)>> {
+        let _guard = self.omap_rmw.lock().unwrap();
+        let mut out: Vec<(Fingerprint, u32)> = Vec::new();
+        for (key, value) in self.backref.scan_prefix(&[])? {
+            let (fp, _) = BackrefEntry::decode_key(&key)?;
+            if out.last().map(|(last, _)| *last) == Some(fp) {
+                continue; // same fingerprint, next referrer — keys are ordered
+            }
+            let (len, _) = BackrefEntry::decode_value(&value)?;
+            out.push((fp, len));
+        }
+        Ok(out)
+    }
+
+    /// Number of backreference records in the index.
+    pub fn backref_len(&self) -> usize {
+        self.backref.len()
+    }
+
+    /// Re-derive the whole index from the OMAP (the source of truth).
+    /// Run as the one-shot migration for stores that predate the index
+    /// and after crash recovery (a crash can separate an OMAP write from
+    /// its index update). Applied as a diff — records already correct are
+    /// left untouched — so the clean-recovery common case appends nothing
+    /// to a log-structured backing store (a delete-all-then-rewrite would
+    /// grow `backref.log` by ~2× the index per restart, forever). Returns
+    /// the number of records in the rebuilt index.
+    pub fn rebuild_backrefs(&self) -> Result<usize> {
+        let _guard = self.omap_rmw.lock().unwrap();
+        self.rebuild_backrefs_locked()
+    }
+
+    fn rebuild_backrefs_locked(&self) -> Result<usize> {
+        let mut expected = self.derive_backrefs_locked()?;
+        let records = expected.len();
+        for (key, value) in self.backref.scan_prefix(&[])? {
+            let correct = expected.get(&key).map_or(false, |want| *want == value);
+            if correct {
+                expected.remove(&key); // already right: no churn
+            } else {
+                self.backref.delete(&key)?; // stale or drifted
+            }
+        }
+        for (key, value) in expected {
+            self.backref.put(&key, &value)?;
+        }
+        Ok(records)
+    }
+
+    /// The index the OMAP implies: every layout entry exploded to its
+    /// backref `(key, value)` records. Callers hold `omap_rmw`.
+    fn derive_backrefs_locked(&self) -> Result<HashMap<Vec<u8>, Vec<u8>>> {
+        let mut expected: HashMap<Vec<u8>, Vec<u8>> = HashMap::new();
+        for name in self.omap_names()? {
+            if let Some(entry) = self.omap_get(&name)? {
+                for b in backrefs_of(&entry) {
+                    expected.insert(b.key(), b.encode());
+                }
+            }
+        }
+        Ok(expected)
+    }
+
+    /// Cross-check the index against the OMAP. Returns one human-readable
+    /// line per discrepancy (stale record, missing record, value drift);
+    /// empty means index ≡ OMAP. Quiescent-state checker: concurrent OMAP
+    /// writes are excluded by the OMAP read-modify-write lock, but a
+    /// mutation queued behind the audit will of course change the answer.
+    pub fn backref_audit(&self) -> Result<Vec<String>> {
+        let _guard = self.omap_rmw.lock().unwrap();
+        self.backref_audit_locked()
+    }
+
+    fn backref_audit_locked(&self) -> Result<Vec<String>> {
+        let mut expected = self.derive_backrefs_locked()?;
+        let mut problems = Vec::new();
+        for (key, value) in self.backref.scan_prefix(&[])? {
+            match expected.remove(&key) {
+                None => problems.push(format!(
+                    "stale backref record {:?} (no OMAP reference)",
+                    BackrefEntry::decode_key(&key)
+                )),
+                Some(want) if want != value => problems.push(format!(
+                    "backref drift for {:?}: index disagrees with OMAP layout",
+                    BackrefEntry::decode_key(&key)
+                )),
+                Some(_) => {}
+            }
+        }
+        for key in expected.keys() {
+            problems.push(format!(
+                "missing backref record {:?} (OMAP reference not indexed)",
+                BackrefEntry::decode_key(key)
+            ));
+        }
+        Ok(problems)
+    }
+
+    /// The [`crate::storage::proto::Req::RebuildBackrefs`] body: audit,
+    /// then re-derive, under ONE lock acquisition — a foreground OMAP
+    /// write slipping between a separate audit and rebuild would make the
+    /// reported mismatch count describe drift the rebuild never saw.
+    /// Returns `(records in the rebuilt index, pre-rebuild discrepancies)`.
+    pub fn audit_and_rebuild_backrefs(&self) -> Result<(usize, Vec<String>)> {
+        let _guard = self.omap_rmw.lock().unwrap();
+        let problems = self.backref_audit_locked()?;
+        let records = self.rebuild_backrefs_locked()?;
+        Ok((records, problems))
+    }
+
+    /// Reference implementation of local reference counting: a full OMAP
+    /// table walk, decoding every layout entry. O(objects × chunks) per
+    /// call — kept as the audit/bench baseline the index is measured
+    /// against; production paths use [`DmShard::backref_refs_many`].
+    pub fn count_refs_scan(&self, fps: &[Fingerprint]) -> Result<Vec<u64>> {
+        let wanted: HashSet<Fingerprint> = fps.iter().copied().collect();
+        let mut counts: HashMap<Fingerprint, u64> = HashMap::with_capacity(wanted.len());
+        for name in self.omap_names()? {
+            let Some(entry) = self.omap_get(&name)? else {
+                continue;
+            };
+            for (fp, _) in &entry.chunks {
+                if wanted.contains(fp) {
+                    *counts.entry(*fp).or_insert(0) += 1;
+                }
+            }
+        }
+        // answer by position so a fingerprint queried twice (windows are
+        // arbitrary slices) gets its count at every position
+        Ok(fps
+            .iter()
+            .map(|fp| counts.get(fp).copied().unwrap_or(0))
+            .collect())
     }
 
     // ---- CIT ----
@@ -144,10 +395,11 @@ impl DmShard {
         self.cit.len()
     }
 
-    /// Flush both stores.
+    /// Flush all three stores.
     pub fn sync(&self) -> Result<()> {
         self.omap.sync()?;
-        self.cit.sync()
+        self.cit.sync()?;
+        self.backref.sync()
     }
 }
 
@@ -157,7 +409,11 @@ mod tests {
     use crate::kvstore::MemKv;
 
     fn shard() -> DmShard {
-        DmShard::new(Box::new(MemKv::new()), Box::new(MemKv::new()))
+        DmShard::new(
+            Box::new(MemKv::new()),
+            Box::new(MemKv::new()),
+            Box::new(MemKv::new()),
+        )
     }
 
     #[test]
@@ -172,8 +428,89 @@ mod tests {
         assert_eq!(s.omap_get("obj").unwrap().unwrap(), e);
         assert_eq!(s.omap_len(), 1);
         assert_eq!(s.omap_names().unwrap(), vec!["obj".to_string()]);
-        assert!(s.omap_delete("obj").unwrap());
+        let d = s.omap_delete("obj").unwrap().expect("existed");
+        assert_eq!(d, BackrefDelta { added: 0, removed: 1 });
         assert!(s.omap_get("obj").unwrap().is_none());
+        assert!(s.omap_delete("obj").unwrap().is_none(), "second delete");
+    }
+
+    #[test]
+    fn backref_index_tracks_omap_mutations() {
+        let s = shard();
+        let c1 = Fingerprint::of(b"c1");
+        let c2 = Fingerprint::of(b"c2");
+        let c3 = Fingerprint::of(b"c3");
+        // two objects share c1; "a" references c1 twice
+        let a = OmapEntry::new(
+            "a".into(),
+            Fingerprint::of(b"a"),
+            vec![(c1, 10), (c2, 20), (c1, 10)],
+        );
+        let b = OmapEntry::new("b".into(), Fingerprint::of(b"b"), vec![(c1, 10)]);
+        let d = s.omap_put(&a).unwrap();
+        assert_eq!(d, BackrefDelta { added: 2, removed: 0 });
+        s.omap_put(&b).unwrap();
+        assert_eq!(s.backref_refs(&c1).unwrap(), 3);
+        assert_eq!(s.backref_refs(&c2).unwrap(), 1);
+        assert_eq!(s.backref_refs(&c3).unwrap(), 0);
+        assert_eq!(
+            s.backref_refs_many(&[c1, c2, c3]).unwrap(),
+            s.count_refs_scan(&[c1, c2, c3]).unwrap()
+        );
+        let referrers = s.backref_referrers(&c1).unwrap();
+        assert_eq!(referrers.len(), 2);
+        let referenced = s.backref_referenced().unwrap();
+        assert_eq!(referenced.len(), 2, "distinct fps: c1, c2");
+        assert!(s.backref_audit().unwrap().is_empty());
+
+        // overwrite "a" dropping c2, adding c3 → stale c2 record removed
+        let a2 = OmapEntry::new("a".into(), Fingerprint::of(b"a2"), vec![(c1, 10), (c3, 30)]);
+        let d = s.omap_put(&a2).unwrap();
+        assert_eq!(d, BackrefDelta { added: 2, removed: 1 });
+        assert_eq!(s.backref_refs(&c2).unwrap(), 0);
+        assert_eq!(s.backref_refs(&c1).unwrap(), 2);
+        assert_eq!(s.backref_refs(&c3).unwrap(), 1);
+        assert!(s.backref_audit().unwrap().is_empty());
+
+        // delete "b" → its c1 record goes too
+        assert!(s.omap_delete("b").unwrap().is_some());
+        assert_eq!(s.backref_refs(&c1).unwrap(), 1);
+        assert!(s.backref_audit().unwrap().is_empty());
+    }
+
+    #[test]
+    fn backref_rebuild_and_audit_catch_divergence() {
+        let s = shard();
+        let c1 = Fingerprint::of(b"c1");
+        s.omap_put(&OmapEntry::new(
+            "a".into(),
+            Fingerprint::of(b"a"),
+            vec![(c1, 10)],
+        ))
+        .unwrap();
+        // simulate a torn update: nuke the index behind the shard's back
+        for key in s.backref.keys().unwrap() {
+            s.backref.delete(&key).unwrap();
+        }
+        assert_eq!(s.backref_refs(&c1).unwrap(), 0);
+        let problems = s.backref_audit().unwrap();
+        assert_eq!(problems.len(), 1);
+        assert!(problems[0].contains("missing backref"), "{problems:?}");
+        // rebuild re-derives from the OMAP
+        assert_eq!(s.rebuild_backrefs().unwrap(), 1);
+        assert!(s.backref_audit().unwrap().is_empty());
+        assert_eq!(s.backref_refs(&c1).unwrap(), 1);
+        // a stale record (referrer with no OMAP entry) is also caught
+        let ghost = BackrefEntry {
+            fp: c1,
+            object: "ghost".into(),
+            len: 10,
+            ordinals: vec![0],
+        };
+        s.backref.put(&ghost.key(), &ghost.encode()).unwrap();
+        let problems = s.backref_audit().unwrap();
+        assert_eq!(problems.len(), 1);
+        assert!(problems[0].contains("stale backref"), "{problems:?}");
     }
 
     #[test]

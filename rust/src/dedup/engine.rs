@@ -186,7 +186,13 @@ fn put_dedup(sh: &OsdShared, name: &str, data: &[u8], local_only: bool) -> Resul
             .collect(),
     );
     sh.charge_meta_io(); // modeled DM-Shard write
-    sh.shard.omap_put(&entry)?;
+    let backrefs = sh.shard.omap_put(&entry)?;
+    if backrefs.total() > 0 {
+        // the backreference-index column rides the same DM-Shard
+        // transaction: one more modeled synchronous write
+        sh.charge_meta_io();
+        Metrics::add(&sh.metrics.backref_updates, backrefs.total());
+    }
 
     // SyncObject: the single synchronous object-flag I/O.
     if sh.cfg.consistency == ConsistencyMode::SyncObject {
@@ -273,7 +279,11 @@ fn put_central(sh: &OsdShared, name: &str, data: &[u8]) -> Result<(u64, u64)> {
     let old_entry = sh.shard.omap_get(name)?;
     let entry = OmapEntry::new(name.to_string(), object_fingerprint(&digests), entry_chunks);
     sh.charge_meta_io(); // modeled DM-Shard write
-    sh.shard.omap_put(&entry)?;
+    let backrefs = sh.shard.omap_put(&entry)?;
+    if backrefs.total() > 0 {
+        sh.charge_meta_io(); // modeled backref-index write
+        Metrics::add(&sh.metrics.backref_updates, backrefs.total());
+    }
     if let Some(old) = old_entry {
         // central keeps all CIT entries locally
         let mut counts: HashMap<Fingerprint, u64> = HashMap::new();
@@ -553,8 +563,15 @@ pub fn delete_object(sh: &OsdShared, name: &str) -> Result<bool> {
             };
             let local_only =
                 sh.cfg.dedup == DedupMode::DiskLocal || sh.cfg.dedup == DedupMode::Central;
+            // drop the layout and its backreference records first, then
+            // decrement chunk refcounts: a crash in between leaves
+            // refcounts too HIGH (repaired down by the scrub light pass),
+            // never a zero refcount with live-looking backrefs — which
+            // would fight GC's index cross-match.
+            if let Some(delta) = sh.shard.omap_delete(name)? {
+                Metrics::add(&sh.metrics.backref_updates, delta.removed);
+            }
             release_refs(sh, &entry, local_only);
-            sh.shard.omap_delete(name)?;
             for peer in sh.object_chain(name).iter().skip(1) {
                 if let Ok(addr) = sh.dir.lookup(*peer, Lane::Replica) {
                     let _ = addr.call(

@@ -11,12 +11,16 @@
 //!   reclaimed (stat → flip, or restore from a replica copy — "recover
 //!   reference errors and lost data chunks"). Valid entries whose
 //!   refcount dropped to zero (deleted objects) age out the same way.
+//!   Before any reclaim, the candidate is cross-matched against the local
+//!   **backreference index** (an O(referrers) range read, DESIGN.md §6):
+//!   a refcount that leaked to zero while OMAP references survive is
+//!   repaired, never reclaimed.
 //! * [`recovery_scan`] — after a restart: the in-memory registration
 //!   queue died with the server, so every invalid CIT entry is re-examined
 //!   (present → re-register for confirmation; missing → left for GC).
 
 use crate::dedup::cit::CommitFlag;
-use crate::dedup::engine::chunk_copy_key;
+use crate::dedup::engine::{chunk_copy_key, DedupMode};
 use crate::dedup::fingerprint::Fingerprint;
 use crate::error::Result;
 use crate::metrics::Metrics;
@@ -59,17 +63,45 @@ pub fn run(sh: &OsdShared, threshold_ms: u64) -> Result<GcReport> {
         let aged = now.saturating_sub(e.flagged_at_ms) >= threshold_ms;
         match (e.flag, e.refcount) {
             (CommitFlag::Valid, 0) if aged => {
-                // deleted-object remnant: reclaim.
-                reclaim(sh, &fp)?;
-                report.reclaimed += 1;
+                // deleted-object remnant — unless the backref index says
+                // live references leaked the count to zero.
+                if let Some(live) = indexed_live_refs(sh, &fp)? {
+                    sh.charge_meta_io(); // modeled DM-Shard write
+                    sh.shard.cit_update(&fp, |cur| {
+                        cur.map(|mut e| {
+                            e.refcount = e.refcount.max(live);
+                            e
+                        })
+                    })?;
+                    Metrics::add(&sh.metrics.repairs, 1);
+                    report.repaired += 1;
+                } else {
+                    reclaim(sh, &fp)?;
+                    report.reclaimed += 1;
+                }
             }
             (CommitFlag::Valid, _) => {}
             (CommitFlag::Invalid, _) if !aged => report.young += 1,
             (CommitFlag::Invalid, 0) => {
                 // cross-match: nothing re-validated it → garbage of a
-                // failed transaction.
-                reclaim(sh, &fp)?;
-                report.reclaimed += 1;
+                // failed transaction — again index-checked first.
+                if let Some(live) = indexed_live_refs(sh, &fp)? {
+                    sh.charge_meta_io(); // modeled DM-Shard write
+                    sh.shard.cit_update(&fp, |cur| {
+                        cur.map(|mut e| {
+                            e.refcount = e.refcount.max(live);
+                            e
+                        })
+                    })?;
+                    if repair(sh, &fp)? {
+                        report.repaired += 1;
+                    } else {
+                        report.lost += 1;
+                    }
+                } else {
+                    reclaim(sh, &fp)?;
+                    report.reclaimed += 1;
+                }
             }
             (CommitFlag::Invalid, _) => {
                 // referenced but invalid: repair rather than reclaim.
@@ -100,6 +132,26 @@ pub fn recovery_scan(sh: &OsdShared) -> Result<usize> {
         }
     }
     Ok(re_registered)
+}
+
+/// GC cross-match against the local backreference index: `Some(n)` when
+/// this server's own OMAP still holds `n > 0` references to `fp` — a
+/// reclaim would lose live data, so the caller repairs instead. In
+/// cluster-wide mode the local index only sees local objects, so `n` is a
+/// *lower bound* on the cluster-wide count (sufficient to veto a reclaim;
+/// the scrub light pass settles the exact count). `None` means the local
+/// index holds no references — in the local-metadata modes (disk-local,
+/// central) that verdict is authoritative; in cluster-wide mode remote
+/// references are still possible, but those keep the refcount above zero
+/// via the normal DecRef protocol, so a zero count plus an empty local
+/// index is the same evidence the paper's cross-match acts on.
+fn indexed_live_refs(sh: &OsdShared, fp: &Fingerprint) -> Result<Option<u64>> {
+    if sh.cfg.dedup == DedupMode::None {
+        return Ok(None);
+    }
+    let n = sh.shard.backref_refs(fp)?;
+    Metrics::add(&sh.metrics.backref_lookups, 1);
+    Ok(if n > 0 { Some(n) } else { None })
 }
 
 fn reclaim(sh: &OsdShared, fp: &Fingerprint) -> Result<()> {

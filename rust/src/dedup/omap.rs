@@ -1,7 +1,11 @@
 //! Object Map (OMAP) records — the layout/reconstruction half of the
 //! DM-Shard (paper §2.2): object name → object fingerprint + ordered
 //! chunk fingerprint list (with per-chunk lengths so short tail chunks
-//! reassemble exactly).
+//! reassemble exactly) — plus the [`BackrefEntry`] codec of the
+//! **backreference index**, the inverted mapping `chunk fingerprint →
+//! referring objects` that lets `CountRefs`, GC cross-matching and scrub
+//! reconciliation answer from an indexed range read instead of a full
+//! OMAP scan (DESIGN.md §6).
 
 use crate::dedup::fingerprint::Fingerprint;
 use crate::error::{Error, Result};
@@ -71,6 +75,137 @@ impl OmapEntry {
     }
 }
 
+/// One backreference-index entry: the set of positions (`ordinals`) at
+/// which one object references one chunk fingerprint.
+///
+/// **Keyspace layout.** The index key is the 20-byte fingerprint digest
+/// followed by the raw object-name bytes, so all referrers of a
+/// fingerprint are contiguous under the fixed-width prefix
+/// [`BackrefEntry::prefix`] and a single [`crate::kvstore::KvStore::scan_prefix`]
+/// range read enumerates them in O(log n + referrers). The fingerprint is
+/// fixed-width, so key parsing is unambiguous without a separator.
+///
+/// The value carries the chunk length (denormalized from the OMAP entry —
+/// the scrub ensure-phase needs it to seed a CIT entry without touching
+/// the OMAP) and the ordinal list; the entry's reference multiplicity is
+/// `ordinals.len()` (one object can reference the same chunk at several
+/// positions).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BackrefEntry {
+    /// The referenced chunk fingerprint.
+    pub fp: Fingerprint,
+    /// Name of the referring object (an OMAP key on the same server).
+    pub object: String,
+    /// Chunk length in bytes (denormalized from the OMAP chunk list).
+    pub len: u32,
+    /// Positions in the object's chunk list that reference `fp`
+    /// (ascending; never empty for a stored entry).
+    pub ordinals: Vec<u32>,
+}
+
+impl BackrefEntry {
+    /// Index key of this entry (`fp bytes ‖ object-name bytes`).
+    pub fn key(&self) -> Vec<u8> {
+        Self::key_for(&self.fp, &self.object)
+    }
+
+    /// Index key for a (fingerprint, object) pair.
+    pub fn key_for(fp: &Fingerprint, object: &str) -> Vec<u8> {
+        let mut k = Vec::with_capacity(20 + object.len());
+        k.extend_from_slice(&fp.to_bytes());
+        k.extend_from_slice(object.as_bytes());
+        k
+    }
+
+    /// Fixed-width range-scan prefix covering every referrer of `fp`.
+    pub fn prefix(fp: &Fingerprint) -> [u8; 20] {
+        fp.to_bytes()
+    }
+
+    /// Parse an index key back into its (fingerprint, object) pair.
+    pub fn decode_key(key: &[u8]) -> Result<(Fingerprint, String)> {
+        if key.len() < 20 {
+            return Err(Error::Corrupt("backref key too short".into()));
+        }
+        let fp = Fingerprint::from_bytes(&key[..20])
+            .ok_or_else(|| Error::Corrupt("bad backref fp".into()))?;
+        let object = String::from_utf8(key[20..].to_vec())
+            .map_err(|_| Error::Corrupt("backref object name not utf-8".into()))?;
+        Ok((fp, object))
+    }
+
+    /// Reference multiplicity carried by this entry.
+    pub fn refs(&self) -> u64 {
+        self.ordinals.len() as u64
+    }
+
+    /// Encode the value half (`len`, ordinal count, ordinals).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.put_u32(self.len);
+        w.put_u32(self.ordinals.len() as u32);
+        for o in &self.ordinals {
+            w.put_u32(*o);
+        }
+        w.into_bytes()
+    }
+
+    /// Decode a full entry from an index `(key, value)` pair.
+    pub fn decode(key: &[u8], value: &[u8]) -> Result<Self> {
+        let (fp, object) = Self::decode_key(key)?;
+        let (len, ordinals) = Self::decode_value(value)?;
+        Ok(BackrefEntry {
+            fp,
+            object,
+            len,
+            ordinals,
+        })
+    }
+
+    /// Decode only the value half: `(chunk len, ordinals)`. Cheap path for
+    /// `CountRefs`, which does not need the object name parsed.
+    pub fn decode_value(value: &[u8]) -> Result<(u32, Vec<u32>)> {
+        let mut r = Reader::new(value);
+        let len = r.get_u32()?;
+        let n = r.get_u32()? as usize;
+        let mut ordinals = Vec::with_capacity(n);
+        for _ in 0..n {
+            ordinals.push(r.get_u32()?);
+        }
+        Ok((len, ordinals))
+    }
+
+    /// Decode only the reference multiplicity (the ordinal count) without
+    /// materializing the ordinal list — the `CountRefs` hot path.
+    pub fn decode_refs(value: &[u8]) -> Result<u64> {
+        let mut r = Reader::new(value);
+        let _len = r.get_u32()?;
+        Ok(r.get_u32()? as u64)
+    }
+}
+
+/// Explode an OMAP entry into its backreference-index entries: one
+/// [`BackrefEntry`] per distinct chunk fingerprint, ordinals ascending.
+pub fn backrefs_of(entry: &OmapEntry) -> Vec<BackrefEntry> {
+    let mut by_fp: std::collections::HashMap<Fingerprint, BackrefEntry> =
+        std::collections::HashMap::new();
+    for (ordinal, (fp, len)) in entry.chunks.iter().enumerate() {
+        by_fp
+            .entry(*fp)
+            .or_insert_with(|| BackrefEntry {
+                fp: *fp,
+                object: entry.name.clone(),
+                len: *len,
+                ordinals: Vec::new(),
+            })
+            .ordinals
+            .push(ordinal as u32);
+    }
+    let mut out: Vec<BackrefEntry> = by_fp.into_values().collect();
+    out.sort_by_key(|b| b.fp);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -114,5 +249,76 @@ mod tests {
         let name_len = 4 + e.name.len();
         b[name_len] = 19;
         assert!(OmapEntry::decode(&b).is_err());
+    }
+
+    #[test]
+    fn backref_codec_roundtrip() {
+        let e = BackrefEntry {
+            fp: Fingerprint::of(b"chunk"),
+            object: "vm-image-7".into(),
+            len: 4096,
+            ordinals: vec![0, 3, 17],
+        };
+        let d = BackrefEntry::decode(&e.key(), &e.encode()).unwrap();
+        assert_eq!(d, e);
+        assert_eq!(d.refs(), 3);
+        assert_eq!(BackrefEntry::decode_refs(&e.encode()).unwrap(), 3);
+        assert_eq!(
+            BackrefEntry::decode_value(&e.encode()).unwrap(),
+            (4096, vec![0, 3, 17])
+        );
+        // the key is prefix ‖ name, parseable without a separator
+        assert!(e.key().starts_with(&BackrefEntry::prefix(&e.fp)));
+        assert_eq!(
+            BackrefEntry::decode_key(&e.key()).unwrap(),
+            (e.fp, "vm-image-7".to_string())
+        );
+    }
+
+    #[test]
+    fn backref_codec_rejects_corrupt() {
+        assert!(BackrefEntry::decode_key(b"short").is_err());
+        let e = BackrefEntry {
+            fp: Fingerprint::of(b"c"),
+            object: "o".into(),
+            len: 8,
+            ordinals: vec![1],
+        };
+        let mut v = e.encode();
+        v.truncate(6); // truncated ordinal list
+        assert!(BackrefEntry::decode_value(&v).is_err());
+    }
+
+    #[test]
+    fn backrefs_of_collapses_multiplicity() {
+        let dup = Fingerprint::of(b"dup");
+        let uniq = Fingerprint::of(b"uniq");
+        let e = OmapEntry::new(
+            "obj".into(),
+            Fingerprint::of(b"obj"),
+            vec![(dup, 100), (uniq, 200), (dup, 100)],
+        );
+        let brs = backrefs_of(&e);
+        assert_eq!(brs.len(), 2, "one entry per distinct fingerprint");
+        let d = brs.iter().find(|b| b.fp == dup).unwrap();
+        assert_eq!(d.ordinals, vec![0, 2]);
+        assert_eq!(d.refs(), 2);
+        assert_eq!(d.len, 100);
+        let u = brs.iter().find(|b| b.fp == uniq).unwrap();
+        assert_eq!(u.ordinals, vec![1]);
+        assert!(brs.iter().all(|b| b.object == "obj"));
+    }
+
+    #[test]
+    fn backref_keys_disjoint_per_object() {
+        let fp = Fingerprint::of(b"c");
+        assert_ne!(
+            BackrefEntry::key_for(&fp, "a"),
+            BackrefEntry::key_for(&fp, "b")
+        );
+        assert_ne!(
+            BackrefEntry::key_for(&Fingerprint::of(b"c1"), "a"),
+            BackrefEntry::key_for(&Fingerprint::of(b"c2"), "a")
+        );
     }
 }

@@ -19,7 +19,7 @@
 use super::KvStore;
 use crate::error::{Error, Result};
 use crate::util::codec::crc32;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
@@ -31,9 +31,11 @@ const HEADER: usize = 4 + 1 + 4 + 4; // crc + kind + klen + vlen
 
 struct Inner {
     file: File,
-    index: HashMap<Vec<u8>, (u64, u32)>, // key -> (value offset, vlen)
-    tail: u64,                           // append position
-    dead_bytes: u64,                     // garbage from overwrites/deletes
+    // key -> (value offset, vlen); ordered so prefix range reads (the
+    // backreference index's access pattern) avoid full-index filters
+    index: BTreeMap<Vec<u8>, (u64, u32)>,
+    tail: u64,       // append position
+    dead_bytes: u64, // garbage from overwrites/deletes
 }
 
 /// Persistent append-only KV store with crash recovery and compaction.
@@ -58,7 +60,7 @@ impl LogKv {
         let mut data = Vec::new();
         file.read_to_end(&mut data)?;
 
-        let mut index = HashMap::new();
+        let mut index = BTreeMap::new();
         let mut dead_bytes = 0u64;
         let mut pos = 0usize;
         let valid_end = loop {
@@ -141,7 +143,7 @@ impl LogKv {
             .open(&tmp_path)?;
         // copy live records
         let keys: Vec<Vec<u8>> = inner.index.keys().cloned().collect();
-        let mut new_index = HashMap::with_capacity(keys.len());
+        let mut new_index = BTreeMap::new();
         let mut new_tail = 0u64;
         for key in keys {
             let (voff, vlen) = inner.index[&key];
@@ -214,6 +216,28 @@ impl KvStore for LogKv {
         Ok(self.inner.lock().unwrap().index.keys().cloned().collect())
     }
 
+    fn scan_prefix(&self, prefix: &[u8]) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
+        let mut inner = self.inner.lock().unwrap();
+        // ordered range over the BTree index, then one value read each
+        let locations: Vec<(Vec<u8>, u64, u32)> = inner
+            .index
+            .range(prefix.to_vec()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, &(voff, vlen))| (k.clone(), voff, vlen))
+            .collect();
+        let mut out = Vec::with_capacity(locations.len());
+        for (key, voff, vlen) in locations {
+            let mut value = vec![0u8; vlen as usize];
+            inner.file.seek(SeekFrom::Start(voff))?;
+            inner.file.read_exact(&mut value)?;
+            out.push((key, value));
+        }
+        // restore append position for the next write
+        let tail = inner.tail;
+        inner.file.seek(SeekFrom::Start(tail))?;
+        Ok(out)
+    }
+
     fn len(&self) -> usize {
         self.inner.lock().unwrap().index.len()
     }
@@ -250,6 +274,12 @@ mod tests {
     fn conformance_binary() {
         let d = tmpdir("binary");
         conformance::binary_safety(&LogKv::open(d.join("kv.log")).unwrap());
+    }
+
+    #[test]
+    fn conformance_scan_prefix() {
+        let d = tmpdir("scan");
+        conformance::prefix_scan(&LogKv::open(d.join("kv.log")).unwrap());
     }
 
     #[test]

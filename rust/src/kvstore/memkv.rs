@@ -37,6 +37,18 @@ impl KvStore for MemKv {
         Ok(self.map.lock().unwrap().keys().cloned().collect())
     }
 
+    fn scan_prefix(&self, prefix: &[u8]) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
+        // ordered range read off the BTree: O(log n + matches)
+        Ok(self
+            .map
+            .lock()
+            .unwrap()
+            .range(prefix.to_vec()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect())
+    }
+
     fn len(&self) -> usize {
         self.map.lock().unwrap().len()
     }
@@ -59,6 +71,11 @@ mod tests {
     #[test]
     fn conformance_binary() {
         conformance::binary_safety(&MemKv::new());
+    }
+
+    #[test]
+    fn conformance_scan_prefix() {
+        conformance::prefix_scan(&MemKv::new());
     }
 
     #[test]

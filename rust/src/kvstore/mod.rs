@@ -34,6 +34,25 @@ pub trait KvStore: Send + Sync {
     fn delete(&self, key: &[u8]) -> Result<bool>;
     /// Snapshot of all live keys (used by GC scans and rebalancing).
     fn keys(&self) -> Result<Vec<Vec<u8>>>;
+    /// Snapshot of all live `(key, value)` pairs whose key starts with
+    /// `prefix`, in ascending key order. This is the indexed range read
+    /// the backreference index is built on: both provided stores answer
+    /// it from an ordered index (O(log n + matches)), so callers can rely
+    /// on it being cheap. The default implementation is a correct but
+    /// O(n) fallback for third-party stores.
+    fn scan_prefix(&self, prefix: &[u8]) -> Result<Vec<(Vec<u8>, Vec<u8>)>> {
+        let mut out: Vec<(Vec<u8>, Vec<u8>)> = Vec::new();
+        for key in self.keys()? {
+            if !key.starts_with(prefix) {
+                continue;
+            }
+            if let Some(value) = self.get(&key)? {
+                out.push((key, value));
+            }
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(out)
+    }
     /// Number of live keys.
     fn len(&self) -> usize;
     /// True when no live keys exist.
@@ -75,5 +94,39 @@ pub(crate) mod conformance {
         assert_eq!(kv.get(b"").unwrap().unwrap(), b"empty-key");
         kv.put(b"empty-val", b"").unwrap();
         assert_eq!(kv.get(b"empty-val").unwrap().unwrap(), b"");
+    }
+
+    pub fn prefix_scan(kv: &dyn KvStore) {
+        kv.put(b"aa:1", b"v1").unwrap();
+        kv.put(b"aa:2", b"v2").unwrap();
+        kv.put(b"ab:1", b"v3").unwrap();
+        kv.put(b"b", b"v4").unwrap();
+        // binary prefix one bit past 0xFF boundary behavior
+        kv.put(&[0xFF, 0x00], b"hi").unwrap();
+        kv.put(&[0xFF, 0x01], b"ho").unwrap();
+        let hits = kv.scan_prefix(b"aa:").unwrap();
+        assert_eq!(
+            hits,
+            vec![
+                (b"aa:1".to_vec(), b"v1".to_vec()),
+                (b"aa:2".to_vec(), b"v2".to_vec()),
+            ],
+            "ordered, prefix-bounded"
+        );
+        assert_eq!(kv.scan_prefix(&[0xFF]).unwrap().len(), 2);
+        assert_eq!(kv.scan_prefix(b"zz").unwrap(), vec![]);
+        // empty prefix = everything, ascending
+        let all = kv.scan_prefix(b"").unwrap();
+        assert_eq!(all.len(), kv.len());
+        let mut sorted = all.clone();
+        sorted.sort_by(|a, b| a.0.cmp(&b.0));
+        assert_eq!(all, sorted);
+        // overwrites and deletes are reflected
+        kv.put(b"aa:1", b"v1b").unwrap();
+        kv.delete(b"aa:2").unwrap();
+        assert_eq!(
+            kv.scan_prefix(b"aa:").unwrap(),
+            vec![(b"aa:1".to_vec(), b"v1b".to_vec())]
+        );
     }
 }

@@ -25,6 +25,11 @@
 //!   epoch-aware integrity walks that verify and heal refcounts, commit
 //!   flags, chunk data and replica copies while foreground I/O continues
 //!   ([`scrub`]);
+//! * a **backreference index** per DM-Shard — the inverted OMAP
+//!   (`chunk fingerprint → referring objects`) maintained transactionally
+//!   with object writes, so reference counting for GC, scrub and audits
+//!   is an indexed range read instead of a full OMAP scan
+//!   ([`dedup::dmshard`], DESIGN.md §6);
 //! * evaluation machinery: an FIO-like workload generator ([`workload`]),
 //!   crash-point failure injection ([`failure`]) and metrics ([`metrics`]).
 //!
@@ -48,6 +53,12 @@
 //!
 //! See `examples/` for the end-to-end drivers and `DESIGN.md` for the
 //! paper-to-module map.
+
+// Every public item carries rustdoc; CI builds the docs with warnings
+// denied (`cargo doc --no-deps`), so a missing doc fails the build there
+// while staying a warning locally.
+#![warn(missing_docs)]
+#![warn(rustdoc::broken_intra_doc_links)]
 
 pub mod api;
 pub mod cluster;

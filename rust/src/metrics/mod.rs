@@ -36,6 +36,16 @@ pub struct Metrics {
     /// Scrub repairs applied (restored primaries, rewritten bit-rot,
     /// re-pushed replica copies).
     pub scrub_repaired: AtomicU64,
+    /// Backreference-index records written or deleted by OMAP mutations.
+    pub backref_updates: AtomicU64,
+    /// Fingerprints whose reference count was answered from the
+    /// backreference index (the `CountRefs` fast path).
+    pub backref_lookups: AtomicU64,
+    /// Full index re-derivations from the OMAP (crash recovery + the
+    /// one-shot pre-index store migration).
+    pub backref_rebuilds: AtomicU64,
+    /// Index ↔ OMAP discrepancies found by audits (0 in steady state).
+    pub backref_mismatches: AtomicU64,
     /// Write-path latency histogram.
     pub put_latency: Histogram,
 }

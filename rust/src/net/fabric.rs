@@ -27,6 +27,7 @@ pub enum Lane {
 
 /// One request plus its reply channel.
 pub struct Envelope<Req, Resp> {
+    /// The request payload.
     pub req: Req,
     reply: Sender<Resp>,
 }

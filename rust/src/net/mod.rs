@@ -19,8 +19,9 @@
 //! this graph: it calls peer backend lanes (`CountRefs`, `EnsureCit`) and
 //! replica lanes (`VerifyCopy`, `FetchCopy`, `PutCopy`) but serves no
 //! inbound requests itself, so it can never appear in a wait cycle. Its
-//! handlers on the backend/replica lanes do strictly local work (an OMAP
-//! scan, a CIT upsert, a local hash), preserving the lane order above.
+//! handlers on the backend/replica lanes do strictly local work (a
+//! backreference-index range read, a CIT upsert, a local hash),
+//! preserving the lane order above.
 
 pub mod fabric;
 

@@ -24,12 +24,19 @@ use std::sync::Mutex;
 /// One artifact listed in `artifacts/manifest.tsv`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ArtifactSpec {
+    /// Artifact name (kernel + shape variant).
     pub name: String,
+    /// Artifact kind (e.g. `hlo`).
     pub kind: String,
+    /// Batch dimension the kernel was lowered for.
     pub batch: usize,
+    /// Chunk size in bytes the kernel was lowered for.
     pub chunk_bytes: usize,
+    /// Pallas tile size.
     pub tile: usize,
+    /// Lane mask baked into the lowering.
     pub mask: u32,
+    /// Path to the compiled artifact file.
     pub file: PathBuf,
 }
 

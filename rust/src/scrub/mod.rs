@@ -13,7 +13,9 @@
 //!
 //! * **Light scrub** — for every window it resolves the cluster-wide OMAP
 //!   reference count of each fingerprint via batched [`Req::CountRefs`]
-//!   fabric messages (instead of the old full-dump scrub), fixes refcount
+//!   fabric messages, each answered from the holder's backreference
+//!   index in O(referrers) (instead of the old full-OMAP table walk,
+//!   see DESIGN.md §6), fixes refcount
 //!   drift with a compare-and-swap update, confirms commit flags against
 //!   chunk presence, and restores missing primaries from replica copies.
 //! * **Deep scrub** — additionally re-reads every chunk, re-fingerprints
@@ -60,7 +62,6 @@ use crate::net::Lane;
 use crate::storage::osd::OsdShared;
 use crate::storage::proto::{Req, Resp};
 use self::rate::TokenBucket;
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -650,24 +651,13 @@ fn cluster_ref_counts(sh: &OsdShared, fps: &[Fingerprint]) -> Result<Option<Vec<
 }
 
 /// Count this server's local OMAP references for each fingerprint (the
-/// [`Req::CountRefs`] handler).
+/// [`Req::CountRefs`] handler). Answered from the backreference index —
+/// O(log n + referrers) per fingerprint — instead of the pre-index full
+/// OMAP table walk (kept as [`crate::dedup::dmshard::DmShard::count_refs_scan`]
+/// for audits and the micro-bench).
 pub fn count_refs_local(sh: &OsdShared, fps: &[Fingerprint]) -> Result<Vec<u64>> {
-    let mut index: HashMap<Fingerprint, usize> = HashMap::with_capacity(fps.len());
-    for (i, fp) in fps.iter().enumerate() {
-        index.insert(*fp, i);
-    }
-    let mut counts = vec![0u64; fps.len()];
-    for name in sh.shard.omap_names()? {
-        let Some(entry) = sh.shard.omap_get(&name)? else {
-            continue;
-        };
-        for (fp, _) in &entry.chunks {
-            if let Some(&i) = index.get(fp) {
-                counts[i] += 1;
-            }
-        }
-    }
-    Ok(counts)
+    Metrics::add(&sh.metrics.backref_lookups, fps.len() as u64);
+    sh.shard.backref_refs_many(fps)
 }
 
 /// Ensure-phase (the [`Req::ScrubEnsure`] handler): every fingerprint
@@ -675,16 +665,10 @@ pub fn count_refs_local(sh: &OsdShared, fps: &[Fingerprint]) -> Result<Vec<u64>>
 /// the home's window walk can see it, fix its refcount and restore its
 /// data — the audit's "referenced but no CIT entry" case (e.g. a crash
 /// that lost the CIT insert but not the replicated OMAP record).
+/// The referenced-fingerprint set comes from one ordered walk of the
+/// backreference index; no OMAP entry is decoded.
 pub fn ensure_referenced(sh: &OsdShared) -> Result<usize> {
-    let mut referenced: HashMap<Fingerprint, u32> = HashMap::new();
-    for name in sh.shard.omap_names()? {
-        let Some(entry) = sh.shard.omap_get(&name)? else {
-            continue;
-        };
-        for (fp, len) in &entry.chunks {
-            referenced.entry(*fp).or_insert(*len);
-        }
-    }
+    let referenced = sh.shard.backref_referenced()?;
     let mut ensured = 0usize;
     for (fp, len) in referenced {
         let home = match sh.cfg.dedup {

@@ -57,9 +57,13 @@ impl Clock {
 /// Per-server configuration (a slice of the cluster config).
 #[derive(Clone)]
 pub struct OsdConfig {
+    /// Dedup architecture this server runs.
     pub dedup: DedupMode,
+    /// Commit-flag consistency mode.
     pub consistency: ConsistencyMode,
+    /// Object chunking policy.
     pub chunker: Chunker,
+    /// Replica count for chunk data + OMAP copies.
     pub replication: usize,
     /// Verify chunk digests on read (integrity checking extension).
     pub verify_read: bool,
@@ -74,10 +78,15 @@ pub struct OsdConfig {
 /// Everything a server owns that survives kill+restart (disk-like), plus
 /// handles to cluster-shared infrastructure.
 pub struct OsdShared {
+    /// This server's id.
     pub id: ServerId,
+    /// Per-server configuration slice.
     pub cfg: OsdConfig,
+    /// Shared cluster-map handle (epochs, membership).
     pub map: Arc<RwLock<ClusterMap>>,
+    /// Placement-group table for chunk/object routing.
     pub pgmap: Arc<PgMap>,
+    /// The local DM-Shard (OMAP + CIT + backreference index, "disk").
     pub shard: DmShard,
     /// Primary chunk/object data ("disk").
     pub store: Box<dyn StorageBackend>,
@@ -88,10 +97,15 @@ pub struct OsdShared {
     /// Volatile: scrub-worker job hand-off and progress (a crash aborts
     /// the running pass).
     pub scrub: crate::scrub::ScrubCtl,
+    /// Crash-point/kill failure injector for this server.
     pub injector: FailureInjector,
+    /// Cluster-shared metrics.
     pub metrics: Arc<Metrics>,
+    /// Fabric directory (server id + lane → address).
     pub dir: Dir,
+    /// Fingerprint computation provider (scalar SHA-1 or XLA-batched).
     pub provider: Arc<dyn FingerprintProvider>,
+    /// Cluster-start-relative clock.
     pub clock: Arc<Clock>,
     /// SyncObject-mode transaction lock (held across a whole object write).
     pub obj_lock: Mutex<()>,
@@ -121,10 +135,29 @@ impl OsdShared {
             std::thread::sleep(d);
         }
     }
+
+    /// Restart after a kill/crash: re-derive the backreference index
+    /// from the OMAP (a crash can separate an OMAP write from its index
+    /// update; the OMAP is the source of truth), revive, then run the
+    /// recovery scan (re-registers stored-but-invalid chunks with the
+    /// flag manager). The rebuild runs *before* the lanes come back up,
+    /// so no peer can observe the index mid-derivation; a rebuild
+    /// failure leaves the server down and propagates — running against
+    /// a known-broken index would let GC reclaim live data. Lives on
+    /// the shared state (not [`Osd`]) so callers can run the O(OMAP)
+    /// rebuild without holding any cluster-wide registry lock.
+    pub fn restart(&self) -> crate::error::Result<()> {
+        self.shard.rebuild_backrefs()?;
+        Metrics::add(&self.metrics.backref_rebuilds, 1);
+        self.injector.revive();
+        let _ = gc::recovery_scan(self);
+        Ok(())
+    }
 }
 
 /// A running server: shared state + lane threads.
 pub struct Osd {
+    /// The server's crash-surviving shared state.
     pub shared: Arc<OsdShared>,
     shutdown: Arc<AtomicBool>,
     threads: Vec<std::thread::JoinHandle<()>>,
@@ -193,11 +226,9 @@ impl Osd {
         self.shared.scrub.clear();
     }
 
-    /// Restart after a kill/crash: revive and run the recovery scan
-    /// (re-registers stored-but-invalid chunks with the flag manager).
-    pub fn restart(&self) {
-        self.shared.injector.revive();
-        let _ = gc::recovery_scan(&self.shared);
+    /// Restart after a kill/crash — see [`OsdShared::restart`].
+    pub fn restart(&self) -> crate::error::Result<()> {
+        self.shared.restart()
     }
 
     /// Stop all threads and join them (graceful teardown).
@@ -329,8 +360,15 @@ fn dispatch(sh: &Arc<OsdShared>, lane: Lane, req: Req) -> Resp {
         },
         (Lane::Backend, Req::MigrateOmap { value }) => {
             match crate::dedup::omap::OmapEntry::decode(&value) {
+                // omap_put also indexes the migrated layout's backrefs
                 Ok(entry) => match sh.shard.omap_put(&entry) {
-                    Ok(()) => Resp::Ok,
+                    Ok(delta) => {
+                        crate::metrics::Metrics::add(
+                            &sh.metrics.backref_updates,
+                            delta.total(),
+                        );
+                        Resp::Ok
+                    }
                     Err(e) => err_str(e),
                 },
                 Err(e) => err_str(e),
@@ -348,6 +386,21 @@ fn dispatch(sh: &Arc<OsdShared>, lane: Lane, req: Req) -> Resp {
                 Err(e) => err_str(e),
             }
         }
+        (Lane::Backend, Req::ListRefs { fp }) => match sh.shard.backref_referrers(&fp) {
+            Ok(referrers) => {
+                crate::metrics::Metrics::add(&sh.metrics.backref_lookups, 1);
+                Resp::Referrers(
+                    referrers
+                        .into_iter()
+                        .map(|b| {
+                            let refs = b.refs();
+                            (b.object, refs)
+                        })
+                        .collect(),
+                )
+            }
+            Err(e) => err_str(e),
+        },
 
         // ---- replica ----
         (Lane::Replica, Req::PutCopy { key, data }) => {
@@ -416,6 +469,24 @@ fn dispatch(sh: &Arc<OsdShared>, lane: Lane, req: Req) -> Resp {
             Err(e) => err_str(e),
         },
         (Lane::Control, Req::ScrubStatus) => Resp::Scrub(sh.scrub.status()),
+        (Lane::Control, Req::RebuildBackrefs) => {
+            // audit + re-derive under one shard lock acquisition, so the
+            // reported drift is exactly what the rebuild repaired
+            match sh.shard.audit_and_rebuild_backrefs() {
+                Ok((records, problems)) => {
+                    crate::metrics::Metrics::add(
+                        &sh.metrics.backref_mismatches,
+                        problems.len() as u64,
+                    );
+                    crate::metrics::Metrics::add(&sh.metrics.backref_rebuilds, 1);
+                    Resp::BackrefReport {
+                        records: records as u64,
+                        mismatches: problems.len() as u64,
+                    }
+                }
+                Err(e) => err_str(e),
+            }
+        }
         (Lane::Control, Req::Sync) => match sh.shard.sync() {
             Ok(()) => Resp::Ok,
             Err(e) => err_str(e),
@@ -451,6 +522,7 @@ fn stats(sh: &OsdShared) -> OsdStats {
         replica_keys: sh.replica_store.len(),
         replica_bytes: sh.replica_store.stored_bytes(),
         pending_flags: sh.pending.len(),
+        backref_entries: sh.shard.backref_len(),
     }
 }
 
@@ -481,5 +553,11 @@ fn audit(sh: &OsdShared) -> crate::error::Result<AuditDump> {
             dump.data_fps.push(fp);
         }
     }
+    // the backreference index must agree with the OMAP it inverts
+    dump.backref_mismatches = sh.shard.backref_audit()?;
+    crate::metrics::Metrics::add(
+        &sh.metrics.backref_mismatches,
+        dump.backref_mismatches.len() as u64,
+    );
     Ok(dump)
 }

@@ -64,6 +64,10 @@ pub enum Req {
     /// fingerprint's home if none exists (a reference with no CIT entry
     /// cannot be seen, reconciled or repaired by the home's walk).
     EnsureCit { fp: Fingerprint, len: u32 },
+    /// Backreference-index lookup: which of this server's objects
+    /// reference `fp`, and how many times each (an indexed range read;
+    /// diagnostics and the "who holds this chunk?" admin question).
+    ListRefs { fp: Fingerprint },
 
     // ---- replica lane (backends → replica holders; strictly local) ----
     /// Store a replica copy of a chunk / OMAP record.
@@ -100,6 +104,10 @@ pub enum Req {
     StartScrub { opts: ScrubOptions },
     /// Snapshot the scrub worker's progress.
     ScrubStatus,
+    /// One-shot backreference-index migration/repair: audit the index
+    /// against the OMAP, then re-derive it (pre-index stores, suspected
+    /// divergence after an unclean recovery).
+    RebuildBackrefs,
     /// Flush persistent stores.
     Sync,
 }
@@ -128,6 +136,16 @@ pub enum Resp {
     /// Per-fingerprint local OMAP reference counts (same order as the
     /// requested fingerprints).
     RefCounts(Vec<u64>),
+    /// `ListRefs` answer: (object name, reference multiplicity) for every
+    /// local referrer of the requested fingerprint.
+    Referrers(Vec<(String, u64)>),
+    /// `RebuildBackrefs` answer.
+    BackrefReport {
+        /// Index records after the rebuild.
+        records: u64,
+        /// Index ↔ OMAP discrepancies the pre-rebuild audit found.
+        mismatches: u64,
+    },
     /// Replica-copy verification verdict.
     CopyState { present: bool, matches: bool },
     /// Scrub worker progress snapshot.
@@ -146,21 +164,33 @@ pub enum Resp {
 /// Per-server statistics snapshot.
 #[derive(Clone, Debug, Default)]
 pub struct OsdStats {
+    /// Server id.
     pub server: u32,
+    /// Cluster-map epoch this server has applied.
     pub map_epoch: u64,
+    /// Objects in the local OMAP.
     pub objects: usize,
+    /// Entries in the local CIT.
     pub cit_entries: usize,
+    /// Chunks in the local primary store.
     pub chunks_stored: usize,
+    /// Bytes in the local primary store.
     pub bytes_stored: u64,
+    /// Keys in the local replica store.
     pub replica_keys: usize,
+    /// Bytes in the local replica store.
     pub replica_bytes: u64,
+    /// Async-consistency registrations not yet confirmed.
     pub pending_flags: usize,
+    /// Records in the local backreference index.
+    pub backref_entries: usize,
 }
 
 /// Audit dump for cluster-wide invariant checking: every OMAP reference
 /// and every CIT entry on this server.
 #[derive(Clone, Debug, Default)]
 pub struct AuditDump {
+    /// Server id.
     pub server: u32,
     /// (chunk fp, multiplicity) summed over all local OMAP entries.
     pub omap_refs: Vec<(Fingerprint, u64)>,
@@ -170,6 +200,9 @@ pub struct AuditDump {
     /// (presence is resolved cluster-wide by the auditor: in central mode
     /// the metadata owner and the data holder are different servers).
     pub data_fps: Vec<Fingerprint>,
+    /// Local backreference-index ↔ OMAP discrepancies (one line each;
+    /// empty when the index is exact).
+    pub backref_mismatches: Vec<String>,
 }
 
 impl Req {
@@ -187,6 +220,7 @@ impl Req {
             Req::MigrateOmap { value } => value.len(),
             Req::CountRefs { fps } => 20 * fps.len(),
             Req::EnsureCit { .. } => 24,
+            Req::ListRefs { .. } => 20,
             Req::VerifyCopy { key, .. } => key.len() + 20,
             Req::StartScrub { .. } => 24,
             Req::PutCopy { key, data } => key.len() + data.len(),

@@ -17,6 +17,7 @@
 
 use crate::dedup::engine::omap_copy_key;
 use crate::error::Result;
+use crate::metrics::Metrics;
 use crate::net::Lane;
 use crate::storage::osd::OsdShared;
 use crate::storage::proto::{Req, Resp};
@@ -24,8 +25,11 @@ use crate::storage::proto::{Req, Resp};
 /// Outcome of one server's rebalance scan.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct RebalanceReport {
+    /// Chunks (CIT entry + data) migrated to a new content home.
     pub chunks_moved: usize,
+    /// Total bytes of migrated chunk data.
     pub chunk_bytes_moved: u64,
+    /// OMAP records migrated to a new name-derived primary.
     pub omap_moved: usize,
 }
 
@@ -106,7 +110,9 @@ pub fn run(sh: &OsdShared) -> Result<RebalanceReport> {
         let size = req.wire_size();
         match addr.call(req, size)? {
             Resp::Ok => {
-                sh.shard.omap_delete(&name)?;
+                if let Some(delta) = sh.shard.omap_delete(&name)? {
+                    Metrics::add(&sh.metrics.backref_updates, delta.removed);
+                }
                 // refresh the read-availability copy placement as well
                 for peer in chain.iter().skip(1).take(sh.cfg.replication.saturating_sub(1)) {
                     if *peer == sh.id {

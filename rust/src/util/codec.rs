@@ -23,14 +23,17 @@ impl Writer {
         self.buf
     }
 
+    /// Append one byte.
     pub fn put_u8(&mut self, v: u8) {
         self.buf.push(v);
     }
 
+    /// Append a little-endian u32.
     pub fn put_u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// Append a little-endian u64.
     pub fn put_u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
@@ -72,15 +75,18 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
+    /// Read one byte.
     pub fn get_u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 
+    /// Read a little-endian u32.
     pub fn get_u32(&mut self) -> Result<u32> {
         let s = self.take(4)?;
         Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
     }
 
+    /// Read a little-endian u64.
     pub fn get_u64(&mut self) -> Result<u64> {
         let s = self.take(8)?;
         Ok(u64::from_le_bytes([
@@ -88,11 +94,13 @@ impl<'a> Reader<'a> {
         ]))
     }
 
+    /// Read a length-prefixed byte string.
     pub fn get_bytes(&mut self) -> Result<Vec<u8>> {
         let n = self.get_u32()? as usize;
         Ok(self.take(n)?.to_vec())
     }
 
+    /// Read a length-prefixed UTF-8 string.
     pub fn get_str(&mut self) -> Result<String> {
         let b = self.get_bytes()?;
         String::from_utf8(b).map_err(|_| Error::Corrupt("invalid utf-8".into()))

@@ -3,12 +3,19 @@
 /// Summary of a set of f64 samples.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub stdev: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Median (nearest rank).
     pub p50: f64,
+    /// 95th percentile (nearest rank).
     pub p95: f64,
+    /// Largest sample.
     pub max: f64,
 }
 

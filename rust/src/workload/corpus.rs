@@ -7,7 +7,9 @@ use std::path::Path;
 /// One corpus object.
 #[derive(Clone, Debug)]
 pub struct CorpusObject {
+    /// Root-relative file path, used as the object name.
     pub name: String,
+    /// File contents.
     pub data: Vec<u8>,
 }
 

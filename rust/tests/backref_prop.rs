@@ -1,0 +1,200 @@
+//! Property: the backreference index is an exact inversion of each
+//! server's OMAP.
+//!
+//! Two regimes are checked, reusing the `scrub_prop.rs`-style harness:
+//!
+//! * **Steady state** — random interleavings of puts, overwrites,
+//!   deletes, GC, rebalance (server add) and online scrubs, with *no*
+//!   crashes, must keep every server's index ≡ OMAP at every quiesce
+//!   point, with no rebuild ever having run (the per-write maintenance
+//!   alone must be exact).
+//! * **Crash + recovery** — interleavings that also kill/restart servers
+//!   mid-transaction must converge back to index ≡ OMAP after the
+//!   converge sequence (restart revives + re-derives the index from the
+//!   OMAP, the source of truth).
+//!
+//! Both directions of containment are covered by `DmShard::backref_audit`
+//! (stale record ⇒ index ⊄ OMAP; missing record ⇒ OMAP ⊄ index), and the
+//! indexed reference counts must equal the full-scan reference counts for
+//! every fingerprint either structure knows about.
+
+use snss_dedup::api::{Cluster, ClusterConfig, DedupMode, ScrubOptions};
+use snss_dedup::cluster::ServerId;
+use snss_dedup::dedup::Chunking;
+use snss_dedup::util::prop::{check, Config};
+use snss_dedup::util::rng::{SplitMix64, XorShift128Plus};
+use snss_dedup::Fingerprint;
+
+const SERVERS: u32 = 3;
+
+#[derive(Debug, Clone)]
+enum Op {
+    /// (name index, payload seed, payload length)
+    Put(u64, u64, usize),
+    Delete(u64),
+    Gc,
+    Scrub,
+    AddServer,
+    Kill(u32),
+    Restart(u32),
+}
+
+fn payload(seed: u64, len: usize) -> Vec<u8> {
+    let mut rng = XorShift128Plus::new(seed);
+    let mut v = vec![0u8; len];
+    rng.fill_bytes(&mut v);
+    v
+}
+
+/// Check index ≡ OMAP on every live server: audit clean, and indexed
+/// counts equal to full-scan counts for every known fingerprint.
+fn assert_index_exact(cluster: &Cluster, ctx: &str) -> Result<(), String> {
+    let stats = cluster.stats();
+    for st in &stats.per_server {
+        let id = ServerId(st.server);
+        if cluster.is_dead(id) {
+            continue;
+        }
+        let (problems, fps) = cluster
+            .with_osd(id, |sh| {
+                let problems = sh.shard.backref_audit()?;
+                let fps = sh.shard.cit_fingerprints()?;
+                Ok::<_, snss_dedup::Error>((problems, fps))
+            })
+            .map_err(|e| format!("{ctx}: with_osd: {e}"))?
+            .map_err(|e| format!("{ctx}: audit: {e}"))?;
+        if !problems.is_empty() {
+            return Err(format!("{ctx}: osd.{} index != omap: {problems:?}", st.server));
+        }
+        // indexed counts must equal the reference full-scan counts
+        let fps: Vec<Fingerprint> = fps;
+        let ok = cluster
+            .with_osd(id, |sh| {
+                let indexed = sh.shard.backref_refs_many(&fps)?;
+                let scanned = sh.shard.count_refs_scan(&fps)?;
+                Ok::<_, snss_dedup::Error>(indexed == scanned)
+            })
+            .map_err(|e| format!("{ctx}: with_osd: {e}"))?
+            .map_err(|e| format!("{ctx}: counts: {e}"))?;
+        if !ok {
+            return Err(format!("{ctx}: osd.{} indexed counts != scan counts", st.server));
+        }
+    }
+    Ok(())
+}
+
+fn run_case(ops: &[Op], with_crashes: bool) -> Result<(), String> {
+    let cluster = Cluster::new(ClusterConfig {
+        servers: SERVERS as usize,
+        replication: 2,
+        dedup: DedupMode::ClusterWide,
+        chunking: Chunking::Fixed { size: 2048 },
+        ..Default::default()
+    })
+    .map_err(|e| e.to_string())?;
+    let client = cluster.client();
+
+    for op in ops {
+        match op {
+            Op::Put(i, seed, len) => {
+                let _ = client.put_object(&format!("obj-{i}"), &payload(*seed, *len));
+            }
+            Op::Delete(i) => {
+                let _ = client.delete_object(&format!("obj-{i}"));
+            }
+            Op::Gc => {
+                let _ = cluster.run_gc(0);
+            }
+            Op::Scrub => {
+                let _ = cluster.start_scrub(ScrubOptions::light());
+                let _ = cluster.scrub_wait();
+            }
+            Op::AddServer => {
+                let _ = cluster.add_server();
+            }
+            Op::Kill(s) if with_crashes => {
+                let _ = cluster.kill_server(ServerId(s % SERVERS));
+            }
+            Op::Restart(s) if with_crashes => {
+                let _ = cluster.restart_server(ServerId(s % SERVERS));
+            }
+            Op::Kill(_) | Op::Restart(_) => {} // steady-state regime
+        }
+        if !with_crashes {
+            // steady state: the index must be exact after EVERY op, with
+            // no rebuild masking a maintenance bug
+            assert_index_exact(&cluster, &format!("after {op:?}"))?;
+        }
+    }
+
+    if with_crashes {
+        // converge: revive everything (restart re-derives the index),
+        // settle flags, scrub, collect garbage
+        for i in 0..SERVERS {
+            let _ = cluster.restart_server(ServerId(i));
+        }
+        cluster.flush_consistency().map_err(|e| e.to_string())?;
+        let _ = cluster.start_scrub(ScrubOptions::light());
+        let _ = cluster.scrub_wait();
+        let _ = cluster.run_gc(0);
+        assert_index_exact(&cluster, "after converge")?;
+    }
+
+    // the cluster-wide audit now embeds the per-server index cross-check
+    cluster.flush_consistency().map_err(|e| e.to_string())?;
+    let audit = cluster.audit().map_err(|e| format!("audit: {e}"))?;
+    let backref_violations: Vec<&String> = audit
+        .violations
+        .iter()
+        .filter(|v| v.contains("backref"))
+        .collect();
+    if !backref_violations.is_empty() {
+        return Err(format!("audit backref violations: {backref_violations:?}"));
+    }
+    cluster.shutdown();
+    Ok(())
+}
+
+fn gen_ops(rng: &mut SplitMix64, size: u32, crashes: bool) -> Vec<Op> {
+    let count = 4 + (size as usize) / 8;
+    (0..count)
+        .map(|_| match rng.below(if crashes { 12 } else { 9 }) {
+            0..=3 => Op::Put(
+                rng.below(5),
+                rng.next_u64(),
+                1024 + rng.below(16 * 1024) as usize,
+            ),
+            4 | 5 => Op::Delete(rng.below(5)),
+            6 => Op::Gc,
+            7 => Op::Scrub,
+            8 => Op::AddServer,
+            9 => Op::Kill(rng.next_u32()),
+            10 => Op::Restart(rng.next_u32()),
+            _ => Op::Kill(rng.next_u32()),
+        })
+        .collect::<Vec<Op>>()
+}
+
+#[test]
+fn steady_state_index_is_exact_without_rebuilds() {
+    check(
+        Config {
+            cases: 8,
+            ..Config::default()
+        },
+        |rng, size| gen_ops(rng, size, false),
+        |ops| run_case(ops, false),
+    );
+}
+
+#[test]
+fn crash_restart_interleavings_converge_to_exact_index() {
+    check(
+        Config {
+            cases: 8,
+            ..Config::default()
+        },
+        |rng, size| gen_ops(rng, size, true),
+        |ops| run_case(ops, true),
+    );
+}
