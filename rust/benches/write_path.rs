@@ -1,0 +1,207 @@
+//! Write-path macro-bench: batched two-phase scatter
+//! (`WriteBatching::TwoPhase`) vs the legacy per-chunk protocol
+//! (`WriteBatching::Off`), across dedup ratios, at 10k and 100k
+//! objects.
+//!
+//! ```text
+//! cargo bench --bench write_path                 # 10k + 100k objects
+//! BENCH_SCALE=small cargo bench --bench write_path   # 10k only
+//! ```
+//!
+//! For every data point both protocols drive the *same* deterministic
+//! workload; their end states are asserted byte-identical (placement,
+//! chunk counts, stored bytes) **before** any number is reported, and
+//! on the ≥50%-duplicate corpora the batched path must cut backend
+//! wire bytes by at least 40%. Inline-valid consistency keeps commit
+//! flags deterministic so probe hits depend only on content, not on
+//! flag-manager timing. Results go to stdout, to
+//! `bench_out/write_path.tsv`, and to `BENCH_writepath.json` at the
+//! repository root.
+
+use snss_dedup::api::{Cluster, ClusterConfig, Consistency, WriteBatching};
+use snss_dedup::dedup::Chunking;
+use snss_dedup::workload::{Generator, WorkloadSpec};
+use std::io::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+const SERVERS: usize = 4;
+const THREADS: usize = 4;
+const OBJECT_SIZE: usize = 8 << 10;
+const CHUNK: usize = 2 << 10;
+
+/// One protocol run's outcome.
+struct Run {
+    secs: f64,
+    mib_per_s: f64,
+    wire_bytes: u64,
+    probe_batches: u64,
+    store_batches: u64,
+    savings_pct: f64,
+    /// State fingerprint compared across protocols: global uniques and
+    /// bytes plus the per-server placement.
+    state: (u64, u64, Vec<(u32, usize, u64, usize)>),
+}
+
+fn run_one(objects: u64, dedup_pct: u8, batching: WriteBatching) -> Run {
+    let cluster = Cluster::new(ClusterConfig {
+        servers: SERVERS,
+        replication: 1,
+        write_batching: batching,
+        consistency: Consistency::None,
+        chunking: Chunking::Fixed { size: CHUNK },
+        ..Default::default()
+    })
+    .expect("boot cluster");
+    let gen = Arc::new(Generator::new(WorkloadSpec {
+        object_size: OBJECT_SIZE,
+        unit: CHUNK,
+        dedup_pct,
+        pool_blocks: 512,
+        zipf_theta: 0.0,
+        seed: 0x11AB ^ objects,
+    }));
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let client = cluster.client();
+        let gen = gen.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut idx = t as u64;
+            while idx < objects {
+                let (name, data) = gen.named_object(idx);
+                client.put_object(&name, &data).expect("bench put");
+                idx += THREADS as u64;
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    cluster.flush_consistency().ok();
+    let stats = cluster.stats();
+    let audit = cluster.audit().expect("audit");
+    assert!(audit.is_ok(), "bench audit violations: {:?}", audit.violations);
+    let state = (
+        stats.unique_chunks,
+        stats.stored_bytes,
+        stats
+            .per_server
+            .iter()
+            .map(|p| (p.server, p.chunks_stored, p.bytes_stored, p.objects))
+            .collect(),
+    );
+    let logical_mib = stats.logical_bytes as f64 / (1 << 20) as f64;
+    let run = Run {
+        secs,
+        mib_per_s: logical_mib / secs,
+        wire_bytes: stats.wire_bytes,
+        probe_batches: stats.probe_batches,
+        store_batches: stats.store_batches,
+        savings_pct: stats.savings() * 100.0,
+        state,
+    };
+    cluster.shutdown();
+    run
+}
+
+fn main() {
+    let sizes: &[u64] = match std::env::var("BENCH_SCALE").as_deref() {
+        Ok("small") => &[10_000],
+        _ => &[10_000, 100_000],
+    };
+    let ratios: &[u8] = &[0, 50, 90];
+    println!("== write path: batched two-phase vs per-chunk StoreChunk ==");
+    println!(
+        "{:<8} {:>6} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "objects", "dedup%", "off MiB/s", "batch MiB/s", "off wireMB", "batch wireMB", "wire -%"
+    );
+    let mut json_points = Vec::new();
+    for &objects in sizes {
+        for &pct in ratios {
+            let off = run_one(objects, pct, WriteBatching::Off);
+            let bat = run_one(objects, pct, WriteBatching::TwoPhase);
+            // byte-identical end state is a precondition for every
+            // number below
+            assert_eq!(
+                off.state,
+                bat.state,
+                "protocols diverged at {objects} objects / {pct}% dedup"
+            );
+            let reduction = 100.0 * (1.0 - bat.wire_bytes as f64 / off.wire_bytes.max(1) as f64);
+            if pct >= 50 {
+                assert!(
+                    reduction >= 40.0,
+                    "batched path must cut wire bytes ≥40% at {pct}% dedup, got {reduction:.1}%"
+                );
+            }
+            let mb = |b: u64| b as f64 / (1 << 20) as f64;
+            println!(
+                "{:<8} {:>6} {:>12.1} {:>12.1} {:>12.1} {:>12.1} {:>9.1}%",
+                objects,
+                pct,
+                off.mib_per_s,
+                bat.mib_per_s,
+                mb(off.wire_bytes),
+                mb(bat.wire_bytes),
+                reduction
+            );
+            record(
+                "write_path",
+                "objects\tdedup_pct\toff_secs\tbatch_secs\toff_wire\tbatch_wire\t\
+                 reduction_pct\tprobe_batches\tstore_batches\tsavings_pct",
+                &format!(
+                    "{objects}\t{pct}\t{:.3}\t{:.3}\t{}\t{}\t{reduction:.1}\t{}\t{}\t{:.1}",
+                    off.secs,
+                    bat.secs,
+                    off.wire_bytes,
+                    bat.wire_bytes,
+                    bat.probe_batches,
+                    bat.store_batches,
+                    bat.savings_pct
+                ),
+            );
+            json_points.push(format!(
+                "    {{\"objects\": {objects}, \"dedup_pct\": {pct}, \
+                 \"off_secs\": {:.3}, \"batched_secs\": {:.3}, \
+                 \"off_wire_bytes\": {}, \"batched_wire_bytes\": {}, \
+                 \"wire_reduction_pct\": {reduction:.1}, \
+                 \"probe_batches\": {}, \"store_batches\": {}}}",
+                off.secs,
+                bat.secs,
+                off.wire_bytes,
+                bat.wire_bytes,
+                bat.probe_batches,
+                bat.store_batches
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"write_path\",\n  \"servers\": {SERVERS},\n  \
+         \"object_size\": {OBJECT_SIZE},\n  \"chunk\": {CHUNK},\n  \"points\": [\n{}\n  ]\n}}\n",
+        json_points.join(",\n")
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_writepath.json");
+    std::fs::write(path, json).expect("write BENCH_writepath.json");
+    println!("summary written to BENCH_writepath.json");
+}
+
+/// Append one TSV row under `bench_out/` (same format as
+/// `common::record`; duplicated so this driver stays self-contained).
+fn record(bench: &str, header: &str, row: &str) {
+    let _ = std::fs::create_dir_all("bench_out");
+    let path = format!("bench_out/{bench}.tsv");
+    let new = !std::path::Path::new(&path).exists();
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+    {
+        if new {
+            let _ = writeln!(f, "{header}");
+        }
+        let _ = writeln!(f, "{row}");
+    }
+}

@@ -26,7 +26,7 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex, RwLock};
 
 pub use crate::dedup::consistency::ConsistencyMode as Consistency;
-pub use crate::dedup::engine::DedupMode;
+pub use crate::dedup::engine::{DedupMode, WriteBatching};
 pub use crate::scrub::{ScrubKind, ScrubOptions, ScrubState, ScrubStatus};
 
 /// Placement policy choice.
@@ -72,6 +72,9 @@ pub struct ClusterConfig {
     pub dedup: DedupMode,
     /// Commit-flag consistency mode.
     pub consistency: ConsistencyMode,
+    /// Write-path chunk scatter protocol: per-home two-phase batches
+    /// (the default) or the legacy per-chunk `StoreChunk` fan-out.
+    pub write_batching: WriteBatching,
     /// Chunking policy.
     pub chunking: Chunking,
     /// Placement policy.
@@ -97,6 +100,7 @@ impl Default for ClusterConfig {
             pg_count: 128,
             dedup: DedupMode::ClusterWide,
             consistency: ConsistencyMode::AsyncTagged,
+            write_batching: WriteBatching::TwoPhase,
             chunking: Chunking::Fixed { size: 64 * 1024 },
             placement: Placement::Straw2,
             durability: Durability::Memory,
@@ -145,6 +149,20 @@ pub struct ClusterStats {
     pub backref_rebuilds: u64,
     /// Index ↔ OMAP discrepancies found by audits.
     pub backref_mismatches: u64,
+    /// `ProbeChunks` messages sent (batched write path, Phase A).
+    pub probe_batches: u64,
+    /// Fingerprints a Phase-A probe reported already Valid (payload
+    /// elided from Phase B).
+    pub probe_hits: u64,
+    /// `StoreChunkBatch` messages sent (Phase B + NeedData resends).
+    pub store_batches: u64,
+    /// Chunk items carried by all `StoreChunkBatch` messages.
+    pub batch_items: u64,
+    /// Fingerprints re-shipped with payload after a `NeedData` NACK.
+    pub need_data_resends: u64,
+    /// Backend-lane bytes the dedup engine put on the wire (request
+    /// sizes of chunk scatter, probes, batches, refcount releases).
+    pub wire_bytes: u64,
     /// Per-server snapshots.
     pub per_server: Vec<OsdStats>,
 }
@@ -321,6 +339,7 @@ impl Cluster {
             cfg: OsdConfig {
                 dedup: self.cfg.dedup,
                 consistency: self.cfg.consistency,
+                write_batching: self.cfg.write_batching,
                 chunker: Chunker::new(self.cfg.chunking),
                 replication: self.cfg.replication,
                 verify_read: self.cfg.verify_read,
@@ -339,6 +358,7 @@ impl Cluster {
             provider: self.provider.clone(),
             clock: self.clock.clone(),
             obj_lock: Mutex::new(()),
+            probe_gap_hook: Mutex::new(None),
         });
         let osd = Osd::spawn(shared, self.cfg.net);
         self.osds.lock().unwrap().insert(id, osd);
@@ -552,6 +572,12 @@ impl Cluster {
             backref_lookups: Metrics::get(&m.backref_lookups),
             backref_rebuilds: Metrics::get(&m.backref_rebuilds),
             backref_mismatches: Metrics::get(&m.backref_mismatches),
+            probe_batches: Metrics::get(&m.probe_batches),
+            probe_hits: Metrics::get(&m.probe_hits),
+            store_batches: Metrics::get(&m.store_batches),
+            batch_items: Metrics::get(&m.batch_items),
+            need_data_resends: Metrics::get(&m.need_data_resends),
+            wire_bytes: Metrics::get(&m.wire_bytes),
             per_server: Vec::new(),
         };
         let mut ids = self.live_ids();

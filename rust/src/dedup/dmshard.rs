@@ -380,6 +380,20 @@ impl DmShard {
             .is_some())
     }
 
+    /// Batched commit-flag probe (Phase A of the batched write path):
+    /// for each fingerprint, answered in request order, does a CIT entry
+    /// exist here with a Valid flag? A single read-only pass — no RMW
+    /// lock, no entry is ever written — so a stale answer is possible by
+    /// design and is exactly what the Phase-B NeedData NACK covers.
+    pub fn cit_valid_many(&self, fps: &[Fingerprint]) -> Result<Vec<bool>> {
+        fps.iter()
+            .map(|fp| {
+                let e = self.cit_get(fp)?;
+                Ok(e.is_some_and(|e| e.flag == CommitFlag::Valid))
+            })
+            .collect()
+    }
+
     /// All fingerprints in the CIT.
     pub fn cit_fingerprints(&self) -> Result<Vec<Fingerprint>> {
         Ok(self
@@ -544,6 +558,24 @@ mod tests {
         assert_eq!(s.cit_fingerprints().unwrap(), vec![fp]);
         assert!(s.cit_delete(&fp).unwrap());
         assert_eq!(s.cit_len(), 0);
+    }
+
+    #[test]
+    fn cit_valid_many_reports_flag_state() {
+        let s = shard();
+        let a = Fingerprint::of(b"a");
+        let b = Fingerprint::of(b"b");
+        let c = Fingerprint::of(b"c");
+        let entry = |flag| CitEntry {
+            refcount: 1,
+            flag,
+            len: 8,
+            flagged_at_ms: 0,
+        };
+        s.cit_put(&a, &entry(CommitFlag::Valid)).unwrap();
+        s.cit_put(&b, &entry(CommitFlag::Invalid)).unwrap();
+        let probed = s.cit_valid_many(&[a, b, c, a]).unwrap();
+        assert_eq!(probed, vec![true, false, false, true]);
     }
 
     #[test]

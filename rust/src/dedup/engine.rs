@@ -15,7 +15,14 @@
 //! * [`DedupMode::DiskLocal`] — comparator for Table 2: dedup only within
 //!   the object's primary server.
 //! * [`DedupMode::None`] — baseline: whole objects stored raw.
+//!
+//! The cluster-wide write path ships unique chunks through the batched
+//! two-phase protocol by default ([`WriteBatching::TwoPhase`], DESIGN.md
+//! §7): one `ProbeChunks` plus one `StoreChunkBatch` per distinct chunk
+//! home — payloads only for probe misses — instead of one full-payload
+//! `StoreChunk` per unique chunk ([`WriteBatching::Off`]).
 
+use crate::cluster::ServerId;
 use crate::dedup::cit::{CitEntry, CommitFlag};
 use crate::dedup::consistency::ConsistencyMode;
 use crate::dedup::fingerprint::Fingerprint;
@@ -23,11 +30,11 @@ use crate::dedup::omap::OmapEntry;
 use crate::error::{Error, Result};
 use crate::failure::CrashPoint;
 use crate::metrics::Metrics;
-use crate::net::Lane;
+use crate::net::{Lane, Pending};
 use crate::storage::osd::OsdShared;
-use crate::storage::proto::{Req, Resp};
+use crate::storage::proto::{ChunkAck, ChunkPut, Req, Resp};
 use std::borrow::Cow;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap, HashSet};
 
 /// Which deduplication architecture the cluster runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -54,11 +61,43 @@ impl DedupMode {
     }
 }
 
+/// Which protocol the cluster-wide write path uses to ship unique
+/// chunks to their content homes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WriteBatching {
+    /// Legacy protocol: one `StoreChunk` message (always carrying the
+    /// full payload) per unique chunk — O(unique chunks) fabric
+    /// messages per put.
+    Off,
+    /// Per-home two-phase batches: one `ProbeChunks` plus one
+    /// `StoreChunkBatch` per distinct chunk home, payloads shipped only
+    /// for probe misses, stale hints NACKed with `NeedData` and resent
+    /// — ≤ 2 messages per distinct home per put.
+    TwoPhase,
+}
+
 /// Sentinel for "this server just crashed mid-transaction": the lane loop
 /// checks the injector and drops the reply, so the message text never
 /// reaches a client.
 fn died() -> Error {
     Error::TxAborted("server crashed".into())
+}
+
+/// One granted chunk reference: (fingerprint, multiplicity, dedup hit).
+type StoredRef = (Fingerprint, u64, bool);
+
+/// Look up a backend lane and fire one request, charging the engine's
+/// backend wire-byte accounting ([`Metrics::wire_bytes`]).
+fn backend_send(sh: &OsdShared, target: ServerId, req: Req) -> Result<Pending<Resp>> {
+    let addr = sh.dir.lookup(target, Lane::Backend)?;
+    let size = req.wire_size();
+    Metrics::add(&sh.metrics.wire_bytes, size as u64);
+    addr.send(req, size)
+}
+
+/// [`backend_send`] + wait: a synchronous backend RPC.
+fn backend_call(sh: &OsdShared, target: ServerId, req: Req) -> Result<Resp> {
+    backend_send(sh, target, req)?.wait()
 }
 
 // --------------------------------------------------------------------
@@ -116,49 +155,12 @@ fn put_dedup(sh: &OsdShared, name: &str, data: &[u8], local_only: bool) -> Resul
 
     // 3. route every unique chunk to its content home (scatter), gather
     //    acks. Local chunks bypass the fabric — same-machine shortcut.
-    let mut pendings = Vec::new();
-    let mut stored: Vec<(Fingerprint, u64, bool)> = Vec::new(); // (fp, refs, dedup_hit)
-    let mut failed: Option<Error> = None;
-    for fp in &order {
-        let (idx, refs) = uniq[fp];
-        let target = if local_only {
-            sh.id
-        } else {
-            sh.chunk_chain(fp.placement_key())[0]
-        };
-        if target == sh.id {
-            match store_chunk_local(sh, fp, Cow::Borrowed(chunks[idx]), refs) {
-                Ok(hit) => stored.push((*fp, refs, hit)),
-                Err(e) => {
-                    failed = Some(e);
-                    break;
-                }
-            }
-        } else {
-            let addr = sh.dir.lookup(target, Lane::Backend)?;
-            let req = Req::StoreChunk {
-                fp: *fp,
-                data: chunks[idx].to_vec(),
-                refs,
-            };
-            let size = req.wire_size();
-            match addr.send(req, size) {
-                Ok(p) => pendings.push((*fp, refs, p)),
-                Err(e) => {
-                    failed = Some(e);
-                    break;
-                }
-            }
-        }
-    }
-    for (fp, refs, p) in pendings {
-        match p.wait() {
-            Ok(Resp::StoreAck { dedup_hit }) => stored.push((fp, refs, dedup_hit)),
-            Ok(Resp::Err(e)) => failed = Some(Error::TxAborted(e)),
-            Ok(_) => failed = Some(Error::TxAborted("bad store reply".into())),
-            Err(e) => failed = Some(e),
-        }
-    }
+    let batched = !local_only && sh.cfg.write_batching == WriteBatching::TwoPhase;
+    let (stored, failed) = if batched {
+        scatter_batched(sh, &order, &uniq, &chunks)
+    } else {
+        scatter_single(sh, &order, &uniq, &chunks, local_only)
+    };
     if let Some(e) = failed {
         // abort: roll back references we already took.
         rollback(sh, &stored, local_only);
@@ -221,25 +223,249 @@ fn put_dedup(sh: &OsdShared, name: &str, data: &[u8], local_only: bool) -> Resul
     Ok((data.len() as u64, unique))
 }
 
+/// Legacy scatter ([`WriteBatching::Off`], and the disk-local mode):
+/// one `StoreChunk` with the full payload per unique chunk, acks
+/// gathered after all sends. Returns the references granted so far and
+/// the first error (the caller rolls the grants back on error).
+fn scatter_single(
+    sh: &OsdShared,
+    order: &[Fingerprint],
+    uniq: &HashMap<Fingerprint, (usize, u64)>,
+    chunks: &[&[u8]],
+    local_only: bool,
+) -> (Vec<StoredRef>, Option<Error>) {
+    let mut pendings = Vec::new();
+    let mut stored: Vec<StoredRef> = Vec::new();
+    let mut failed: Option<Error> = None;
+    for fp in order {
+        let (idx, refs) = uniq[fp];
+        let target = if local_only {
+            sh.id
+        } else {
+            sh.chunk_chain(fp.placement_key())[0]
+        };
+        if target == sh.id {
+            match store_chunk_local(sh, fp, Cow::Borrowed(chunks[idx]), refs) {
+                Ok(hit) => stored.push((*fp, refs, hit)),
+                Err(e) => {
+                    failed = Some(e);
+                    break;
+                }
+            }
+        } else {
+            let req = Req::StoreChunk {
+                fp: *fp,
+                data: chunks[idx].to_vec(),
+                refs,
+            };
+            match backend_send(sh, target, req) {
+                Ok(p) => pendings.push((*fp, refs, p)),
+                Err(e) => {
+                    failed = Some(e);
+                    break;
+                }
+            }
+        }
+    }
+    for (fp, refs, p) in pendings {
+        match p.wait() {
+            Ok(Resp::StoreAck { dedup_hit }) => stored.push((fp, refs, dedup_hit)),
+            Ok(Resp::Err(e)) => failed = Some(Error::TxAborted(e)),
+            Ok(_) => failed = Some(Error::TxAborted("bad store reply".into())),
+            Err(e) => failed = Some(e),
+        }
+    }
+    (stored, failed)
+}
+
+/// Two-phase batched scatter ([`WriteBatching::TwoPhase`]): group the
+/// object's unique fingerprints by chunk home, probe each home once
+/// (`ProbeChunks`, a read-only CIT pass), then send one
+/// `StoreChunkBatch` per home carrying refcount grants for every item
+/// but payloads only for probe misses. A `NeedData` NACK — the hint
+/// went stale between the phases, e.g. GC reclaimed the chunk — gets
+/// that item re-shipped with its payload, where the atomic
+/// `cit_update` upsert in [`store_chunk_local`] restores it exactly
+/// like any first store. Local chunks bypass the fabric like the
+/// legacy path; probe failures degrade to all-miss (full payloads) and
+/// the store phase surfaces any real error.
+fn scatter_batched(
+    sh: &OsdShared,
+    order: &[Fingerprint],
+    uniq: &HashMap<Fingerprint, (usize, u64)>,
+    chunks: &[&[u8]],
+) -> (Vec<StoredRef>, Option<Error>) {
+    let mut stored: Vec<StoredRef> = Vec::new();
+    let mut failed: Option<Error> = None;
+    let mut groups: BTreeMap<ServerId, Vec<Fingerprint>> = BTreeMap::new();
+    for fp in order {
+        let target = sh.chunk_chain(fp.placement_key())[0];
+        if target == sh.id {
+            let (idx, refs) = uniq[fp];
+            match store_chunk_local(sh, fp, Cow::Borrowed(chunks[idx]), refs) {
+                Ok(hit) => stored.push((*fp, refs, hit)),
+                Err(e) => return (stored, Some(e)),
+            }
+        } else {
+            groups.entry(target).or_default().push(*fp);
+        }
+    }
+
+    // Phase A: one read-only probe per home. A home that cannot answer
+    // is treated as all-miss; the store phase surfaces its real error.
+    let mut probes = Vec::new();
+    for (target, fps) in &groups {
+        Metrics::add(&sh.metrics.probe_batches, 1);
+        if let Ok(p) = backend_send(sh, *target, Req::ProbeChunks { fps: fps.clone() }) {
+            probes.push((*target, p));
+        }
+    }
+    let mut valid: HashSet<Fingerprint> = HashSet::new();
+    for (target, p) in probes {
+        if let Ok(Resp::ProbeAck { valid: flags }) = p.wait() {
+            let fps = &groups[&target];
+            if flags.len() == fps.len() {
+                for (fp, hit) in fps.iter().zip(flags) {
+                    if hit {
+                        Metrics::add(&sh.metrics.probe_hits, 1);
+                        valid.insert(*fp);
+                    }
+                }
+            }
+        }
+    }
+
+    // Test hook: force deterministic state changes (GC, flag flips) in
+    // the gap between the two phases.
+    if let Some(hook) = sh.probe_gap_hook.lock().unwrap().take() {
+        hook();
+    }
+
+    // Phase B: one batch per home; payloads only for probe misses.
+    let mut pendings = Vec::new();
+    for (target, fps) in &groups {
+        let items = build_batch_items(fps, uniq, chunks, |fp| !valid.contains(fp));
+        Metrics::add(&sh.metrics.store_batches, 1);
+        Metrics::add(&sh.metrics.batch_items, items.len() as u64);
+        match backend_send(sh, *target, Req::StoreChunkBatch { items }) {
+            Ok(p) => pendings.push((*target, p)),
+            Err(e) => failed = Some(e),
+        }
+    }
+    let mut resends: Vec<(ServerId, Vec<Fingerprint>)> = Vec::new();
+    for (target, p) in pendings {
+        let fps = &groups[&target];
+        let need = gather_batch_acks(p.wait(), fps, uniq, &mut stored, &mut failed);
+        if !need.is_empty() {
+            resends.push((target, need));
+        }
+    }
+
+    // NACK path: re-ship stale-hint items with their payloads. A resent
+    // item can never be NACKed again (the payload is in hand).
+    for (target, fps) in resends {
+        Metrics::add(&sh.metrics.need_data_resends, fps.len() as u64);
+        let items = build_batch_items(&fps, uniq, chunks, |_| true);
+        Metrics::add(&sh.metrics.store_batches, 1);
+        Metrics::add(&sh.metrics.batch_items, items.len() as u64);
+        let reply = backend_call(sh, target, Req::StoreChunkBatch { items });
+        let nacked = gather_batch_acks(reply, &fps, uniq, &mut stored, &mut failed);
+        if let Some(fp) = nacked.first() {
+            failed = Some(Error::TxAborted(format!(
+                "chunk {fp} NACKed with payload in hand"
+            )));
+        }
+    }
+    (stored, failed)
+}
+
+/// Build one home's `StoreChunkBatch` items: every item carries its
+/// refcount grant; `ship` decides which also carry their payload
+/// (Phase B ships probe misses, the NACK resend ships everything).
+fn build_batch_items(
+    fps: &[Fingerprint],
+    uniq: &HashMap<Fingerprint, (usize, u64)>,
+    chunks: &[&[u8]],
+    ship: impl Fn(&Fingerprint) -> bool,
+) -> Vec<ChunkPut> {
+    fps.iter()
+        .map(|fp| {
+            let (idx, refs) = uniq[fp];
+            ChunkPut {
+                fp: *fp,
+                refs,
+                data: ship(fp).then(|| chunks[idx].to_vec()),
+            }
+        })
+        .collect()
+}
+
+/// Fold one `StoreChunkBatch` reply into `stored`: granted items are
+/// recorded, the first error lands in `failed`, and the fingerprints
+/// NACKed with `NeedData` are returned for the caller to re-ship with
+/// payloads.
+fn gather_batch_acks(
+    reply: Result<Resp>,
+    fps: &[Fingerprint],
+    uniq: &HashMap<Fingerprint, (usize, u64)>,
+    stored: &mut Vec<StoredRef>,
+    failed: &mut Option<Error>,
+) -> Vec<Fingerprint> {
+    let mut need: Vec<Fingerprint> = Vec::new();
+    match reply {
+        Ok(Resp::StoreBatchAck { acks }) if acks.len() == fps.len() => {
+            for (fp, ack) in fps.iter().zip(acks) {
+                match ack {
+                    ChunkAck::Stored { dedup_hit } => {
+                        stored.push((*fp, uniq[fp].1, dedup_hit));
+                    }
+                    ChunkAck::NeedData => need.push(*fp),
+                }
+            }
+        }
+        Ok(Resp::Err(e)) => *failed = Some(Error::TxAborted(e)),
+        Ok(_) => *failed = Some(Error::TxAborted("bad batch reply".into())),
+        Err(e) => *failed = Some(e),
+    }
+    need
+}
+
 /// Central-dedup write (runs on osd.0's frontend): all metadata local,
-/// chunk data spread raw by fingerprint.
+/// chunk data spread raw by fingerprint. Remote raw stores are
+/// pipelined (send-then-gather, like the cluster-wide scatter) instead
+/// of one blocking RPC per chunk; a new chunk's CIT entry is inserted
+/// only after its ack, so a failed store never leaves a Valid entry
+/// without data behind it.
 fn put_central(sh: &OsdShared, name: &str, data: &[u8]) -> Result<(u64, u64)> {
     let chunks = sh.cfg.chunker.split(data);
     let digests = sh.provider.digests(&chunks);
 
-    let mut unique_bytes = 0u64;
-    let mut entry_chunks = Vec::with_capacity(chunks.len());
+    // collapse intra-object multiplicity so a deferred CIT insert still
+    // accounts later occurrences of the same new chunk
+    let mut order: Vec<Fingerprint> = Vec::new();
+    let mut uniq: HashMap<Fingerprint, (usize, u64)> = HashMap::new();
     for (i, fp) in digests.iter().enumerate() {
-        entry_chunks.push((*fp, chunks[i].len() as u32));
-        Metrics::add(&sh.metrics.cit_lookups, 1);
-        let now = sh.now_ms();
-        let existing = sh.shard.cit_get(fp)?;
-        match existing {
+        match uniq.get_mut(fp) {
+            Some((_, refs)) => *refs += 1,
+            None => {
+                uniq.insert(*fp, (i, 1));
+                order.push(*fp);
+            }
+        }
+    }
+
+    let mut unique_bytes = 0u64;
+    let mut pendings = Vec::new();
+    let mut failed: Option<Error> = None;
+    for fp in &order {
+        let (i, refs) = uniq[fp];
+        Metrics::add(&sh.metrics.cit_lookups, refs);
+        match sh.shard.cit_get(fp)? {
             Some(mut e) => {
-                e.refcount += 1;
+                e.refcount += refs;
                 sh.charge_meta_io(); // modeled DM-Shard write
                 sh.shard.cit_put(fp, &e)?;
-                Metrics::add(&sh.metrics.dedup_hits, 1);
+                Metrics::add(&sh.metrics.dedup_hits, refs);
             }
             None => {
                 // place the data raw on the content-derived server
@@ -248,34 +474,51 @@ fn put_central(sh: &OsdShared, name: &str, data: &[u8]) -> Result<(u64, u64)> {
                 if target == sh.id {
                     sh.store.put(&key, chunks[i])?;
                     Metrics::add(&sh.metrics.bytes_stored, chunks[i].len() as u64);
+                    insert_central_entry(sh, fp, chunks[i].len() as u32, refs)?;
+                    unique_bytes += chunks[i].len() as u64;
                 } else {
-                    let addr = sh.dir.lookup(target, Lane::Backend)?;
                     let req = Req::StoreRaw {
                         key,
                         data: chunks[i].to_vec(),
                     };
-                    let size = req.wire_size();
-                    match addr.call(req, size)? {
-                        Resp::Ok => {}
-                        Resp::Err(e) => return Err(Error::TxAborted(e)),
-                        _ => return Err(Error::TxAborted("bad raw store reply".into())),
+                    match backend_send(sh, target, req) {
+                        Ok(p) => pendings.push((*fp, i, refs, p)),
+                        Err(e) => {
+                            // stop sending, but still gather what is in
+                            // flight below — their data may land
+                            failed = Some(e);
+                            break;
+                        }
                     }
                 }
-                sh.charge_meta_io(); // modeled DM-Shard write
-                sh.shard.cit_put(
-                    fp,
-                    &CitEntry {
-                        refcount: 1,
-                        flag: CommitFlag::Valid,
-                        len: chunks[i].len() as u32,
-                        flagged_at_ms: now,
-                    },
-                )?;
-                Metrics::add(&sh.metrics.unique_chunks, 1);
-                unique_bytes += chunks[i].len() as u64;
             }
         }
     }
+    for (fp, i, refs, p) in pendings {
+        match p.wait() {
+            Ok(Resp::Ok) => {
+                // the data landed remotely: always record its CIT entry,
+                // even on a doomed put — raw bytes stored on a
+                // non-metadata server would otherwise be orphaned forever
+                // (GC only walks the metadata owner's CIT, DESIGN.md §5)
+                match insert_central_entry(sh, &fp, chunks[i].len() as u32, refs) {
+                    Ok(()) => unique_bytes += chunks[i].len() as u64,
+                    Err(e) => failed = Some(e),
+                }
+            }
+            Ok(Resp::Err(e)) => failed = Some(Error::TxAborted(e)),
+            Ok(_) => failed = Some(Error::TxAborted("bad raw store reply".into())),
+            Err(e) => failed = Some(e),
+        }
+    }
+    if let Some(e) = failed {
+        return Err(Error::TxAborted(format!("raw store failed: {e}")));
+    }
+    let entry_chunks: Vec<(Fingerprint, u32)> = digests
+        .iter()
+        .zip(&chunks)
+        .map(|(fp, c)| (*fp, c.len() as u32))
+        .collect();
     let old_entry = sh.shard.omap_get(name)?;
     let entry = OmapEntry::new(name.to_string(), object_fingerprint(&digests), entry_chunks);
     sh.charge_meta_io(); // modeled DM-Shard write
@@ -295,6 +538,24 @@ fn put_central(sh: &OsdShared, name: &str, data: &[u8]) -> Result<(u64, u64)> {
         }
     }
     Ok((data.len() as u64, unique_bytes))
+}
+
+/// Insert the central-mode CIT entry for a newly stored raw chunk
+/// (central keeps every entry Valid inline — the metadata owner is the
+/// transaction coordinator, so there is no tagged-commit window).
+fn insert_central_entry(sh: &OsdShared, fp: &Fingerprint, len: u32, refs: u64) -> Result<()> {
+    sh.charge_meta_io(); // modeled DM-Shard write
+    sh.shard.cit_put(
+        fp,
+        &CitEntry {
+            refcount: refs,
+            flag: CommitFlag::Valid,
+            len,
+            flagged_at_ms: sh.now_ms(),
+        },
+    )?;
+    Metrics::add(&sh.metrics.unique_chunks, 1);
+    Ok(())
 }
 
 /// The chunk-home transaction ("OSS 4"): CIT lookup → refcount grant /
@@ -390,6 +651,39 @@ pub fn store_chunk_local(
     }
     replicate_chunk(sh, fp, &data)?;
     Ok(false)
+}
+
+/// Payload-less refcount grant: a Phase-B batch item whose Phase-A
+/// probe said the chunk was already Valid at this home. Bumps the
+/// refcount iff a Valid CIT entry still exists; returns `false` — the
+/// `NeedData` NACK — when the hint went stale (entry reclaimed or
+/// invalidated between the phases). Nothing is changed on a NACK; the
+/// caller re-ships the payload through [`store_chunk_local`], whose
+/// atomic upsert + Invalid-flag repair remains the single source of
+/// truth for stores that carry data.
+pub fn grant_ref_local(sh: &OsdShared, fp: &Fingerprint, refs: u64) -> Result<bool> {
+    Metrics::add(&sh.metrics.cit_lookups, 1);
+    let _tx_guard = if sh.cfg.consistency == ConsistencyMode::SyncChunk {
+        Some(sh.shard.tx_lock.lock().unwrap())
+    } else {
+        None
+    };
+    let mut granted = false;
+    sh.shard.cit_update(fp, |cur| match cur {
+        Some(mut e) if e.flag == CommitFlag::Valid => {
+            granted = true;
+            e.refcount += refs;
+            Some(e)
+        }
+        // decline the write: no entry, or invalid without a payload to
+        // repair from — the caller must re-send the data
+        _ => None,
+    })?;
+    if granted {
+        sh.charge_meta_io(); // modeled DM-Shard write
+        Metrics::add(&sh.metrics.dedup_hits, refs);
+    }
+    Ok(granted)
 }
 
 /// Refcount decrement (delete path / write rollback). Refcount-zero
@@ -670,39 +964,45 @@ fn replicate(
 
 /// Release every chunk reference held by an OMAP entry (delete path and
 /// overwrite replacement): collapse multiplicity, then decrement at each
-/// chunk home. Dead homes are skipped (scrub reconciles later).
+/// chunk home — one `DecRefBatch` per remote home.
 fn release_refs(sh: &OsdShared, entry: &OmapEntry, local_only: bool) {
     let mut counts: HashMap<Fingerprint, u64> = HashMap::new();
     for (fp, _) in &entry.chunks {
         *counts.entry(*fp).or_insert(0) += 1;
     }
-    for (fp, refs) in counts {
-        let target = if local_only {
-            sh.id
-        } else {
-            sh.chunk_chain(fp.placement_key())[0]
-        };
-        if target == sh.id {
-            let _ = dec_ref_local(sh, &fp, refs);
-        } else if let Ok(addr) = sh.dir.lookup(target, Lane::Backend) {
-            let _ = addr.call(Req::DecRef { fp, refs }, 96);
-        }
-    }
+    dec_refs_grouped(sh, counts.into_iter(), local_only);
 }
 
-/// Write-abort rollback: undo reference increments already granted.
-fn rollback(sh: &OsdShared, stored: &[(Fingerprint, u64, bool)], local_only: bool) {
-    for (fp, refs, _) in stored {
+/// Write-abort rollback: undo reference increments already granted —
+/// one `DecRefBatch` per remote home.
+fn rollback(sh: &OsdShared, stored: &[StoredRef], local_only: bool) {
+    let refs = stored.iter().map(|(fp, refs, _)| (*fp, *refs));
+    dec_refs_grouped(sh, refs, local_only);
+}
+
+/// Group refcount decrements by chunk home: local ones applied
+/// directly, one `DecRefBatch` call per remote home. Dead homes are
+/// skipped (scrub reconciles later).
+fn dec_refs_grouped(
+    sh: &OsdShared,
+    refs: impl Iterator<Item = (Fingerprint, u64)>,
+    local_only: bool,
+) {
+    let mut groups: BTreeMap<ServerId, Vec<(Fingerprint, u64)>> = BTreeMap::new();
+    for (fp, n) in refs {
         let target = if local_only {
             sh.id
         } else {
             sh.chunk_chain(fp.placement_key())[0]
         };
         if target == sh.id {
-            let _ = dec_ref_local(sh, fp, *refs);
-        } else if let Ok(addr) = sh.dir.lookup(target, Lane::Backend) {
-            let _ = addr.call(Req::DecRef { fp: *fp, refs: *refs }, 96);
+            let _ = dec_ref_local(sh, &fp, n);
+        } else {
+            groups.entry(target).or_default().push((fp, n));
         }
+    }
+    for (target, items) in groups {
+        let _ = backend_call(sh, target, Req::DecRefBatch { items });
     }
 }
 

@@ -30,6 +30,11 @@
 //!   with object writes, so reference counting for GC, scrub and audits
 //!   is an indexed range read instead of a full OMAP scan
 //!   ([`dedup::dmshard`], DESIGN.md §6);
+//! * a **batched two-phase write path**: per-home `ProbeChunks` +
+//!   `StoreChunkBatch` fan-out with fingerprint-first dedup hints —
+//!   payloads ship only for probe misses, stale hints are NACKed with
+//!   `NeedData` and resent ([`dedup::engine::WriteBatching`],
+//!   DESIGN.md §7);
 //! * evaluation machinery: an FIO-like workload generator ([`workload`]),
 //!   crash-point failure injection ([`failure`]) and metrics ([`metrics`]).
 //!

@@ -46,6 +46,22 @@ pub struct Metrics {
     pub backref_rebuilds: AtomicU64,
     /// Index ↔ OMAP discrepancies found by audits (0 in steady state).
     pub backref_mismatches: AtomicU64,
+    /// `ProbeChunks` messages sent (Phase A of the batched write path).
+    pub probe_batches: AtomicU64,
+    /// Fingerprints a Phase-A probe reported already Valid at their home
+    /// (their payloads were elided from Phase B).
+    pub probe_hits: AtomicU64,
+    /// `StoreChunkBatch` messages sent (Phase B plus NeedData resends).
+    pub store_batches: AtomicU64,
+    /// Chunk items carried by all `StoreChunkBatch` messages sent.
+    pub batch_items: AtomicU64,
+    /// Fingerprints re-shipped with payload after a `NeedData` NACK (the
+    /// probe hint went stale between the two phases).
+    pub need_data_resends: AtomicU64,
+    /// Bytes the dedup engine put on the backend lane (chunk scatter,
+    /// probes, batches, refcount releases, central-mode raw stores) —
+    /// request wire sizes, excluding replica-lane traffic.
+    pub wire_bytes: AtomicU64,
     /// Write-path latency histogram.
     pub put_latency: Histogram,
 }

@@ -22,7 +22,7 @@
 use crate::cluster::{ClusterMap, ServerId};
 use crate::dedup::consistency::{ConsistencyMode, PendingFlags};
 use crate::dedup::dmshard::DmShard;
-use crate::dedup::engine::{self, DedupMode};
+use crate::dedup::engine::{self, DedupMode, WriteBatching};
 use crate::dedup::fingerprint::FingerprintProvider;
 use crate::dedup::gc;
 use crate::dedup::Chunker;
@@ -31,7 +31,7 @@ use crate::metrics::Metrics;
 use crate::net::{endpoint, Inbox, Lane, NetProfile};
 use crate::placement::pg::PgMap;
 use crate::storage::backend::StorageBackend;
-use crate::storage::proto::{AuditDump, Dir, OsdStats, Req, Resp};
+use crate::storage::proto::{AuditDump, ChunkAck, Dir, OsdStats, Req, Resp};
 use crate::storage::rebalance;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -61,6 +61,9 @@ pub struct OsdConfig {
     pub dedup: DedupMode,
     /// Commit-flag consistency mode.
     pub consistency: ConsistencyMode,
+    /// Write-path chunk scatter protocol (per-chunk `StoreChunk` vs
+    /// per-home two-phase batches).
+    pub write_batching: WriteBatching,
     /// Object chunking policy.
     pub chunker: Chunker,
     /// Replica count for chunk data + OMAP copies.
@@ -109,6 +112,12 @@ pub struct OsdShared {
     pub clock: Arc<Clock>,
     /// SyncObject-mode transaction lock (held across a whole object write).
     pub obj_lock: Mutex<()>,
+    /// Test hook: runs once on the frontend thread in the gap between
+    /// the batched write path's probe phase and its store phase, then
+    /// clears itself. Lets tests force deterministic probe-hint
+    /// staleness (e.g. run GC at a chunk home between the phases);
+    /// always `None` in production.
+    pub probe_gap_hook: Mutex<Option<Box<dyn FnOnce() + Send>>>,
 }
 
 impl OsdShared {
@@ -296,6 +305,49 @@ fn dispatch(sh: &Arc<OsdShared>, lane: Lane, req: Req) -> Resp {
                 Err(e) => err_str(e),
             }
         }
+        (Lane::Backend, Req::ProbeChunks { fps }) => {
+            crate::metrics::Metrics::add(&sh.metrics.cit_lookups, fps.len() as u64);
+            match sh.shard.cit_valid_many(&fps) {
+                Ok(valid) => Resp::ProbeAck { valid },
+                Err(e) => err_str(e),
+            }
+        }
+        (Lane::Backend, Req::StoreChunkBatch { items }) => {
+            let mut acks = Vec::with_capacity(items.len());
+            let mut err = None;
+            for item in items {
+                let ack = match item.data {
+                    Some(data) => engine::store_chunk_local(
+                        sh,
+                        &item.fp,
+                        std::borrow::Cow::Owned(data),
+                        item.refs,
+                    )
+                    .map(|hit| ChunkAck::Stored { dedup_hit: hit }),
+                    None => engine::grant_ref_local(sh, &item.fp, item.refs).map(|granted| {
+                        if granted {
+                            ChunkAck::Stored { dedup_hit: true }
+                        } else {
+                            ChunkAck::NeedData
+                        }
+                    }),
+                };
+                match ack {
+                    Ok(a) => acks.push(a),
+                    Err(e) => {
+                        err = Some(e);
+                        break;
+                    }
+                }
+            }
+            match err {
+                // a failed item aborts the rest of the batch; grants
+                // already applied stay — leaked refcounts are the scrub
+                // light pass's job, exactly like un-acked StoreChunks
+                Some(e) => err_str(e),
+                None => Resp::StoreBatchAck { acks },
+            }
+        }
         (Lane::Backend, Req::FetchChunk { fp }) => match sh.store.get(&fp.to_bytes()) {
             Ok(Some(d)) => Resp::Data(d),
             Ok(None) => Resp::NotFound,
@@ -305,6 +357,16 @@ fn dispatch(sh: &Arc<OsdShared>, lane: Lane, req: Req) -> Resp {
             Ok(()) => Resp::Ok,
             Err(e) => err_str(e),
         },
+        (Lane::Backend, Req::DecRefBatch { items }) => {
+            let mut out = Resp::Ok;
+            for (fp, refs) in items {
+                if let Err(e) = engine::dec_ref_local(sh, &fp, refs) {
+                    out = err_str(e);
+                    break;
+                }
+            }
+            out
+        }
         (Lane::Backend, Req::SetRef { fp, refs }) => {
             match sh.shard.cit_update(&fp, |cur| {
                 cur.map(|mut e| {

@@ -29,10 +29,22 @@ pub enum Req {
         data: Vec<u8>,
         refs: u64,
     },
+    /// Phase A of the batched write path: a read-only CIT probe for one
+    /// object's fingerprints homed here. The reply says which are already
+    /// Valid, so Phase B can elide their payloads.
+    ProbeChunks { fps: Vec<Fingerprint> },
+    /// Phase B of the batched write path: one message per chunk home
+    /// carrying refcount grants for every item, payloads only for probe
+    /// misses (and NeedData resends). Each item runs the same
+    /// `store_chunk_local` transaction a single `StoreChunk` would.
+    StoreChunkBatch { items: Vec<ChunkPut> },
     /// Fetch chunk data by fingerprint.
     FetchChunk { fp: Fingerprint },
     /// Decrement a chunk's refcount by `refs` (delete / tx rollback).
     DecRef { fp: Fingerprint, refs: u64 },
+    /// Batched [`Req::DecRef`]: all of one object's refcount releases
+    /// homed on this server, in one message (delete and abort paths).
+    DecRefBatch { items: Vec<(Fingerprint, u64)> },
     /// Existence + CIT state probe (consistency checks, tests).
     StatChunk { fp: Fingerprint },
     /// Raw keyed store (no-dedup + central-data paths).
@@ -128,6 +140,17 @@ pub enum Resp {
         /// True when the chunk was already present (refcount bumped).
         dedup_hit: bool,
     },
+    /// `ProbeChunks` answer: for each requested fingerprint (same
+    /// order), does a Valid CIT entry exist at this home?
+    ProbeAck {
+        /// One flag per probed fingerprint; true = payload not needed.
+        valid: Vec<bool>,
+    },
+    /// `StoreChunkBatch` answer: one outcome per item, same order.
+    StoreBatchAck {
+        /// Per-item outcome (grant, store, or NeedData NACK).
+        acks: Vec<ChunkAck>,
+    },
     /// Stat outcome.
     ChunkStat {
         exists_data: bool,
@@ -159,6 +182,34 @@ pub enum Resp {
     /// Error string (errors must cross threads; `crate::Error` is not
     /// `Clone` and carries io errors, so the wire form is a string).
     Err(String),
+}
+
+/// One chunk inside a [`Req::StoreChunkBatch`]: the refcount grant
+/// always travels; the payload only when the Phase-A probe reported the
+/// chunk absent/invalid at its home (or on a NeedData resend).
+#[derive(Clone, Debug)]
+pub struct ChunkPut {
+    /// Content fingerprint (routing key and CIT key).
+    pub fp: Fingerprint,
+    /// Intra-object reference multiplicity to grant.
+    pub refs: u64,
+    /// Chunk payload; `None` when the probe said the home already holds
+    /// a Valid copy.
+    pub data: Option<Vec<u8>>,
+}
+
+/// Per-item outcome of a [`Req::StoreChunkBatch`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkAck {
+    /// The grant (and store, when a payload was shipped) landed.
+    Stored {
+        /// True when the chunk was already present (refcount bumped).
+        dedup_hit: bool,
+    },
+    /// The probe hint went stale (entry reclaimed or invalid and no
+    /// payload was shipped): nothing was granted — re-send this item
+    /// with its payload.
+    NeedData,
 }
 
 /// Per-server statistics snapshot.
@@ -213,6 +264,12 @@ impl Req {
             Req::PutObject { name, data } => name.len() + data.len(),
             Req::GetObject { name } | Req::DeleteObject { name } => name.len(),
             Req::StoreChunk { data, .. } => 20 + data.len(),
+            Req::ProbeChunks { fps } => 20 * fps.len(),
+            Req::StoreChunkBatch { items } => items
+                .iter()
+                .map(|i| 29 + i.data.as_ref().map_or(0, Vec::len))
+                .sum(),
+            Req::DecRefBatch { items } => 28 * items.len(),
             Req::FetchChunk { .. } | Req::DecRef { .. } | Req::StatChunk { .. } => 20,
             Req::StoreRaw { key, data } => key.len() + data.len(),
             Req::FetchRaw { key } | Req::DeleteRaw { key } => key.len(),
@@ -254,5 +311,30 @@ mod tests {
         };
         assert!(big.wire_size() > small.wire_size() + 9_000);
         assert!(Req::GetObject { name: "a".into() }.wire_size() < 100);
+    }
+
+    #[test]
+    fn batch_wire_sizes_elide_hit_payloads() {
+        let fp = Fingerprint::of(b"x");
+        let hit = Req::StoreChunkBatch {
+            items: vec![ChunkPut {
+                fp,
+                refs: 3,
+                data: None,
+            }],
+        };
+        let miss = Req::StoreChunkBatch {
+            items: vec![ChunkPut {
+                fp,
+                refs: 1,
+                data: Some(vec![0; 4096]),
+            }],
+        };
+        assert!(miss.wire_size() > hit.wire_size() + 4_000);
+        assert_eq!(Req::ProbeChunks { fps: vec![fp; 8] }.wire_size(), 64 + 160);
+        let dec = Req::DecRefBatch {
+            items: vec![(fp, 2); 4],
+        };
+        assert_eq!(dec.wire_size(), 64 + 112);
     }
 }

@@ -83,12 +83,12 @@ fn assert_index_exact(cluster: &Cluster, ctx: &str) -> Result<(), String> {
     Ok(())
 }
 
-fn run_case(ops: &[Op], with_crashes: bool) -> Result<(), String> {
+fn run_case(ops: &[Op], with_crashes: bool, chunking: Chunking) -> Result<(), String> {
     let cluster = Cluster::new(ClusterConfig {
         servers: SERVERS as usize,
         replication: 2,
         dedup: DedupMode::ClusterWide,
-        chunking: Chunking::Fixed { size: 2048 },
+        chunking,
         ..Default::default()
     })
     .map_err(|e| e.to_string())?;
@@ -183,7 +183,7 @@ fn steady_state_index_is_exact_without_rebuilds() {
             ..Config::default()
         },
         |rng, size| gen_ops(rng, size, false),
-        |ops| run_case(ops, false),
+        |ops| run_case(ops, false, Chunking::Fixed { size: 2048 }),
     );
 }
 
@@ -195,6 +195,21 @@ fn crash_restart_interleavings_converge_to_exact_index() {
             ..Config::default()
         },
         |rng, size| gen_ops(rng, size, true),
-        |ops| run_case(ops, true),
+        |ops| run_case(ops, true, Chunking::Fixed { size: 2048 }),
+    );
+}
+
+/// The crash/restart matrix over gear-CDC chunking: variable-size
+/// chunks through the batched two-phase write path must keep the index
+/// convergent exactly like fixed-size ones.
+#[test]
+fn cdc_crash_restart_interleavings_converge_to_exact_index() {
+    check(
+        Config {
+            cases: 4,
+            ..Config::default()
+        },
+        |rng, size| gen_ops(rng, size, true),
+        |ops| run_case(ops, true, Chunking::cdc_with_mean(2048)),
     );
 }

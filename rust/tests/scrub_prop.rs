@@ -7,7 +7,7 @@ use snss_dedup::api::{Cluster, ClusterConfig, DedupMode, ScrubOptions};
 use snss_dedup::cluster::ServerId;
 use snss_dedup::dedup::Chunking;
 use snss_dedup::util::prop::{check, Config};
-use snss_dedup::util::rng::XorShift128Plus;
+use snss_dedup::util::rng::{SplitMix64, XorShift128Plus};
 
 const SERVERS: u32 = 3;
 
@@ -50,12 +50,12 @@ fn corrupt_first_chunk(cluster: &Cluster, id: ServerId) {
     });
 }
 
-fn run_case(ops: &[Op]) -> Result<(), String> {
+fn run_case(ops: &[Op], chunking: Chunking) -> Result<(), String> {
     let cluster = Cluster::new(ClusterConfig {
         servers: SERVERS as usize,
         replication: 2,
         dedup: DedupMode::ClusterWide,
-        chunking: Chunking::Fixed { size: 2048 },
+        chunking,
         ..Default::default()
     })
     .map_err(|e| e.to_string())?;
@@ -110,6 +110,26 @@ fn run_case(ops: &[Op]) -> Result<(), String> {
     Ok(())
 }
 
+fn gen_ops(rng: &mut SplitMix64, size: u32) -> Vec<Op> {
+    let count = 4 + (size as usize) / 8; // ramps 4 → ~16 ops
+    (0..count)
+        .map(|_| match rng.below(10) {
+            0 | 1 | 2 => Op::Put(
+                rng.below(5),
+                rng.next_u64(),
+                1024 + rng.below(16 * 1024) as usize,
+            ),
+            3 => Op::Delete(rng.below(5)),
+            4 => Op::Kill(rng.next_u32()),
+            5 => Op::Restart(rng.next_u32()),
+            6 => Op::Gc,
+            7 => Op::ScrubLight,
+            8 => Op::ScrubDeep,
+            _ => Op::Corrupt(rng.next_u32()),
+        })
+        .collect::<Vec<Op>>()
+}
+
 #[test]
 fn random_fault_and_scrub_interleavings_converge_to_clean_audit() {
     check(
@@ -117,25 +137,22 @@ fn random_fault_and_scrub_interleavings_converge_to_clean_audit() {
             cases: 8,
             ..Config::default()
         },
-        |rng, size| {
-            let count = 4 + (size as usize) / 8; // ramps 4 → ~16 ops
-            (0..count)
-                .map(|_| match rng.below(10) {
-                    0 | 1 | 2 => Op::Put(
-                        rng.below(5),
-                        rng.next_u64(),
-                        1024 + rng.below(16 * 1024) as usize,
-                    ),
-                    3 => Op::Delete(rng.below(5)),
-                    4 => Op::Kill(rng.next_u32()),
-                    5 => Op::Restart(rng.next_u32()),
-                    6 => Op::Gc,
-                    7 => Op::ScrubLight,
-                    8 => Op::ScrubDeep,
-                    _ => Op::Corrupt(rng.next_u32()),
-                })
-                .collect::<Vec<Op>>()
+        gen_ops,
+        |ops| run_case(ops, Chunking::Fixed { size: 2048 }),
+    );
+}
+
+/// The same fault/scrub matrix over gear-CDC chunking (variable chunk
+/// boundaries exercise the batched write path with mixed-size batches
+/// and many distinct homes per object).
+#[test]
+fn cdc_fault_and_scrub_interleavings_converge_to_clean_audit() {
+    check(
+        Config {
+            cases: 4,
+            ..Config::default()
         },
-        |ops| run_case(ops),
+        gen_ops,
+        |ops| run_case(ops, Chunking::cdc_with_mean(2048)),
     );
 }

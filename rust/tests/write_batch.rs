@@ -1,0 +1,267 @@
+//! Integration: the batched two-phase write path.
+//!
+//! * Message budget — a put costs at most one `ProbeChunks` plus one
+//!   `StoreChunkBatch` per distinct remote chunk home (vs one
+//!   `StoreChunk` per unique chunk on the legacy path), and a
+//!   duplicate-heavy put ships almost no payload bytes.
+//! * State parity — batched and legacy clusters driven by the same
+//!   workload end in identical state (placement, bytes, savings).
+//! * NeedData NACK — a probe hint invalidated between the two phases
+//!   (GC reclaimed the chunk) is re-shipped with payload, not lost.
+//! * Crash matrix — every write-transaction crash point, with batching
+//!   on, converges to a clean audit after restart + scrub + GC.
+
+use snss_dedup::api::{Cluster, ClusterConfig, Consistency, ScrubOptions, WriteBatching};
+use snss_dedup::cluster::ServerId;
+use snss_dedup::dedup::Chunking;
+use snss_dedup::failure::CrashPoint;
+use snss_dedup::net::Lane;
+use snss_dedup::storage::proto::Req;
+use snss_dedup::workload::{Generator, WorkloadSpec};
+use snss_dedup::Fingerprint;
+
+const CHUNK: usize = 2048;
+
+/// Inline-valid consistency keeps commit flags deterministic (no async
+/// flag-manager race), so probe-hit counts can be asserted exactly.
+fn boot(servers: usize, batching: WriteBatching) -> Cluster {
+    Cluster::new(ClusterConfig {
+        servers,
+        replication: 1,
+        write_batching: batching,
+        consistency: Consistency::None,
+        chunking: Chunking::Fixed { size: CHUNK },
+        ..Default::default()
+    })
+    .expect("boot")
+}
+
+/// A payload of `n` distinct chunks (no intra-object duplicates).
+fn unique_payload(n: usize) -> Vec<u8> {
+    let mut data = vec![0u8; n * CHUNK];
+    for (i, block) in data.chunks_mut(CHUNK).enumerate() {
+        for (j, b) in block.iter_mut().enumerate() {
+            *b = ((i * 131 + j * 7) % 251) as u8;
+        }
+    }
+    data
+}
+
+#[test]
+fn batched_put_sends_two_messages_per_home() {
+    let cluster = boot(4, WriteBatching::TwoPhase);
+    let client = cluster.client();
+    let data = unique_payload(32);
+
+    // where will the chunks land, relative to the object's primary?
+    let writer = cluster
+        .with_osd(ServerId(0), |sh| sh.object_chain("obj")[0])
+        .unwrap();
+    let mut homes = std::collections::HashSet::new();
+    let mut remote_fps = 0u64;
+    for chunk in data.chunks(CHUNK) {
+        let fp = Fingerprint::of(chunk);
+        let home = cluster
+            .with_osd(ServerId(0), |sh| sh.chunk_chain(fp.placement_key())[0])
+            .unwrap();
+        if home != writer {
+            homes.insert(home);
+            remote_fps += 1;
+        }
+    }
+    let homes = homes.len() as u64;
+    assert!(homes >= 1, "workload places no chunk remotely");
+
+    let before = cluster.stats();
+    client.put_object("obj", &data).unwrap();
+    let after = cluster.stats();
+    assert_eq!(after.probe_batches - before.probe_batches, homes);
+    assert_eq!(after.store_batches - before.store_batches, homes);
+    assert_eq!(after.need_data_resends, before.need_data_resends);
+    let first_wire = after.wire_bytes - before.wire_bytes;
+
+    // identical overwrite (same name → same writer): every remote probe
+    // hits, payloads are elided, and the wire cost collapses
+    let (_, unique) = client.put_object("obj", &data).unwrap();
+    let second = cluster.stats();
+    assert_eq!(unique, 0, "second copy should store nothing");
+    assert_eq!(second.probe_hits - after.probe_hits, remote_fps);
+    let second_wire = second.wire_bytes - after.wire_bytes;
+    assert!(
+        second_wire * 4 < first_wire,
+        "duplicate put should be near-free on the wire: {second_wire} vs {first_wire}"
+    );
+
+    assert_eq!(client.get_object("obj").unwrap(), data);
+    let audit = cluster.audit().unwrap();
+    assert!(audit.is_ok(), "{:?}", audit.violations);
+    cluster.shutdown();
+}
+
+#[test]
+fn batched_and_legacy_reach_identical_state() {
+    let gen = Generator::new(WorkloadSpec {
+        object_size: 16 << 10,
+        unit: CHUNK,
+        dedup_pct: 50,
+        pool_blocks: 32,
+        zipf_theta: 0.0,
+        seed: 0xBA7C,
+    });
+    let mut snapshots = Vec::new();
+    for batching in [WriteBatching::Off, WriteBatching::TwoPhase] {
+        let cluster = boot(4, batching);
+        let client = cluster.client();
+        for i in 0..24 {
+            let (name, data) = gen.named_object(i);
+            client.put_object(&name, &data).expect("put");
+        }
+        // overwrites and deletes exercise the DecRefBatch paths too
+        let (name1, _) = gen.named_object(1);
+        client.put_object(&name1, &gen.object(100)).expect("overwrite");
+        for i in [0u64, 6, 12] {
+            let (name, _) = gen.named_object(i);
+            client.delete_object(&name).expect("delete");
+        }
+        cluster.flush_consistency().unwrap();
+        for i in [2u64, 7, 23] {
+            let (name, data) = gen.named_object(i);
+            assert_eq!(client.get_object(&name).unwrap(), data, "{batching:?}");
+        }
+        let audit = cluster.audit().unwrap();
+        assert!(audit.is_ok(), "{batching:?}: {:?}", audit.violations);
+        let stats = cluster.stats();
+        let per_server: Vec<(u32, usize, u64, usize)> = stats
+            .per_server
+            .iter()
+            .map(|p| (p.server, p.chunks_stored, p.bytes_stored, p.objects))
+            .collect();
+        snapshots.push((stats.unique_chunks, stats.stored_bytes, per_server));
+        cluster.shutdown();
+    }
+    assert_eq!(
+        snapshots[0],
+        snapshots[1],
+        "legacy and batched write paths must land byte-identical state"
+    );
+}
+
+#[test]
+fn stale_probe_hint_is_resent_via_need_data() {
+    let cluster = boot(4, WriteBatching::TwoPhase);
+    let client = cluster.client();
+    let data = unique_payload(1);
+    let fp = Fingerprint::of(&data);
+    let home = cluster
+        .with_osd(ServerId(0), |sh| sh.chunk_chain(fp.placement_key())[0])
+        .unwrap();
+    // pick a writer (object primary) that is not the chunk's home, so
+    // the chunk travels through the batched remote path
+    let mut name_b = String::new();
+    for i in 0..64 {
+        let cand = format!("b-{i}");
+        let primary = cluster
+            .with_osd(ServerId(0), |sh| sh.object_chain(&cand)[0])
+            .unwrap();
+        if primary != home {
+            name_b = cand;
+            break;
+        }
+    }
+    assert!(!name_b.is_empty(), "no suitable object name found");
+    let writer = cluster
+        .with_osd(ServerId(0), |sh| sh.object_chain(&name_b)[0])
+        .unwrap();
+
+    // seed the chunk (inline-valid flag), then orphan it: a Valid
+    // zero-ref CIT entry is exactly what a probe will hit and GC will
+    // reclaim
+    client.put_object("a-seed", &data).unwrap();
+    client.delete_object("a-seed").unwrap();
+
+    // between probe and store, run GC at the home: the probed entry is
+    // reclaimed, so the payload-less grant must come back NeedData
+    cluster
+        .with_osd(writer, |sh| {
+            let dir = sh.dir.clone();
+            let hook = move || {
+                if let Ok(addr) = dir.lookup(home, Lane::Control) {
+                    let _ = addr.call(Req::RunGc { threshold_ms: 0 }, 64);
+                }
+            };
+            *sh.probe_gap_hook.lock().unwrap() = Some(Box::new(hook));
+        })
+        .unwrap();
+
+    let before = cluster.stats();
+    client.put_object(&name_b, &data).unwrap();
+    let after = cluster.stats();
+    assert_eq!(
+        after.need_data_resends - before.need_data_resends,
+        1,
+        "the stale hint must be NACKed and re-shipped exactly once"
+    );
+    assert!(after.probe_hits > before.probe_hits, "probe should have hit");
+    assert_eq!(client.get_object(&name_b).unwrap(), data);
+    cluster.flush_consistency().unwrap();
+    let audit = cluster.audit().unwrap();
+    assert!(audit.is_ok(), "{:?}", audit.violations);
+    cluster.shutdown();
+}
+
+#[test]
+fn batched_crash_matrix_converges_to_clean_audit() {
+    let points = [
+        CrashPoint::AfterCitInsert,
+        CrashPoint::AfterDataStore,
+        CrashPoint::BeforeReplicate,
+        CrashPoint::BeforeOmapWrite,
+        CrashPoint::AfterOmapWrite,
+    ];
+    let gen = Generator::new(WorkloadSpec {
+        object_size: 8 << 10,
+        unit: CHUNK,
+        dedup_pct: 50,
+        pool_blocks: 16,
+        zipf_theta: 0.0,
+        seed: 0xC4A5,
+    });
+    for point in points {
+        let cluster = Cluster::new(ClusterConfig {
+            servers: 3,
+            replication: 2,
+            write_batching: WriteBatching::TwoPhase,
+            chunking: Chunking::Fixed { size: CHUNK },
+            ..Default::default()
+        })
+        .expect("boot");
+        let client = cluster.client();
+        for i in 0..4 {
+            let (name, data) = gen.named_object(i);
+            client.put_object(&name, &data).expect("seed put");
+        }
+        for s in 0..3 {
+            cluster.arm_crash(ServerId(s), point).unwrap();
+        }
+        // aborts and ServerDown errors are expected while servers die
+        for i in 4..10 {
+            let (name, data) = gen.named_object(i);
+            let _ = client.put_object(&name, &data);
+        }
+        for s in 0..3 {
+            let _ = cluster.restart_server(ServerId(s));
+        }
+        cluster.flush_consistency().unwrap();
+        cluster.start_scrub(ScrubOptions::deep()).unwrap();
+        cluster.scrub_wait().unwrap();
+        cluster.run_gc(0).unwrap();
+        let audit = cluster.audit().unwrap();
+        assert!(audit.is_ok(), "{point:?}: {:?}", audit.violations);
+        // pre-crash data stays readable
+        for i in 0..4 {
+            let (name, data) = gen.named_object(i);
+            assert_eq!(client.get_object(&name).unwrap(), data, "{point:?}");
+        }
+        cluster.shutdown();
+    }
+}
