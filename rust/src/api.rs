@@ -18,15 +18,21 @@ use crate::metrics::Metrics;
 use crate::net::{Lane, NetProfile};
 use crate::placement::pg::PgMap;
 use crate::placement::{rendezvous::Rendezvous, straw2::Straw2, PlacementPolicy};
+use crate::sched::backpressure::Gate;
+use crate::sched::flow::FlowController;
+use crate::sched::SchedCtl;
 use crate::storage::backend::{FileStore, MemStore};
-use crate::storage::osd::{Clock, Osd, OsdConfig, OsdShared};
+use crate::storage::osd::{Osd, OsdConfig, OsdShared};
 use crate::storage::proto::{AuditDump, Dir, OsdStats, Req, Resp};
+use crate::util::clock::{Clock, SimClock, WallClock};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex, RwLock};
 
 pub use crate::dedup::consistency::ConsistencyMode as Consistency;
 pub use crate::dedup::engine::{DedupMode, WriteBatching};
+pub use crate::sched::flow::{FlowConfig, MaintClass};
+pub use crate::sched::{SchedStatus, ScrubSchedule};
 pub use crate::scrub::{ScrubKind, ScrubOptions, ScrubState, ScrubStatus};
 
 /// Placement policy choice.
@@ -47,6 +53,18 @@ pub enum Durability {
     /// Chunk data and DM-Shards persisted under this directory
     /// (file-per-chunk + bitcask logs) — survives real process restarts.
     Disk(PathBuf),
+}
+
+/// Time source driving CIT timestamps, GC age thresholds and the
+/// maintenance scheduler (see [`crate::util::clock`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ClockSource {
+    /// Monotonic wall time relative to cluster start (production).
+    #[default]
+    Wall,
+    /// A deterministic virtual clock that only moves when
+    /// [`Cluster::advance_clock`] is called (tests).
+    Sim,
 }
 
 /// Fingerprint engine choice.
@@ -90,6 +108,16 @@ pub struct ClusterConfig {
     pub meta_io: Option<std::time::Duration>,
     /// Verify chunk digests on read.
     pub verify_read: bool,
+    /// Time source (wall for production, virtual for deterministic
+    /// scheduler/throttling tests).
+    pub clock: ClockSource,
+    /// Per-server shared maintenance budget (scrub + rebalance + GC
+    /// weighted classes); default unlimited.
+    pub maint_flow: FlowConfig,
+    /// Replica-lane `VerifyCopy` in-flight cap (0 = unlimited): past it
+    /// the lane sheds probes with `Busy` NACKs that scrub senders honor
+    /// with window shrink + backoff.
+    pub verify_inflight_cap: usize,
 }
 
 impl Default for ClusterConfig {
@@ -108,6 +136,9 @@ impl Default for ClusterConfig {
             net: None,
             meta_io: None,
             verify_read: false,
+            clock: ClockSource::Wall,
+            maint_flow: FlowConfig::default(),
+            verify_inflight_cap: 64,
         }
     }
 }
@@ -163,6 +194,26 @@ pub struct ClusterStats {
     /// Backend-lane bytes the dedup engine put on the wire (request
     /// sizes of chunk scatter, probes, batches, refcount releases).
     pub wire_bytes: u64,
+    /// Scheduled scrub passes fired by the maintenance scheduler.
+    pub sched_fires: u64,
+    /// Scheduled due times skipped because a pass was still running.
+    pub sched_skipped_busy: u64,
+    /// Maintenance tokens granted to scrub by the shared budget.
+    pub flow_granted_scrub: u64,
+    /// Maintenance tokens granted to rebalance by the shared budget.
+    pub flow_granted_rebalance: u64,
+    /// Maintenance tokens granted to GC by the shared budget.
+    pub flow_granted_gc: u64,
+    /// Times a maintenance consumer waited for budget refill.
+    pub flow_waits: u64,
+    /// `Busy` NACKs sent by replica lanes shedding `VerifyCopy` storms.
+    pub backpressure_busy: u64,
+    /// `VerifyCopy` probes re-sent after a `Busy` NACK.
+    pub backpressure_retries: u64,
+    /// Sender AIMD window halvings triggered by `Busy` NACKs.
+    pub backpressure_window_shrinks: u64,
+    /// Probes abandoned after the retry budget (0 in steady state).
+    pub backpressure_gave_up: u64,
     /// Per-server snapshots.
     pub per_server: Vec<OsdStats>,
 }
@@ -218,6 +269,9 @@ pub struct ScrubReport {
     pub misplaced: u64,
     /// Referenced chunks with no healthy copy anywhere.
     pub lost: u64,
+    /// Replica-copy probes abandoned under backpressure (left for the
+    /// next pass; 0 in steady state).
+    pub copies_unverified: u64,
 }
 
 impl ScrubReport {
@@ -251,7 +305,9 @@ pub struct Cluster {
     pgmap: Arc<PgMap>,
     dir: Dir,
     metrics: Arc<Metrics>,
-    clock: Arc<Clock>,
+    clock: Arc<dyn Clock>,
+    /// The virtual clock handle when `cfg.clock == ClockSource::Sim`.
+    sim: Option<Arc<SimClock>>,
     provider: Arc<dyn FingerprintProvider>,
     osds: Mutex<HashMap<ServerId, Osd>>,
 }
@@ -273,7 +329,14 @@ impl Cluster {
         let pgmap = Arc::new(PgMap::new(policy, cfg.pg_count, cfg.replication.max(2)));
         let dir: Dir = Dir::new();
         let metrics = Arc::new(Metrics::new());
-        let clock = Arc::new(Clock::default());
+        let sim = match cfg.clock {
+            ClockSource::Sim => Some(Arc::new(SimClock::new())),
+            ClockSource::Wall => None,
+        };
+        let clock: Arc<dyn Clock> = match &sim {
+            Some(s) => s.clone(),
+            None => Arc::new(WallClock::new()),
+        };
         let provider: Arc<dyn FingerprintProvider> = match &cfg.fingerprint {
             FingerprintBackend::RustSha1 => Arc::new(RustSha1Provider),
             FingerprintBackend::Xla { artifacts_dir } => {
@@ -287,6 +350,7 @@ impl Cluster {
             dir,
             metrics,
             clock,
+            sim,
             provider,
             osds: Mutex::new(HashMap::new()),
         };
@@ -351,7 +415,10 @@ impl Cluster {
             store,
             replica_store: replica,
             pending: crate::dedup::consistency::PendingFlags::new(),
-            scrub: crate::scrub::ScrubCtl::new(),
+            scrub: crate::scrub::ScrubCtl::for_server(id.0),
+            sched: SchedCtl::new(),
+            flow: FlowController::new(self.cfg.maint_flow.clone(), self.clock.clone()),
+            verify_gate: Gate::new(self.cfg.verify_inflight_cap),
             injector: FailureInjector::new(),
             metrics: self.metrics.clone(),
             dir: self.dir.clone(),
@@ -578,6 +645,16 @@ impl Cluster {
             batch_items: Metrics::get(&m.batch_items),
             need_data_resends: Metrics::get(&m.need_data_resends),
             wire_bytes: Metrics::get(&m.wire_bytes),
+            sched_fires: Metrics::get(&m.sched_fires),
+            sched_skipped_busy: Metrics::get(&m.sched_skipped_busy),
+            flow_granted_scrub: Metrics::get(&m.flow_granted_scrub),
+            flow_granted_rebalance: Metrics::get(&m.flow_granted_rebalance),
+            flow_granted_gc: Metrics::get(&m.flow_granted_gc),
+            flow_waits: Metrics::get(&m.flow_waits),
+            backpressure_busy: Metrics::get(&m.backpressure_busy),
+            backpressure_retries: Metrics::get(&m.backpressure_retries),
+            backpressure_window_shrinks: Metrics::get(&m.backpressure_window_shrinks),
+            backpressure_gave_up: Metrics::get(&m.backpressure_gave_up),
             per_server: Vec::new(),
         };
         let mut ids = self.live_ids();
@@ -683,9 +760,15 @@ impl Cluster {
     pub fn start_scrub(&self, opts: ScrubOptions) -> Result<()> {
         // refuse up front while any server is still scrubbing, so a
         // rejection cannot leave half the cluster started (best-effort:
-        // the per-server workers still reject races individually).
-        if self.scrub_status()?.is_running() {
-            return Err(Error::Invalid("scrub already running".into()));
+        // the per-server workers still reject races individually with
+        // the same typed error).
+        let status = self.scrub_status()?;
+        if let Some(busy) = status
+            .per_server
+            .iter()
+            .find(|s| matches!(s.state, ScrubState::Queued | ScrubState::Running))
+        {
+            return Err(Error::ScrubBusy(busy.server));
         }
         let mut ids = self.live_ids();
         ids.sort();
@@ -699,6 +782,7 @@ impl Cluster {
         }
         for id in &ids {
             match self.control(*id, Req::StartScrub { opts: opts.clone() }) {
+                Ok(Resp::Busy) => return Err(Error::ScrubBusy(id.0)),
                 Ok(Resp::Err(e)) => return Err(Error::Invalid(e)),
                 Ok(_) => {}
                 Err(Error::ServerDown(_)) => {}
@@ -725,6 +809,7 @@ impl Cluster {
                     report.refs_fixed += st.refs_fixed;
                     report.misplaced += st.misplaced;
                     report.lost += st.lost;
+                    report.copies_unverified += st.copies_unverified;
                     report.per_server.push(st);
                 }
                 Ok(_) => {}
@@ -745,6 +830,80 @@ impl Cluster {
             }
             std::thread::sleep(std::time::Duration::from_millis(5));
         }
+    }
+
+    /// Arm (or disarm with `None`) the periodic-scrub schedule on every
+    /// live server (see [`crate::sched`]). Each server fires its own
+    /// passes on its own scrub worker with deterministic per-server
+    /// jitter; a due time hitting a still-running pass is skipped, never
+    /// stacked. Dead servers are skipped here (their schedule state is
+    /// whatever it was before they died); servers added later start
+    /// unscheduled.
+    pub fn set_schedule(&self, schedule: Option<ScrubSchedule>) -> Result<()> {
+        let mut ids = self.live_ids();
+        ids.sort();
+        for id in ids {
+            match self.control(id, Req::SetSchedule { schedule }) {
+                Ok(Resp::Err(e)) => return Err(Error::Invalid(e)),
+                Ok(_) => {}
+                Err(Error::ServerDown(_)) => {}
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+
+    /// Snapshot every live server's maintenance-scheduler state (armed
+    /// schedule, next due time, fire/skip counts).
+    pub fn schedule_status(&self) -> Result<Vec<SchedStatus>> {
+        let mut out = Vec::new();
+        let mut ids = self.live_ids();
+        ids.sort();
+        for id in ids {
+            match self.control(id, Req::SchedStatus) {
+                Ok(Resp::Sched(st)) => out.push(st),
+                Ok(_) => {}
+                Err(Error::ServerDown(_)) => {} // dead servers skipped
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Advance the virtual clock by `ticks` ms and evaluate every live
+    /// server's maintenance schedule at the new time. Only valid when
+    /// the cluster was built with [`ClockSource::Sim`]; returns the new
+    /// clock reading. This is how deterministic tests drive cadence:
+    /// time moves exactly when and as far as the test says, and each due
+    /// time fires at most once (the per-server re-arm is atomic even
+    /// against the background scheduler thread). The `SchedTick` is
+    /// fired without waiting for the reply, so advancing the clock never
+    /// blocks behind a control lane that is itself paced by the budget —
+    /// the caller can always keep virtual time (and therefore refill)
+    /// moving. Ordering stays deterministic: any later control-lane
+    /// request (scrub/schedule status) queues behind the tick on the
+    /// same lane, so it observes the post-tick state.
+    pub fn advance_clock(&self, ticks: u64) -> Result<u64> {
+        let Some(sim) = &self.sim else {
+            return Err(Error::Invalid("advance_clock needs a SimClock".into()));
+        };
+        let now = sim.advance(ticks);
+        let mut ids = self.live_ids();
+        ids.sort();
+        for id in ids {
+            let Ok(addr) = self.dir.lookup(id, Lane::Control) else {
+                continue; // dead servers don't tick
+            };
+            let req = Req::SchedTick;
+            let size = req.wire_size();
+            let _ = addr.send(req, size); // fire-and-forget (see above)
+        }
+        Ok(now)
+    }
+
+    /// Current cluster-clock reading in ms (wall or virtual).
+    pub fn now_ms(&self) -> u64 {
+        self.clock.now_ms()
     }
 
     /// Back-compat convenience: run one full light scrub and block until

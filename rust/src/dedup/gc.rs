@@ -25,6 +25,7 @@ use crate::dedup::fingerprint::Fingerprint;
 use crate::error::Result;
 use crate::metrics::Metrics;
 use crate::net::Lane;
+use crate::sched::flow::MaintClass;
 use crate::storage::osd::OsdShared;
 use crate::storage::proto::{Req, Resp};
 
@@ -157,6 +158,8 @@ fn indexed_live_refs(sh: &OsdShared, fp: &Fingerprint) -> Result<Option<u64>> {
 fn reclaim(sh: &OsdShared, fp: &Fingerprint) -> Result<()> {
     sh.shard.cit_delete(fp)?;
     if let Ok(Some(data)) = sh.store.get(&fp.to_bytes()) {
+        // reclaim I/O draws from the shared maintenance budget
+        sh.charge_maint(MaintClass::Gc, (data.len() as u64).max(64));
         sh.store.delete(&fp.to_bytes())?;
         let stored = &sh.metrics.bytes_stored;
         // saturating decrement of the space accounting
@@ -217,6 +220,7 @@ fn repair(sh: &OsdShared, fp: &Fingerprint) -> Result<bool> {
             None
         };
         if let Some(data) = data {
+            sh.charge_maint(MaintClass::Gc, (data.len() as u64).max(64));
             sh.store.put(&fp.to_bytes(), &data)?;
             Metrics::add(&sh.metrics.bytes_stored, data.len() as u64);
             sh.charge_meta_io(); // modeled DM-Shard write

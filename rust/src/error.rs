@@ -18,6 +18,9 @@ pub enum Error {
     NoQuorum,
     /// A write transaction was aborted (partial failure, rolled back).
     TxAborted(String),
+    /// A scrub pass is already queued or running on this server; the new
+    /// pass was neither started nor stacked (re-arm and retry later).
+    ScrubBusy(u32),
     /// Corrupt on-disk record (CRC mismatch, truncated record, bad magic).
     Corrupt(String),
     /// Underlying I/O error.
@@ -36,6 +39,7 @@ impl fmt::Display for Error {
             Error::ServerDown(id) => write!(f, "server osd.{id} is down"),
             Error::NoQuorum => write!(f, "no live server available"),
             Error::TxAborted(why) => write!(f, "transaction aborted: {why}"),
+            Error::ScrubBusy(id) => write!(f, "scrub already running on osd.{id}"),
             Error::Corrupt(what) => write!(f, "corrupt record: {what}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Xla(e) => write!(f, "xla runtime error: {e}"),

@@ -35,6 +35,11 @@
 //!   payloads ship only for probe misses, stale hints are NACKed with
 //!   `NeedData` and resent ([`dedup::engine::WriteBatching`],
 //!   DESIGN.md §7);
+//! * a **maintenance scheduler with cluster-wide flow control**:
+//!   cron-style per-OSD scrub cadence under an injectable (virtual or
+//!   wall) clock, one shared weighted token budget for scrub, rebalance
+//!   and GC, and replica-side `VerifyCopy` backpressure with AIMD
+//!   sender windows ([`sched`], [`util::clock`], DESIGN.md §10);
 //! * evaluation machinery: an FIO-like workload generator ([`workload`]),
 //!   crash-point failure injection ([`failure`]) and metrics ([`metrics`]).
 //!
@@ -76,6 +81,7 @@ pub mod metrics;
 pub mod net;
 pub mod placement;
 pub mod runtime;
+pub mod sched;
 pub mod scrub;
 pub mod storage;
 pub mod util;

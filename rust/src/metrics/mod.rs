@@ -62,6 +62,29 @@ pub struct Metrics {
     /// probes, batches, refcount releases, central-mode raw stores) —
     /// request wire sizes, excluding replica-lane traffic.
     pub wire_bytes: AtomicU64,
+    /// Scheduled scrub passes accepted by scrub workers (maintenance
+    /// scheduler fires).
+    pub sched_fires: AtomicU64,
+    /// Scheduled due times skipped because a pass was still queued or
+    /// running on that server (skip-if-running, never stacked).
+    pub sched_skipped_busy: AtomicU64,
+    /// Maintenance tokens granted to scrub by the shared FlowController.
+    pub flow_granted_scrub: AtomicU64,
+    /// Maintenance tokens granted to rebalance by the FlowController.
+    pub flow_granted_rebalance: AtomicU64,
+    /// Maintenance tokens granted to GC by the FlowController.
+    pub flow_granted_gc: AtomicU64,
+    /// Times a maintenance consumer had to wait for budget refill.
+    pub flow_waits: AtomicU64,
+    /// `Busy` NACKs sent by replica lanes shedding `VerifyCopy` storms.
+    pub backpressure_busy: AtomicU64,
+    /// `VerifyCopy` probes re-sent by scrubbers after a `Busy` NACK.
+    pub backpressure_retries: AtomicU64,
+    /// Sender AIMD window halvings triggered by `Busy` NACKs.
+    pub backpressure_window_shrinks: AtomicU64,
+    /// `VerifyCopy` probes abandoned after the retry budget (left for
+    /// the next scheduled pass; 0 in steady state).
+    pub backpressure_gave_up: AtomicU64,
     /// Write-path latency histogram.
     pub put_latency: Histogram,
 }

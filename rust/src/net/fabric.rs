@@ -3,6 +3,7 @@
 use crate::cluster::ServerId;
 use crate::error::{Error, Result};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, RwLock};
 use std::time::Duration;
@@ -59,18 +60,35 @@ impl<Resp> Replier<Resp> {
 /// Receiving side of a lane.
 pub struct Inbox<Req, Resp> {
     rx: Receiver<Envelope<Req, Resp>>,
+    depth: Arc<AtomicI64>,
 }
 
 impl<Req, Resp> Inbox<Req, Resp> {
     /// Block for the next envelope; `None` when all senders are gone.
     pub fn recv(&self) -> Option<Envelope<Req, Resp>> {
-        self.rx.recv().ok()
+        let env = self.rx.recv().ok();
+        if env.is_some() {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+        }
+        env
     }
 
     /// Non-blocking receive with timeout (used by lanes that also poll
     /// shutdown flags).
     pub fn recv_timeout(&self, d: Duration) -> Option<Envelope<Req, Resp>> {
-        self.rx.recv_timeout(d).ok()
+        let env = self.rx.recv_timeout(d).ok();
+        if env.is_some() {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+        }
+        env
+    }
+
+    /// Requests still queued on this lane *behind* the ones already
+    /// received — the in-flight count backpressure gates key on
+    /// ([`crate::sched::backpressure::Gate`]). Senders increment before
+    /// the channel send, so the reading never under-counts.
+    pub fn backlog(&self) -> usize {
+        self.depth.load(Ordering::Relaxed).max(0) as usize
     }
 }
 
@@ -129,6 +147,7 @@ pub struct Addr<Req, Resp> {
     tx: Sender<Envelope<Req, Resp>>,
     target: ServerId,
     profile: Option<NetProfile>,
+    depth: Arc<AtomicI64>,
 }
 
 impl<Req, Resp> Clone for Addr<Req, Resp> {
@@ -137,6 +156,7 @@ impl<Req, Resp> Clone for Addr<Req, Resp> {
             tx: self.tx.clone(),
             target: self.target,
             profile: self.profile,
+            depth: self.depth.clone(),
         }
     }
 }
@@ -148,9 +168,13 @@ impl<Req, Resp> Addr<Req, Resp> {
             p.charge(wire_bytes);
         }
         let (rtx, rrx) = channel();
-        self.tx
-            .send(Envelope { req, reply: rtx })
-            .map_err(|_| Error::ServerDown(self.target.0))?;
+        // count before the send so the receiver's backlog() never
+        // under-reports what is queued
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        if self.tx.send(Envelope { req, reply: rtx }).is_err() {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+            return Err(Error::ServerDown(self.target.0));
+        }
         Ok(Pending {
             rx: rrx,
             target: self.target,
@@ -169,13 +193,15 @@ pub fn endpoint<Req, Resp>(
     profile: Option<NetProfile>,
 ) -> (Addr<Req, Resp>, Inbox<Req, Resp>) {
     let (tx, rx) = channel();
+    let depth = Arc::new(AtomicI64::new(0));
     (
         Addr {
             tx,
             target: server,
             profile,
+            depth: depth.clone(),
         },
-        Inbox { rx },
+        Inbox { rx, depth },
     )
 }
 
@@ -311,6 +337,19 @@ mod tests {
         t.join().unwrap();
         dir.deregister(ServerId(1));
         assert!(dir.lookup(ServerId(1), Lane::Backend).is_err());
+    }
+
+    #[test]
+    fn backlog_counts_queued_envelopes() {
+        let (addr, inbox) = endpoint::<u32, u32>(ServerId(0), None);
+        assert_eq!(inbox.backlog(), 0);
+        let _p1 = addr.send(1, 4).unwrap();
+        let _p2 = addr.send(2, 4).unwrap();
+        let _p3 = addr.send(3, 4).unwrap();
+        assert_eq!(inbox.backlog(), 3);
+        let env = inbox.recv().unwrap();
+        assert_eq!(inbox.backlog(), 2, "the received envelope left the queue");
+        env.reply(0);
     }
 
     #[test]

@@ -21,7 +21,11 @@
 //! inbound requests itself, so it can never appear in a wait cycle. Its
 //! handlers on the backend/replica lanes do strictly local work (a
 //! backreference-index range read, a CIT upsert, a local hash),
-//! preserving the lane order above.
+//! preserving the lane order above. A replica lane may shed a
+//! `VerifyCopy` over its in-flight cap with an inline `Busy` NACK
+//! ([`crate::sched::backpressure`]) — still strictly local, so the
+//! wait-for graph stays acyclic. Each endpoint tracks its queued-request
+//! depth ([`Inbox::backlog`]) to make that cap observable.
 
 pub mod fabric;
 

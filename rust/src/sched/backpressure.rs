@@ -1,0 +1,183 @@
+//! Replica-side backpressure on the `VerifyCopy` lane.
+//!
+//! A deep scrub pipelines [`crate::storage::proto::Req::VerifyCopy`]
+//! probes across its window, and every scrubbing server does so
+//! concurrently — a hot server's replica lane can be flooded with
+//! verification work that starves real replica traffic (`PutCopy`,
+//! `FetchCopy` for degraded reads). Two halves fix this:
+//!
+//! * **Receiver ([`Gate`])** — before serving a `VerifyCopy`, the
+//!   replica lane reads its own queue depth (the envelope in hand plus
+//!   everything queued behind it, via [`crate::net::Inbox::backlog`] —
+//!   *all* replica traffic, so probes yield to foreground `PutCopy`/
+//!   `FetchCopy` work too). Past a configured cap it sheds the probe
+//!   with a cheap [`crate::storage::proto::Resp::Busy`] NACK *before*
+//!   any hashing happens.
+//! * **Sender ([`VerifyWindow`])** — the scrubber keeps an AIMD send
+//!   window: additive increase on each verdict, halve on each `Busy`,
+//!   plus exponential backoff between retries of NACKed probes. Every
+//!   NACKed probe is retried until a verdict arrives, so backpressure
+//!   delays verification but never skips it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Receiver-side admission gate for the replica lane's `VerifyCopy`
+/// traffic. One per server; all counters are cheap relaxed atomics.
+pub struct Gate {
+    /// Max lane depth (the request being served plus the backlog queued
+    /// behind it — any replica traffic) at which a `VerifyCopy` is still
+    /// admitted; 0 = unlimited.
+    cap: usize,
+    /// `Busy` NACKs sent.
+    busy: AtomicU64,
+    /// Highest in-flight count ever *observed* at admission (including
+    /// rejected requests) — proves a storm actually formed.
+    observed_peak: AtomicU64,
+    /// Highest in-flight count ever *admitted* — the test-hook counter:
+    /// never exceeds `cap` when a cap is set.
+    admitted_peak: AtomicU64,
+    /// Test hook: stall each admitted `VerifyCopy` this many µs before
+    /// serving it, so tests can make the lane slow enough for a
+    /// deterministic storm. Always 0 in production.
+    hold_us: AtomicU64,
+}
+
+impl Gate {
+    /// A gate with the given in-flight cap (0 = unlimited).
+    pub fn new(cap: usize) -> Self {
+        Gate {
+            cap,
+            busy: AtomicU64::new(0),
+            observed_peak: AtomicU64::new(0),
+            admitted_peak: AtomicU64::new(0),
+            hold_us: AtomicU64::new(0),
+        }
+    }
+
+    /// The configured in-flight cap (0 = unlimited).
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Admission check for one `VerifyCopy` whose lane has `backlog`
+    /// requests still queued behind it. Returns false when the request
+    /// must be NACKed with `Busy`. An admitted request is stalled by the
+    /// test hold, modeling a slow verification service.
+    pub fn admit(&self, backlog: usize) -> bool {
+        let inflight = backlog as u64 + 1;
+        self.observed_peak.fetch_max(inflight, Ordering::Relaxed);
+        if self.cap != 0 && inflight > self.cap as u64 {
+            self.busy.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        self.admitted_peak.fetch_max(inflight, Ordering::Relaxed);
+        let hold = self.hold_us.load(Ordering::Relaxed);
+        if hold > 0 {
+            std::thread::sleep(Duration::from_micros(hold));
+        }
+        true
+    }
+
+    /// `Busy` NACKs sent so far.
+    pub fn busy_nacks(&self) -> u64 {
+        self.busy.load(Ordering::Relaxed)
+    }
+
+    /// Highest in-flight count observed at admission (incl. rejects).
+    pub fn observed_peak(&self) -> u64 {
+        self.observed_peak.load(Ordering::Relaxed)
+    }
+
+    /// Highest in-flight count admitted (≤ cap whenever a cap is set).
+    pub fn admitted_peak(&self) -> u64 {
+        self.admitted_peak.load(Ordering::Relaxed)
+    }
+
+    /// Arm the slow-service test hook (µs of stall per admitted probe).
+    pub fn set_hold_for_tests(&self, hold: Duration) {
+        self.hold_us.store(hold.as_micros() as u64, Ordering::Relaxed);
+    }
+}
+
+/// Sender-side AIMD window for pipelined `VerifyCopy` probes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VerifyWindow {
+    size: usize,
+    max: usize,
+}
+
+impl VerifyWindow {
+    /// A window starting at `init` probes, growing to at most `max`.
+    pub fn new(init: usize, max: usize) -> Self {
+        let max = max.max(1);
+        VerifyWindow {
+            size: init.clamp(1, max),
+            max,
+        }
+    }
+
+    /// Probes the sender may keep in flight right now.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// A verdict arrived: additive increase (+1 up to the max).
+    pub fn on_ok(&mut self) {
+        self.size = (self.size + 1).min(self.max);
+    }
+
+    /// A `Busy` NACK arrived: multiplicative decrease (halve, floor 1).
+    /// Returns true when the window actually shrank.
+    pub fn on_busy(&mut self) -> bool {
+        let old = self.size;
+        self.size = (self.size / 2).max(1);
+        self.size != old
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_unlimited_admits_everything() {
+        let g = Gate::new(0);
+        for backlog in 0..100 {
+            assert!(g.admit(backlog));
+        }
+        assert_eq!(g.busy_nacks(), 0);
+        assert_eq!(g.observed_peak(), 100);
+        assert_eq!(g.admitted_peak(), 100);
+    }
+
+    #[test]
+    fn gate_caps_inflight_and_counts_nacks() {
+        let g = Gate::new(2);
+        assert!(g.admit(0)); // in flight 1
+        assert!(g.admit(1)); // in flight 2 == cap
+        assert!(!g.admit(2)); // in flight 3 > cap → Busy
+        assert!(!g.admit(5));
+        assert_eq!(g.busy_nacks(), 2);
+        assert_eq!(g.observed_peak(), 6, "rejects are observed");
+        assert_eq!(g.admitted_peak(), 2, "admissions never exceed the cap");
+    }
+
+    #[test]
+    fn window_aimd() {
+        let mut w = VerifyWindow::new(8, 32);
+        assert_eq!(w.size(), 8);
+        assert!(w.on_busy());
+        assert_eq!(w.size(), 4);
+        assert!(w.on_busy());
+        assert!(w.on_busy());
+        assert_eq!(w.size(), 1);
+        assert!(!w.on_busy(), "floor of 1 cannot shrink further");
+        for _ in 0..100 {
+            w.on_ok();
+        }
+        assert_eq!(w.size(), 32, "growth capped at max");
+        let w2 = VerifyWindow::new(0, 0);
+        assert_eq!(w2.size(), 1, "degenerate bounds clamp to 1");
+    }
+}

@@ -1,0 +1,314 @@
+//! Maintenance scheduling & cluster-wide flow control.
+//!
+//! The scrub subsystem (PR 1) made integrity passes *online*; this
+//! module makes them *continuous* and *polite*:
+//!
+//! * **Periodic cadence** — every server carries a [`SchedCtl`] holding
+//!   an optional [`ScrubSchedule`] (cron-style: one pass every
+//!   `every_ticks` ms of cluster time, plus a deterministic per-fire
+//!   jitter so the fleet doesn't scrub in lock-step). A due schedule
+//!   queues a pass on the server's own scrub worker; a pass still
+//!   running is **skipped, never stacked** (the worker's typed
+//!   [`crate::error::Error::ScrubBusy`] rejection is counted, and the
+//!   schedule simply re-arms one period out — cron semantics, no
+//!   backfill after downtime).
+//! * **Virtual time** — all scheduling reads the injected
+//!   [`crate::util::clock::Clock`]. Under
+//!   [`crate::util::clock::WallClock`] a per-server scheduler thread
+//!   polls the schedule; under [`crate::util::clock::SimClock`] a test
+//!   drives cadence deterministically with
+//!   [`crate::api::Cluster::advance_clock`], which advances the virtual
+//!   clock and ticks every live server. Both paths funnel through
+//!   [`tick`], whose check-and-re-arm is atomic — concurrent tickers
+//!   can never double-fire one due time.
+//! * **Shared budget** — scrub, rebalance and GC draw their I/O from one
+//!   per-server [`flow::FlowController`] (see that module) instead of
+//!   colliding blindly on the same disks and lanes.
+//! * **Backpressure** — the replica lane sheds `VerifyCopy` storms with
+//!   `Busy` NACKs that senders honor with AIMD window shrink and
+//!   backoff ([`backpressure`]).
+
+pub mod backpressure;
+pub mod flow;
+
+use crate::error::Error;
+use crate::metrics::Metrics;
+use crate::scrub::{ScrubKind, ScrubOptions};
+use crate::storage::osd::OsdShared;
+use crate::util::rng::SplitMix64;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Wall poll interval of the per-server scheduler thread while a
+/// schedule is armed. Irrelevant to virtual-clock tests (they tick
+/// explicitly); under a wall clock it bounds how late past-due
+/// schedules fire.
+const POLL: Duration = Duration::from_millis(10);
+/// Wall poll interval while no schedule is armed: only the shutdown
+/// flag and a cheap armed check run, so the unarmed thread stays as
+/// quiet as the other lane threads (which poll at 50 ms too).
+const IDLE_POLL: Duration = Duration::from_millis(50);
+
+/// A cron-style per-server scrub cadence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScrubSchedule {
+    /// Clock ticks (ms of cluster time) between pass starts.
+    pub every_ticks: u64,
+    /// Depth of the scheduled passes.
+    pub kind: ScrubKind,
+    /// Max extra ticks added to each arming — a deterministic
+    /// pseudo-random offset in `[0, jitter]` derived from (server,
+    /// fire count), so servers with the same schedule spread out
+    /// instead of scrubbing in lock-step. A due pass always fires
+    /// within `every_ticks + jitter` of the previous arming.
+    pub jitter: u64,
+}
+
+impl ScrubSchedule {
+    /// A light scrub every `every_ticks` with no jitter.
+    pub fn light_every(every_ticks: u64) -> Self {
+        ScrubSchedule {
+            every_ticks,
+            kind: ScrubKind::Light,
+            jitter: 0,
+        }
+    }
+
+    /// A deep scrub every `every_ticks` with no jitter.
+    pub fn deep_every(every_ticks: u64) -> Self {
+        ScrubSchedule {
+            kind: ScrubKind::Deep,
+            ..Self::light_every(every_ticks)
+        }
+    }
+
+    /// Set the jitter bound.
+    pub fn with_jitter(mut self, jitter: u64) -> Self {
+        self.jitter = jitter;
+        self
+    }
+}
+
+/// One server's scheduler snapshot (see [`crate::api::Cluster::schedule_status`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SchedStatus {
+    /// Server id.
+    pub server: u32,
+    /// The armed schedule, if any.
+    pub schedule: Option<ScrubSchedule>,
+    /// Clock reading the next pass is due at (0 when disarmed).
+    pub next_due_ms: u64,
+    /// Scheduled passes accepted by the scrub worker.
+    pub fires: u64,
+    /// Due times skipped because a pass was still queued or running.
+    pub skipped_busy: u64,
+    /// Clock reading of the last accepted fire (0 = never).
+    pub last_fired_ms: u64,
+    /// Clock reading the snapshot was taken at.
+    pub now_ms: u64,
+}
+
+#[derive(Default)]
+struct SchedInner {
+    schedule: Option<ScrubSchedule>,
+    next_due_ms: u64,
+    fires: u64,
+    skipped_busy: u64,
+    last_fired_ms: u64,
+}
+
+/// Per-server scheduler control block: the armed schedule plus fire
+/// accounting. Survives kill/restart like configuration does (a dead
+/// server's schedule stays armed; [`tick`] refuses to fire while the
+/// injector reports dead, and the first tick after restart catches up
+/// with one pass).
+#[derive(Default)]
+pub struct SchedCtl {
+    inner: Mutex<SchedInner>,
+}
+
+/// Deterministic jitter draw for one (server, arming) pair.
+fn jitter_for(server: u32, arming: u64, max: u64) -> u64 {
+    if max == 0 {
+        return 0;
+    }
+    let seed = 0x5EED_5C4B_u64 ^ ((server as u64) << 32) ^ arming;
+    SplitMix64::new(seed).below(max + 1)
+}
+
+impl SchedCtl {
+    /// Idle control block (no schedule armed).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Arm (or disarm with `None`) the schedule. The first due time is
+    /// one full period plus jitter from `now` — schedules never fire
+    /// immediately on arming.
+    pub fn set(&self, server: u32, now: u64, schedule: Option<ScrubSchedule>) {
+        let mut g = self.inner.lock().unwrap();
+        g.schedule = schedule;
+        g.next_due_ms = match schedule {
+            Some(s) => {
+                let j = jitter_for(server, g.fires + g.skipped_busy, s.jitter);
+                now + s.every_ticks.max(1) + j
+            }
+            None => 0,
+        };
+    }
+
+    /// Atomic check-and-re-arm: when the schedule is due at `now`,
+    /// re-arm one period (plus jitter) out and return the pass kind to
+    /// fire. Exactly one caller wins per due time; there is no backfill
+    /// (a clock jumped N periods ahead still fires once).
+    fn due(&self, server: u32, now: u64) -> Option<ScrubKind> {
+        let mut g = self.inner.lock().unwrap();
+        let s = g.schedule?;
+        if now < g.next_due_ms {
+            return None;
+        }
+        let arming = g.fires + g.skipped_busy + 1;
+        g.next_due_ms = now + s.every_ticks.max(1) + jitter_for(server, arming, s.jitter);
+        Some(s.kind)
+    }
+
+    fn record_fire(&self, now: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.fires += 1;
+        g.last_fired_ms = now;
+    }
+
+    fn record_skip(&self) {
+        self.inner.lock().unwrap().skipped_busy += 1;
+    }
+
+    /// Is a schedule currently armed?
+    pub fn armed(&self) -> bool {
+        self.inner.lock().unwrap().schedule.is_some()
+    }
+
+    /// Snapshot for the admin API.
+    pub fn status(&self, server: u32, now: u64) -> SchedStatus {
+        let g = self.inner.lock().unwrap();
+        SchedStatus {
+            server,
+            schedule: g.schedule,
+            next_due_ms: g.next_due_ms,
+            fires: g.fires,
+            skipped_busy: g.skipped_busy,
+            last_fired_ms: g.last_fired_ms,
+            now_ms: now,
+        }
+    }
+}
+
+/// One scheduler evaluation for one server: fire the armed schedule if
+/// due. Called from the per-server scheduler thread (wall clock) and
+/// from the control lane's `SchedTick` handler
+/// ([`crate::api::Cluster::advance_clock`]); the [`SchedCtl`] guarantees
+/// a due time fires at most once no matter how many tickers race.
+pub fn tick(sh: &OsdShared) {
+    if sh.injector.is_dead() {
+        return;
+    }
+    let now = sh.now_ms();
+    let Some(kind) = sh.sched.due(sh.id.0, now) else {
+        return;
+    };
+    // Scheduled passes run at unlimited per-pass rate: the shared
+    // FlowController is the budget that matters here.
+    let opts = match kind {
+        ScrubKind::Light => ScrubOptions::light(),
+        ScrubKind::Deep => ScrubOptions::deep(),
+    };
+    match sh.scrub.start(opts) {
+        Ok(()) => {
+            sh.sched.record_fire(now);
+            Metrics::add(&sh.metrics.sched_fires, 1);
+        }
+        Err(Error::ScrubBusy(_)) => {
+            // skip-if-running: never stack passes; try again next period
+            sh.sched.record_skip();
+            Metrics::add(&sh.metrics.sched_skipped_busy, 1);
+        }
+        Err(_) => {}
+    }
+}
+
+/// The per-server scheduler thread body (spawned by
+/// [`crate::storage::osd::Osd::spawn`]). While no schedule is armed it
+/// only polls the shutdown flag at the lane threads' cadence.
+pub fn sched_loop(sh: Arc<OsdShared>, sd: Arc<AtomicBool>) {
+    while !sd.load(Ordering::SeqCst) {
+        if sh.sched.armed() {
+            std::thread::sleep(POLL);
+            tick(&sh);
+        } else {
+            std::thread::sleep(IDLE_POLL);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_builders() {
+        let s = ScrubSchedule::deep_every(500).with_jitter(50);
+        assert_eq!(s.every_ticks, 500);
+        assert_eq!(s.kind, ScrubKind::Deep);
+        assert_eq!(s.jitter, 50);
+        assert_eq!(ScrubSchedule::light_every(10).kind, ScrubKind::Light);
+    }
+
+    #[test]
+    fn due_fires_once_per_period_within_jitter() {
+        let ctl = SchedCtl::new();
+        ctl.set(7, 0, Some(ScrubSchedule::light_every(100).with_jitter(20)));
+        let st = ctl.status(7, 0);
+        assert!(st.next_due_ms >= 100 && st.next_due_ms <= 120);
+        // not due before the arming point
+        assert!(ctl.due(7, st.next_due_ms - 1).is_none());
+        // due exactly once at/after it, no matter how many tickers ask
+        assert_eq!(ctl.due(7, st.next_due_ms), Some(ScrubKind::Light));
+        assert!(ctl.due(7, st.next_due_ms).is_none());
+        // re-armed within one period + jitter of the fire
+        let st2 = ctl.status(7, st.next_due_ms);
+        assert!(st2.next_due_ms > st.next_due_ms);
+        assert!(st2.next_due_ms <= st.next_due_ms + 120);
+    }
+
+    #[test]
+    fn clock_jump_fires_once_no_backfill() {
+        let ctl = SchedCtl::new();
+        ctl.set(1, 0, Some(ScrubSchedule::light_every(10)));
+        // jump 10 periods ahead: one fire, re-armed from now
+        assert!(ctl.due(1, 1000).is_some());
+        assert!(ctl.due(1, 1000).is_none());
+        let st = ctl.status(1, 1000);
+        assert_eq!(st.next_due_ms, 1010);
+    }
+
+    #[test]
+    fn disarm_stops_firing() {
+        let ctl = SchedCtl::new();
+        ctl.set(0, 0, Some(ScrubSchedule::light_every(5)));
+        assert!(ctl.due(0, 100).is_some());
+        ctl.set(0, 100, None);
+        assert!(ctl.due(0, 10_000).is_none());
+        assert_eq!(ctl.status(0, 0).next_due_ms, 0);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        for arming in 0..50 {
+            let a = jitter_for(3, arming, 20);
+            let b = jitter_for(3, arming, 20);
+            assert_eq!(a, b);
+            assert!(a <= 20);
+        }
+        assert_eq!(jitter_for(3, 1, 0), 0);
+    }
+}

@@ -25,8 +25,21 @@
 //!   bit-rot and lost copies from a healthy replica.
 //!
 //! **Rate limiting** — every probe and every byte re-read is charged to a
-//! [`rate::TokenBucket`], so scrub bandwidth is capped and foreground
-//! traffic keeps its share of the disks and lanes.
+//! per-pass [`rate::TokenBucket`] (the `ScrubOptions` knob) *and* to the
+//! server's shared maintenance budget
+//! ([`crate::sched::flow::FlowController`]), so scrub bandwidth is capped
+//! and never collides blindly with rebalance or GC over the same disks
+//! and lanes.
+//!
+//! **Backpressure** — deep-scrub replica comparisons are pipelined under
+//! an AIMD window; a replica lane over its `VerifyCopy` in-flight cap
+//! sheds the probe with a `Busy` NACK, which shrinks the sender's window
+//! and schedules a backed-off retry ([`crate::sched::backpressure`]).
+//!
+//! **Scheduling** — one-shot passes start via
+//! [`crate::api::Cluster::start_scrub`]; the periodic cadence (cron-style
+//! per-OSD schedule with skip-if-running semantics) lives in
+//! [`crate::sched`].
 //!
 //! **Epoch awareness** — each window records the map epoch before
 //! scanning and discards its findings if a rebalance bumped the epoch
@@ -58,10 +71,13 @@ use crate::dedup::fingerprint::Fingerprint;
 use crate::error::{Error, Result};
 use crate::failure::CrashPoint;
 use crate::metrics::Metrics;
-use crate::net::Lane;
+use crate::net::{Lane, Pending};
+use crate::sched::backpressure::VerifyWindow;
+use crate::sched::flow::MaintClass;
 use crate::storage::osd::OsdShared;
 use crate::storage::proto::{Req, Resp};
 use self::rate::TokenBucket;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -73,6 +89,17 @@ const LIGHT_ENTRY_COST: u64 = 64;
 const CONFIRM_DELAY: Duration = Duration::from_millis(20);
 /// Worker poll interval for new jobs / shutdown.
 const POLL: Duration = Duration::from_millis(50);
+/// Initial AIMD window of pipelined `VerifyCopy` probes per deep-scrub
+/// batch (see [`crate::sched::backpressure`]).
+const VERIFY_WINDOW_INIT: usize = 8;
+/// Max AIMD window of pipelined `VerifyCopy` probes.
+const VERIFY_WINDOW_MAX: usize = 32;
+/// Retry budget per `Busy`-NACKed probe before it is left for the next
+/// pass (generous: with the window shrunk to 1 the storm always drains).
+const VERIFY_MAX_ATTEMPTS: u32 = 100;
+/// Base wall backoff after a `Busy` NACK (doubles per attempt, capped at
+/// `BASE << 6` ≈ 12.8 ms — pacing only, never an assertion surface).
+const VERIFY_BACKOFF_BASE_US: u64 = 200;
 
 /// Scrub depth.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -182,6 +209,9 @@ pub struct ScrubStatus {
     /// Referenced chunks with no healthy copy anywhere (quarantined
     /// behind an invalid flag).
     pub lost: u64,
+    /// Replica-copy probes abandoned after the backpressure retry
+    /// budget (left for the next pass; 0 in steady state).
+    pub copies_unverified: u64,
     /// Windows whose refcount resolution was skipped (peer down).
     pub windows_skipped: u64,
     /// Windows discarded because the map epoch changed mid-window.
@@ -212,12 +242,25 @@ impl ScrubCtl {
         Self::default()
     }
 
-    /// Queue a scrub pass; rejected while one is queued or running.
+    /// Idle control block that already knows its server id, so a
+    /// [`Error::ScrubBusy`] rejection names the busy server even before
+    /// the first pass ran.
+    pub fn for_server(server: u32) -> Self {
+        let ctl = Self::default();
+        ctl.inner.lock().unwrap().status.server = server;
+        ctl
+    }
+
+    /// Queue a scrub pass. Explicit skip-if-running semantics: while a
+    /// pass is queued or running the call is rejected with the typed
+    /// [`Error::ScrubBusy`] — the in-flight pass's status is never
+    /// clobbered and passes never stack. Callers (the maintenance
+    /// scheduler, admin retries) decide whether to skip or re-arm.
     pub fn start(&self, opts: ScrubOptions) -> Result<()> {
         let mut g = self.inner.lock().unwrap();
         if g.queued.is_some() || matches!(g.status.state, ScrubState::Queued | ScrubState::Running)
         {
-            return Err(Error::Invalid("scrub already running".into()));
+            return Err(Error::ScrubBusy(g.status.server));
         }
         g.status = ScrubStatus {
             server: g.status.server,
@@ -295,7 +338,7 @@ pub fn scrub_loop(sh: Arc<OsdShared>, sd: Arc<AtomicBool>) {
 /// at a time.
 fn run_pass(sh: &OsdShared, opts: &ScrubOptions) -> Result<()> {
     let deep = opts.kind == ScrubKind::Deep;
-    let mut bucket = TokenBucket::new(opts.rate_bytes_per_sec);
+    let mut bucket = TokenBucket::with_clock(opts.rate_bytes_per_sec, sh.clock.clone());
     let mut fps = sh.shard.cit_fingerprints()?;
     fps.sort();
     for window in fps.chunks(opts.window.max(1)) {
@@ -340,11 +383,15 @@ fn scrub_window(
             sh.scrub.update(|st| st.misplaced += 1);
             continue;
         }
-        bucket.take(if deep {
+        let cost = if deep {
             (entry.len as u64).max(LIGHT_ENTRY_COST)
         } else {
             LIGHT_ENTRY_COST
-        });
+        };
+        // per-pass cap (ScrubOptions knob) and the cluster's shared
+        // maintenance budget both see every byte
+        bucket.take(cost);
+        sh.charge_maint(MaintClass::Scrub, cost);
         targets.push(*fp);
         sh.scrub.update(|st| st.chunks_checked += 1);
         Metrics::add(&sh.metrics.scrub_chunks_checked, 1);
@@ -382,8 +429,9 @@ fn reconcile_refcounts(sh: &OsdShared, epoch0: u64, targets: &[Fingerprint]) -> 
 
     // double-read: an in-flight write takes chunk references before its
     // OMAP entry lands, so a single observation cannot distinguish a
-    // leak from a transaction in progress.
-    std::thread::sleep(CONFIRM_DELAY);
+    // leak from a transaction in progress. (Virtual clocks yield instead
+    // of sleeping — residual drift settles on a later pass either way.)
+    sh.clock.sleep(CONFIRM_DELAY);
     let suspect_fps: Vec<Fingerprint> = suspects.iter().map(|s| s.0).collect();
     let Some(confirm) = cluster_ref_counts(sh, &suspect_fps)? else {
         sh.scrub.update(|st| st.windows_skipped += 1);
@@ -480,7 +528,7 @@ fn check_presence_and_data(sh: &OsdShared, deep: bool, targets: &[Fingerprint]) 
     }
 
     if !reads.is_empty() {
-        deep_verify(sh, &reads)?;
+        deep_verify(sh, reads)?;
     }
     Ok(())
 }
@@ -508,24 +556,33 @@ fn repair_primary_from_copy(sh: &OsdShared, fp: &Fingerprint) -> Result<bool> {
 }
 
 /// Deep-scrub verification of one window's chunk reads: one batched
-/// digest call, then per-chunk corruption repair and replica checks.
-fn deep_verify(sh: &OsdShared, reads: &[(Fingerprint, Vec<u8>)]) -> Result<()> {
-    let refs: Vec<&[u8]> = reads.iter().map(|(_, d)| d.as_slice()).collect();
-    let digests = sh.provider.digests(&refs);
-    for ((fp, data), got) in reads.iter().zip(digests) {
+/// digest call, then per-chunk corruption repair, then one pipelined,
+/// backpressure-aware replica comparison over the whole window
+/// ([`verify_copies_windowed`]).
+fn deep_verify(sh: &OsdShared, mut reads: Vec<(Fingerprint, Vec<u8>)>) -> Result<()> {
+    let digests = {
+        let refs: Vec<&[u8]> = reads.iter().map(|(_, d)| d.as_slice()).collect();
+        sh.provider.digests(&refs)
+    };
+    // `intact[i]` ⇔ reads[i] holds known-good primary bytes afterwards
+    let mut intact = vec![false; reads.len()];
+    for (i, got) in digests.into_iter().enumerate() {
         ensure_alive(sh)?;
-        sh.scrub.update(|st| st.bytes_verified += data.len() as u64);
-        Metrics::add(&sh.metrics.scrub_bytes_verified, data.len() as u64);
-        if got == *fp {
-            verify_and_fix_copies(sh, fp, data)?;
+        let fp = reads[i].0;
+        let len = reads[i].1.len() as u64;
+        sh.scrub.update(|st| st.bytes_verified += len);
+        Metrics::add(&sh.metrics.scrub_bytes_verified, len);
+        if got == fp {
+            intact[i] = true;
             continue;
         }
         // bit-rot on the primary copy.
         sh.scrub.update(|st| st.corruptions_found += 1);
         Metrics::add(&sh.metrics.scrub_corruptions_found, 1);
-        if repair_primary_from_copy(sh, fp)? {
+        if repair_primary_from_copy(sh, &fp)? {
             if let Some(good) = sh.store.get(&fp.to_bytes())? {
-                verify_and_fix_copies(sh, fp, &good)?;
+                reads[i].1 = good;
+                intact[i] = true;
             }
         } else {
             // no healthy copy anywhere: quarantine behind an invalid
@@ -534,8 +591,140 @@ fn deep_verify(sh: &OsdShared, reads: &[(Fingerprint, Vec<u8>)]) -> Result<()> {
             // undone by later passes).
             sh.scrub.update(|st| st.lost += 1);
             sh.charge_meta_io();
-            sh.shard.cit_set_flag(fp, CommitFlag::Invalid, sh.now_ms())?;
+            sh.shard.cit_set_flag(&fp, CommitFlag::Invalid, sh.now_ms())?;
         }
+    }
+
+    // replica comparison for every chunk whose primary bytes are good
+    // (central-mode raw placement never fans out copies; the write path
+    // never fans out a copy to the primary itself)
+    let mut tasks: Vec<CopyTask> = Vec::new();
+    if sh.cfg.replication > 1 && sh.cfg.dedup != DedupMode::Central {
+        for (i, ok) in intact.iter().enumerate() {
+            if !*ok {
+                continue;
+            }
+            let chain = sh.chunk_chain(reads[i].0.placement_key());
+            for peer in chain.iter().skip(1).take(sh.cfg.replication - 1) {
+                if *peer != sh.id {
+                    tasks.push(CopyTask {
+                        peer: *peer,
+                        read_idx: i,
+                        attempts: 0,
+                    });
+                }
+            }
+        }
+    }
+    verify_copies_windowed(sh, &reads, tasks)
+}
+
+/// One pending replica comparison of a deep-scrub window: chunk
+/// `read_idx` of the window's reads, checked on `peer`.
+struct CopyTask {
+    peer: ServerId,
+    read_idx: usize,
+    attempts: u32,
+}
+
+/// Pipelined replica comparison under an AIMD send window: up to
+/// [`VerifyWindow::size`] `VerifyCopy` probes are in flight at once;
+/// [`Resp::Busy`] NACKs from gated replica lanes halve the window and
+/// requeue the probe (with exponential wall backoff) until a verdict
+/// arrives — backpressure delays verification, it never skips it.
+/// Missing or corrupt copies are re-pushed from the known-good primary
+/// bytes.
+fn verify_copies_windowed(
+    sh: &OsdShared,
+    reads: &[(Fingerprint, Vec<u8>)],
+    tasks: Vec<CopyTask>,
+) -> Result<()> {
+    if tasks.is_empty() {
+        return Ok(());
+    }
+    let mut win = VerifyWindow::new(VERIFY_WINDOW_INIT, VERIFY_WINDOW_MAX);
+    let mut queue: VecDeque<CopyTask> = tasks.into();
+    while !queue.is_empty() {
+        ensure_alive(sh)?;
+        // scatter up to one window of probes
+        let mut inflight: Vec<(CopyTask, Pending<Resp>)> = Vec::new();
+        while inflight.len() < win.size() {
+            let Some(task) = queue.pop_front() else {
+                break;
+            };
+            let fp = reads[task.read_idx].0;
+            let Ok(addr) = sh.dir.lookup(task.peer, Lane::Replica) else {
+                continue; // dead peer: nothing to fix right now
+            };
+            let req = Req::VerifyCopy {
+                key: chunk_copy_key(&fp),
+                fp,
+            };
+            let size = req.wire_size();
+            if let Ok(pending) = addr.send(req, size) {
+                inflight.push((task, pending));
+            }
+        }
+        if inflight.is_empty() {
+            break; // every remaining peer is unreachable
+        }
+        // gather verdicts; Busy NACKs shrink the window and requeue
+        let mut backoff_shift = 0u32;
+        for (mut task, pending) in inflight {
+            match pending.wait() {
+                Ok(Resp::CopyState { present, matches }) => {
+                    win.on_ok();
+                    if !(present && matches) {
+                        push_copy_repair(sh, &reads[task.read_idx], task.peer)?;
+                    }
+                }
+                Ok(Resp::Busy) => {
+                    if win.on_busy() {
+                        Metrics::add(&sh.metrics.backpressure_window_shrinks, 1);
+                    }
+                    task.attempts += 1;
+                    if task.attempts >= VERIFY_MAX_ATTEMPTS {
+                        // not silent: the pass reports the unverified
+                        // copy so "clean" is never claimed for it
+                        sh.scrub.update(|st| st.copies_unverified += 1);
+                        Metrics::add(&sh.metrics.backpressure_gave_up, 1);
+                    } else {
+                        Metrics::add(&sh.metrics.backpressure_retries, 1);
+                        backoff_shift = backoff_shift.max(task.attempts.min(6));
+                        queue.push_back(task);
+                    }
+                }
+                Ok(_) | Err(_) => {} // dead peer: nothing to fix right now
+            }
+        }
+        if backoff_shift > 0 {
+            std::thread::sleep(Duration::from_micros(
+                VERIFY_BACKOFF_BASE_US << backoff_shift,
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Re-push one known-good primary's bytes to a peer whose replica copy
+/// was missing or corrupt.
+fn push_copy_repair(sh: &OsdShared, read: &(Fingerprint, Vec<u8>), peer: ServerId) -> Result<()> {
+    let (fp, data) = read;
+    if sh.injector.maybe_crash(CrashPoint::BeforeScrubRepair) {
+        return Err(Error::ServerDown(sh.id.0));
+    }
+    let Ok(addr) = sh.dir.lookup(peer, Lane::Replica) else {
+        return Ok(());
+    };
+    let req = Req::PutCopy {
+        key: chunk_copy_key(fp),
+        data: data.clone(),
+    };
+    let size = req.wire_size();
+    if matches!(addr.call(req, size), Ok(Resp::Ok)) {
+        sh.scrub.update(|st| st.repaired += 1);
+        Metrics::add(&sh.metrics.scrub_repaired, 1);
+        Metrics::add(&sh.metrics.repairs, 1);
     }
     Ok(())
 }
@@ -566,50 +755,6 @@ fn fetch_healthy_copy(sh: &OsdShared, fp: &Fingerprint) -> Result<Option<Vec<u8>
         }
     }
     Ok(None)
-}
-
-/// Compare the replica copies on the placement chain against known-good
-/// primary bytes; missing or corrupt copies are re-pushed.
-fn verify_and_fix_copies(sh: &OsdShared, fp: &Fingerprint, data: &[u8]) -> Result<()> {
-    if sh.cfg.replication <= 1 || sh.cfg.dedup == DedupMode::Central {
-        return Ok(()); // central-mode raw placement never fans out copies
-    }
-    let chain = sh.chunk_chain(fp.placement_key());
-    for peer in chain.iter().skip(1).take(sh.cfg.replication - 1) {
-        if *peer == sh.id {
-            continue; // the write path never fans out a copy to itself
-        }
-        let Ok(addr) = sh.dir.lookup(*peer, Lane::Replica) else {
-            continue;
-        };
-        let req = Req::VerifyCopy {
-            key: chunk_copy_key(fp),
-            fp: *fp,
-        };
-        let size = req.wire_size();
-        let ok = match addr.call(req, size) {
-            Ok(Resp::CopyState { present, matches }) => present && matches,
-            Ok(_) => continue,
-            Err(_) => continue, // dead peer: nothing to fix right now
-        };
-        if ok {
-            continue;
-        }
-        if sh.injector.maybe_crash(CrashPoint::BeforeScrubRepair) {
-            return Err(Error::ServerDown(sh.id.0));
-        }
-        let req = Req::PutCopy {
-            key: chunk_copy_key(fp),
-            data: data.to_vec(),
-        };
-        let size = req.wire_size();
-        if matches!(addr.call(req, size), Ok(Resp::Ok)) {
-            sh.scrub.update(|st| st.repaired += 1);
-            Metrics::add(&sh.metrics.scrub_repaired, 1);
-            Metrics::add(&sh.metrics.repairs, 1);
-        }
-    }
-    Ok(())
 }
 
 /// Resolve the cluster-wide OMAP reference count for each fingerprint.
@@ -736,15 +881,17 @@ mod tests {
     }
 
     #[test]
-    fn ctl_rejects_concurrent_jobs() {
-        let ctl = ScrubCtl::new();
+    fn ctl_rejects_concurrent_jobs_with_typed_busy() {
+        let ctl = ScrubCtl::for_server(9);
         ctl.start(ScrubOptions::light()).unwrap();
-        assert!(ctl.start(ScrubOptions::light()).is_err());
+        // the race is rejected with the typed error naming the server,
+        // and the in-flight job's status is not clobbered
+        assert!(matches!(ctl.start(ScrubOptions::light()), Err(Error::ScrubBusy(9))));
         assert_eq!(ctl.status().state, ScrubState::Queued);
         // worker takes the job; status stays Queued until begin
         assert!(ctl.take_job(Duration::from_millis(1)).is_some());
         // still "Queued" state-wise → a second start is still rejected
-        assert!(ctl.start(ScrubOptions::light()).is_err());
+        assert!(matches!(ctl.start(ScrubOptions::light()), Err(Error::ScrubBusy(9))));
         ctl.update(|st| st.state = ScrubState::Done);
         ctl.start(ScrubOptions::deep()).unwrap();
         assert!(ctl.status().deep);

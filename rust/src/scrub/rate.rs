@@ -5,29 +5,54 @@
 //! against a refilling token budget. The bucket holds at most one
 //! second's worth of tokens — a scrub that falls behind does not get to
 //! burst-catch-up and starve clients.
+//!
+//! Since the maintenance-scheduler work this bucket refills from the
+//! injected [`Clock`] rather than wall time, so a
+//! [`crate::util::clock::SimClock`]-driven test controls exactly how
+//! much budget a pass sees. The cluster-shared generalization (weighted
+//! classes, one budget for scrub **and** rebalance **and** GC) lives in
+//! [`crate::sched::flow::FlowController`]; this per-pass bucket remains
+//! as the `ScrubOptions::rate_bytes_per_sec` knob.
 
-use std::time::{Duration, Instant};
+use crate::util::clock::{Clock, WallClock};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Upper bound on one wall sleep between refill re-checks while a take
+/// waits (keeps reaction to virtual-clock advances bounded). The actual
+/// sleep is deficit-proportional; an implementation detail, not a timing
+/// dependency — the token accounting itself is entirely clock-driven.
+const MAX_WAIT_POLL: Duration = Duration::from_millis(50);
 
 /// A token bucket charged in bytes (or byte-equivalents for metadata
 /// probes). `rate == 0` disables limiting entirely.
 pub struct TokenBucket {
-    /// Refill rate in tokens/second; 0 = unlimited.
+    /// Refill rate in tokens/second of clock time; 0 = unlimited.
     rate: u64,
     /// Maximum accumulated tokens (one second of refill).
     capacity: f64,
     tokens: f64,
-    last: Instant,
+    last_ms: u64,
+    clock: Arc<dyn Clock>,
 }
 
 impl TokenBucket {
-    /// A bucket refilling at `rate` tokens/second, starting full.
+    /// A wall-clock bucket refilling at `rate` tokens/second, starting
+    /// full.
     pub fn new(rate: u64) -> Self {
+        Self::with_clock(rate, Arc::new(WallClock::new()))
+    }
+
+    /// A bucket refilling at `rate` tokens per second of `clock` time,
+    /// starting full.
+    pub fn with_clock(rate: u64, clock: Arc<dyn Clock>) -> Self {
         let capacity = rate.max(1) as f64;
         TokenBucket {
             rate,
             capacity,
             tokens: capacity,
-            last: Instant::now(),
+            last_ms: clock.now_ms(),
+            clock,
         }
     }
 
@@ -36,7 +61,17 @@ impl TokenBucket {
         self.rate == 0
     }
 
-    /// Take `cost` tokens, sleeping until the refill covers the deficit.
+    fn refill(&mut self) {
+        let now = self.clock.now_ms();
+        let elapsed_ms = now.saturating_sub(self.last_ms);
+        if elapsed_ms > 0 {
+            let refill = elapsed_ms as f64 * self.rate as f64 / 1000.0;
+            self.tokens = (self.tokens + refill).min(self.capacity);
+            self.last_ms = now;
+        }
+    }
+
+    /// Take `cost` tokens, waiting until the refill covers the deficit.
     /// Costs above one second's budget are clamped to the bucket capacity
     /// (a single oversized chunk must not stall the scrub forever).
     pub fn take(&mut self, cost: u64) {
@@ -45,17 +80,16 @@ impl TokenBucket {
         }
         let cost = (cost as f64).min(self.capacity);
         loop {
-            let now = Instant::now();
-            let elapsed = now.duration_since(self.last).as_secs_f64();
-            self.tokens = (self.tokens + elapsed * self.rate as f64).min(self.capacity);
-            self.last = now;
+            self.refill();
             if self.tokens >= cost {
                 self.tokens -= cost;
                 return;
             }
+            // deficit-proportional wall sleep (ticks ≈ ms), capped so a
+            // virtual-clock advance is noticed promptly
             let deficit = cost - self.tokens;
-            let wait = Duration::from_secs_f64(deficit / self.rate as f64);
-            std::thread::sleep(wait.min(Duration::from_millis(50)));
+            let ms = (deficit * 1000.0 / self.rate as f64).ceil() as u64;
+            std::thread::sleep(Duration::from_millis(ms.max(1)).min(MAX_WAIT_POLL));
         }
     }
 }
@@ -63,6 +97,8 @@ impl TokenBucket {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::clock::SimClock;
+    use std::time::Instant;
 
     #[test]
     fn unlimited_never_sleeps() {
@@ -97,5 +133,23 @@ mod tests {
         let t0 = Instant::now();
         b.take(u64::MAX); // would deadlock without the clamp
         assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn virtual_clock_drives_refill() {
+        let sim = Arc::new(SimClock::new());
+        let mut b = TokenBucket::with_clock(1000, sim.clone());
+        b.take(1000); // drain the initial burst, no waiting needed
+        let sim2 = sim.clone();
+        let driver = std::thread::spawn(move || {
+            // 500 virtual ms in steps: refills 500 tokens over ~50ms wall
+            for _ in 0..50 {
+                std::thread::sleep(Duration::from_millis(1));
+                sim2.advance(10);
+            }
+        });
+        b.take(500); // blocks until virtual refill covers it
+        driver.join().unwrap();
+        assert!(sim.now_ms() >= 500);
     }
 }

@@ -1,6 +1,6 @@
 //! The object storage server (OSS/OSD).
 //!
-//! One `Osd` runs six threads over a shared per-server state
+//! One `Osd` runs seven threads over a shared per-server state
 //! ([`OsdShared`], which models everything that survives a crash — the
 //! chunk store, the replica store and the DM-Shard are "disk"; the
 //! pending-flag queue and any in-flight scrub job are "memory" and die
@@ -11,7 +11,9 @@
 //! * **replica**  — replica copies (strictly local; see `net` lane order);
 //! * **control**  — map updates, rebalance, GC, stats, audit, scrub admin;
 //! * **consistency manager** — the asynchronous flag flipper (§2.4);
-//! * **scrub worker** — the online integrity walker ([`crate::scrub`]).
+//! * **scrub worker** — the online integrity walker ([`crate::scrub`]);
+//! * **maintenance scheduler** — fires the periodic scrub cadence
+//!   ([`crate::sched`]).
 //!
 //! Kill/crash semantics: lanes keep running but silently *drop* every
 //! envelope while the injector reports dead — callers observe a closed
@@ -30,29 +32,16 @@ use crate::failure::FailureInjector;
 use crate::metrics::Metrics;
 use crate::net::{endpoint, Inbox, Lane, NetProfile};
 use crate::placement::pg::PgMap;
+use crate::sched::backpressure::Gate;
+use crate::sched::flow::{FlowController, MaintClass};
+use crate::sched::SchedCtl;
 use crate::storage::backend::StorageBackend;
 use crate::storage::proto::{AuditDump, ChunkAck, Dir, OsdStats, Req, Resp};
 use crate::storage::rebalance;
+use crate::util::clock::Clock;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
-
-/// Cluster-start-relative clock (ms); shared by all servers so CIT
-/// timestamps and GC thresholds are comparable cluster-wide.
-pub struct Clock(Instant);
-
-impl Default for Clock {
-    fn default() -> Self {
-        Clock(Instant::now())
-    }
-}
-
-impl Clock {
-    /// Milliseconds since cluster start.
-    pub fn now_ms(&self) -> u64 {
-        self.0.elapsed().as_millis() as u64
-    }
-}
 
 /// Per-server configuration (a slice of the cluster config).
 #[derive(Clone)]
@@ -100,6 +89,14 @@ pub struct OsdShared {
     /// Volatile: scrub-worker job hand-off and progress (a crash aborts
     /// the running pass).
     pub scrub: crate::scrub::ScrubCtl,
+    /// Maintenance scheduler: the armed periodic-scrub cadence and its
+    /// fire accounting (configuration-like — survives kill/restart).
+    pub sched: SchedCtl,
+    /// Shared maintenance budget: scrub windows, rebalance batches and
+    /// GC reclaims draw weighted tokens from this one per-server bucket.
+    pub flow: FlowController,
+    /// Replica-lane admission gate shedding `VerifyCopy` storms.
+    pub verify_gate: Gate,
     /// Crash-point/kill failure injector for this server.
     pub injector: FailureInjector,
     /// Cluster-shared metrics.
@@ -108,8 +105,9 @@ pub struct OsdShared {
     pub dir: Dir,
     /// Fingerprint computation provider (scalar SHA-1 or XLA-batched).
     pub provider: Arc<dyn FingerprintProvider>,
-    /// Cluster-start-relative clock.
-    pub clock: Arc<Clock>,
+    /// Cluster-start-relative clock (wall or virtual; see
+    /// [`crate::util::clock`]).
+    pub clock: Arc<dyn Clock>,
     /// SyncObject-mode transaction lock (held across a whole object write).
     pub obj_lock: Mutex<()>,
     /// Test hook: runs once on the frontend thread in the gap between
@@ -142,6 +140,26 @@ impl OsdShared {
     pub fn charge_meta_io(&self) {
         if let Some(d) = self.cfg.meta_io {
             std::thread::sleep(d);
+        }
+    }
+
+    /// Charge maintenance I/O to the shared per-server budget (blocks
+    /// until the class's bucket covers it — that pacing *is* the
+    /// throttle; on the control lane it deliberately slows GC/rebalance
+    /// passes, mirroring backfill competing for real lanes) and account
+    /// the grant in the cluster metrics. Virtual-clock tests with a
+    /// finite budget must keep advancing the clock while maintenance
+    /// runs, or size the budget so no draw ever waits.
+    pub fn charge_maint(&self, class: MaintClass, cost: u64) {
+        let out = self.flow.take(class, cost);
+        let counter = match class {
+            MaintClass::Scrub => &self.metrics.flow_granted_scrub,
+            MaintClass::Rebalance => &self.metrics.flow_granted_rebalance,
+            MaintClass::Gc => &self.metrics.flow_granted_gc,
+        };
+        Metrics::add(counter, out.granted);
+        if out.waited {
+            Metrics::add(&self.metrics.flow_waits, 1);
         }
     }
 
@@ -221,6 +239,20 @@ impl Osd {
             );
         }
 
+        // maintenance scheduler thread: fires the armed periodic-scrub
+        // cadence (see `crate::sched`; virtual-clock tests tick the same
+        // path explicitly through `SchedTick`).
+        {
+            let sh = shared.clone();
+            let sd = shutdown.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("{}-sched", shared.id))
+                    .spawn(move || crate::sched::sched_loop(sh, sd))
+                    .expect("spawn sched"),
+            );
+        }
+
         Osd {
             shared,
             shutdown,
@@ -259,6 +291,23 @@ fn lane_loop(sh: Arc<OsdShared>, sd: Arc<AtomicBool>, lane: Lane, inbox: Inbox<R
             continue;
         }
         let (req, replier) = env.split();
+        // Replica-side backpressure: a `VerifyCopy` storm past the lane's
+        // in-flight cap is shed with a cheap typed NACK *before* any
+        // hashing happens; scrub senders back off and retry (see
+        // `crate::sched::backpressure`).
+        if lane == Lane::Replica
+            && matches!(req, Req::VerifyCopy { .. })
+            && !sh.verify_gate.admit(inbox.backlog())
+        {
+            // same rule as after dispatch: a server killed meanwhile
+            // must not reply — not even a NACK
+            if sh.injector.is_dead() {
+                continue;
+            }
+            Metrics::add(&sh.metrics.backpressure_busy, 1);
+            replier.reply(Resp::Busy);
+            continue;
+        }
         let resp = dispatch(&sh, lane, req);
         // A crash point may have fired mid-request: a dead server must not
         // reply (the caller sees ServerDown via the dropped channel).
@@ -528,9 +577,21 @@ fn dispatch(sh: &Arc<OsdShared>, lane: Lane, req: Req) -> Resp {
         },
         (Lane::Control, Req::StartScrub { opts }) => match sh.scrub.start(opts) {
             Ok(()) => Resp::Ok,
+            // typed NACK so callers can tell "already running" (re-arm,
+            // retry later) from a real failure
+            Err(crate::error::Error::ScrubBusy(_)) => Resp::Busy,
             Err(e) => err_str(e),
         },
         (Lane::Control, Req::ScrubStatus) => Resp::Scrub(sh.scrub.status()),
+        (Lane::Control, Req::SetSchedule { schedule }) => {
+            sh.sched.set(sh.id.0, sh.now_ms(), schedule);
+            Resp::Ok
+        }
+        (Lane::Control, Req::SchedStatus) => Resp::Sched(sh.sched.status(sh.id.0, sh.now_ms())),
+        (Lane::Control, Req::SchedTick) => {
+            crate::sched::tick(sh);
+            Resp::Ok
+        }
         (Lane::Control, Req::RebuildBackrefs) => {
             // audit + re-derive under one shard lock acquisition, so the
             // reported drift is exactly what the rebuild repaired

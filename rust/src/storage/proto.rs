@@ -8,6 +8,7 @@
 use crate::cluster::ClusterMap;
 use crate::dedup::cit::CommitFlag;
 use crate::dedup::fingerprint::Fingerprint;
+use crate::sched::{SchedStatus, ScrubSchedule};
 use crate::scrub::{ScrubOptions, ScrubStatus};
 
 /// All messages a server can receive.
@@ -116,6 +117,18 @@ pub enum Req {
     StartScrub { opts: ScrubOptions },
     /// Snapshot the scrub worker's progress.
     ScrubStatus,
+    /// Arm (or disarm with `None`) this server's periodic scrub
+    /// schedule (see [`crate::sched`]).
+    SetSchedule {
+        /// The cadence to arm; `None` disarms.
+        schedule: Option<ScrubSchedule>,
+    },
+    /// Snapshot this server's maintenance-scheduler state.
+    SchedStatus,
+    /// Evaluate this server's schedule now (fires due passes). Sent by
+    /// [`crate::api::Cluster::advance_clock`] after moving the virtual
+    /// clock; idempotent per due time.
+    SchedTick,
     /// One-shot backreference-index migration/repair: audit the index
     /// against the OMAP, then re-derive it (pre-index stores, suspected
     /// divergence after an unclean recovery).
@@ -173,6 +186,13 @@ pub enum Resp {
     CopyState { present: bool, matches: bool },
     /// Scrub worker progress snapshot.
     Scrub(ScrubStatus),
+    /// Maintenance-scheduler snapshot.
+    Sched(SchedStatus),
+    /// Typed busy NACK: the receiver shed the request without doing its
+    /// work (replica `VerifyCopy` lane over its in-flight cap, or a
+    /// scrub start racing a pass already queued/running). Retry later;
+    /// nothing happened.
+    Busy,
     /// Requested key/object/chunk is unknown.
     NotFound,
     /// Per-server statistics.
@@ -280,6 +300,7 @@ impl Req {
             Req::ListRefs { .. } => 20,
             Req::VerifyCopy { key, .. } => key.len() + 20,
             Req::StartScrub { .. } => 24,
+            Req::SetSchedule { .. } => 24,
             Req::PutCopy { key, data } => key.len() + data.len(),
             Req::DeleteCopy { key } | Req::FetchCopy { key } => key.len(),
             Req::ApplyMap(m) => 16 * m.servers.len(),

@@ -19,6 +19,7 @@ use crate::dedup::engine::omap_copy_key;
 use crate::error::Result;
 use crate::metrics::Metrics;
 use crate::net::Lane;
+use crate::sched::flow::MaintClass;
 use crate::storage::osd::OsdShared;
 use crate::storage::proto::{Req, Resp};
 
@@ -61,6 +62,7 @@ pub fn run(sh: &OsdShared) -> Result<RebalanceReport> {
                 valid: false,
             };
             let size = req.wire_size();
+            sh.charge_maint(MaintClass::Rebalance, size as u64);
             if matches!(addr.call(req, size)?, Resp::Ok) {
                 sh.shard.cit_delete(&fp)?;
             }
@@ -73,7 +75,10 @@ pub fn run(sh: &OsdShared) -> Result<RebalanceReport> {
             refcount: entry.refcount,
             valid: entry.flag == crate::dedup::cit::CommitFlag::Valid,
         };
+        // migration batches draw from the same per-server maintenance
+        // budget as scrub windows — the two no longer collide blindly
         let size = req.wire_size();
+        sh.charge_maint(MaintClass::Rebalance, size as u64);
         match addr.call(req, size)? {
             Resp::Ok => {
                 sh.shard.cit_delete(&fp)?;
@@ -108,6 +113,7 @@ pub fn run(sh: &OsdShared) -> Result<RebalanceReport> {
             value: value.clone(),
         };
         let size = req.wire_size();
+        sh.charge_maint(MaintClass::Rebalance, size as u64);
         match addr.call(req, size)? {
             Resp::Ok => {
                 if let Some(delta) = sh.shard.omap_delete(&name)? {
@@ -158,6 +164,7 @@ pub fn run(sh: &OsdShared) -> Result<RebalanceReport> {
                 data,
             };
             let size = req.wire_size();
+            sh.charge_maint(MaintClass::Rebalance, size as u64);
             if matches!(addr.call(req, size)?, Resp::Ok) {
                 sh.store.delete(&key)?;
                 report.chunks_moved += 1;

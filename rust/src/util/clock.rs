@@ -1,0 +1,112 @@
+//! Injectable time: one [`Clock`] trait, two implementations.
+//!
+//! Everything time-dependent in the cluster — CIT timestamps, GC age
+//! thresholds, scrub pass bookkeeping, the maintenance scheduler's
+//! cadence and the [`crate::sched::flow::FlowController`] refill — reads
+//! time through an `Arc<dyn Clock>` threaded into
+//! [`crate::storage::osd::OsdShared`]. Production clusters run on
+//! [`WallClock`] (monotonic, cluster-start-relative, exactly the old
+//! behavior); tests run on [`SimClock`], a **virtual clock** that only
+//! moves when the test calls [`SimClock::advance`] — so cadence,
+//! throttling and backpressure become deterministic properties asserted
+//! from counters, never from wall-time sleeps.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// A source of cluster time in milliseconds ("ticks"). Shared by all
+/// servers of a cluster so CIT timestamps and GC thresholds are
+/// comparable cluster-wide.
+pub trait Clock: Send + Sync {
+    /// Milliseconds since cluster start.
+    fn now_ms(&self) -> u64;
+
+    /// Pause the calling thread for roughly `d` of *this clock's* time.
+    /// Wall clocks really sleep; the virtual clock cannot wait for time
+    /// it does not drive, so it yields instead — callers use this for
+    /// heuristic delays (settling, backoff), never for correctness.
+    fn sleep(&self, d: Duration);
+}
+
+/// Monotonic wall-clock time, relative to construction (cluster start).
+pub struct WallClock(Instant);
+
+impl WallClock {
+    /// A clock starting at 0 now.
+    pub fn new() -> Self {
+        WallClock(Instant::now())
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_ms(&self) -> u64 {
+        self.0.elapsed().as_millis() as u64
+    }
+
+    fn sleep(&self, d: Duration) {
+        std::thread::sleep(d);
+    }
+}
+
+/// A deterministic virtual clock: `now_ms` is a counter that moves only
+/// when [`advance`](SimClock::advance) is called (typically via
+/// [`crate::api::Cluster::advance_clock`], which also ticks every
+/// server's maintenance scheduler).
+#[derive(Default)]
+pub struct SimClock {
+    now: AtomicU64,
+}
+
+impl SimClock {
+    /// A virtual clock at tick 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Move virtual time forward by `ticks` ms; returns the new now.
+    pub fn advance(&self, ticks: u64) -> u64 {
+        self.now.fetch_add(ticks, Ordering::SeqCst) + ticks
+    }
+}
+
+impl Clock for SimClock {
+    fn now_ms(&self) -> u64 {
+        self.now.load(Ordering::SeqCst)
+    }
+
+    fn sleep(&self, _d: Duration) {
+        // Virtual time is driven externally; a sleeper cannot make it
+        // pass. Yield so whoever drives the clock gets the CPU.
+        std::thread::yield_now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_advances() {
+        let c = WallClock::new();
+        let t0 = c.now_ms();
+        c.sleep(Duration::from_millis(5));
+        assert!(c.now_ms() >= t0 + 4);
+    }
+
+    #[test]
+    fn sim_clock_only_moves_on_advance() {
+        let c = SimClock::new();
+        assert_eq!(c.now_ms(), 0);
+        c.sleep(Duration::from_secs(3600)); // returns immediately
+        assert_eq!(c.now_ms(), 0);
+        assert_eq!(c.advance(250), 250);
+        assert_eq!(c.now_ms(), 250);
+        assert_eq!(c.advance(750), 1000);
+    }
+}

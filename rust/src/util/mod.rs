@@ -1,9 +1,10 @@
-//! Small self-contained substrates: RNG, hex, record codec, statistics and
-//! a property-testing harness.
+//! Small self-contained substrates: injectable clocks, RNG, hex, record
+//! codec, statistics and a property-testing harness.
 //!
 //! The offline crate universe has no `rand`, `serde` or `proptest`, so the
 //! pieces the rest of the crate needs are implemented here from scratch.
 
+pub mod clock;
 pub mod codec;
 pub mod hex;
 pub mod prop;

@@ -1,0 +1,145 @@
+//! Deterministic `VerifyCopy` storm: a deep scrub over chunks with
+//! max-length replica chains floods the replica lanes with verification
+//! probes. The replica-side gate must never admit more than its
+//! in-flight cap (test-hook counter), every `Busy` NACK must be retried
+//! to completion, and the scrub report must still end clean.
+
+use snss_dedup::api::{ClockSource, Cluster, ClusterConfig, DedupMode, ScrubOptions};
+use snss_dedup::cluster::ServerId;
+use snss_dedup::dedup::Chunking;
+use snss_dedup::util::rng::XorShift128Plus;
+use snss_dedup::Error;
+use std::time::Duration;
+
+const SERVERS: usize = 4;
+const CAP: usize = 2;
+
+fn storm_cluster() -> Cluster {
+    Cluster::new(ClusterConfig {
+        servers: SERVERS,
+        // max-length replica chain: every chunk has a copy on every
+        // other server, so each scrubbing primary scatters probes at
+        // every peer
+        replication: SERVERS,
+        dedup: DedupMode::ClusterWide,
+        chunking: Chunking::Fixed { size: 512 },
+        // virtual clock: nothing in this test depends on wall time
+        clock: ClockSource::Sim,
+        verify_inflight_cap: CAP,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn payload(seed: u64, len: usize) -> Vec<u8> {
+    let mut rng = XorShift128Plus::new(seed);
+    let mut v = vec![0u8; len];
+    rng.fill_bytes(&mut v);
+    v
+}
+
+/// Make every replica lane's verification service slow (test hook), so
+/// the pipelined scatter visibly queues and the storm is deterministic.
+fn slow_replica_lanes(cluster: &Cluster) {
+    for i in 0..SERVERS as u32 {
+        cluster
+            .with_osd(ServerId(i), |sh| {
+                sh.verify_gate.set_hold_for_tests(Duration::from_millis(2));
+            })
+            .unwrap();
+    }
+}
+
+#[test]
+fn verify_copy_storm_respects_cap_and_retries_to_completion() {
+    let cluster = storm_cluster();
+    let client = cluster.client();
+    // 64 distinct 512-byte chunks spread over all four primaries; with
+    // replication = 4 each primary deep-scrubs ~16 chunks × 3 peers of
+    // probes, window-pipelined — far more than CAP per lane
+    client.put_object("hot", &payload(0xB00B5, 32 * 1024)).unwrap();
+    cluster.flush_consistency().unwrap();
+    slow_replica_lanes(&cluster);
+
+    cluster
+        .start_scrub(ScrubOptions::deep().with_window(64))
+        .unwrap();
+    let report = cluster.scrub_wait().unwrap();
+    assert!(report.all_done(), "failure: {:?}", report.first_failure());
+    assert_eq!(report.corruptions_found, 0);
+    assert_eq!(report.lost, 0);
+    assert_eq!(report.copies_unverified, 0, "no probe may be abandoned");
+
+    // the storm actually formed and was shed + retried, never dropped
+    let stats = cluster.stats();
+    assert!(stats.backpressure_busy > 0, "storm never tripped a gate");
+    assert!(stats.backpressure_retries > 0, "Busy NACKs were not retried");
+    assert!(
+        stats.backpressure_window_shrinks > 0,
+        "sender never shrank its window"
+    );
+    assert_eq!(
+        stats.backpressure_gave_up, 0,
+        "every NACKed probe must be retried to a verdict"
+    );
+
+    // the cap held on every lane (admitted in-flight never exceeded it),
+    // while at least one lane observed more than the cap arriving
+    let mut observed_over_cap = false;
+    for i in 0..SERVERS as u32 {
+        let (admitted, observed) = cluster
+            .with_osd(ServerId(i), |sh| {
+                (
+                    sh.verify_gate.admitted_peak(),
+                    sh.verify_gate.observed_peak(),
+                )
+            })
+            .unwrap();
+        assert!(
+            admitted <= CAP as u64,
+            "osd.{i} admitted {admitted} in flight > cap {CAP}"
+        );
+        observed_over_cap |= observed > CAP as u64;
+    }
+    assert!(
+        observed_over_cap,
+        "no replica lane ever saw more than the cap in flight — no storm"
+    );
+
+    // and the cluster state is untouched by all the shedding/retrying
+    let audit = cluster.audit().unwrap();
+    assert!(audit.is_ok(), "{:?}", audit.violations);
+    cluster.shutdown();
+}
+
+/// Satellite regression: a second `start_scrub` racing an in-flight pass
+/// is rejected with the typed [`Error::ScrubBusy`] — it neither clobbers
+/// the running pass's status nor stacks a second pass.
+#[test]
+fn concurrent_start_scrub_is_typed_scrub_busy() {
+    let cluster = storm_cluster();
+    let client = cluster.client();
+    client.put_object("hot", &payload(7, 32 * 1024)).unwrap();
+    cluster.flush_consistency().unwrap();
+    // pin the deep pass slow so the race window is wide and deterministic
+    slow_replica_lanes(&cluster);
+
+    cluster
+        .start_scrub(ScrubOptions::deep().with_window(64))
+        .unwrap();
+    match cluster.start_scrub(ScrubOptions::light()) {
+        Err(Error::ScrubBusy(_)) => {}
+        other => panic!("expected ScrubBusy, got {other:?}"),
+    }
+
+    // the first pass was not disturbed: it still completes cleanly
+    let report = cluster.scrub_wait().unwrap();
+    assert!(report.all_done(), "failure: {:?}", report.first_failure());
+    assert_eq!(report.corruptions_found, 0);
+
+    // once idle, a new pass is accepted again
+    cluster.start_scrub(ScrubOptions::light()).unwrap();
+    let report = cluster.scrub_wait().unwrap();
+    assert!(report.all_done(), "failure: {:?}", report.first_failure());
+    cluster.shutdown();
+}
