@@ -1,0 +1,181 @@
+//! Recovery MTTR bench: time-to-full-replication after one server loss.
+//!
+//! Populates a 5-server cluster with small unique objects, removes one
+//! server (`Cluster::remove_server` — the same detect→out→backfill path
+//! the failure detector drives, minus the detection windows), and times
+//! how long the surviving servers take to re-home OMAP records, restore
+//! lost primaries and re-push replica copies back to the configured
+//! replication factor. Health is asserted *after* timing: the audit
+//! must be clean and a deep scrub must find nothing left to repair —
+//! a fast-but-wrong recovery would fail here, not report a number.
+//!
+//! ```text
+//! cargo bench --bench recovery                 # 10k + 100k objects
+//! BENCH_SCALE=small cargo bench --bench recovery   # 10k only
+//! ```
+//!
+//! Standalone driver (criterion is unavailable offline); rows are also
+//! appended to `bench_out/recovery.tsv` and a JSON summary is written
+//! to `BENCH_recovery.json` at the repository root.
+
+use snss_dedup::api::{Cluster, ClusterConfig, ScrubOptions};
+use snss_dedup::cluster::ServerId;
+use snss_dedup::dedup::Chunking;
+use snss_dedup::util::rng::XorShift128Plus;
+use std::io::Write as _;
+use std::time::Instant;
+
+const SERVERS: usize = 5;
+/// One chunk per object keeps the focus on recovery fan-out, not
+/// chunking.
+const OBJECT_SIZE: usize = 1024;
+
+struct Point {
+    objects: u64,
+    replication: usize,
+    secs: f64,
+    chunks_restored: u64,
+    copies_pushed: u64,
+    omap_recovered: u64,
+    mib_recovered: f64,
+}
+
+fn run_point(objects: u64, replication: usize) -> Point {
+    let cluster = Cluster::new(ClusterConfig {
+        servers: SERVERS,
+        replication,
+        chunking: Chunking::Fixed { size: OBJECT_SIZE },
+        ..Default::default()
+    })
+    .expect("boot cluster");
+    let client = cluster.client();
+    let mut rng = XorShift128Plus::new(0xBACC_0FF5 ^ objects ^ replication as u64);
+    let mut buf = vec![0u8; OBJECT_SIZE];
+    for i in 0..objects {
+        rng.fill_bytes(&mut buf);
+        client
+            .put_object(&format!("obj-{i}"), &buf)
+            .expect("populate");
+    }
+    cluster.flush_consistency().expect("flush");
+
+    let victim = ServerId(1);
+    let t0 = Instant::now();
+    cluster.remove_server(victim).expect("remove");
+    let report = cluster.recovery_wait().expect("recovery");
+    let secs = t0.elapsed().as_secs_f64();
+
+    // health gate: a wrong recovery must fail loudly, not get timed
+    assert!(
+        report.first_failure().is_none(),
+        "recovery failed: {report:?}"
+    );
+    let audit = cluster.audit().expect("audit");
+    assert!(audit.is_ok(), "audit violations: {:?}", audit.violations);
+    cluster.start_scrub(ScrubOptions::deep()).expect("scrub");
+    let scrub = cluster.scrub_wait().expect("scrub_wait");
+    assert_eq!(
+        scrub.repaired + scrub.lost + scrub.corruptions_found,
+        0,
+        "recovery left degradation behind: {scrub:?}"
+    );
+
+    let point = Point {
+        objects,
+        replication,
+        secs,
+        chunks_restored: report.chunks_restored,
+        copies_pushed: report.copies_pushed,
+        omap_recovered: report.omap_recovered,
+        mib_recovered: report.bytes_recovered as f64 / (1 << 20) as f64,
+    };
+    cluster.shutdown();
+    point
+}
+
+fn main() {
+    let sizes: &[u64] = match std::env::var("BENCH_SCALE").as_deref() {
+        Ok("small") => &[10_000],
+        _ => &[10_000, 100_000],
+    };
+    println!("== recovery: time-to-full-replication after one server loss ==");
+    println!(
+        "{:<10} {:>4} {:>10} {:>10} {:>10} {:>8} {:>10} {:>10}",
+        "objects", "rep", "mttr s", "restored", "copies", "omap", "MiB", "MiB/s"
+    );
+    let mut json_points = Vec::new();
+    for &objects in sizes {
+        for replication in [2usize, 3] {
+            let p = run_point(objects, replication);
+            let rate = if p.secs > 0.0 {
+                p.mib_recovered / p.secs
+            } else {
+                0.0
+            };
+            println!(
+                "{:<10} {:>4} {:>10.3} {:>10} {:>10} {:>8} {:>10.1} {:>10.1}",
+                p.objects,
+                p.replication,
+                p.secs,
+                p.chunks_restored,
+                p.copies_pushed,
+                p.omap_recovered,
+                p.mib_recovered,
+                rate
+            );
+            record(
+                "recovery",
+                "objects\treplication\tmttr_secs\tchunks_restored\tcopies_pushed\t\
+                 omap_recovered\tmib_recovered",
+                &format!(
+                    "{}\t{}\t{:.3}\t{}\t{}\t{}\t{:.2}",
+                    p.objects,
+                    p.replication,
+                    p.secs,
+                    p.chunks_restored,
+                    p.copies_pushed,
+                    p.omap_recovered,
+                    p.mib_recovered
+                ),
+            );
+            json_points.push(format!(
+                "    {{\"objects\": {}, \"replication\": {}, \"mttr_secs\": {:.3}, \
+                 \"chunks_restored\": {}, \"copies_pushed\": {}, \"omap_recovered\": {}, \
+                 \"mib_recovered\": {:.2}}}",
+                p.objects,
+                p.replication,
+                p.secs,
+                p.chunks_restored,
+                p.copies_pushed,
+                p.omap_recovered,
+                p.mib_recovered
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"recovery\",\n  \"servers\": {SERVERS},\n  \
+         \"object_size\": {OBJECT_SIZE},\n  \"points\": [\n{}\n  ]\n}}\n",
+        json_points.join(",\n")
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_recovery.json");
+    std::fs::write(path, json).expect("write BENCH_recovery.json");
+    println!("summary written to BENCH_recovery.json");
+}
+
+/// Append one TSV row under `bench_out/` (same format as
+/// `common::record`; duplicated so this driver stays self-contained).
+fn record(bench: &str, header: &str, row: &str) {
+    let _ = std::fs::create_dir_all("bench_out");
+    let path = format!("bench_out/{bench}.tsv");
+    let new = !std::path::Path::new(&path).exists();
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+    {
+        if new {
+            let _ = writeln!(f, "{header}");
+        }
+        let _ = writeln!(f, "{row}");
+    }
+}

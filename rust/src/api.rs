@@ -1,12 +1,13 @@
 //! Public entry point: [`ClusterConfig`] → [`Cluster`] → [`Client`].
 //!
 //! A `Cluster` assembles the monitor, the placement layer, one OSD
-//! thread-group per server and the shared metrics, then hands out cheap
-//! clonable [`Client`] handles. Admin operations (add/kill/restart server,
-//! rebalance, GC, audit) live on the cluster object; data operations live
-//! on clients.
+//! thread-group per server, the optional failure detector and the shared
+//! metrics, then hands out cheap clonable [`Client`] handles. Admin
+//! operations (add/kill/restart/remove server, rebalance, GC, audit,
+//! scrub, recovery) live on the cluster object; data operations live on
+//! clients.
 
-use crate::cluster::{Monitor, ServerId};
+use crate::cluster::{Monitor, ServerId, ServerState};
 use crate::dedup::consistency::ConsistencyMode;
 use crate::dedup::dmshard::DmShard;
 use crate::dedup::fingerprint::{FingerprintProvider, RustSha1Provider};
@@ -18,6 +19,7 @@ use crate::metrics::Metrics;
 use crate::net::{Lane, NetProfile};
 use crate::placement::pg::PgMap;
 use crate::placement::{rendezvous::Rendezvous, straw2::Straw2, PlacementPolicy};
+use crate::recovery::detector::{self, Detector};
 use crate::sched::backpressure::Gate;
 use crate::sched::flow::FlowController;
 use crate::sched::SchedCtl;
@@ -27,10 +29,12 @@ use crate::storage::proto::{AuditDump, Dir, OsdStats, Req, Resp};
 use crate::util::clock::{Clock, SimClock, WallClock};
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 pub use crate::dedup::consistency::ConsistencyMode as Consistency;
 pub use crate::dedup::engine::{DedupMode, WriteBatching};
+pub use crate::recovery::{FailureDetection, RecoveryState, RecoveryStatus};
 pub use crate::sched::flow::{FlowConfig, MaintClass};
 pub use crate::sched::{SchedStatus, ScrubSchedule};
 pub use crate::scrub::{ScrubKind, ScrubOptions, ScrubState, ScrubStatus};
@@ -118,6 +122,13 @@ pub struct ClusterConfig {
     /// the lane sheds probes with `Busy` NACKs that scrub senders honor
     /// with window shrink + backoff.
     pub verify_inflight_cap: usize,
+    /// Autonomous failure detection (`None` = off, the default): the
+    /// cluster heartbeats every server, marks silent ones `Down` after
+    /// the grace window and `Out` after the out window, and triggers
+    /// recovery backfill on every out-transition — see
+    /// [`crate::recovery`]. Deterministic under [`ClockSource::Sim`]
+    /// (the detector evaluates on every [`Cluster::advance_clock`]).
+    pub failure_detection: Option<FailureDetection>,
 }
 
 impl Default for ClusterConfig {
@@ -139,6 +150,7 @@ impl Default for ClusterConfig {
             clock: ClockSource::Wall,
             maint_flow: FlowConfig::default(),
             verify_inflight_cap: 64,
+            failure_detection: None,
         }
     }
 }
@@ -214,6 +226,33 @@ pub struct ClusterStats {
     pub backpressure_window_shrinks: u64,
     /// Probes abandoned after the retry budget (0 in steady state).
     pub backpressure_gave_up: u64,
+    /// Maintenance tokens granted to recovery backfill by the budget.
+    pub flow_granted_recovery: u64,
+    /// Heartbeat probes sent by the failure detector.
+    pub detector_probes: u64,
+    /// Servers the detector marked Down (silent past the grace window).
+    pub detector_marked_down: u64,
+    /// Down servers the detector marked Up again (heartbeats resumed).
+    pub detector_marked_up: u64,
+    /// Servers the detector marked Out (each triggers recovery).
+    pub detector_marked_out: u64,
+    /// Recovery jobs started by workers.
+    pub recovery_runs: u64,
+    /// Work items examined by recovery backfill.
+    pub recovery_chunks_scanned: u64,
+    /// Primary chunks/objects restored from a surviving copy.
+    pub recovery_chunks_restored: u64,
+    /// Replica copies (chunk + OMAP record) re-pushed by recovery.
+    pub recovery_copies_pushed: u64,
+    /// Bytes re-replicated by recovery.
+    pub recovery_bytes: u64,
+    /// OMAP records re-homed onto new primaries by recovery.
+    pub recovery_omap_recovered: u64,
+    /// CIT refcounts re-synchronized by recovery's reconcile step.
+    pub recovery_refs_fixed: u64,
+    /// Referenced chunks with no surviving copy anywhere (quarantined;
+    /// 0 unless more copies were lost than replication covers).
+    pub recovery_lost: u64,
     /// Per-server snapshots.
     pub per_server: Vec<OsdStats>,
 }
@@ -298,10 +337,49 @@ impl ScrubReport {
     }
 }
 
+/// Cluster-wide recovery report: per-server worker snapshots plus their
+/// aggregate (see [`crate::recovery`] for field semantics).
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryReport {
+    /// One status per live server polled.
+    pub per_server: Vec<RecoveryStatus>,
+    /// Work items examined.
+    pub chunks_scanned: u64,
+    /// Primary chunks/objects restored from a surviving copy.
+    pub chunks_restored: u64,
+    /// Replica copies re-pushed.
+    pub copies_pushed: u64,
+    /// Bytes re-replicated.
+    pub bytes_recovered: u64,
+    /// OMAP records re-homed.
+    pub omap_recovered: u64,
+    /// CIT refcounts re-synchronized.
+    pub refs_fixed: u64,
+    /// Referenced chunks with no surviving copy anywhere.
+    pub lost_chunks: u64,
+}
+
+impl RecoveryReport {
+    /// Is any server's recovery job still queued or running?
+    pub fn is_running(&self) -> bool {
+        self.per_server.iter().any(|s| {
+            s.queued > 0 || matches!(s.state, RecoveryState::Queued | RecoveryState::Running)
+        })
+    }
+
+    /// First per-server failure, if any job aborted.
+    pub fn first_failure(&self) -> Option<String> {
+        self.per_server.iter().find_map(|s| match &s.state {
+            RecoveryState::Failed(e) => Some(format!("osd.{}: {e}", s.server)),
+            _ => None,
+        })
+    }
+}
+
 /// A running cluster.
 pub struct Cluster {
     cfg: ClusterConfig,
-    monitor: Monitor,
+    monitor: Arc<Monitor>,
     pgmap: Arc<PgMap>,
     dir: Dir,
     metrics: Arc<Metrics>,
@@ -309,7 +387,12 @@ pub struct Cluster {
     /// The virtual clock handle when `cfg.clock == ClockSource::Sim`.
     sim: Option<Arc<SimClock>>,
     provider: Arc<dyn FingerprintProvider>,
-    osds: Mutex<HashMap<ServerId, Osd>>,
+    osds: Arc<Mutex<HashMap<ServerId, Osd>>>,
+    /// Failure detector (when `cfg.failure_detection` is on).
+    detector: Option<Arc<Detector>>,
+    /// Shutdown flag + handle of the wall-clock detector thread.
+    det_shutdown: Arc<AtomicBool>,
+    det_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Cluster {
@@ -321,7 +404,10 @@ impl Cluster {
         if cfg.replication == 0 {
             return Err(Error::Invalid("replication must be >= 1".into()));
         }
-        let monitor = Monitor::new(cfg.servers);
+        if let Some(fd) = &cfg.failure_detection {
+            fd.validate()?;
+        }
+        let monitor = Arc::new(Monitor::new(cfg.servers));
         let policy: Box<dyn PlacementPolicy> = match cfg.placement {
             Placement::Straw2 => Box::new(Straw2),
             Placement::Rendezvous => Box::new(Rendezvous),
@@ -343,7 +429,11 @@ impl Cluster {
                 Arc::new(crate::runtime::XlaFingerprintService::start(artifacts_dir)?)
             }
         };
-        let cluster = Cluster {
+        let detector = cfg
+            .failure_detection
+            .as_ref()
+            .map(|fd| Arc::new(Detector::new(*fd)));
+        let mut cluster = Cluster {
             cfg,
             monitor,
             pgmap,
@@ -352,11 +442,49 @@ impl Cluster {
             clock,
             sim,
             provider,
-            osds: Mutex::new(HashMap::new()),
+            osds: Arc::new(Mutex::new(HashMap::new())),
+            detector,
+            det_shutdown: Arc::new(AtomicBool::new(false)),
+            det_thread: None,
         };
         let ids: Vec<ServerId> = cluster.monitor.map().servers.iter().map(|s| s.id).collect();
         for id in ids {
             cluster.spawn_osd(id)?;
+        }
+        if let Some(det) = &cluster.detector {
+            let now = cluster.clock.now_ms();
+            for s in &cluster.monitor.map().servers {
+                det.register(s.id, now);
+            }
+            if cluster.sim.is_none() {
+                // wall-clock mode: a cluster-level thread drives the
+                // detector; virtual-clock tests tick it from advance_clock
+                let det = det.clone();
+                let monitor = cluster.monitor.clone();
+                let dir = cluster.dir.clone();
+                let osds = cluster.osds.clone();
+                let metrics = cluster.metrics.clone();
+                let clock = cluster.clock.clone();
+                let sd = cluster.det_shutdown.clone();
+                cluster.det_thread = Some(
+                    std::thread::Builder::new()
+                        .name("cluster-detector".into())
+                        .spawn(move || {
+                            while !sd.load(Ordering::SeqCst) {
+                                std::thread::sleep(detector::DETECTOR_POLL);
+                                detector::run_tick(
+                                    &det,
+                                    &monitor,
+                                    &dir,
+                                    &osds,
+                                    &metrics,
+                                    clock.now_ms(),
+                                );
+                            }
+                        })
+                        .expect("spawn detector"),
+                );
+            }
         }
         Ok(cluster)
     }
@@ -416,6 +544,7 @@ impl Cluster {
             replica_store: replica,
             pending: crate::dedup::consistency::PendingFlags::new(),
             scrub: crate::scrub::ScrubCtl::for_server(id.0),
+            recovery: crate::recovery::RecoveryCtl::for_server(id.0),
             sched: SchedCtl::new(),
             flow: FlowController::new(self.cfg.maint_flow.clone(), self.clock.clone()),
             verify_gate: Gate::new(self.cfg.verify_inflight_cap),
@@ -463,12 +592,19 @@ impl Cluster {
     pub fn add_server(&self) -> Result<ServerId> {
         let (id, _) = self.monitor.add_server(1.0);
         self.spawn_osd(id)?;
+        if let Some(det) = &self.detector {
+            det.register(id, self.clock.now_ms());
+        }
         self.rebalance()?;
         Ok(id)
     }
 
-    /// Abrupt, silent crash of a server (map unchanged — failure
-    /// detection is the monitor's separate concern).
+    /// Abrupt, silent crash of a server. The map is not touched here:
+    /// with [`ClusterConfig::failure_detection`] armed, the detector
+    /// notices the silence, walks the server Down → Out and triggers
+    /// recovery backfill ([`crate::recovery`]); without it, the crash
+    /// stays invisible to placement until an admin reacts — exactly a
+    /// machine that stopped answering.
     pub fn kill_server(&self, id: ServerId) -> Result<()> {
         let osds = self.osds.lock().unwrap();
         let osd = osds.get(&id).ok_or(Error::ServerDown(id.0))?;
@@ -500,23 +636,77 @@ impl Cluster {
     /// — the server then stays down rather than serving wrong counts.
     /// The O(OMAP) rebuild runs after the registry lock is dropped, so
     /// one recovering server never stalls unrelated admin operations.
+    /// A server marked `Out` is refused with [`Error::ServerRemoved`]:
+    /// its data was re-homed, so its local state is stale by
+    /// construction. A restarted server re-queues recovery backfill for
+    /// every `Out` server in the map (its own crashed/missed jobs).
     pub fn restart_server(&self, id: ServerId) -> Result<()> {
+        match self.monitor.map().server(id) {
+            None => return Err(Error::UnknownServer(id.0)),
+            Some(s) if s.state == ServerState::Out => {
+                return Err(Error::ServerRemoved(id.0));
+            }
+            Some(_) => {}
+        }
         let shared = {
             let osds = self.osds.lock().unwrap();
             osds.get(&id).ok_or(Error::ServerDown(id.0))?.shared.clone()
         };
-        shared.restart()
+        shared.restart()?;
+        if let Some(det) = &self.detector {
+            // fresh proof of life: a revived server must not be judged
+            // on the silence of its previous incarnation
+            det.register(id, self.clock.now_ms());
+        }
+        for s in &self.monitor.map().servers {
+            if s.state == ServerState::Out {
+                shared.recovery.enqueue(s.id.0);
+            }
+        }
+        Ok(())
     }
 
     /// Mark a server Down in the map (placement skips it; rebalance moves
-    /// its PGs' primaries).
-    pub fn mark_down(&self, id: ServerId) {
-        self.monitor.mark_down(id);
+    /// its PGs' primaries). [`Error::UnknownServer`] for ids the map has
+    /// never seen — admin typos fail loudly like every sibling op.
+    pub fn mark_down(&self, id: ServerId) -> Result<()> {
+        self.monitor.mark_down(id).map(|_| ())
     }
 
-    /// Mark a server Up again.
-    pub fn mark_up(&self, id: ServerId) {
-        self.monitor.mark_up(id);
+    /// Mark a server Up again. [`Error::UnknownServer`] on unknown ids.
+    pub fn mark_up(&self, id: ServerId) -> Result<()> {
+        self.monitor.mark_up(id).map(|_| ())
+    }
+
+    /// A server's current membership state in the map.
+    pub fn server_state(&self, id: ServerId) -> Result<ServerState> {
+        self.monitor
+            .map()
+            .server(id)
+            .map(|s| s.state)
+            .ok_or(Error::UnknownServer(id.0))
+    }
+
+    /// Permanently remove a server: fence it (kill — a fail-slow zombie
+    /// must never serve stale state again), mark it `Out` (epoch bump;
+    /// placement skips it) and trigger recovery backfill on every
+    /// surviving server — the admin counterpart of the failure
+    /// detector's out-transition. [`Error::ServerRemoved`] when already
+    /// out, [`Error::UnknownServer`] for ids the map has never seen.
+    pub fn remove_server(&self, id: ServerId) -> Result<()> {
+        match self.monitor.map().server(id) {
+            None => return Err(Error::UnknownServer(id.0)),
+            Some(s) if s.state == ServerState::Out => {
+                return Err(Error::ServerRemoved(id.0));
+            }
+            Some(_) => {}
+        }
+        if let Some(osd) = self.osds.lock().unwrap().get(&id) {
+            osd.kill();
+        }
+        self.monitor.mark_out(id)?;
+        detector::trigger_recovery(&self.monitor, &self.dir, id);
+        Ok(())
     }
 
     /// Run `f` against one server's shared state. Integrity tests and the
@@ -655,6 +845,19 @@ impl Cluster {
             backpressure_retries: Metrics::get(&m.backpressure_retries),
             backpressure_window_shrinks: Metrics::get(&m.backpressure_window_shrinks),
             backpressure_gave_up: Metrics::get(&m.backpressure_gave_up),
+            flow_granted_recovery: Metrics::get(&m.flow_granted_recovery),
+            detector_probes: Metrics::get(&m.detector_probes),
+            detector_marked_down: Metrics::get(&m.detector_marked_down),
+            detector_marked_up: Metrics::get(&m.detector_marked_up),
+            detector_marked_out: Metrics::get(&m.detector_marked_out),
+            recovery_runs: Metrics::get(&m.recovery_runs),
+            recovery_chunks_scanned: Metrics::get(&m.recovery_chunks_scanned),
+            recovery_chunks_restored: Metrics::get(&m.recovery_chunks_restored),
+            recovery_copies_pushed: Metrics::get(&m.recovery_copies_pushed),
+            recovery_bytes: Metrics::get(&m.recovery_bytes),
+            recovery_omap_recovered: Metrics::get(&m.recovery_omap_recovered),
+            recovery_refs_fixed: Metrics::get(&m.recovery_refs_fixed),
+            recovery_lost: Metrics::get(&m.recovery_lost),
             per_server: Vec::new(),
         };
         let mut ids = self.live_ids();
@@ -832,6 +1035,49 @@ impl Cluster {
         }
     }
 
+    /// Snapshot every live server's recovery-backfill progress,
+    /// aggregated into a [`RecoveryReport`]. Dead servers are skipped
+    /// (their jobs are volatile and re-queued on restart).
+    pub fn recovery_status(&self) -> Result<RecoveryReport> {
+        let mut report = RecoveryReport::default();
+        let mut ids = self.live_ids();
+        ids.sort();
+        for id in ids {
+            match self.control(id, Req::RecoveryStatus) {
+                Ok(Resp::Recovery(st)) => {
+                    report.chunks_scanned += st.chunks_scanned;
+                    report.chunks_restored += st.chunks_restored;
+                    report.copies_pushed += st.copies_pushed;
+                    report.bytes_recovered += st.bytes_recovered;
+                    report.omap_recovered += st.omap_recovered;
+                    report.refs_fixed += st.refs_fixed;
+                    report.lost_chunks += st.lost_chunks;
+                    report.per_server.push(st);
+                }
+                Ok(_) => {}
+                Err(Error::ServerDown(_)) => {} // dead servers skipped
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(report)
+    }
+
+    /// Block until no live server's recovery job is queued or running;
+    /// returns the final aggregated report. Note for virtual-clock tests
+    /// with a *finite* maintenance budget: recovery charges draw from
+    /// the Recovery flow class, whose refill only moves with the clock —
+    /// poll [`Cluster::recovery_status`] in a loop interleaved with
+    /// [`Cluster::advance_clock`] instead of calling this.
+    pub fn recovery_wait(&self) -> Result<RecoveryReport> {
+        loop {
+            let report = self.recovery_status()?;
+            if !report.is_running() {
+                return Ok(report);
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+    }
+
     /// Arm (or disarm with `None`) the periodic-scrub schedule on every
     /// live server (see [`crate::sched`]). Each server fires its own
     /// passes on its own scrub worker with deterministic per-server
@@ -898,6 +1144,12 @@ impl Cluster {
             let size = req.wire_size();
             let _ = addr.send(req, size); // fire-and-forget (see above)
         }
+        if let Some(det) = &self.detector {
+            // the failure detector evaluates at the new virtual time:
+            // heartbeats are bounded-wait and recovery triggers are
+            // fire-and-forget, so this cannot stall the clock either
+            detector::run_tick(det, &self.monitor, &self.dir, &self.osds, &self.metrics, now);
+        }
         Ok(now)
     }
 
@@ -921,8 +1173,12 @@ impl Cluster {
         Ok((report.refs_fixed + report.repaired) as usize)
     }
 
-    /// Graceful teardown: stop every OSD thread.
-    pub fn shutdown(self) {
+    /// Graceful teardown: stop the detector thread and every OSD thread.
+    pub fn shutdown(mut self) {
+        self.det_shutdown.store(true, Ordering::SeqCst);
+        if let Some(t) = self.det_thread.take() {
+            let _ = t.join();
+        }
         let mut osds = self.osds.lock().unwrap();
         let ids: Vec<ServerId> = osds.keys().copied().collect();
         for id in ids {

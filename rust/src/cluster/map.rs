@@ -92,11 +92,16 @@ impl ClusterMap {
         id
     }
 
-    /// Transition a server's state (epoch bump).
-    pub fn set_state(&mut self, id: ServerId, state: ServerState) {
+    /// Transition a server's state (epoch bump). Returns false (and
+    /// leaves the map untouched) when the id names no entry, so callers
+    /// can surface a typed error instead of silently no-opping.
+    pub fn set_state(&mut self, id: ServerId, state: ServerState) -> bool {
         if let Some(s) = self.servers.iter_mut().find(|s| s.id == id) {
             s.state = state;
             self.epoch += 1;
+            true
+        } else {
+            false
         }
     }
 
@@ -128,8 +133,10 @@ mod tests {
         assert_eq!(id, ServerId(2));
         assert_eq!(m.epoch, 2);
         assert_eq!(m.up_count(), 3);
-        m.set_state(ServerId(0), ServerState::Down);
+        assert!(m.set_state(ServerId(0), ServerState::Down));
         assert_eq!(m.epoch, 3);
+        assert!(!m.set_state(ServerId(99), ServerState::Down), "unknown id");
+        assert_eq!(m.epoch, 3, "failed transition must not bump the epoch");
         assert_eq!(m.up_count(), 2);
         assert_eq!(m.server(ServerId(0)).unwrap().state, ServerState::Down);
     }

@@ -3,6 +3,7 @@
 //! monitor refreshes — standing in for Ceph's map-gossip).
 
 use super::map::{ClusterMap, ServerId, ServerState};
+use crate::error::{Error, Result};
 use std::sync::{Arc, Mutex, RwLock};
 
 /// Callback invoked after every map mutation with the new map.
@@ -58,19 +59,36 @@ impl Monitor {
         (id, m)
     }
 
+    /// Transition a server's state; [`Error::UnknownServer`] when the id
+    /// names no map entry (no epoch bump, no listeners fired).
+    fn set_state(&self, id: ServerId, state: ServerState) -> Result<ClusterMap> {
+        let snapshot = {
+            let mut m = self.map.write().unwrap();
+            if !m.set_state(id, state) {
+                return Err(Error::UnknownServer(id.0));
+            }
+            m.clone()
+        };
+        for l in self.listeners.lock().unwrap().iter() {
+            l(&snapshot);
+        }
+        Ok(snapshot)
+    }
+
     /// Mark a server Down (crash detected) — placement immediately skips it.
-    pub fn mark_down(&self, id: ServerId) -> ClusterMap {
-        self.mutate(|m| m.set_state(id, ServerState::Down))
+    pub fn mark_down(&self, id: ServerId) -> Result<ClusterMap> {
+        self.set_state(id, ServerState::Down)
     }
 
     /// Mark a server Up again (recovered).
-    pub fn mark_up(&self, id: ServerId) -> ClusterMap {
-        self.mutate(|m| m.set_state(id, ServerState::Up))
+    pub fn mark_up(&self, id: ServerId) -> Result<ClusterMap> {
+        self.set_state(id, ServerState::Up)
     }
 
-    /// Administratively remove a server (data should migrate off it).
-    pub fn mark_out(&self, id: ServerId) -> ClusterMap {
-        self.mutate(|m| m.set_state(id, ServerState::Out))
+    /// Remove a server from placement (failure-detector out-transition or
+    /// administrative removal; data should re-replicate off of it).
+    pub fn mark_out(&self, id: ServerId) -> Result<ClusterMap> {
+        self.set_state(id, ServerState::Out)
     }
 
     /// Reweight a server.
@@ -96,7 +114,10 @@ mod tests {
         assert_eq!(id, ServerId(2));
         assert_eq!(m.epoch, 2);
         assert_eq!(fired.load(Ordering::SeqCst), 2);
-        mon.mark_down(id);
+        mon.mark_down(id).unwrap();
+        assert_eq!(fired.load(Ordering::SeqCst), 3);
+        // unknown ids are a typed error; no listener fires, no epoch bump
+        assert!(mon.mark_down(ServerId(99)).is_err());
         assert_eq!(fired.load(Ordering::SeqCst), 3);
     }
 

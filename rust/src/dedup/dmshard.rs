@@ -88,6 +88,23 @@ impl DmShard {
     /// mutation counts.
     pub fn omap_put(&self, entry: &OmapEntry) -> Result<BackrefDelta> {
         let _guard = self.omap_rmw.lock().unwrap();
+        self.omap_put_locked(entry)
+    }
+
+    /// Insert an object's layout only if the OMAP holds no entry for the
+    /// name; `None` when one exists (nothing written). Recovery adoption
+    /// uses this so re-homing a record from a surviving replica copy can
+    /// never clobber a racing fresh write — the check and the write
+    /// happen under one acquisition of the OMAP read-modify-write lock.
+    pub fn omap_put_if_absent(&self, entry: &OmapEntry) -> Result<Option<BackrefDelta>> {
+        let _guard = self.omap_rmw.lock().unwrap();
+        if self.omap.get(entry.name.as_bytes())?.is_some() {
+            return Ok(None);
+        }
+        self.omap_put_locked(entry).map(Some)
+    }
+
+    fn omap_put_locked(&self, entry: &OmapEntry) -> Result<BackrefDelta> {
         let old = self.omap_get(&entry.name)?;
         self.omap.put(entry.name.as_bytes(), &entry.encode())?;
         let mut delta = BackrefDelta::default();
@@ -446,6 +463,28 @@ mod tests {
         assert_eq!(d, BackrefDelta { added: 0, removed: 1 });
         assert!(s.omap_get("obj").unwrap().is_none());
         assert!(s.omap_delete("obj").unwrap().is_none(), "second delete");
+    }
+
+    #[test]
+    fn omap_put_if_absent_never_clobbers() {
+        let s = shard();
+        let fresh = OmapEntry::new(
+            "obj".into(),
+            Fingerprint::of(b"v2"),
+            vec![(Fingerprint::of(b"new"), 8)],
+        );
+        let stale = OmapEntry::new(
+            "obj".into(),
+            Fingerprint::of(b"v1"),
+            vec![(Fingerprint::of(b"old"), 8)],
+        );
+        // adoption into an empty slot writes (and indexes) the record
+        let delta = s.omap_put_if_absent(&stale).unwrap().expect("adopted");
+        assert_eq!(delta.added, 1);
+        // a later adoption attempt must not clobber an existing record
+        s.omap_put(&fresh).unwrap();
+        assert!(s.omap_put_if_absent(&stale).unwrap().is_none());
+        assert_eq!(s.omap_get("obj").unwrap().unwrap(), fresh);
     }
 
     #[test]

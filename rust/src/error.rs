@@ -14,6 +14,13 @@ pub enum Error {
     ChunkMissing(String),
     /// The target server is down / not responding (killed or crashed).
     ServerDown(u32),
+    /// The server id names no entry in the cluster map (admin ops on
+    /// unknown ids are rejected, never silently ignored).
+    UnknownServer(u32),
+    /// The server was marked `Out` (removed from the cluster, its data
+    /// re-replicated elsewhere); it cannot be restarted back into the
+    /// map — its state is stale by construction.
+    ServerRemoved(u32),
     /// The cluster has no live server able to serve the request.
     NoQuorum,
     /// A write transaction was aborted (partial failure, rolled back).
@@ -37,6 +44,10 @@ impl fmt::Display for Error {
             Error::ObjectNotFound(name) => write!(f, "object not found: {name}"),
             Error::ChunkMissing(fp) => write!(f, "chunk missing: {fp}"),
             Error::ServerDown(id) => write!(f, "server osd.{id} is down"),
+            Error::UnknownServer(id) => write!(f, "unknown server osd.{id}"),
+            Error::ServerRemoved(id) => {
+                write!(f, "server osd.{id} was marked out and removed from the cluster")
+            }
             Error::NoQuorum => write!(f, "no live server available"),
             Error::TxAborted(why) => write!(f, "transaction aborted: {why}"),
             Error::ScrubBusy(id) => write!(f, "scrub already running on osd.{id}"),
@@ -70,6 +81,8 @@ mod tests {
     #[test]
     fn display_formats() {
         assert_eq!(Error::ServerDown(3).to_string(), "server osd.3 is down");
+        assert_eq!(Error::UnknownServer(9).to_string(), "unknown server osd.9");
+        assert!(Error::ServerRemoved(2).to_string().contains("osd.2"));
         assert!(Error::ObjectNotFound("x".into()).to_string().contains("x"));
         let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "boom").into();
         assert!(matches!(e, Error::Io(_)));

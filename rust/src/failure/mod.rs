@@ -37,6 +37,16 @@ pub enum CrashPoint {
     /// Scrub worker: the repaired primary data was written, but the
     /// server dies before replica copies are refreshed.
     AfterScrubRepair,
+    /// Recovery worker: a lost primary or replica copy is about to be
+    /// re-written from a surviving copy, but the server dies first —
+    /// nothing lands, the degradation persists for the next recovery
+    /// pass (or scrub) to heal.
+    BeforeRecoveryCopy,
+    /// Recovery worker: the recovered data was written, but the server
+    /// dies before the commit flag flips / the remaining copies are
+    /// pushed — the stored-but-invalid state the flag-based consistency
+    /// argument already covers (GC/scrub re-validate or reclaim it).
+    AfterRecoveryCopy,
 }
 
 /// Per-server failure injector.

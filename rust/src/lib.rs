@@ -37,9 +37,14 @@
 //!   DESIGN.md §7);
 //! * a **maintenance scheduler with cluster-wide flow control**:
 //!   cron-style per-OSD scrub cadence under an injectable (virtual or
-//!   wall) clock, one shared weighted token budget for scrub, rebalance
-//!   and GC, and replica-side `VerifyCopy` backpressure with AIMD
-//!   sender windows ([`sched`], [`util::clock`], DESIGN.md §10);
+//!   wall) clock, one shared weighted token budget for scrub, rebalance,
+//!   GC and recovery, and replica-side `VerifyCopy` backpressure with
+//!   AIMD sender windows ([`sched`], [`util::clock`], DESIGN.md §10);
+//! * **autonomous failure detection & recovery backfill**: clock-driven
+//!   heartbeats mark silent servers `Down` then `Out`, fence them, and
+//!   every survivor re-replicates the lost chunks and OMAP records from
+//!   surviving copies — most-referenced chunks first — until the cluster
+//!   is back at full replication ([`recovery`], DESIGN.md §11);
 //! * evaluation machinery: an FIO-like workload generator ([`workload`]),
 //!   crash-point failure injection ([`failure`]) and metrics ([`metrics`]).
 //!
@@ -80,6 +85,7 @@ pub mod kvstore;
 pub mod metrics;
 pub mod net;
 pub mod placement;
+pub mod recovery;
 pub mod runtime;
 pub mod sched;
 pub mod scrub;

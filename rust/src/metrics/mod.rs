@@ -74,6 +74,9 @@ pub struct Metrics {
     pub flow_granted_rebalance: AtomicU64,
     /// Maintenance tokens granted to GC by the FlowController.
     pub flow_granted_gc: AtomicU64,
+    /// Maintenance tokens granted to recovery backfill by the
+    /// FlowController.
+    pub flow_granted_recovery: AtomicU64,
     /// Times a maintenance consumer had to wait for budget refill.
     pub flow_waits: AtomicU64,
     /// `Busy` NACKs sent by replica lanes shedding `VerifyCopy` storms.
@@ -85,6 +88,37 @@ pub struct Metrics {
     /// `VerifyCopy` probes abandoned after the retry budget (left for
     /// the next scheduled pass; 0 in steady state).
     pub backpressure_gave_up: AtomicU64,
+    /// Heartbeat probes sent by the failure detector.
+    pub detector_probes: AtomicU64,
+    /// Servers the detector marked Down (silent past the grace window).
+    pub detector_marked_down: AtomicU64,
+    /// Down servers the detector marked Up again (heartbeats resumed).
+    pub detector_marked_up: AtomicU64,
+    /// Servers the detector marked Out (silent past the out window) —
+    /// each out-transition also triggers recovery backfill everywhere.
+    pub detector_marked_out: AtomicU64,
+    /// Recovery jobs started by workers (one per surviving server per
+    /// out-transition, plus re-runs after a crashed recovery).
+    pub recovery_runs: AtomicU64,
+    /// CIT entries examined by recovery backfill passes.
+    pub recovery_chunks_scanned: AtomicU64,
+    /// Primary chunks restored from a surviving copy by recovery.
+    pub recovery_chunks_restored: AtomicU64,
+    /// Replica copies (chunk + OMAP record) re-pushed by recovery to
+    /// restore the configured replication factor.
+    pub recovery_copies_pushed: AtomicU64,
+    /// Bytes re-replicated by recovery (restored primaries + pushed
+    /// copies + re-homed OMAP records).
+    pub recovery_bytes: AtomicU64,
+    /// OMAP records re-homed onto their new primary from a surviving
+    /// replica copy after their old primary left the cluster.
+    pub recovery_omap_recovered: AtomicU64,
+    /// CIT refcounts re-synchronized by recovery's reconcile step.
+    pub recovery_refs_fixed: AtomicU64,
+    /// Referenced chunks recovery could not restore from any surviving
+    /// copy (quarantined behind an invalid flag; 0 unless more copies
+    /// were lost than the replication factor covers).
+    pub recovery_lost: AtomicU64,
     /// Write-path latency histogram.
     pub put_latency: Histogram,
 }

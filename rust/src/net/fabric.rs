@@ -108,6 +108,20 @@ impl<Resp> Pending<Resp> {
             Err(RecvTimeoutError::Timeout) => Err(Error::ServerDown(self.target.0)),
         }
     }
+
+    /// Await the reply for at most `d` of wall time. `Ok(Some)` — the
+    /// reply arrived; `Ok(None)` — still in flight (inconclusive: the
+    /// receiver may merely be busy); `Err(ServerDown)` — the receiver
+    /// dropped the envelope without replying (crash semantics). The
+    /// failure detector keys on this three-way verdict: only the hard
+    /// `Err` counts as evidence of death.
+    pub fn wait_for(self, d: Duration) -> Result<Option<Resp>> {
+        match self.rx.recv_timeout(d) {
+            Ok(r) => Ok(Some(r)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(Error::ServerDown(self.target.0)),
+        }
+    }
 }
 
 /// Wire-cost model: per-message latency plus per-byte time, charged at the
@@ -294,6 +308,26 @@ mod tests {
         drop(env); // server died mid-request
         match pending.wait() {
             Err(Error::ServerDown(5)) => {}
+            other => panic!("expected ServerDown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wait_for_three_way_verdict() {
+        // reply arrived
+        let (addr, inbox) = endpoint::<u32, u32>(ServerId(0), None);
+        let p = addr.send(1, 4).unwrap();
+        inbox.recv().unwrap().reply(2);
+        assert_eq!(p.wait_for(Duration::from_millis(100)).unwrap(), Some(2));
+        // still in flight (nobody served it yet): inconclusive
+        let p = addr.send(1, 4).unwrap();
+        assert_eq!(p.wait_for(Duration::from_millis(1)).unwrap(), None);
+        inbox.recv().unwrap().reply(0); // drain the abandoned probe
+        // dropped envelope: hard evidence of death
+        let p = addr.send(1, 4).unwrap();
+        drop(inbox.recv().unwrap());
+        match p.wait_for(Duration::from_millis(100)) {
+            Err(Error::ServerDown(0)) => {}
             other => panic!("expected ServerDown, got {other:?}"),
         }
     }

@@ -18,7 +18,13 @@
 //! The per-server **scrub worker** ([`crate::scrub`]) is a pure client of
 //! this graph: it calls peer backend lanes (`CountRefs`, `EnsureCit`) and
 //! replica lanes (`VerifyCopy`, `FetchCopy`, `PutCopy`) but serves no
-//! inbound requests itself, so it can never appear in a wait cycle. Its
+//! inbound requests itself, so it can never appear in a wait cycle. The
+//! **recovery worker** ([`crate::recovery`]) and the cluster-level
+//! **failure detector** hold the same position: pure clients whose
+//! handlers (`RecoverOmap`, `VerifyRaw`, `RecoveryProbe`, `Ping`) do
+//! strictly local work (plus backend→replica fan-out, which the order
+//! already allows), and whose heartbeats are bounded-wait — the graph
+//! stays acyclic with them in it. Its
 //! handlers on the backend/replica lanes do strictly local work (a
 //! backreference-index range read, a CIT upsert, a local hash),
 //! preserving the lane order above. A replica lane may shed a

@@ -7,6 +7,10 @@ use super::PlacementPolicy;
 use crate::cluster::{ClusterMap, ServerId};
 use std::sync::RwLock;
 
+/// Salt mixed into each PG id before it is handed to the policy, so pg 0
+/// and key 0 never collide trivially.
+const PG_SALT: u64 = 0x5047_5047;
+
 /// Cached PG→replica-chain table for one map epoch.
 pub struct PgMap {
     policy: Box<dyn PlacementPolicy>,
@@ -67,6 +71,20 @@ impl PgMap {
         self.cache.read().unwrap().table[pg as usize].clone()
     }
 
+    /// Compute the full PG→chain table for an arbitrary map *without*
+    /// touching the per-epoch cache. Recovery planning uses this to
+    /// reconstruct placement as it was before a server left, while
+    /// foreground I/O keeps reading the live table — the synthetic map
+    /// must never thrash the cache the hot path depends on.
+    pub fn table_for(&self, map: &ClusterMap) -> Vec<Vec<ServerId>> {
+        (0..self.pg_count)
+            .map(|pg| {
+                let key = crate::hash::fnv::fnv1a64_pair(pg as u64, PG_SALT);
+                self.policy.select(map, key, self.replicas)
+            })
+            .collect()
+    }
+
     fn ensure(&self, map: &ClusterMap) {
         {
             let cache = self.cache.read().unwrap();
@@ -77,7 +95,7 @@ impl PgMap {
         let mut table = Vec::with_capacity(self.pg_count as usize);
         for pg in 0..self.pg_count {
             // salt the pg id so pg 0 and key 0 don't collide trivially
-            let key = crate::hash::fnv::fnv1a64_pair(pg as u64, 0x5047_5047);
+            let key = crate::hash::fnv::fnv1a64_pair(pg as u64, PG_SALT);
             table.push(self.policy.select(map, key, self.replicas));
         }
         let mut cache = self.cache.write().unwrap();

@@ -1,0 +1,297 @@
+//! Clock-driven failure detection over control-lane heartbeats.
+//!
+//! The cluster-level [`Detector`] probes every mapped server with a
+//! [`Req::Ping`] on the control lane and keys its verdicts on the
+//! fabric's crash semantics: a live lane answers within microseconds, a
+//! killed/crashed lane *drops* the envelope (the sender observes a
+//! disconnected reply channel — hard evidence of death), and a merely
+//! busy lane simply hasn't answered yet (no evidence either way, so the
+//! detector never punishes slowness with an out-transition).
+//!
+//! State machine per server, driven by the crate-internal `run_tick`:
+//!
+//! ```text
+//!            ping fails, silent ≥ grace_ticks        silent ≥ out_ticks
+//!   Up ────────────────────────────────────▶ Down ───────────────────▶ Out
+//!    ▲                                        │                        │
+//!    └────────── ping answers ────────────────┘          (sticky; fence + recovery)
+//! ```
+//!
+//! *Silence* is measured from the last proof of life (`last_ok_ms`,
+//! seeded at registration time), so a single large
+//! [`crate::api::Cluster::advance_clock`] jump past `grace + out` marks a
+//! dead server straight `Out` — exactly the deterministic acceptance
+//! path — while a live server always re-proves itself on the same tick.
+//! An out-transition is **sticky**: the server is fenced (killed, so a
+//! fail-slow zombie can never serve stale state again), the map epoch
+//! bumps, and every surviving server is told to start recovery backfill
+//! ([`crate::recovery`]). Down is transient: a Down server whose
+//! heartbeats resume is marked Up again.
+//!
+//! Ticks come from two sources, mirroring the maintenance scheduler: a
+//! wall-clock thread (production) or `Cluster::advance_clock` (the
+//! deterministic virtual-clock path). Both funnel through `run_tick`.
+
+use crate::cluster::{Monitor, ServerId, ServerState};
+use crate::error::Result;
+use crate::metrics::Metrics;
+use crate::net::Lane;
+use crate::storage::osd::Osd;
+use crate::storage::proto::{Dir, Req};
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Wall poll interval of the cluster-level detector thread (wall-clock
+/// mode only; virtual-clock tests tick explicitly).
+pub(crate) const DETECTOR_POLL: Duration = Duration::from_millis(10);
+
+/// Wall-time bound on waiting for one heartbeat reply. Live lanes answer
+/// in microseconds and dead lanes drop the envelope just as fast, so
+/// this only bites when a lane is busy with a long control operation —
+/// which yields the inconclusive verdict, never a death sentence.
+const PING_WAIT: Duration = Duration::from_millis(20);
+
+/// Failure-detection configuration
+/// ([`crate::api::ClusterConfig::failure_detection`]). All windows are
+/// clock ticks (ms of cluster time — wall or virtual).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FailureDetection {
+    /// Heartbeat cadence: at most one probe per server per this many
+    /// ticks.
+    pub probe_every_ticks: u64,
+    /// A server silent (failed probes) for at least this long is marked
+    /// `Down` — placement skips it, degraded reads take over.
+    pub grace_ticks: u64,
+    /// A server silent for at least this long is marked `Out`: fenced,
+    /// removed from placement, and recovery backfill re-replicates its
+    /// data from surviving copies. Must be ≥ `grace_ticks`.
+    pub out_ticks: u64,
+}
+
+impl Default for FailureDetection {
+    fn default() -> Self {
+        FailureDetection {
+            probe_every_ticks: 250,
+            grace_ticks: 1_000,
+            out_ticks: 5_000,
+        }
+    }
+}
+
+impl FailureDetection {
+    /// Reject degenerate windows (zero grace, out shorter than grace).
+    pub fn validate(&self) -> Result<()> {
+        if self.probe_every_ticks == 0 || self.grace_ticks == 0 {
+            return Err(crate::error::Error::Invalid(
+                "failure_detection windows must be > 0".into(),
+            ));
+        }
+        if self.out_ticks < self.grace_ticks {
+            return Err(crate::error::Error::Invalid(
+                "failure_detection out_ticks must be >= grace_ticks".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Per-server health bookkeeping.
+struct Health {
+    /// Last proof of life (registration or an answered heartbeat).
+    last_ok_ms: u64,
+    /// Last probe send time (cadence limiter).
+    last_probe_ms: Option<u64>,
+}
+
+/// Cluster-level failure detector state (one per cluster, shared by the
+/// wall-clock thread and the virtual-clock tick path).
+pub struct Detector {
+    cfg: FailureDetection,
+    inner: Mutex<HashMap<u32, Health>>,
+}
+
+impl Detector {
+    /// A detector with no servers registered yet.
+    pub fn new(cfg: FailureDetection) -> Self {
+        Detector {
+            cfg,
+            inner: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The configured windows.
+    pub fn config(&self) -> &FailureDetection {
+        &self.cfg
+    }
+
+    /// (Re-)register a server with a fresh proof of life at `now`.
+    /// Called for every server at cluster boot, for servers added later,
+    /// and on admin restart — a revived server must not be judged on the
+    /// silence of its previous life.
+    pub fn register(&self, id: ServerId, now: u64) {
+        self.inner.lock().unwrap().insert(
+            id.0,
+            Health {
+                last_ok_ms: now,
+                last_probe_ms: None,
+            },
+        );
+    }
+}
+
+/// One heartbeat's three-way verdict.
+enum Verdict {
+    /// The control lane answered: proof of life.
+    Alive,
+    /// The envelope was dropped without a reply: crash-semantics
+    /// evidence of death.
+    Dead,
+    /// No answer within the wall bound (busy lane): no evidence.
+    Unknown,
+}
+
+fn ping(dir: &Dir, id: ServerId) -> Verdict {
+    let Ok(addr) = dir.lookup(id, Lane::Control) else {
+        return Verdict::Dead; // deregistered: permanently gone
+    };
+    let req = Req::Ping;
+    let size = req.wire_size();
+    match addr.send(req, size) {
+        Err(_) => Verdict::Dead,
+        Ok(pending) => match pending.wait_for(PING_WAIT) {
+            Ok(Some(_)) => Verdict::Alive,
+            Ok(None) => Verdict::Unknown,
+            Err(_) => Verdict::Dead,
+        },
+    }
+}
+
+/// One detector evaluation at time `now`: probe due servers, apply the
+/// Down/Out state machine, fence new Out servers and fan recovery
+/// backfill out to the survivors. Called from
+/// [`crate::api::Cluster::advance_clock`] (virtual clock) and from the
+/// cluster's detector thread (wall clock); all sends are bounded-wait or
+/// fire-and-forget, so a busy control lane can never stall the caller's
+/// clock.
+pub(crate) fn run_tick(
+    det: &Detector,
+    monitor: &Monitor,
+    dir: &Dir,
+    osds: &Mutex<HashMap<ServerId, Osd>>,
+    metrics: &Metrics,
+    now: u64,
+) {
+    let map = monitor.map();
+    let mut outs: Vec<ServerId> = Vec::new();
+    for s in &map.servers {
+        if s.state == ServerState::Out {
+            continue; // sticky: an out server is never probed again
+        }
+        let (due, last_ok) = {
+            let mut g = det.inner.lock().unwrap();
+            let h = g.entry(s.id.0).or_insert_with(|| Health {
+                last_ok_ms: now,
+                last_probe_ms: None,
+            });
+            let due = match h.last_probe_ms {
+                Some(t) => now >= t + det.cfg.probe_every_ticks,
+                None => true,
+            };
+            if due {
+                h.last_probe_ms = Some(now);
+            }
+            (due, h.last_ok_ms)
+        };
+        if !due {
+            continue;
+        }
+        Metrics::add(&metrics.detector_probes, 1);
+        let verdict = ping(dir, s.id);
+        // Transitions are decided against a *fresh* state read, not the
+        // snapshot the probe loop iterates (the probe itself waits up to
+        // PING_WAIT, and an admin remove_server may have marked the
+        // server Out meanwhile): an Out server is never transitioned
+        // away from — un-fencing a removed server would let its stale
+        // state back into the cluster.
+        let fresh = monitor.map().server(s.id).map(|i| i.state);
+        if fresh.is_none() || fresh == Some(ServerState::Out) {
+            continue;
+        }
+        match verdict {
+            Verdict::Alive => {
+                det.inner.lock().unwrap().get_mut(&s.id.0).unwrap().last_ok_ms = now;
+                if fresh == Some(ServerState::Down) {
+                    // heartbeats resumed: transient failure over
+                    let _ = monitor.mark_up(s.id);
+                    Metrics::add(&metrics.detector_marked_up, 1);
+                }
+            }
+            Verdict::Unknown => {}
+            Verdict::Dead => {
+                let silent = now.saturating_sub(last_ok);
+                if silent >= det.cfg.out_ticks {
+                    let _ = monitor.mark_out(s.id);
+                    Metrics::add(&metrics.detector_marked_out, 1);
+                    outs.push(s.id);
+                } else if silent >= det.cfg.grace_ticks && fresh == Some(ServerState::Up) {
+                    let _ = monitor.mark_down(s.id);
+                    Metrics::add(&metrics.detector_marked_down, 1);
+                }
+            }
+        }
+    }
+    for lost in outs {
+        // Fence: the server may be fail-slow rather than dead; once its
+        // data is re-homed it must never serve stale state again.
+        if let Some(osd) = osds.lock().unwrap().get(&lost) {
+            osd.kill();
+        }
+        trigger_recovery(monitor, dir, lost);
+    }
+}
+
+/// Tell every Up server to start recovery backfill for `lost`
+/// (fire-and-forget: the handler only enqueues on the recovery worker).
+pub(crate) fn trigger_recovery(monitor: &Monitor, dir: &Dir, lost: ServerId) {
+    let map = monitor.map();
+    for s in map.servers.iter().filter(|s| s.state == ServerState::Up) {
+        if let Ok(addr) = dir.lookup(s.id, Lane::Control) {
+            let req = Req::StartRecovery { lost: lost.0 };
+            let size = req.wire_size();
+            let _ = addr.send(req, size);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation() {
+        assert!(FailureDetection::default().validate().is_ok());
+        assert!(FailureDetection {
+            probe_every_ticks: 0,
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+        assert!(FailureDetection {
+            grace_ticks: 100,
+            out_ticks: 50,
+            probe_every_ticks: 10,
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn registration_seeds_proof_of_life() {
+        let det = Detector::new(FailureDetection::default());
+        det.register(ServerId(3), 42);
+        let g = det.inner.lock().unwrap();
+        assert_eq!(g.get(&3).unwrap().last_ok_ms, 42);
+        assert!(g.get(&3).unwrap().last_probe_ms.is_none());
+    }
+}

@@ -1,0 +1,828 @@
+//! Autonomous failure detection & dedup-aware recovery backfill.
+//!
+//! The paper's robustness story so far was *reactive and manual*:
+//! `kill_server` left the map untouched, `ServerState::Out` existed but
+//! nothing drove it, and a chunk that lost a replica stayed degraded
+//! until a deep scrub happened to walk over it. This module closes the
+//! loop — **detect → mark out → re-replicate** — with no operator in
+//! it:
+//!
+//! * **Detection** ([`detector`]) — the cluster-level [`Detector`]
+//!   heartbeats every server over the control lane ([`Req::Ping`]),
+//!   marks a silent server `Down` after `grace_ticks` and `Out` after
+//!   `out_ticks`, fences the out server and bumps the map epoch so
+//!   placement and degraded reads react. Fully deterministic under
+//!   [`crate::api::Cluster::advance_clock`].
+//! * **Planning** (`plan.rs`) — on any out-transition (or an explicit
+//!   [`crate::api::Cluster::remove_server`]), every surviving server
+//!   recomputes, from its own CIT / backreference index / replica
+//!   store, exactly which chunks and OMAP records had the lost server
+//!   in their placement chain. No data rescan: placement is a pure
+//!   function of (map, key), so the affected set falls out of
+//!   lightweight metadata.
+//! * **Backfill** (this file) — a per-server **recovery worker** thread
+//!   (a pure client of the lane graph, like the scrub worker) executes
+//!   the plan in two stages. Stage 1 re-homes OMAP records: the new
+//!   primary adopts the record from a surviving replica copy
+//!   (adopt-if-absent, so a racing fresh write always wins) and
+//!   re-fans-out copies under the new chain. After a cluster-wide
+//!   **ensure barrier** — each worker waits (bounded) until every
+//!   surviving peer has finished stage 1, so every referenced
+//!   fingerprint has a CIT entry at its new home — stage 2 walks the
+//!   chunk work-list **most-referenced first**: restore the primary
+//!   from any surviving copy, re-synchronize the refcount (the scrub
+//!   reconcile's double-read + CAS), and re-push replica copies until
+//!   the chain is back at `cfg.replication`.
+//!
+//! **Flow control & backpressure** — every scanned entry and
+//! re-replicated byte is charged to [`MaintClass::Recovery`] in the
+//! shared per-server budget, and replica-presence probes honor the
+//! `VerifyCopy` gate's [`Resp::Busy`] NACKs with backoff — recovery
+//! competes politely with foreground I/O and the other maintenance
+//! classes.
+//!
+//! **Crash consistency** — the flag-based argument extends to recovery
+//! writes: [`CrashPoint::BeforeRecoveryCopy`] dies before anything
+//! lands (the degradation persists; a re-queued job heals it), and
+//! [`CrashPoint::AfterRecoveryCopy`] dies between the data write and
+//! the flag flip / remaining pushes — the stored-but-invalid state GC
+//! and scrub already know how to re-validate or reclaim. A crashed
+//! worker's job is volatile; [`crate::api::Cluster::restart_server`]
+//! re-queues recovery for every `Out` server in the map.
+
+pub mod detector;
+mod plan;
+
+pub use self::detector::{Detector, FailureDetection};
+
+use crate::cluster::{ServerId, ServerState};
+use crate::dedup::cit::CommitFlag;
+use crate::dedup::engine::{chunk_copy_key, omap_copy_key, DedupMode};
+use crate::dedup::fingerprint::Fingerprint;
+use crate::dedup::omap::OmapEntry;
+use crate::error::{Error, Result};
+use crate::failure::CrashPoint;
+use crate::metrics::Metrics;
+use crate::net::Lane;
+use crate::sched::flow::MaintClass;
+use crate::scrub::{self, ReconcileVerdict};
+use crate::storage::osd::OsdShared;
+use crate::storage::proto::{Req, Resp};
+use self::plan::{ChunkTask, LossView};
+use std::collections::{HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Worker poll interval for new jobs / shutdown.
+const POLL: Duration = Duration::from_millis(50);
+/// Byte-equivalent cost charged per scanned work item.
+const ITEM_COST: u64 = 64;
+/// Refcount-reconcile window (entries per batched `CountRefs` round).
+const RECONCILE_WINDOW: usize = 256;
+/// Wall bound on the cluster-wide ensure barrier. Dead peers are
+/// skipped instantly (their probes answer `ServerDown`), a live peer
+/// answering "not yet" is making progress toward its ensure stage, so
+/// this cap only bites when a live peer's job *failed* before marking —
+/// generous, because giving up early risks walking the CIT before
+/// peers re-created entries in it; residual gaps then fall to the next
+/// scrub's ensure phase.
+const BARRIER_WAIT: Duration = Duration::from_secs(30);
+/// Poll interval while waiting on the ensure barrier.
+const BARRIER_POLL: Duration = Duration::from_millis(5);
+/// Retry budget per `Busy`-NACKed replica-presence probe.
+const PROBE_MAX_ATTEMPTS: u32 = 100;
+/// Base wall backoff after a `Busy` NACK (doubles per attempt, capped).
+const PROBE_BACKOFF_BASE_US: u64 = 200;
+
+/// Lifecycle of a server's recovery job.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub enum RecoveryState {
+    /// No recovery has run since boot (or the last crash wiped it).
+    #[default]
+    Idle,
+    /// A job is queued, waiting for the worker thread.
+    Queued,
+    /// The backfill is in progress.
+    Running,
+    /// The last job completed.
+    Done,
+    /// The last job aborted (server died mid-pass, or an I/O error).
+    Failed(String),
+}
+
+/// One server's recovery progress snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryStatus {
+    /// Server id.
+    pub server: u32,
+    /// Job lifecycle state.
+    pub state: RecoveryState,
+    /// The lost server the current/last job recovers from.
+    pub lost: Option<u32>,
+    /// Jobs still queued behind the current one.
+    pub queued: usize,
+    /// Work items examined (CIT entries + re-created entries).
+    pub chunks_scanned: u64,
+    /// Primary chunks (and no-dedup objects) restored from a surviving
+    /// copy.
+    pub chunks_restored: u64,
+    /// Replica copies (chunk + OMAP record) re-pushed.
+    pub copies_pushed: u64,
+    /// Bytes re-replicated by this job.
+    pub bytes_recovered: u64,
+    /// OMAP records adopted onto this server as their new primary.
+    pub omap_recovered: u64,
+    /// CIT refcounts re-synchronized by the reconcile step.
+    pub refs_fixed: u64,
+    /// Referenced chunks with no surviving copy anywhere (quarantined).
+    pub lost_chunks: u64,
+    /// Job start (ms since cluster start).
+    pub started_ms: u64,
+    /// Job end (ms since cluster start; 0 while running).
+    pub finished_ms: u64,
+}
+
+#[derive(Default)]
+struct CtlInner {
+    queue: VecDeque<u32>,
+    ensured: HashSet<u32>,
+    status: RecoveryStatus,
+}
+
+/// Per-server recovery control block: job queue, ensure-barrier flags
+/// and the externally visible status. Volatile — a crash drops queued
+/// jobs and aborts the running one ([`crate::api::Cluster::restart_server`]
+/// re-queues recovery for every `Out` server).
+#[derive(Default)]
+pub struct RecoveryCtl {
+    inner: Mutex<CtlInner>,
+    cv: Condvar,
+}
+
+impl RecoveryCtl {
+    /// Idle control block.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Idle control block that already knows its server id.
+    pub fn for_server(server: u32) -> Self {
+        let ctl = Self::default();
+        ctl.inner.lock().unwrap().status.server = server;
+        ctl
+    }
+
+    /// Queue a recovery job for `lost` (idempotent against the pending
+    /// queue — duplicate triggers for the same failure collapse).
+    pub fn enqueue(&self, lost: u32) {
+        let mut g = self.inner.lock().unwrap();
+        if !g.queue.contains(&lost) {
+            g.queue.push_back(lost);
+        }
+        if !matches!(g.status.state, RecoveryState::Running) {
+            g.status.state = RecoveryState::Queued;
+        }
+        self.cv.notify_one();
+    }
+
+    /// Current status snapshot (with the live queue depth).
+    pub fn status(&self) -> RecoveryStatus {
+        let g = self.inner.lock().unwrap();
+        let mut st = g.status.clone();
+        st.queued = g.queue.len();
+        st
+    }
+
+    /// Has this server completed the OMAP + ensure stage for a job
+    /// recovering `lost`? The ensure effects are durable, so a finished
+    /// job keeps answering true — peers barrier on exactly this.
+    pub fn is_ensured(&self, lost: u32) -> bool {
+        self.inner.lock().unwrap().ensured.contains(&lost)
+    }
+
+    fn mark_ensured(&self, lost: u32) {
+        self.inner.lock().unwrap().ensured.insert(lost);
+    }
+
+    fn take_job(&self, timeout: Duration) -> Option<u32> {
+        let mut g = self.inner.lock().unwrap();
+        if g.queue.is_empty() {
+            g = self.cv.wait_timeout(g, timeout).unwrap().0;
+        }
+        g.queue.pop_front()
+    }
+
+    fn update(&self, f: impl FnOnce(&mut RecoveryStatus)) {
+        f(&mut self.inner.lock().unwrap().status);
+    }
+
+    /// Crash semantics (called from `Osd::kill`): queued jobs and the
+    /// barrier memory are volatile and die with the process.
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.queue.clear();
+        g.ensured.clear();
+        if matches!(g.status.state, RecoveryState::Queued | RecoveryState::Running) {
+            g.status = RecoveryStatus {
+                server: g.status.server,
+                state: RecoveryState::Failed("server crashed".into()),
+                ..Default::default()
+            };
+        }
+    }
+}
+
+/// The per-server recovery worker thread body (spawned by
+/// [`crate::storage::osd::Osd::spawn`]). Waits for queued jobs and runs
+/// one full backfill per job.
+pub fn recovery_loop(sh: Arc<OsdShared>, sd: Arc<AtomicBool>) {
+    while !sd.load(Ordering::SeqCst) {
+        let Some(lost) = sh.recovery.take_job(POLL) else {
+            continue;
+        };
+        if sh.injector.is_dead() {
+            continue; // the kill-time clear() already failed the status
+        }
+        let started = sh.now_ms();
+        sh.recovery.update(|st| {
+            *st = RecoveryStatus {
+                server: sh.id.0,
+                state: RecoveryState::Running,
+                lost: Some(lost),
+                started_ms: started,
+                ..Default::default()
+            };
+        });
+        Metrics::add(&sh.metrics.recovery_runs, 1);
+        let outcome = run_recovery(&sh, ServerId(lost));
+        let finished = sh.now_ms();
+        sh.recovery.update(|st| {
+            st.finished_ms = finished;
+            st.state = match &outcome {
+                Ok(()) => RecoveryState::Done,
+                Err(e) => RecoveryState::Failed(e.to_string()),
+            };
+        });
+    }
+}
+
+/// A killed/crashed server must stop recovering at once (checked per
+/// item, matching the lanes' crash model).
+fn ensure_alive(sh: &OsdShared) -> Result<()> {
+    if sh.injector.is_dead() {
+        Err(Error::ServerDown(sh.id.0))
+    } else {
+        Ok(())
+    }
+}
+
+/// One full backfill for the departure of `lost` (see module docs).
+fn run_recovery(sh: &OsdShared, lost: ServerId) -> Result<()> {
+    let view = LossView::capture(sh, lost);
+    let epoch0 = sh.map.read().unwrap().epoch;
+
+    // ---- stage 1: re-home OMAP records, then ensure CIT entries ----
+    recover_omap_records(sh, &view)?;
+    ensure_affected(sh, &view)?;
+    sh.recovery.mark_ensured(lost.0);
+    barrier_wait(sh, lost)?;
+
+    // ---- stage 2: chunk backfill, most-referenced first ----
+    let tasks = plan::chunk_plan(sh, &view)?;
+    for window in tasks.chunks(RECONCILE_WINDOW) {
+        let mut fps: Vec<Fingerprint> = Vec::with_capacity(window.len());
+        for task in window {
+            ensure_alive(sh)?;
+            sh.charge_maint(MaintClass::Recovery, ITEM_COST);
+            sh.recovery.update(|st| st.chunks_scanned += 1);
+            Metrics::add(&sh.metrics.recovery_chunks_scanned, 1);
+            if sh.cfg.dedup == DedupMode::Central
+                && sh.chunk_chain(task.fp.placement_key()).first() != Some(&sh.id)
+            {
+                central_restore(sh, task)?;
+            } else {
+                if !task.have_entry {
+                    scrub::ensure_cit_local(sh, &task.fp, task.len)?;
+                }
+                restore_primary(sh, task)?;
+                re_replicate(sh, task)?;
+            }
+            fps.push(task.fp);
+        }
+        if sh.cfg.dedup != DedupMode::None && !fps.is_empty() {
+            // same double-read + CAS reconcile the scrub light pass uses
+            // (counts exclude Out servers — their references left scope)
+            if let ReconcileVerdict::Done { fixed } = scrub::reconcile_refcounts(sh, epoch0, &fps)?
+            {
+                sh.recovery.update(|st| st.refs_fixed += fixed);
+                Metrics::add(&sh.metrics.recovery_refs_fixed, fixed);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Stage 1a: adopt / push / re-fan-out OMAP records (and no-dedup raw
+/// objects) whose chain included the lost server.
+fn recover_omap_records(sh: &OsdShared, view: &LossView) -> Result<()> {
+    let plan = plan::omap_plan(sh, view)?;
+    let mut refan: HashSet<String> = plan.refan.into_iter().collect();
+
+    for (name, value) in plan.adopt {
+        ensure_alive(sh)?;
+        sh.charge_maint(MaintClass::Recovery, (value.len() as u64).max(ITEM_COST));
+        let entry = OmapEntry::decode(&value)?;
+        sh.charge_meta_io();
+        if let Some(delta) = sh.shard.omap_put_if_absent(&entry)? {
+            Metrics::add(&sh.metrics.backref_updates, delta.total());
+            Metrics::add(&sh.metrics.recovery_omap_recovered, 1);
+            Metrics::add(&sh.metrics.recovery_bytes, value.len() as u64);
+            sh.recovery.update(|st| {
+                st.omap_recovered += 1;
+                st.bytes_recovered += value.len() as u64;
+            });
+        }
+        refan.insert(name);
+    }
+
+    for (key, data) in plan.raw_adopt {
+        ensure_alive(sh)?;
+        sh.charge_maint(MaintClass::Recovery, (data.len() as u64).max(ITEM_COST));
+        if sh.injector.maybe_crash(CrashPoint::BeforeRecoveryCopy) {
+            return Err(Error::ServerDown(sh.id.0));
+        }
+        sh.store.put(&key, &data)?;
+        Metrics::add(&sh.metrics.bytes_stored, data.len() as u64);
+        if sh.injector.maybe_crash(CrashPoint::AfterRecoveryCopy) {
+            return Err(Error::ServerDown(sh.id.0));
+        }
+        Metrics::add(&sh.metrics.recovery_chunks_restored, 1);
+        Metrics::add(&sh.metrics.recovery_bytes, data.len() as u64);
+        sh.recovery.update(|st| {
+            st.chunks_restored += 1;
+            st.bytes_recovered += data.len() as u64;
+        });
+        let name = String::from_utf8_lossy(&key[4..]).to_string();
+        for peer in replica_slots(sh, &sh.object_chain(&name)) {
+            push_copy(sh, peer, key.clone(), &data)?;
+        }
+    }
+
+    for key in plan.raw_refan {
+        ensure_alive(sh)?;
+        let Some(data) = sh.store.get(&key)? else {
+            continue;
+        };
+        let name = String::from_utf8_lossy(&key[4..]).to_string();
+        for peer in replica_slots(sh, &sh.object_chain(&name)) {
+            push_copy(sh, peer, key.clone(), &data)?;
+        }
+    }
+
+    for (target, value) in plan.push {
+        ensure_alive(sh)?;
+        sh.charge_maint(MaintClass::Recovery, (value.len() as u64).max(ITEM_COST));
+        let Ok(addr) = sh.dir.lookup(target, Lane::Backend) else {
+            continue; // dead target: its own restart re-converges
+        };
+        let req = Req::RecoverOmap { value };
+        let size = req.wire_size();
+        let _ = addr.call(req, size); // best-effort; next pass settles
+    }
+
+    for name in refan {
+        ensure_alive(sh)?;
+        let Some(entry) = sh.shard.omap_get(&name)? else {
+            continue;
+        };
+        let value = entry.encode();
+        for peer in replica_slots(sh, &sh.object_chain(&name)) {
+            push_copy(sh, peer, omap_copy_key(&name), &value)?;
+        }
+    }
+    Ok(())
+}
+
+/// Stage 1b: every *affected* fingerprint referenced by the local OMAP
+/// gets a CIT entry at its (new) home — the scrub ensure phase filtered
+/// to the loss's blast radius.
+fn ensure_affected(sh: &OsdShared, view: &LossView) -> Result<()> {
+    if sh.cfg.dedup == DedupMode::None {
+        return Ok(());
+    }
+    for (fp, len) in sh.shard.backref_referenced()? {
+        ensure_alive(sh)?;
+        if !view.affected(sh, fp.placement_key()) {
+            continue;
+        }
+        let home = match sh.cfg.dedup {
+            DedupMode::ClusterWide => match sh.chunk_chain(fp.placement_key()).first() {
+                Some(id) => *id,
+                None => continue,
+            },
+            DedupMode::DiskLocal | DedupMode::Central => sh.id,
+            DedupMode::None => continue,
+        };
+        if home == sh.id {
+            scrub::ensure_cit_local(sh, &fp, len)?;
+            continue;
+        }
+        let Ok(addr) = sh.dir.lookup(home, Lane::Backend) else {
+            continue;
+        };
+        let req = Req::EnsureCit { fp, len };
+        let size = req.wire_size();
+        match addr.call(req, size) {
+            Ok(_) => {}
+            Err(Error::ServerDown(_)) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Bounded wait until every surviving peer reports its ensure stage
+/// done for this job, so the stage-2 CIT walk sees every entry peers
+/// re-created here. A peer that never answers (dead, or its trigger
+/// never arrived) cannot stall recovery — the next scrub's ensure phase
+/// closes any residual gap.
+fn barrier_wait(sh: &OsdShared, lost: ServerId) -> Result<()> {
+    let deadline = Instant::now() + BARRIER_WAIT;
+    loop {
+        ensure_alive(sh)?;
+        let peers: Vec<ServerId> = sh
+            .map
+            .read()
+            .unwrap()
+            .servers
+            .iter()
+            .filter(|s| s.state == ServerState::Up && s.id != sh.id && s.id != lost)
+            .map(|s| s.id)
+            .collect();
+        let mut all = true;
+        for peer in peers {
+            let Ok(addr) = sh.dir.lookup(peer, Lane::Control) else {
+                continue;
+            };
+            let req = Req::RecoveryProbe { lost: lost.0 };
+            let size = req.wire_size();
+            match addr.call(req, size) {
+                Ok(Resp::RecoveryAck { ensure_done }) => {
+                    if !ensure_done {
+                        all = false;
+                    }
+                }
+                _ => {} // dead / unreachable peer: skipped
+            }
+        }
+        if all || Instant::now() >= deadline {
+            return Ok(());
+        }
+        std::thread::sleep(BARRIER_POLL);
+    }
+}
+
+/// The replica slots of a chain under the configured replication factor,
+/// excluding ourselves.
+fn replica_slots(sh: &OsdShared, chain: &[ServerId]) -> Vec<ServerId> {
+    chain
+        .iter()
+        .skip(1)
+        .take(sh.cfg.replication.saturating_sub(1))
+        .filter(|id| **id != sh.id)
+        .copied()
+        .collect()
+}
+
+/// Restore a missing primary chunk from any surviving copy; quarantine
+/// (invalid flag) when none exists anywhere.
+fn restore_primary(sh: &OsdShared, task: &ChunkTask) -> Result<()> {
+    let key = task.fp.to_bytes();
+    if sh.store.stat(&key)? {
+        return Ok(());
+    }
+    let (good, from_self) = match own_copy(sh, &task.fp)? {
+        Some(d) => (Some(d), true),
+        None => (fetch_any_copy(sh, &task.fp)?, false),
+    };
+    let Some(data) = good else {
+        // no surviving copy anywhere: never leave a valid flag pointing
+        // at missing data (the audit invariant)
+        sh.charge_meta_io();
+        sh.shard
+            .cit_set_flag(&task.fp, CommitFlag::Invalid, sh.now_ms())?;
+        if task.refcount > 0 {
+            sh.recovery.update(|st| st.lost_chunks += 1);
+            Metrics::add(&sh.metrics.recovery_lost, 1);
+        }
+        return Ok(());
+    };
+    if sh.injector.maybe_crash(CrashPoint::BeforeRecoveryCopy) {
+        return Err(Error::ServerDown(sh.id.0));
+    }
+    sh.store.put(&key, &data)?;
+    Metrics::add(&sh.metrics.bytes_stored, data.len() as u64);
+    if sh.injector.maybe_crash(CrashPoint::AfterRecoveryCopy) {
+        return Err(Error::ServerDown(sh.id.0));
+    }
+    sh.charge_meta_io();
+    sh.shard
+        .cit_set_flag(&task.fp, CommitFlag::Valid, sh.now_ms())?;
+    sh.charge_maint(MaintClass::Recovery, data.len() as u64);
+    sh.recovery.update(|st| {
+        st.chunks_restored += 1;
+        st.bytes_recovered += data.len() as u64;
+    });
+    Metrics::add(&sh.metrics.recovery_chunks_restored, 1);
+    Metrics::add(&sh.metrics.recovery_bytes, data.len() as u64);
+    if from_self {
+        // we were a replica holder and are the primary now: the local
+        // copy slot is no longer on the chain — drop the orphan
+        sh.replica_store.delete(&chunk_copy_key(&task.fp))?;
+    }
+    Ok(())
+}
+
+/// Verdict of one replica-presence probe.
+enum Probe {
+    /// The peer holds a digest-matching copy.
+    Healthy,
+    /// The peer is missing the copy (or holds rot): push one.
+    NeedPush,
+    /// The peer is unreachable (dead): nothing to fix right now.
+    Unreachable,
+    /// The probe retry budget ran out under sustained backpressure;
+    /// left for the next scrub pass.
+    GaveUp,
+}
+
+/// Probe one peer for a digest-matching replica copy, honoring the
+/// replica lane's `Busy` backpressure gate with backoff.
+fn probe_copy(sh: &OsdShared, peer: ServerId, fp: &Fingerprint) -> Probe {
+    let Ok(addr) = sh.dir.lookup(peer, Lane::Replica) else {
+        return Probe::Unreachable;
+    };
+    let mut attempts = 0u32;
+    loop {
+        let req = Req::VerifyCopy {
+            key: chunk_copy_key(fp),
+            fp: *fp,
+        };
+        let size = req.wire_size();
+        match addr.call(req, size) {
+            Ok(Resp::CopyState { present, matches }) => {
+                return if present && matches {
+                    Probe::Healthy
+                } else {
+                    Probe::NeedPush
+                };
+            }
+            Ok(Resp::Busy) => {
+                attempts += 1;
+                if attempts >= PROBE_MAX_ATTEMPTS {
+                    Metrics::add(&sh.metrics.backpressure_gave_up, 1);
+                    return Probe::GaveUp;
+                }
+                Metrics::add(&sh.metrics.backpressure_retries, 1);
+                std::thread::sleep(Duration::from_micros(
+                    PROBE_BACKOFF_BASE_US << attempts.min(6),
+                ));
+            }
+            Ok(_) | Err(_) => return Probe::Unreachable,
+        }
+    }
+}
+
+/// Push one replica copy to a peer, bracketed by the recovery crash
+/// points and charged to the recovery budget.
+fn push_copy(sh: &OsdShared, peer: ServerId, key: Vec<u8>, data: &[u8]) -> Result<bool> {
+    if sh.injector.maybe_crash(CrashPoint::BeforeRecoveryCopy) {
+        return Err(Error::ServerDown(sh.id.0));
+    }
+    let Ok(addr) = sh.dir.lookup(peer, Lane::Replica) else {
+        return Ok(false);
+    };
+    sh.charge_maint(MaintClass::Recovery, (data.len() as u64).max(ITEM_COST));
+    let req = Req::PutCopy {
+        key,
+        data: data.to_vec(),
+    };
+    let size = req.wire_size();
+    let pushed = matches!(addr.call(req, size), Ok(Resp::Ok));
+    if sh.injector.maybe_crash(CrashPoint::AfterRecoveryCopy) {
+        return Err(Error::ServerDown(sh.id.0));
+    }
+    if pushed {
+        sh.recovery.update(|st| {
+            st.copies_pushed += 1;
+            st.bytes_recovered += data.len() as u64;
+        });
+        Metrics::add(&sh.metrics.recovery_copies_pushed, 1);
+        Metrics::add(&sh.metrics.recovery_bytes, data.len() as u64);
+    }
+    Ok(pushed)
+}
+
+/// Re-push replica copies for one chunk until its chain is back at the
+/// configured replication factor.
+fn re_replicate(sh: &OsdShared, task: &ChunkTask) -> Result<()> {
+    if sh.cfg.replication <= 1 || sh.cfg.dedup == DedupMode::Central {
+        return Ok(()); // central fans no copies out
+    }
+    let chain = sh.chunk_chain(task.fp.placement_key());
+    let mut data: Option<Vec<u8>> = None;
+    for peer in replica_slots(sh, &chain) {
+        ensure_alive(sh)?;
+        match probe_copy(sh, peer, &task.fp) {
+            Probe::Healthy | Probe::Unreachable | Probe::GaveUp => {}
+            Probe::NeedPush => {
+                if data.is_none() {
+                    data = sh.store.get(&task.fp.to_bytes())?;
+                }
+                let Some(d) = &data else {
+                    return Ok(()); // primary unrecoverable: quarantined
+                };
+                push_copy(sh, peer, chunk_copy_key(&task.fp), d)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Central-mode restore: the metadata owner re-checks a raw chunk on its
+/// (possibly new) data home and re-ships surviving bytes there.
+fn central_restore(sh: &OsdShared, task: &ChunkTask) -> Result<()> {
+    let chain = sh.chunk_chain(task.fp.placement_key());
+    let Some(home) = chain.first().copied() else {
+        return Ok(());
+    };
+    let Ok(addr) = sh.dir.lookup(home, Lane::Backend) else {
+        return Ok(()); // dead home: nothing to restore onto yet
+    };
+    let req = Req::StatChunk { fp: task.fp };
+    let size = req.wire_size();
+    match addr.call(req, size) {
+        Ok(Resp::ChunkStat {
+            exists_data: true, ..
+        }) => return Ok(()),
+        Ok(Resp::ChunkStat { .. }) => {}
+        _ => return Ok(()),
+    }
+    match fetch_any_copy(sh, &task.fp)? {
+        Some(data) => {
+            if sh.injector.maybe_crash(CrashPoint::BeforeRecoveryCopy) {
+                return Err(Error::ServerDown(sh.id.0));
+            }
+            sh.charge_maint(MaintClass::Recovery, data.len() as u64);
+            let req = Req::StoreRaw {
+                key: task.fp.to_bytes().to_vec(),
+                data: data.clone(),
+            };
+            let size = req.wire_size();
+            let stored = matches!(addr.call(req, size), Ok(Resp::Ok));
+            if sh.injector.maybe_crash(CrashPoint::AfterRecoveryCopy) {
+                return Err(Error::ServerDown(sh.id.0));
+            }
+            if stored {
+                sh.recovery.update(|st| {
+                    st.chunks_restored += 1;
+                    st.bytes_recovered += data.len() as u64;
+                });
+                Metrics::add(&sh.metrics.recovery_chunks_restored, 1);
+                Metrics::add(&sh.metrics.recovery_bytes, data.len() as u64);
+            }
+        }
+        None => {
+            // central replicates nothing; data on a lost home is gone —
+            // quarantine so reads fail loudly instead of serving holes
+            sh.charge_meta_io();
+            sh.shard
+                .cit_set_flag(&task.fp, CommitFlag::Invalid, sh.now_ms())?;
+            if task.refcount > 0 {
+                sh.recovery.update(|st| st.lost_chunks += 1);
+                Metrics::add(&sh.metrics.recovery_lost, 1);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Our own replica slot for a chunk, digest-verified.
+fn own_copy(sh: &OsdShared, fp: &Fingerprint) -> Result<Option<Vec<u8>>> {
+    Ok(sh
+        .replica_store
+        .get(&chunk_copy_key(fp))?
+        .filter(|d| Fingerprint::of(d) == *fp))
+}
+
+/// Fetch a digest-verified copy of a chunk from *anywhere*: our own
+/// replica slot, the placement chain, then a sweep of every other live
+/// server — after an out-transition the surviving copies may sit on
+/// servers the new chain no longer names. Shared with the scrub
+/// repair path (DESIGN.md §11).
+pub(crate) fn fetch_any_copy(sh: &OsdShared, fp: &Fingerprint) -> Result<Option<Vec<u8>>> {
+    if let Some(d) = own_copy(sh, fp)? {
+        return Ok(Some(d));
+    }
+    if let Some(d) = scrub::fetch_healthy_copy(sh, fp)? {
+        return Ok(Some(d));
+    }
+    let chain: HashSet<ServerId> = sh.chunk_chain(fp.placement_key()).into_iter().collect();
+    let peers: Vec<ServerId> = sh
+        .map
+        .read()
+        .unwrap()
+        .servers
+        .iter()
+        .filter(|s| s.state == ServerState::Up && s.id != sh.id && !chain.contains(&s.id))
+        .map(|s| s.id)
+        .collect();
+    for peer in peers {
+        let Ok(addr) = sh.dir.lookup(peer, Lane::Replica) else {
+            continue;
+        };
+        let req = Req::FetchCopy {
+            key: chunk_copy_key(fp),
+        };
+        let size = req.wire_size();
+        if let Ok(Resp::Data(d)) = addr.call(req, size) {
+            if Fingerprint::of(&d) == *fp {
+                return Ok(Some(d));
+            }
+        }
+    }
+    Ok(None)
+}
+
+/// The [`Req::RecoverOmap`] handler: adopt a pushed OMAP record if the
+/// name is unknown here (a racing fresh write always wins), then
+/// refresh the record's replica copies under the current chain.
+pub(crate) fn recover_omap_local(sh: &OsdShared, value: Vec<u8>) -> Result<()> {
+    let entry = OmapEntry::decode(&value)?;
+    sh.charge_meta_io();
+    if let Some(delta) = sh.shard.omap_put_if_absent(&entry)? {
+        Metrics::add(&sh.metrics.backref_updates, delta.total());
+        Metrics::add(&sh.metrics.recovery_omap_recovered, 1);
+        Metrics::add(&sh.metrics.recovery_bytes, value.len() as u64);
+    }
+    let current = match sh.shard.omap_get(&entry.name)? {
+        Some(e) => e.encode(),
+        None => value,
+    };
+    let chain = sh.object_chain(&entry.name);
+    for peer in replica_slots(sh, &chain) {
+        let Ok(addr) = sh.dir.lookup(peer, Lane::Replica) else {
+            continue;
+        };
+        let req = Req::PutCopy {
+            key: omap_copy_key(&entry.name),
+            data: current.clone(),
+        };
+        let size = req.wire_size();
+        if matches!(addr.call(req, size), Ok(Resp::Ok)) {
+            Metrics::add(&sh.metrics.recovery_copies_pushed, 1);
+            Metrics::add(&sh.metrics.recovery_bytes, current.len() as u64);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctl_queue_dedups_and_tracks_state() {
+        let ctl = RecoveryCtl::for_server(7);
+        assert_eq!(ctl.status().state, RecoveryState::Idle);
+        ctl.enqueue(3);
+        ctl.enqueue(3); // duplicate trigger collapses
+        ctl.enqueue(5);
+        let st = ctl.status();
+        assert_eq!(st.state, RecoveryState::Queued);
+        assert_eq!(st.queued, 2);
+        assert_eq!(ctl.take_job(Duration::from_millis(1)), Some(3));
+        assert_eq!(ctl.take_job(Duration::from_millis(1)), Some(5));
+        assert_eq!(ctl.take_job(Duration::from_millis(1)), None);
+    }
+
+    #[test]
+    fn ctl_ensure_barrier_memory_survives_jobs_not_crashes() {
+        let ctl = RecoveryCtl::for_server(1);
+        assert!(!ctl.is_ensured(3));
+        ctl.mark_ensured(3);
+        assert!(ctl.is_ensured(3));
+        ctl.clear(); // crash wipes volatile barrier memory
+        assert!(!ctl.is_ensured(3));
+    }
+
+    #[test]
+    fn ctl_clear_fails_inflight_job() {
+        let ctl = RecoveryCtl::for_server(2);
+        ctl.enqueue(0);
+        ctl.clear();
+        assert!(matches!(ctl.status().state, RecoveryState::Failed(_)));
+        assert_eq!(ctl.status().queued, 0);
+    }
+}

@@ -1,0 +1,239 @@
+//! Recovery planning: which of this server's keys lost a copy when a
+//! server left the map.
+//!
+//! Placement is a pure function of (map, key), so the set of keys a
+//! departed server held is *recomputable* from lightweight metadata —
+//! no data rescan, no central manifest. [`LossView`] reconstructs the
+//! pre-failure placement table by cloning the current map with the lost
+//! server restored to `Up` (straw2's minimal-movement property makes
+//! this exact as long as no other membership change raced the failure;
+//! a racing change simply widens the affected set the next job sees).
+//! A key is **affected** iff its old chain contained the lost server —
+//! or, for non-minimal policies, iff its chain changed at all.
+//!
+//! Two walks produce the work-list, both over indexed local state:
+//!
+//! * [`omap_plan`] — the replica store's `o:` (and no-dedup `obj:`)
+//!   copies plus the local OMAP names: records whose primary was lost
+//!   are adopted by (or pushed to) their new primary, and affected
+//!   records are re-fanned-out to the new chain.
+//! * [`chunk_plan`] — the local CIT plus the replica store's `c:`
+//!   copies: every affected chunk this server now homes, prioritized by
+//!   refcount (most-shared first — the largest blast-radius chunks heal
+//!   first), plus entries that must be re-created because their old
+//!   home died with them.
+
+use crate::cluster::{ServerId, ServerState};
+use crate::dedup::engine::DedupMode;
+use crate::dedup::fingerprint::Fingerprint;
+use crate::error::Result;
+use crate::storage::osd::OsdShared;
+use std::collections::HashSet;
+
+/// Pre-failure placement view for one lost server (see module docs).
+pub(crate) struct LossView {
+    lost: ServerId,
+    /// PG → replica chain under the reconstructed pre-failure map.
+    old_table: Vec<Vec<ServerId>>,
+}
+
+impl LossView {
+    /// Reconstruct placement as it was before `lost` left: the current
+    /// map with `lost` forced back to `Up`.
+    pub fn capture(sh: &OsdShared, lost: ServerId) -> Self {
+        let mut old_map = sh.map.read().unwrap().clone();
+        old_map.set_state(lost, ServerState::Up);
+        LossView {
+            lost,
+            old_table: sh.pgmap.table_for(&old_map),
+        }
+    }
+
+    /// The pre-failure replica chain for a placement key.
+    pub fn old_chain(&self, sh: &OsdShared, key: u64) -> &[ServerId] {
+        &self.old_table[sh.pgmap.pg_of(key) as usize]
+    }
+
+    /// Did this key lose a copy (or move) when the server left?
+    pub fn affected(&self, sh: &OsdShared, key: u64) -> bool {
+        let old = self.old_chain(sh, key);
+        if old.contains(&self.lost) {
+            return true;
+        }
+        // paranoia for non-minimal placement policies: any chain change
+        // counts as affected, even without the lost member in it
+        let new = sh.chunk_chain(key);
+        old != new.as_slice()
+    }
+}
+
+/// Stage-1 work-list: OMAP records (and no-dedup raw objects) to
+/// re-home and re-fan-out.
+#[derive(Default)]
+pub(crate) struct OmapPlan {
+    /// Records whose new primary is this server and whose OMAP entry is
+    /// missing: (name, encoded record from the local replica copy).
+    pub adopt: Vec<(String, Vec<u8>)>,
+    /// Records whose new primary is another survivor: (primary, encoded
+    /// record) — pushed with `RecoverOmap` (adopt-if-absent there).
+    pub push: Vec<(ServerId, Vec<u8>)>,
+    /// Locally-owned affected records whose replica copies must be
+    /// re-fanned-out under the new chain.
+    pub refan: Vec<String>,
+    /// No-dedup raw objects to adopt into the local primary store:
+    /// (store key, data from the local replica copy).
+    pub raw_adopt: Vec<(Vec<u8>, Vec<u8>)>,
+    /// Locally-primaried affected raw objects whose replica copies must
+    /// be re-fanned-out under the new chain (store keys).
+    pub raw_refan: Vec<Vec<u8>>,
+}
+
+/// Build the stage-1 (OMAP re-homing) work-list from the local replica
+/// store and OMAP.
+pub(crate) fn omap_plan(sh: &OsdShared, view: &LossView) -> Result<OmapPlan> {
+    let mut plan = OmapPlan::default();
+    if sh.cfg.dedup == DedupMode::Central {
+        // central keeps every OMAP record on the metadata owner and
+        // fans no copies out; there is nothing to re-home.
+        return Ok(plan);
+    }
+    for key in sh.replica_store.keys()? {
+        if let Some(name) = key.strip_prefix(b"o:").and_then(|n| std::str::from_utf8(n).ok()) {
+            let pkey = crate::hash::fnv1a64(name.as_bytes());
+            if !view.affected(sh, pkey) {
+                continue;
+            }
+            let chain = sh.object_chain(name);
+            let Some(primary) = chain.first().copied() else {
+                continue;
+            };
+            let Some(value) = sh.replica_store.get(&key)? else {
+                continue;
+            };
+            if primary == sh.id {
+                if sh.shard.omap_get(name)?.is_none() {
+                    plan.adopt.push((name.to_string(), value));
+                }
+            } else {
+                plan.push.push((primary, value));
+            }
+        } else if let Some(name) = key
+            .strip_prefix(b"obj:")
+            .and_then(|n| std::str::from_utf8(n).ok())
+        {
+            let pkey = crate::hash::fnv1a64(name.as_bytes());
+            if !view.affected(sh, pkey) {
+                continue;
+            }
+            if sh.object_chain(name).first() == Some(&sh.id) && sh.store.get(&key)?.is_none() {
+                if let Some(data) = sh.replica_store.get(&key)? {
+                    plan.raw_adopt.push((key, data));
+                }
+            }
+        }
+    }
+    for name in sh.shard.omap_names()? {
+        if view.affected(sh, crate::hash::fnv1a64(name.as_bytes()))
+            && sh.object_chain(&name).first() == Some(&sh.id)
+        {
+            plan.refan.push(name);
+        }
+    }
+    if sh.cfg.dedup == DedupMode::None {
+        // raw objects this server primaries whose replica set named the
+        // lost server: their copies must be re-fanned-out like OMAP
+        // records (there is no chunk phase to do it in this mode)
+        for key in sh.store.keys()? {
+            let Some(name) = key
+                .strip_prefix(b"obj:")
+                .and_then(|n| std::str::from_utf8(n).ok())
+            else {
+                continue;
+            };
+            if view.affected(sh, crate::hash::fnv1a64(name.as_bytes()))
+                && sh.object_chain(name).first() == Some(&sh.id)
+            {
+                plan.raw_refan.push(key);
+            }
+        }
+    }
+    Ok(plan)
+}
+
+/// One chunk the stage-2 backfill must look at.
+pub(crate) struct ChunkTask {
+    /// Content fingerprint.
+    pub fp: Fingerprint,
+    /// Chunk length (CIT entry or surviving copy).
+    pub len: u32,
+    /// Refcount at plan time (0 for entries that must be re-created).
+    pub refcount: u64,
+    /// False when the entry died with its old home and must be
+    /// re-created from a surviving copy before repair.
+    pub have_entry: bool,
+}
+
+/// Build the stage-2 (chunk backfill) work-list: every affected chunk
+/// this server is responsible for, most-referenced first.
+pub(crate) fn chunk_plan(sh: &OsdShared, view: &LossView) -> Result<Vec<ChunkTask>> {
+    let mut tasks: Vec<ChunkTask> = Vec::new();
+    let mut seen: HashSet<Fingerprint> = HashSet::new();
+    match sh.cfg.dedup {
+        DedupMode::None => return Ok(tasks),
+        DedupMode::ClusterWide | DedupMode::DiskLocal | DedupMode::Central => {}
+    }
+    for fp in sh.shard.cit_fingerprints()? {
+        let Some(entry) = sh.shard.cit_get(&fp)? else {
+            continue;
+        };
+        let key = fp.placement_key();
+        if sh.cfg.dedup == DedupMode::ClusterWide && sh.chunk_chain(key).first() != Some(&sh.id) {
+            continue; // the map moved this home; rebalance owns the move
+        }
+        if !view.affected(sh, key) {
+            continue;
+        }
+        seen.insert(fp);
+        tasks.push(ChunkTask {
+            fp,
+            len: entry.len,
+            refcount: entry.refcount,
+            have_entry: true,
+        });
+    }
+    if sh.cfg.dedup == DedupMode::ClusterWide {
+        // chunks whose CIT entry died with the lost home, known here
+        // only through a surviving replica copy
+        for key in sh.replica_store.keys()? {
+            let Some(fp) = key.strip_prefix(b"c:").and_then(Fingerprint::from_bytes) else {
+                continue;
+            };
+            if seen.contains(&fp) {
+                continue;
+            }
+            let pkey = fp.placement_key();
+            if sh.chunk_chain(pkey).first() != Some(&sh.id) || !view.affected(sh, pkey) {
+                continue;
+            }
+            if sh.shard.cit_get(&fp)?.is_some() {
+                continue; // created since the CIT walk (ensure phase)
+            }
+            let len = sh
+                .replica_store
+                .get(&key)?
+                .map(|d| d.len() as u32)
+                .unwrap_or(0);
+            seen.insert(fp);
+            tasks.push(ChunkTask {
+                fp,
+                len,
+                refcount: 0,
+                have_entry: false,
+            });
+        }
+    }
+    // most-shared chunks first: losing a copy of a high-refcount chunk
+    // is the largest blast-radius event in a dedup cluster
+    tasks.sort_by(|a, b| b.refcount.cmp(&a.refcount).then(a.fp.cmp(&b.fp)));
+    Ok(tasks)
+}

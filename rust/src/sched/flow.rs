@@ -35,17 +35,26 @@ pub enum MaintClass {
     Rebalance,
     /// GC reclaims and repair restores.
     Gc,
+    /// Recovery backfill after a server loss: re-replicated chunk and
+    /// OMAP-record bytes plus their probes ([`crate::recovery`]).
+    Recovery,
 }
 
 impl MaintClass {
     /// All classes, in weight-array order.
-    pub const ALL: [MaintClass; 3] = [MaintClass::Scrub, MaintClass::Rebalance, MaintClass::Gc];
+    pub const ALL: [MaintClass; 4] = [
+        MaintClass::Scrub,
+        MaintClass::Rebalance,
+        MaintClass::Gc,
+        MaintClass::Recovery,
+    ];
 
     fn idx(self) -> usize {
         match self {
             MaintClass::Scrub => 0,
             MaintClass::Rebalance => 1,
             MaintClass::Gc => 2,
+            MaintClass::Recovery => 3,
         }
     }
 }
@@ -57,9 +66,10 @@ pub struct FlowConfig {
     /// shared across all classes. 0 = unlimited (every take is free).
     pub budget_per_tick: u64,
     /// Relative share per class, in [`MaintClass::ALL`] order
-    /// (Scrub, Rebalance, Gc). A zero weight gives that class the
-    /// minimum trickle (it still refills at ≥ 1 token per burst window).
-    pub weights: [u32; 3],
+    /// (Scrub, Rebalance, Gc, Recovery). A zero weight gives that class
+    /// the minimum trickle (it still refills at ≥ 1 token per burst
+    /// window).
+    pub weights: [u32; 4],
     /// Burst capacity in ticks: each class accumulates at most
     /// `burst_ticks` ticks' worth of its own refill while idle.
     pub burst_ticks: u64,
@@ -69,7 +79,7 @@ impl Default for FlowConfig {
     fn default() -> Self {
         FlowConfig {
             budget_per_tick: 0,
-            weights: [1, 1, 1],
+            weights: [1, 1, 1, 1],
             burst_ticks: 1000,
         }
     }
@@ -88,7 +98,7 @@ pub struct TakeOutcome {
 
 struct FlowInner {
     /// Current tokens per class (fractional refill accumulates).
-    tokens: [f64; 3],
+    tokens: [f64; 4],
     /// Clock reading of the last refill.
     last_ms: u64,
 }
@@ -100,7 +110,7 @@ pub struct FlowController {
     cfg: FlowConfig,
     clock: Arc<dyn Clock>,
     inner: Mutex<FlowInner>,
-    granted: [AtomicU64; 3],
+    granted: [AtomicU64; 4],
     waits: AtomicU64,
 }
 
@@ -109,11 +119,7 @@ impl FlowController {
     /// at boot, like the scrub bucket).
     pub fn new(cfg: FlowConfig, clock: Arc<dyn Clock>) -> Self {
         let now = clock.now_ms();
-        let tokens = [
-            Self::cap_for(&cfg, 0),
-            Self::cap_for(&cfg, 1),
-            Self::cap_for(&cfg, 2),
-        ];
+        let tokens = std::array::from_fn(|i| Self::cap_for(&cfg, i));
         FlowController {
             cfg,
             clock,
@@ -121,7 +127,7 @@ impl FlowController {
                 tokens,
                 last_ms: now,
             }),
-            granted: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
+            granted: std::array::from_fn(|_| AtomicU64::new(0)),
             waits: AtomicU64::new(0),
         }
     }
@@ -246,7 +252,7 @@ impl FlowController {
     fn drain(&self) {
         let mut g = self.inner.lock().unwrap();
         self.refill(&mut g);
-        g.tokens = [0.0; 3];
+        g.tokens = [0.0; 4];
     }
 }
 
@@ -289,7 +295,7 @@ mod tests {
         // the 3:1 split of the whole budget.
         let (f, sim) = controller(FlowConfig {
             budget_per_tick: 100,
-            weights: [3, 1, 0],
+            weights: [3, 1, 0, 0],
             burst_ticks: 10,
         });
         f.drain();
@@ -321,7 +327,7 @@ mod tests {
         // untouched by the idler.
         let (f, sim) = controller(FlowConfig {
             budget_per_tick: 100,
-            weights: [1, 1, 0],
+            weights: [1, 1, 0, 0],
             burst_ticks: 20,
         });
         f.drain();
@@ -349,7 +355,7 @@ mod tests {
     fn oversized_cost_is_clamped_to_burst() {
         let (f, sim) = controller(FlowConfig {
             budget_per_tick: 10,
-            weights: [1, 0, 0],
+            weights: [1, 0, 0, 0],
             burst_ticks: 10,
         });
         sim.advance(1_000_000);
@@ -363,7 +369,7 @@ mod tests {
     fn blocking_take_waits_for_virtual_refill() {
         let (f, sim) = controller(FlowConfig {
             budget_per_tick: 10,
-            weights: [1, 1, 1],
+            weights: [1, 1, 1, 1],
             burst_ticks: 3,
         });
         f.drain();

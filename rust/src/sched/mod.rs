@@ -21,9 +21,10 @@
 //!   clock and ticks every live server. Both paths funnel through
 //!   [`tick`], whose check-and-re-arm is atomic — concurrent tickers
 //!   can never double-fire one due time.
-//! * **Shared budget** — scrub, rebalance and GC draw their I/O from one
-//!   per-server [`flow::FlowController`] (see that module) instead of
-//!   colliding blindly on the same disks and lanes.
+//! * **Shared budget** — scrub, rebalance, GC and recovery backfill
+//!   ([`crate::recovery`]) draw their I/O from one per-server
+//!   [`flow::FlowController`] (see that module) instead of colliding
+//!   blindly on the same disks and lanes.
 //! * **Backpressure** — the replica lane sheds `VerifyCopy` storms with
 //!   `Busy` NACKs that senders honor with AIMD window shrink and
 //!   backoff ([`backpressure`]).

@@ -400,17 +400,44 @@ fn scrub_window(
         return Ok(());
     }
 
-    reconcile_refcounts(sh, epoch0, &targets)?;
+    match reconcile_refcounts(sh, epoch0, &targets)? {
+        ReconcileVerdict::Done { fixed } => sh.scrub.update(|st| st.refs_fixed += fixed),
+        ReconcileVerdict::PeerDown => sh.scrub.update(|st| st.windows_skipped += 1),
+        ReconcileVerdict::EpochMoved => sh.scrub.update(|st| st.epoch_restarts += 1),
+    }
     check_presence_and_data(sh, deep, &targets)?;
     Ok(())
 }
 
-/// Light-scrub core: resolve every target's cluster-wide OMAP reference
-/// count over the fabric and CAS-fix drifted CIT refcounts.
-fn reconcile_refcounts(sh: &OsdShared, epoch0: u64, targets: &[Fingerprint]) -> Result<()> {
+/// Outcome of one [`reconcile_refcounts`] window.
+pub(crate) enum ReconcileVerdict {
+    /// The window's counts were resolved; `fixed` refcounts were
+    /// CAS-repaired.
+    Done {
+        /// Refcounts re-synchronized to the cluster-wide count.
+        fixed: u64,
+    },
+    /// A reference holder was unreachable — the window was skipped (a
+    /// count with a blind spot must never zero live references).
+    PeerDown,
+    /// The map epoch moved mid-window — findings discarded (reference
+    /// homes may have moved).
+    EpochMoved,
+}
+
+/// Light-scrub core, shared with the recovery backfill
+/// ([`crate::recovery`]): resolve every target's cluster-wide OMAP
+/// reference count over the fabric and CAS-fix drifted CIT refcounts.
+/// Servers marked `Out` are excluded from the count — their references
+/// left scope with them (surviving records are re-homed by recovery),
+/// matching what the audit can see.
+pub(crate) fn reconcile_refcounts(
+    sh: &OsdShared,
+    epoch0: u64,
+    targets: &[Fingerprint],
+) -> Result<ReconcileVerdict> {
     let Some(expected) = cluster_ref_counts(sh, targets)? else {
-        sh.scrub.update(|st| st.windows_skipped += 1);
-        return Ok(());
+        return Ok(ReconcileVerdict::PeerDown);
     };
 
     // first read: collect suspects (fp, wanted, observed refcount)
@@ -424,7 +451,7 @@ fn reconcile_refcounts(sh: &OsdShared, epoch0: u64, targets: &[Fingerprint]) -> 
         }
     }
     if suspects.is_empty() {
-        return Ok(());
+        return Ok(ReconcileVerdict::Done { fixed: 0 });
     }
 
     // double-read: an in-flight write takes chunk references before its
@@ -434,14 +461,13 @@ fn reconcile_refcounts(sh: &OsdShared, epoch0: u64, targets: &[Fingerprint]) -> 
     sh.clock.sleep(CONFIRM_DELAY);
     let suspect_fps: Vec<Fingerprint> = suspects.iter().map(|s| s.0).collect();
     let Some(confirm) = cluster_ref_counts(sh, &suspect_fps)? else {
-        sh.scrub.update(|st| st.windows_skipped += 1);
-        return Ok(());
+        return Ok(ReconcileVerdict::PeerDown);
     };
     if sh.map.read().unwrap().epoch != epoch0 {
         // rebalance mid-window: reference homes may have moved; discard.
-        sh.scrub.update(|st| st.epoch_restarts += 1);
-        return Ok(());
+        return Ok(ReconcileVerdict::EpochMoved);
     }
+    let mut total_fixed = 0u64;
     for (k, (fp, want, seen)) in suspects.iter().enumerate() {
         ensure_alive(sh)?;
         if confirm[k] != *want {
@@ -458,10 +484,10 @@ fn reconcile_refcounts(sh: &OsdShared, epoch0: u64, targets: &[Fingerprint]) -> 
             })
         })?;
         if fixed {
-            sh.scrub.update(|st| st.refs_fixed += 1);
+            total_fixed += 1;
         }
     }
-    Ok(())
+    Ok(ReconcileVerdict::Done { fixed: total_fixed })
 }
 
 /// Presence/flag agreement for every referenced target, plus (deep) data
@@ -479,8 +505,16 @@ fn check_presence_and_data(sh: &OsdShared, deep: bool, targets: &[Fingerprint]) 
         if sh.cfg.dedup == DedupMode::Central
             && sh.chunk_chain(fp.placement_key()).first() != Some(&sh.id)
         {
-            // central comparator: the data lives raw on another server
-            // and is not under this CIT walker's management.
+            // central comparator: the data lives raw on another server.
+            // The light pass leaves it alone; the deep pass verifies it
+            // in place over the fabric (`VerifyRaw` — the holder hashes
+            // locally, only the verdict crosses the wire) and repairs
+            // through the recovery fetch path. This closes the old §5
+            // known limit: central-mode raw data on non-metadata servers
+            // is deep-scrubbed like everything else.
+            if deep {
+                deep_verify_remote_raw(sh, fp, &entry)?;
+            }
             continue;
         }
         let present = sh.store.stat(&fp.to_bytes())?;
@@ -535,12 +569,15 @@ fn check_presence_and_data(sh: &OsdShared, deep: bool, targets: &[Fingerprint]) 
 
 /// Replace a corrupt or missing primary chunk from a digest-verified
 /// replica copy and flip its flag valid. Returns false when no healthy
-/// copy exists anywhere on the chain.
+/// copy exists anywhere — the chain is tried first, then the recovery
+/// fetch path sweeps every other live server (after an out-transition
+/// the surviving copies may sit on servers the new chain no longer
+/// names).
 fn repair_primary_from_copy(sh: &OsdShared, fp: &Fingerprint) -> Result<bool> {
     if sh.injector.maybe_crash(CrashPoint::BeforeScrubRepair) {
         return Err(Error::ServerDown(sh.id.0));
     }
-    let Some(good) = fetch_healthy_copy(sh, fp)? else {
+    let Some(good) = crate::recovery::fetch_any_copy(sh, fp)? else {
         return Ok(false);
     };
     sh.store.put(&fp.to_bytes(), &good)?;
@@ -553,6 +590,67 @@ fn repair_primary_from_copy(sh: &OsdShared, fp: &Fingerprint) -> Result<bool> {
     Metrics::add(&sh.metrics.scrub_repaired, 1);
     Metrics::add(&sh.metrics.repairs, 1);
     Ok(true)
+}
+
+/// Central-mode deep scrub of a raw chunk stored on a non-metadata
+/// server: ask the data home to hash its copy ([`Req::VerifyRaw`]);
+/// on rot or loss, re-ship surviving bytes found through the recovery
+/// fetch path, else quarantine the CIT entry behind an invalid flag so
+/// reads fail loudly instead of serving holes.
+fn deep_verify_remote_raw(sh: &OsdShared, fp: &Fingerprint, entry: &CitEntry) -> Result<()> {
+    let chain = sh.chunk_chain(fp.placement_key());
+    let Some(home) = chain.first().copied() else {
+        return Ok(());
+    };
+    let Ok(addr) = sh.dir.lookup(home, Lane::Backend) else {
+        return Ok(()); // dead home: nothing to verify until it returns
+    };
+    // VerifyRaw does strictly-local hashing at the holder (like
+    // VerifyCopy on the replica lane); the scrub worker stays a pure
+    // client of the lane graph
+    let req = Req::VerifyRaw {
+        key: fp.to_bytes().to_vec(),
+        fp: *fp,
+    };
+    let size = req.wire_size();
+    let (present, matches) = match addr.call(req, size) {
+        Ok(Resp::CopyState { present, matches }) => (present, matches),
+        Ok(_) | Err(_) => return Ok(()), // dead home: next pass verifies
+    };
+    sh.scrub.update(|st| st.bytes_verified += entry.len as u64);
+    Metrics::add(&sh.metrics.scrub_bytes_verified, entry.len as u64);
+    if present && matches {
+        return Ok(());
+    }
+    if present {
+        sh.scrub.update(|st| st.corruptions_found += 1);
+        Metrics::add(&sh.metrics.scrub_corruptions_found, 1);
+    }
+    if sh.injector.maybe_crash(CrashPoint::BeforeScrubRepair) {
+        return Err(Error::ServerDown(sh.id.0));
+    }
+    match crate::recovery::fetch_any_copy(sh, fp)? {
+        Some(good) => {
+            let req = Req::StoreRaw {
+                key: fp.to_bytes().to_vec(),
+                data: good,
+            };
+            let size = req.wire_size();
+            if matches!(addr.call(req, size), Ok(Resp::Ok)) {
+                sh.scrub.update(|st| st.repaired += 1);
+                Metrics::add(&sh.metrics.scrub_repaired, 1);
+                Metrics::add(&sh.metrics.repairs, 1);
+            }
+        }
+        None => {
+            // central fans no copies out, so rot on a raw holder is
+            // usually unrecoverable: quarantine rather than re-validate
+            sh.scrub.update(|st| st.lost += 1);
+            sh.charge_meta_io();
+            sh.shard.cit_set_flag(fp, CommitFlag::Invalid, sh.now_ms())?;
+        }
+    }
+    Ok(())
 }
 
 /// Deep-scrub verification of one window's chunk reads: one batched
@@ -730,8 +828,10 @@ fn push_copy_repair(sh: &OsdShared, read: &(Fingerprint, Vec<u8>), peer: ServerI
 }
 
 /// Fetch a replica copy whose content actually matches `fp` (a corrupt
-/// replica must never be used to "repair" the primary).
-fn fetch_healthy_copy(sh: &OsdShared, fp: &Fingerprint) -> Result<Option<Vec<u8>>> {
+/// replica must never be used to "repair" the primary). Walks the
+/// current placement chain; [`crate::recovery::fetch_any_copy`] layers
+/// the off-chain sweep on top.
+pub(crate) fn fetch_healthy_copy(sh: &OsdShared, fp: &Fingerprint) -> Result<Option<Vec<u8>>> {
     for peer in sh.chunk_chain(fp.placement_key()).iter().skip(1) {
         let data = if *peer == sh.id {
             sh.replica_store.get(&chunk_copy_key(fp))?
@@ -766,7 +866,17 @@ fn cluster_ref_counts(sh: &OsdShared, fps: &[Fingerprint]) -> Result<Option<Vec<
         // by that server's own references.
         vec![sh.id]
     } else {
-        sh.map.read().unwrap().servers.iter().map(|s| s.id).collect()
+        // Out servers are excluded: their references left scope with
+        // them (recovery re-homes the surviving records), and the audit
+        // cannot see them either — counting must match auditing.
+        sh.map
+            .read()
+            .unwrap()
+            .servers
+            .iter()
+            .filter(|s| s.state != crate::cluster::ServerState::Out)
+            .map(|s| s.id)
+            .collect()
     };
     let mut totals = vec![0u64; fps.len()];
     for id in ids {

@@ -1,10 +1,10 @@
 //! The object storage server (OSS/OSD).
 //!
-//! One `Osd` runs seven threads over a shared per-server state
+//! One `Osd` runs eight threads over a shared per-server state
 //! ([`OsdShared`], which models everything that survives a crash — the
 //! chunk store, the replica store and the DM-Shard are "disk"; the
-//! pending-flag queue and any in-flight scrub job are "memory" and die
-//! with the process):
+//! pending-flag queue and any in-flight scrub or recovery job are
+//! "memory" and die with the process):
 //!
 //! * **frontend** — client object transactions (the dedup engine entry);
 //! * **backend**  — chunk + dedup-metadata ops from peer frontends;
@@ -13,7 +13,9 @@
 //! * **consistency manager** — the asynchronous flag flipper (§2.4);
 //! * **scrub worker** — the online integrity walker ([`crate::scrub`]);
 //! * **maintenance scheduler** — fires the periodic scrub cadence
-//!   ([`crate::sched`]).
+//!   ([`crate::sched`]);
+//! * **recovery worker** — re-replicates after a server loss
+//!   ([`crate::recovery`]).
 //!
 //! Kill/crash semantics: lanes keep running but silently *drop* every
 //! envelope while the injector reports dead — callers observe a closed
@@ -89,6 +91,10 @@ pub struct OsdShared {
     /// Volatile: scrub-worker job hand-off and progress (a crash aborts
     /// the running pass).
     pub scrub: crate::scrub::ScrubCtl,
+    /// Volatile: recovery-worker job queue, ensure-barrier flags and
+    /// progress (a crash drops queued jobs; restart re-queues recovery
+    /// for every `Out` server in the map).
+    pub recovery: crate::recovery::RecoveryCtl,
     /// Maintenance scheduler: the armed periodic-scrub cadence and its
     /// fire accounting (configuration-like — survives kill/restart).
     pub sched: SchedCtl,
@@ -156,6 +162,7 @@ impl OsdShared {
             MaintClass::Scrub => &self.metrics.flow_granted_scrub,
             MaintClass::Rebalance => &self.metrics.flow_granted_rebalance,
             MaintClass::Gc => &self.metrics.flow_granted_gc,
+            MaintClass::Recovery => &self.metrics.flow_granted_recovery,
         };
         Metrics::add(counter, out.granted);
         if out.waited {
@@ -253,6 +260,20 @@ impl Osd {
             );
         }
 
+        // recovery worker thread: runs queued backfill jobs after a
+        // server loss, concurrently with foreground I/O (see
+        // `crate::recovery`).
+        {
+            let sh = shared.clone();
+            let sd = shutdown.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("{}-recovery", shared.id))
+                    .spawn(move || crate::recovery::recovery_loop(sh, sd))
+                    .expect("spawn recovery"),
+            );
+        }
+
         Osd {
             shared,
             shutdown,
@@ -265,6 +286,7 @@ impl Osd {
         self.shared.injector.kill();
         self.shared.pending.clear();
         self.shared.scrub.clear();
+        self.shared.recovery.clear();
     }
 
     /// Restart after a kill/crash — see [`OsdShared::restart`].
@@ -497,6 +519,24 @@ fn dispatch(sh: &Arc<OsdShared>, lane: Lane, req: Req) -> Resp {
                 Err(e) => err_str(e),
             }
         }
+        (Lane::Backend, Req::RecoverOmap { value }) => {
+            match crate::recovery::recover_omap_local(sh, value) {
+                Ok(()) => Resp::Ok,
+                Err(e) => err_str(e),
+            }
+        }
+        (Lane::Backend, Req::VerifyRaw { key, fp }) => match sh.store.get(&key) {
+            // hash locally; only the verdict crosses the wire
+            Ok(Some(d)) => Resp::CopyState {
+                present: true,
+                matches: crate::dedup::fingerprint::Fingerprint::of(&d) == fp,
+            },
+            Ok(None) => Resp::CopyState {
+                present: false,
+                matches: false,
+            },
+            Err(e) => err_str(e),
+        },
         (Lane::Backend, Req::ListRefs { fp }) => match sh.shard.backref_referrers(&fp) {
             Ok(referrers) => {
                 crate::metrics::Metrics::add(&sh.metrics.backref_lookups, 1);
@@ -592,6 +632,15 @@ fn dispatch(sh: &Arc<OsdShared>, lane: Lane, req: Req) -> Resp {
             crate::sched::tick(sh);
             Resp::Ok
         }
+        (Lane::Control, Req::Ping) => Resp::Ok,
+        (Lane::Control, Req::StartRecovery { lost }) => {
+            sh.recovery.enqueue(lost);
+            Resp::Ok
+        }
+        (Lane::Control, Req::RecoveryStatus) => Resp::Recovery(sh.recovery.status()),
+        (Lane::Control, Req::RecoveryProbe { lost }) => Resp::RecoveryAck {
+            ensure_done: sh.recovery.is_ensured(lost),
+        },
         (Lane::Control, Req::RebuildBackrefs) => {
             // audit + re-derive under one shard lock acquisition, so the
             // reported drift is exactly what the rebuild repaired

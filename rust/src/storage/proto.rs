@@ -8,6 +8,7 @@
 use crate::cluster::ClusterMap;
 use crate::dedup::cit::CommitFlag;
 use crate::dedup::fingerprint::Fingerprint;
+use crate::recovery::RecoveryStatus;
 use crate::sched::{SchedStatus, ScrubSchedule};
 use crate::scrub::{ScrubOptions, ScrubStatus};
 
@@ -81,6 +82,24 @@ pub enum Req {
     /// reference `fp`, and how many times each (an indexed range read;
     /// diagnostics and the "who holds this chunk?" admin question).
     ListRefs { fp: Fingerprint },
+    /// Recovery: adopt this encoded OMAP record if the name is unknown
+    /// here (the receiver is the record's new primary after its old one
+    /// left; a racing fresh write always wins), then refresh its replica
+    /// copies under the current chain.
+    RecoverOmap {
+        /// The encoded [`crate::dedup::omap::OmapEntry`].
+        value: Vec<u8>,
+    },
+    /// Central-mode deep scrub: verify a raw chunk in this server's
+    /// *primary* store against its expected fingerprint. Like
+    /// [`Req::VerifyCopy`] the holder hashes locally — only the verdict
+    /// crosses the wire.
+    VerifyRaw {
+        /// Primary-store key of the raw chunk.
+        key: Vec<u8>,
+        /// Expected content fingerprint.
+        fp: Fingerprint,
+    },
 
     // ---- replica lane (backends → replica holders; strictly local) ----
     /// Store a replica copy of a chunk / OMAP record.
@@ -133,6 +152,26 @@ pub enum Req {
     /// against the OMAP, then re-derive it (pre-index stores, suspected
     /// divergence after an unclean recovery).
     RebuildBackrefs,
+    /// Failure-detector heartbeat: a live control lane answers
+    /// [`Resp::Ok`]; a killed/crashed server drops the envelope, which
+    /// the detector reads as evidence of death (see
+    /// [`crate::recovery::detector`]).
+    Ping,
+    /// Queue a recovery-backfill job for the departed server `lost` on
+    /// this server's recovery worker (see [`crate::recovery`]).
+    StartRecovery {
+        /// The server whose out-transition is being recovered from.
+        lost: u32,
+    },
+    /// Snapshot this server's recovery worker progress.
+    RecoveryStatus,
+    /// Ensure-barrier probe: has this server completed the OMAP +
+    /// ensure stage of its recovery job for `lost`? Peers gate their
+    /// chunk backfill on every survivor answering yes (bounded wait).
+    RecoveryProbe {
+        /// The lost server the barrier synchronizes on.
+        lost: u32,
+    },
     /// Flush persistent stores.
     Sync,
 }
@@ -186,6 +225,14 @@ pub enum Resp {
     CopyState { present: bool, matches: bool },
     /// Scrub worker progress snapshot.
     Scrub(ScrubStatus),
+    /// Recovery worker progress snapshot.
+    Recovery(RecoveryStatus),
+    /// Ensure-barrier answer (see [`Req::RecoveryProbe`]).
+    RecoveryAck {
+        /// True when the OMAP + ensure stage for the probed job is done
+        /// (durably — a finished job keeps answering true).
+        ensure_done: bool,
+    },
     /// Maintenance-scheduler snapshot.
     Sched(SchedStatus),
     /// Typed busy NACK: the receiver shed the request without doing its
@@ -298,6 +345,9 @@ impl Req {
             Req::CountRefs { fps } => 20 * fps.len(),
             Req::EnsureCit { .. } => 24,
             Req::ListRefs { .. } => 20,
+            Req::RecoverOmap { value } => value.len(),
+            Req::VerifyRaw { key, .. } => key.len() + 20,
+            Req::StartRecovery { .. } | Req::RecoveryProbe { .. } => 8,
             Req::VerifyCopy { key, .. } => key.len() + 20,
             Req::StartScrub { .. } => 24,
             Req::SetSchedule { .. } => 24,

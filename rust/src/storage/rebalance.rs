@@ -16,7 +16,7 @@
 //! competes with foreground I/O exactly like Ceph backfill does.
 
 use crate::dedup::engine::omap_copy_key;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::metrics::Metrics;
 use crate::net::Lane;
 use crate::sched::flow::MaintClass;
@@ -32,6 +32,12 @@ pub struct RebalanceReport {
     pub chunk_bytes_moved: u64,
     /// OMAP records migrated to a new name-derived primary.
     pub omap_moved: usize,
+    /// Entries whose new home was unreachable (dead or mid-restart):
+    /// left in place for a later scan instead of aborting the whole
+    /// pass — under failure detection the map can flap while servers
+    /// are still reviving, and one dead home must not stall every other
+    /// migration.
+    pub skipped_unreachable: usize,
 }
 
 /// Scan local holdings and migrate what no longer belongs here.
@@ -51,10 +57,13 @@ pub fn run(sh: &OsdShared) -> Result<RebalanceReport> {
         let Some(entry) = sh.shard.cit_get(&fp)? else {
             continue;
         };
+        let Ok(addr) = sh.dir.lookup(new_home, Lane::Backend) else {
+            report.skipped_unreachable += 1;
+            continue; // dead home: this entry waits for a later scan
+        };
         let Some(data) = sh.store.get(&fp.to_bytes())? else {
             // metadata-only remnant; move the entry anyway so repair can
             // happen at the new home (replica copies still exist).
-            let addr = sh.dir.lookup(new_home, Lane::Backend)?;
             let req = Req::MigrateChunk {
                 fp,
                 data: Vec::new(),
@@ -63,12 +72,16 @@ pub fn run(sh: &OsdShared) -> Result<RebalanceReport> {
             };
             let size = req.wire_size();
             sh.charge_maint(MaintClass::Rebalance, size as u64);
-            if matches!(addr.call(req, size)?, Resp::Ok) {
-                sh.shard.cit_delete(&fp)?;
+            match addr.call(req, size) {
+                Ok(Resp::Ok) => {
+                    sh.shard.cit_delete(&fp)?;
+                }
+                Ok(_) => {}
+                Err(Error::ServerDown(_)) => report.skipped_unreachable += 1,
+                Err(e) => return Err(e),
             }
             continue;
         };
-        let addr = sh.dir.lookup(new_home, Lane::Backend)?;
         let req = Req::MigrateChunk {
             fp,
             data: data.clone(),
@@ -79,18 +92,18 @@ pub fn run(sh: &OsdShared) -> Result<RebalanceReport> {
         // budget as scrub windows — the two no longer collide blindly
         let size = req.wire_size();
         sh.charge_maint(MaintClass::Rebalance, size as u64);
-        match addr.call(req, size)? {
-            Resp::Ok => {
+        match addr.call(req, size) {
+            Ok(Resp::Ok) => {
                 sh.shard.cit_delete(&fp)?;
                 sh.store.delete(&fp.to_bytes())?;
                 report.chunks_moved += 1;
                 report.chunk_bytes_moved += data.len() as u64;
             }
-            other => {
-                return Err(crate::error::Error::TxAborted(format!(
-                    "migrate {fp} refused: {other:?}"
-                )))
+            Ok(other) => {
+                return Err(Error::TxAborted(format!("migrate {fp} refused: {other:?}")))
             }
+            Err(Error::ServerDown(_)) => report.skipped_unreachable += 1,
+            Err(e) => return Err(e),
         }
     }
 
@@ -108,14 +121,22 @@ pub fn run(sh: &OsdShared) -> Result<RebalanceReport> {
             continue;
         };
         let value = entry.encode();
-        let addr = sh.dir.lookup(new_primary, Lane::Backend)?;
+        let Ok(addr) = sh.dir.lookup(new_primary, Lane::Backend) else {
+            report.skipped_unreachable += 1;
+            continue;
+        };
         let req = Req::MigrateOmap {
             value: value.clone(),
         };
         let size = req.wire_size();
         sh.charge_maint(MaintClass::Rebalance, size as u64);
-        match addr.call(req, size)? {
-            Resp::Ok => {
+        match addr.call(req, size) {
+            Err(Error::ServerDown(_)) => {
+                report.skipped_unreachable += 1;
+                continue;
+            }
+            Err(e) => return Err(e),
+            Ok(Resp::Ok) => {
                 if let Some(delta) = sh.shard.omap_delete(&name)? {
                     Metrics::add(&sh.metrics.backref_updates, delta.removed);
                 }
@@ -135,8 +156,8 @@ pub fn run(sh: &OsdShared) -> Result<RebalanceReport> {
                 }
                 report.omap_moved += 1;
             }
-            other => {
-                return Err(crate::error::Error::TxAborted(format!(
+            Ok(other) => {
+                return Err(Error::TxAborted(format!(
                     "migrate omap {name} refused: {other:?}"
                 )))
             }
@@ -158,16 +179,24 @@ pub fn run(sh: &OsdShared) -> Result<RebalanceReport> {
             continue;
         }
         if let Some(data) = sh.store.get(&key)? {
-            let addr = sh.dir.lookup(new_primary, Lane::Backend)?;
+            let Ok(addr) = sh.dir.lookup(new_primary, Lane::Backend) else {
+                report.skipped_unreachable += 1;
+                continue;
+            };
             let req = Req::StoreRaw {
                 key: key.clone(),
                 data,
             };
             let size = req.wire_size();
             sh.charge_maint(MaintClass::Rebalance, size as u64);
-            if matches!(addr.call(req, size)?, Resp::Ok) {
-                sh.store.delete(&key)?;
-                report.chunks_moved += 1;
+            match addr.call(req, size) {
+                Ok(Resp::Ok) => {
+                    sh.store.delete(&key)?;
+                    report.chunks_moved += 1;
+                }
+                Ok(_) => {}
+                Err(Error::ServerDown(_)) => report.skipped_unreachable += 1,
+                Err(e) => return Err(e),
             }
         }
     }

@@ -1,0 +1,449 @@
+//! Failure detection & recovery backfill (`snss_dedup::recovery`).
+//!
+//! The deterministic MTTR path: a `kill_server` plus virtual-clock
+//! advances — with no other admin calls — must end with the dead server
+//! `Out`, every chunk and OMAP record back at `cfg.replication` copies
+//! (clean audit, deep scrub with nothing left to repair), and the
+//! `recovery_*` metrics accounting for the re-replicated bytes. Plus:
+//! the admin `remove_server` path, typed admin errors, the
+//! `BeforeRecoveryCopy`/`AfterRecoveryCopy` crash-point matrix, and the
+//! central-mode deep scrub of raw chunks on non-metadata servers.
+
+use snss_dedup::api::{
+    ClockSource, Cluster, ClusterConfig, DedupMode, FailureDetection, ScrubOptions,
+};
+use snss_dedup::cluster::{ServerId, ServerState};
+use snss_dedup::dedup::Chunking;
+use snss_dedup::failure::CrashPoint;
+use snss_dedup::util::rng::XorShift128Plus;
+use snss_dedup::Error;
+
+const TICK: u64 = 10;
+const PROBE: u64 = 10;
+const GRACE: u64 = 40;
+const OUT: u64 = 120;
+
+fn payload(seed: u64, len: usize) -> Vec<u8> {
+    let mut rng = XorShift128Plus::new(seed);
+    let mut v = vec![0u8; len];
+    rng.fill_bytes(&mut v);
+    v
+}
+
+fn sim_detector_config() -> ClusterConfig {
+    ClusterConfig {
+        servers: 4,
+        replication: 2,
+        chunking: Chunking::Fixed { size: 1024 },
+        clock: ClockSource::Sim,
+        failure_detection: Some(FailureDetection {
+            probe_every_ticks: PROBE,
+            grace_ticks: GRACE,
+            out_ticks: OUT,
+        }),
+        ..Default::default()
+    }
+}
+
+fn populate(cluster: &Cluster, objects: u64) {
+    let client = cluster.client();
+    for i in 0..objects {
+        client
+            .put_object(&format!("obj-{i}"), &payload(i + 1, 8 * 1024))
+            .unwrap();
+    }
+    cluster.flush_consistency().unwrap();
+}
+
+fn assert_all_readable(cluster: &Cluster, objects: u64) {
+    let client = cluster.client();
+    for i in 0..objects {
+        assert_eq!(
+            client.get_object(&format!("obj-{i}")).unwrap(),
+            payload(i + 1, 8 * 1024),
+            "obj-{i} must survive the failure"
+        );
+    }
+}
+
+/// Advance the virtual clock until `pred` holds, with a step cap.
+fn advance_until(cluster: &Cluster, max_steps: u64, mut pred: impl FnMut() -> bool) -> bool {
+    for _ in 0..max_steps {
+        if pred() {
+            return true;
+        }
+        cluster.advance_clock(TICK).unwrap();
+    }
+    pred()
+}
+
+/// The acceptance path: kill + clock advances only — the detector walks
+/// the victim Up → Down → Out, recovery re-replicates everything, and
+/// the cluster ends at full replication with clean accounting.
+#[test]
+fn detector_heals_a_killed_server_to_full_replication() {
+    let objects = 24;
+    let cluster = Cluster::new(sim_detector_config()).unwrap();
+    populate(&cluster, objects);
+    assert!(cluster.audit().unwrap().is_ok(), "baseline audit");
+
+    let victim = ServerId(1);
+    cluster.kill_server(victim).unwrap();
+
+    // silent past the grace window: Down (placement skips the victim)
+    assert!(
+        advance_until(&cluster, GRACE / TICK + 2, || {
+            cluster.server_state(victim).unwrap() == ServerState::Down
+        }),
+        "victim not marked Down within the grace window"
+    );
+    // silent past the out window: Out — sticky, fenced, recovery starts
+    assert!(
+        advance_until(&cluster, OUT / TICK + 2, || {
+            cluster.server_state(victim).unwrap() == ServerState::Out
+        }),
+        "victim not marked Out within the out window"
+    );
+    let stats = cluster.stats();
+    assert_eq!(stats.detector_marked_down, 1);
+    assert_eq!(stats.detector_marked_out, 1);
+
+    // recovery backfill converges (default budget is unlimited, so the
+    // workers run free of the virtual clock)
+    let report = cluster.recovery_wait().unwrap();
+    assert!(report.first_failure().is_none(), "{report:?}");
+    assert!(report.chunks_restored > 0, "victim-homed chunks re-homed");
+    assert!(report.copies_pushed > 0, "lost replica copies re-pushed");
+    assert!(report.omap_recovered > 0, "victim-primaried records adopted");
+    assert!(report.bytes_recovered > 0);
+
+    // metrics account for the re-replicated bytes (the cluster-wide
+    // counter also covers receiver-side adoption pushes)
+    let stats = cluster.stats();
+    assert!(stats.recovery_runs >= 3, "one job per survivor");
+    assert!(stats.recovery_bytes >= report.bytes_recovered);
+    assert_eq!(stats.recovery_lost, 0, "replication 2 loses nothing");
+
+    // full replication, via the subsystem that can disprove it: the
+    // audit is clean and a deep scrub finds zero missing/corrupt copies
+    let audit = cluster.audit().unwrap();
+    assert!(audit.is_ok(), "{:?}", audit.violations);
+    cluster.start_scrub(ScrubOptions::deep()).unwrap();
+    let scrub = cluster.scrub_wait().unwrap();
+    assert!(scrub.all_done(), "{:?}", scrub.first_failure());
+    assert_eq!(scrub.repaired, 0, "recovery already restored every copy");
+    assert_eq!(scrub.lost, 0);
+    assert_eq!(scrub.corruptions_found, 0);
+    assert!(cluster.audit().unwrap().is_ok());
+
+    assert_all_readable(&cluster, objects);
+    // an Out server is permanently removed: restart is a typed error
+    assert!(matches!(
+        cluster.restart_server(victim),
+        Err(Error::ServerRemoved(1))
+    ));
+    cluster.shutdown();
+}
+
+/// A kill + restart inside the grace window never escalates: the victim
+/// stays Up (no Down/Out transition, no recovery) once heartbeats
+/// resume; past the grace window it dips to Down and comes back Up.
+#[test]
+fn detector_tolerates_restarts_within_windows() {
+    let cluster = Cluster::new(sim_detector_config()).unwrap();
+    populate(&cluster, 6);
+    let victim = ServerId(2);
+
+    // within grace: no transition at all
+    cluster.kill_server(victim).unwrap();
+    cluster.advance_clock(TICK).unwrap(); // silent 10 < grace 40
+    cluster.restart_server(victim).unwrap();
+    cluster.advance_clock(2 * TICK).unwrap();
+    assert_eq!(cluster.server_state(victim).unwrap(), ServerState::Up);
+    let stats = cluster.stats();
+    assert_eq!(stats.detector_marked_down, 0);
+    assert_eq!(stats.recovery_runs, 0, "no out-transition, no recovery");
+
+    // past grace but within out: Down, then Up again after the restart
+    cluster.kill_server(victim).unwrap();
+    assert!(
+        advance_until(&cluster, GRACE / TICK + 2, || {
+            cluster.server_state(victim).unwrap() == ServerState::Down
+        }),
+        "victim not marked Down"
+    );
+    cluster.restart_server(victim).unwrap();
+    assert!(
+        advance_until(&cluster, 4, || {
+            cluster.server_state(victim).unwrap() == ServerState::Up
+        }),
+        "revived victim not marked Up again"
+    );
+    assert_eq!(cluster.stats().detector_marked_up, 1);
+    assert!(cluster.audit().unwrap().is_ok());
+    cluster.shutdown();
+}
+
+/// The wall-clock detector thread drives the same state machine without
+/// virtual-clock ticks (poll-based assertions, generous bounds).
+#[test]
+fn wall_clock_detector_marks_out_and_recovers() {
+    let objects = 8;
+    let cluster = Cluster::new(ClusterConfig {
+        servers: 4,
+        replication: 2,
+        chunking: Chunking::Fixed { size: 1024 },
+        failure_detection: Some(FailureDetection {
+            probe_every_ticks: 20,
+            grace_ticks: 80,
+            out_ticks: 240,
+        }),
+        ..Default::default()
+    })
+    .unwrap();
+    populate(&cluster, objects);
+    let victim = ServerId(3);
+    cluster.kill_server(victim).unwrap();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while cluster.server_state(victim).unwrap() != ServerState::Out {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "wall detector never marked the victim Out"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    // the Out mark becomes visible an instant before the detector's
+    // recovery triggers land on the survivors' control lanes — wait for
+    // every survivor to have started its job before waiting it out
+    while cluster.stats().recovery_runs < 3 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "recovery never triggered on every survivor"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    let report = cluster.recovery_wait().unwrap();
+    assert!(report.first_failure().is_none(), "{report:?}");
+    assert!(cluster.audit().unwrap().is_ok());
+    assert_all_readable(&cluster, objects);
+    cluster.shutdown();
+}
+
+/// The admin path: `remove_server` fences a live server, re-replicates
+/// its data and leaves the cluster healthy — and the admin surface
+/// rejects nonsense with typed errors instead of silent no-ops.
+#[test]
+fn remove_server_rereplicates_and_errors_are_typed() {
+    let objects = 16;
+    let cluster = Cluster::new(ClusterConfig {
+        servers: 4,
+        replication: 2,
+        chunking: Chunking::Fixed { size: 1024 },
+        ..Default::default()
+    })
+    .unwrap();
+    populate(&cluster, objects);
+
+    // typed errors on unknown ids — the old silent no-ops are gone
+    assert!(matches!(
+        cluster.mark_down(ServerId(99)),
+        Err(Error::UnknownServer(99))
+    ));
+    assert!(matches!(
+        cluster.mark_up(ServerId(99)),
+        Err(Error::UnknownServer(99))
+    ));
+    assert!(matches!(
+        cluster.remove_server(ServerId(99)),
+        Err(Error::UnknownServer(99))
+    ));
+    assert!(matches!(
+        cluster.server_state(ServerId(99)),
+        Err(Error::UnknownServer(99))
+    ));
+    // the known-id happy path still round-trips
+    cluster.mark_down(ServerId(2)).unwrap();
+    assert_eq!(cluster.server_state(ServerId(2)).unwrap(), ServerState::Down);
+    cluster.mark_up(ServerId(2)).unwrap();
+
+    // remove a live server: fenced + Out + recovered
+    let victim = ServerId(1);
+    cluster.remove_server(victim).unwrap();
+    assert_eq!(cluster.server_state(victim).unwrap(), ServerState::Out);
+    assert!(cluster.is_dead(victim), "removal fences the server");
+    let report = cluster.recovery_wait().unwrap();
+    assert!(report.first_failure().is_none(), "{report:?}");
+    assert!(cluster.audit().unwrap().is_ok());
+    cluster.start_scrub(ScrubOptions::deep()).unwrap();
+    let scrub = cluster.scrub_wait().unwrap();
+    assert_eq!(scrub.repaired + scrub.lost + scrub.corruptions_found, 0);
+    assert_all_readable(&cluster, objects);
+
+    // double removal and restart of a removed server: typed errors
+    assert!(matches!(
+        cluster.remove_server(victim),
+        Err(Error::ServerRemoved(1))
+    ));
+    assert!(matches!(
+        cluster.restart_server(victim),
+        Err(Error::ServerRemoved(1))
+    ));
+    cluster.shutdown();
+}
+
+/// Crash-point matrix: a survivor dying right before / right after a
+/// recovery copy write must never corrupt state — restart + the
+/// re-queued job + one scrub pass converge back to a clean audit.
+#[test]
+fn recovery_crash_points_converge_after_restart() {
+    for point in [CrashPoint::BeforeRecoveryCopy, CrashPoint::AfterRecoveryCopy] {
+        let objects = 20;
+        let cluster = Cluster::new(ClusterConfig {
+            servers: 4,
+            replication: 2,
+            chunking: Chunking::Fixed { size: 1024 },
+            ..Default::default()
+        })
+        .unwrap();
+        populate(&cluster, objects);
+
+        let victim = ServerId(1);
+        let survivors = [ServerId(0), ServerId(2), ServerId(3)];
+        for s in survivors {
+            cluster.arm_crash(s, point).unwrap();
+        }
+        cluster.kill_server(victim).unwrap();
+        cluster.remove_server(victim).unwrap();
+        let _ = cluster.recovery_wait().unwrap();
+
+        // recovery does copy work on at least one survivor, so at least
+        // one armed point fired (placement is deterministic here)
+        let crashed: Vec<ServerId> = survivors
+            .iter()
+            .copied()
+            .filter(|s| cluster.is_dead(*s))
+            .collect();
+        assert!(!crashed.is_empty(), "{point:?} never fired");
+
+        // restart the crashed survivors; each re-queues recovery for
+        // the Out victim (its own job died with it)
+        for s in crashed {
+            cluster.restart_server(s).unwrap();
+        }
+        let report = cluster.recovery_wait().unwrap();
+        assert!(report.first_failure().is_none(), "{point:?}: {report:?}");
+        cluster.flush_consistency().unwrap();
+
+        // heal-then-verify: one deep scrub sweeps up what the crashed
+        // worker left behind, the next one must find nothing
+        cluster.start_scrub(ScrubOptions::deep()).unwrap();
+        cluster.scrub_wait().unwrap();
+        cluster.run_gc(0).unwrap();
+        let audit = cluster.audit().unwrap();
+        assert!(audit.is_ok(), "{point:?}: {:?}", audit.violations);
+        cluster.start_scrub(ScrubOptions::deep()).unwrap();
+        let scrub = cluster.scrub_wait().unwrap();
+        assert_eq!(
+            scrub.repaired + scrub.lost + scrub.corruptions_found,
+            0,
+            "{point:?} left degradation behind"
+        );
+        assert_all_readable(&cluster, objects);
+        cluster.shutdown();
+    }
+}
+
+/// No-dedup mode: raw objects are re-homed *and* re-replicated after a
+/// loss. Proof by double failure: after the first removal every object
+/// must be back at 2 copies among the survivors, or the second removal
+/// would lose data.
+#[test]
+fn nodedup_recovery_restores_raw_replication() {
+    let cluster = Cluster::new(ClusterConfig {
+        servers: 4,
+        replication: 2,
+        dedup: DedupMode::None,
+        ..Default::default()
+    })
+    .unwrap();
+    let client = cluster.client();
+    for i in 0..12u64 {
+        client
+            .put_object(&format!("obj-{i}"), &payload(i + 500, 4 * 1024))
+            .unwrap();
+    }
+    cluster.remove_server(ServerId(1)).unwrap();
+    let report = cluster.recovery_wait().unwrap();
+    assert!(report.first_failure().is_none(), "{report:?}");
+    cluster.remove_server(ServerId(2)).unwrap();
+    let report = cluster.recovery_wait().unwrap();
+    assert!(report.first_failure().is_none(), "{report:?}");
+    for i in 0..12u64 {
+        assert_eq!(
+            client.get_object(&format!("obj-{i}")).unwrap(),
+            payload(i + 500, 4 * 1024),
+            "obj-{i} lost after two sequential failures despite replication 2"
+        );
+    }
+    cluster.shutdown();
+}
+
+/// Central-mode deep scrub now covers raw chunk data on non-metadata
+/// servers (the old DESIGN.md §5 known limit): bit-rot planted on a
+/// remote raw holder is found over `VerifyRaw` and — with no replica
+/// copies to restore from in this comparator — quarantined behind an
+/// invalid flag rather than silently served.
+#[test]
+fn central_mode_deep_scrub_covers_remote_raw_chunks() {
+    let cluster = Cluster::new(ClusterConfig {
+        servers: 4,
+        replication: 1,
+        dedup: DedupMode::Central,
+        chunking: Chunking::Fixed { size: 1024 },
+        ..Default::default()
+    })
+    .unwrap();
+    let client = cluster.client();
+    for i in 0..8u64 {
+        client
+            .put_object(&format!("obj-{i}"), &payload(i + 100, 8 * 1024))
+            .unwrap();
+    }
+    cluster.flush_consistency().unwrap();
+
+    // plant rot in one raw chunk on a non-metadata server
+    let mut planted = 0;
+    for id in [ServerId(1), ServerId(2), ServerId(3)] {
+        planted += cluster
+            .with_osd(id, |sh| {
+                let keys = sh.store.keys().unwrap();
+                let Some(key) = keys.iter().find(|k| k.len() == 20) else {
+                    return 0;
+                };
+                let mut data = sh.store.get(key).unwrap().unwrap();
+                data[0] ^= 0xFF;
+                sh.store.put(key, &data).unwrap();
+                1
+            })
+            .unwrap();
+        if planted > 0 {
+            break;
+        }
+    }
+    assert_eq!(planted, 1, "no raw chunk found on any non-metadata server");
+
+    cluster.start_scrub(ScrubOptions::deep()).unwrap();
+    let scrub = cluster.scrub_wait().unwrap();
+    assert!(scrub.all_done(), "{:?}", scrub.first_failure());
+    assert!(
+        scrub.corruptions_found >= 1,
+        "remote raw rot not detected: {scrub:?}"
+    );
+    assert!(
+        scrub.lost >= 1,
+        "unrecoverable remote rot must be quarantined: {scrub:?}"
+    );
+    // the quarantine keeps the audit clean: no valid flag points at rot
+    assert!(cluster.audit().unwrap().is_ok());
+    cluster.shutdown();
+}

@@ -4,10 +4,13 @@
 //! within `every_ticks + jitter`, the shared maintenance budget bounds
 //! combined scrub+rebalance+GC token draw (asserted from metrics — no
 //! wall-clock timing anywhere), and the cluster still converges to a
-//! clean audit.
+//! clean audit. With failure detection armed, random kill + grace
+//! expiry + restart interleavings of a designated victim must converge
+//! to full replication and a clean audit.
 
 use snss_dedup::api::{
-    ClockSource, Cluster, ClusterConfig, DedupMode, FlowConfig, ScrubOptions, ScrubSchedule,
+    ClockSource, Cluster, ClusterConfig, DedupMode, FailureDetection, FlowConfig, ScrubOptions,
+    ScrubSchedule,
 };
 use snss_dedup::cluster::ServerId;
 use snss_dedup::dedup::Chunking;
@@ -39,7 +42,7 @@ fn config(chunking: Chunking) -> ClusterConfig {
         clock: ClockSource::Sim,
         maint_flow: FlowConfig {
             budget_per_tick: BUDGET_PER_TICK,
-            weights: [2, 1, 1],
+            weights: [2, 1, 1, 2],
             burst_ticks: BURST_TICKS,
         },
         ..Default::default()
@@ -212,6 +215,154 @@ fn cdc_random_interleavings_never_break_the_scrub_cadence() {
         },
         gen_ops,
         |ops| run_case(ops, Chunking::cdc_with_mean(2048)),
+    );
+}
+
+// ---- detector-driven Down/Out transitions (PR 5) ----
+
+/// Detector windows for the matrix, in virtual ticks. Sized against
+/// TICK=10 so a killed victim can traverse Up → Down → Out within one
+/// random case, and a restart inside the grace window stays Up.
+const PROBE: u64 = 10;
+const GRACE: u64 = 30;
+const OUT: u64 = 80;
+const DET_SERVERS: u32 = 4;
+
+fn detector_config() -> ClusterConfig {
+    ClusterConfig {
+        servers: DET_SERVERS as usize,
+        failure_detection: Some(FailureDetection {
+            probe_every_ticks: PROBE,
+            grace_ticks: GRACE,
+            out_ticks: OUT,
+        }),
+        ..config(Chunking::Fixed { size: 2048 })
+    }
+}
+
+/// Ops for the detector matrix: kills/restarts target one designated
+/// victim (so at most one server can ever go Out — replication 2 then
+/// guarantees no data loss and "full replication" is assertable).
+fn gen_detector_ops(rng: &mut SplitMix64, size: u32) -> Vec<Op> {
+    let count = 6 + (size as usize) / 6; // ramps 6 → ~22 ops
+    (0..count)
+        .map(|_| match rng.below(8) {
+            0 | 1 | 2 => Op::Put(
+                rng.below(5),
+                rng.next_u64(),
+                1024 + rng.below(8 * 1024) as usize,
+            ),
+            3 => Op::Delete(rng.below(5)),
+            4 | 5 => Op::Kill(1),
+            6 => Op::Restart(1),
+            _ => Op::Gc,
+        })
+        .collect::<Vec<Op>>()
+}
+
+fn run_detector_case(ops: &[Op]) -> Result<(), String> {
+    let victim = ServerId(1);
+    let cluster = Cluster::new(detector_config()).map_err(|e| e.to_string())?;
+    let client = cluster.client();
+    for op in ops {
+        match op {
+            // data-path errors are expected while the victim is down
+            Op::Put(i, seed, len) => {
+                let _ = client.put_object(&format!("obj-{i}"), &payload(*seed, *len));
+            }
+            Op::Delete(i) => {
+                let _ = client.delete_object(&format!("obj-{i}"));
+            }
+            // kills/restarts hit only the victim; a restart of an
+            // already-Out victim is the typed ServerRemoved error
+            Op::Kill(_) => {
+                let _ = cluster.kill_server(victim);
+            }
+            Op::Restart(_) => {
+                let _ = cluster.restart_server(victim);
+            }
+            Op::Gc => {
+                let _ = cluster.run_gc(0);
+            }
+        }
+        cluster.advance_clock(TICK).map_err(|e| e.to_string())?;
+    }
+
+    // settle: revive the victim if it is still revivable, give the
+    // detector time to re-mark it Up (or finish marking it Out), then
+    // drain recovery while keeping virtual time (budget refill) moving
+    let _ = cluster.restart_server(victim);
+    for _ in 0..(OUT / TICK + 4) {
+        cluster.advance_clock(TICK).map_err(|e| e.to_string())?;
+    }
+    let mut steps = 0u64;
+    loop {
+        let report = cluster.recovery_status().map_err(|e| e.to_string())?;
+        if !report.is_running() {
+            if let Some(fail) = report.first_failure() {
+                return Err(format!("recovery failed: {fail}"));
+            }
+            break;
+        }
+        if steps > 2_000 {
+            return Err("recovery never drained".into());
+        }
+        steps += 1;
+        cluster.advance_clock(TICK).map_err(|e| e.to_string())?;
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+
+    // converge: settle flags, heal with one deep scrub + GC, audit
+    cluster.flush_consistency().map_err(|e| e.to_string())?;
+    deep_scrub_retrying(&cluster)?;
+    cluster.run_gc(0).map_err(|e| format!("gc: {e}"))?;
+    let audit = cluster.audit().map_err(|e| format!("audit: {e}"))?;
+    if !audit.is_ok() {
+        return Err(format!("audit violations: {:?}", audit.violations));
+    }
+
+    // full replication: a second deep scrub finds nothing left to do
+    let report = deep_scrub_retrying(&cluster)?;
+    if report.repaired != 0 || report.lost != 0 || report.corruptions_found != 0 {
+        return Err(format!(
+            "not at full replication: repaired={} lost={} corruptions={}",
+            report.repaired, report.lost, report.corruptions_found
+        ));
+    }
+    cluster.shutdown();
+    Ok(())
+}
+
+/// Start a deep scrub, retrying the typed Busy while a scheduled or
+/// in-flight pass drains, and wait for its report.
+fn deep_scrub_retrying(cluster: &Cluster) -> Result<snss_dedup::api::ScrubReport, String> {
+    let mut attempts = 0;
+    loop {
+        match cluster.start_scrub(ScrubOptions::deep()) {
+            Ok(()) => break,
+            Err(Error::ScrubBusy(_)) if attempts < 100 => {
+                attempts += 1;
+                let _ = cluster.scrub_wait();
+            }
+            Err(e) => return Err(format!("start_scrub: {e}")),
+        }
+    }
+    cluster.scrub_wait().map_err(|e| format!("scrub_wait: {e}"))
+}
+
+/// Random kill + grace expiry + restart interleavings of one victim
+/// under armed failure detection: whatever the detector concluded (Up
+/// again, Down, or Out + recovery backfill), the cluster converges to
+/// full replication and a clean audit.
+#[test]
+fn detector_kill_restart_interleavings_converge_to_full_replication() {
+    check(
+        Config {
+            cases: 4,
+            ..Config::default()
+        },
+        gen_detector_ops,
+        |ops| run_detector_case(ops),
     );
 }
 
