@@ -1,0 +1,113 @@
+//! Tracing overhead bench: put throughput with tracing enabled but no
+//! span sink (`span_ring_capacity = 0` — contexts propagate, nothing is
+//! timed or recorded) vs tracing fully off.
+//!
+//! ```text
+//! cargo bench --bench obs_overhead                 # full trials
+//! BENCH_SCALE=small cargo bench --bench obs_overhead   # quick run
+//! ```
+//!
+//! The two modes run **interleaved** (A/B/A/B…) so drift in machine
+//! load hits both equally, and the reported figure is the per-mode
+//! median. The run fails if the no-sink median falls more than 3%
+//! below the tracing-off median — the "default-on, near-zero cost"
+//! contract of the observability layer (DESIGN.md §12).
+
+use snss_dedup::api::{Cluster, ClusterConfig, Consistency, WriteBatching};
+use snss_dedup::dedup::Chunking;
+use snss_dedup::obs::ObsConfig;
+use snss_dedup::workload::{Generator, WorkloadSpec};
+use std::sync::Arc;
+use std::time::Instant;
+
+const SERVERS: usize = 4;
+const THREADS: usize = 4;
+const OBJECT_SIZE: usize = 8 << 10;
+const CHUNK: usize = 2 << 10;
+const TOLERANCE_PCT: f64 = 3.0;
+
+/// One trial: boot, drive `objects` puts, return MiB/s of logical data.
+fn run_once(tracing: bool, objects: u64) -> f64 {
+    let cluster = Cluster::new(ClusterConfig {
+        servers: SERVERS,
+        replication: 1,
+        write_batching: WriteBatching::TwoPhase,
+        consistency: Consistency::None,
+        chunking: Chunking::Fixed { size: CHUNK },
+        obs: ObsConfig {
+            tracing,
+            // the mode under test: propagate contexts, record nothing
+            span_ring_capacity: 0,
+            ..ObsConfig::default()
+        },
+        ..Default::default()
+    })
+    .expect("boot cluster");
+    let gen = Arc::new(Generator::new(WorkloadSpec {
+        object_size: OBJECT_SIZE,
+        unit: CHUNK,
+        dedup_pct: 25,
+        pool_blocks: 512,
+        zipf_theta: 0.0,
+        seed: 0x0B5D ^ objects,
+    }));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let client = cluster.client();
+        let gen = gen.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut idx = t as u64;
+            while idx < objects {
+                let (name, data) = gen.named_object(idx);
+                client.put_object(&name, &data).expect("bench put");
+                idx += THREADS as u64;
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let stats = cluster.stats();
+    let mib = stats.logical_bytes as f64 / (1 << 20) as f64;
+    cluster.shutdown();
+    mib / secs
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn main() {
+    let (objects, trials) = match std::env::var("BENCH_SCALE").as_deref() {
+        Ok("small") => (1_000u64, 3usize),
+        _ => (4_000, 5),
+    };
+    println!("== tracing overhead: no-sink vs tracing-off put throughput ==");
+    // warm-up trial per mode (allocator + thread pools), then the
+    // interleaved measured trials
+    run_once(false, objects);
+    run_once(true, objects);
+    let mut off = Vec::with_capacity(trials);
+    let mut on = Vec::with_capacity(trials);
+    for trial in 0..trials {
+        let a = run_once(false, objects);
+        let b = run_once(true, objects);
+        println!("trial {trial}: off {a:>8.1} MiB/s   no-sink {b:>8.1} MiB/s");
+        off.push(a);
+        on.push(b);
+    }
+    let (off_med, on_med) = (median(off), median(on));
+    let overhead_pct = (100.0 * (off_med - on_med) / off_med).max(0.0);
+    println!(
+        "median: off {off_med:.1} MiB/s, no-sink {on_med:.1} MiB/s, \
+         overhead {overhead_pct:.2}% (tolerance {TOLERANCE_PCT}%)"
+    );
+    assert!(
+        overhead_pct <= TOLERANCE_PCT,
+        "tracing without a sink costs {overhead_pct:.2}% put throughput \
+         (> {TOLERANCE_PCT}% tolerance)"
+    );
+}

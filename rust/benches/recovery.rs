@@ -38,6 +38,10 @@ struct Point {
     copies_pushed: u64,
     omap_recovered: u64,
     mib_recovered: f64,
+    /// Cluster-merged recovery-stage latency quantiles (µs) from the
+    /// per-server histogram registry.
+    stage_p50_us: u64,
+    stage_p99_us: u64,
 }
 
 fn run_point(objects: u64, replication: usize) -> Point {
@@ -80,6 +84,9 @@ fn run_point(objects: u64, replication: usize) -> Point {
         "recovery left degradation behind: {scrub:?}"
     );
 
+    let stage = cluster
+        .metrics_snapshot()
+        .histogram_total("recovery_stage_latency");
     let point = Point {
         objects,
         replication,
@@ -88,6 +95,8 @@ fn run_point(objects: u64, replication: usize) -> Point {
         copies_pushed: report.copies_pushed,
         omap_recovered: report.omap_recovered,
         mib_recovered: report.bytes_recovered as f64 / (1 << 20) as f64,
+        stage_p50_us: stage.p50_us(),
+        stage_p99_us: stage.p99_us(),
     };
     cluster.shutdown();
     point
@@ -141,14 +150,17 @@ fn main() {
             json_points.push(format!(
                 "    {{\"objects\": {}, \"replication\": {}, \"mttr_secs\": {:.3}, \
                  \"chunks_restored\": {}, \"copies_pushed\": {}, \"omap_recovered\": {}, \
-                 \"mib_recovered\": {:.2}}}",
+                 \"mib_recovered\": {:.2}, \
+                 \"stage_p50_us\": {}, \"stage_p99_us\": {}}}",
                 p.objects,
                 p.replication,
                 p.secs,
                 p.chunks_restored,
                 p.copies_pushed,
                 p.omap_recovered,
-                p.mib_recovered
+                p.mib_recovered,
+                p.stage_p50_us,
+                p.stage_p99_us
             ));
         }
     }

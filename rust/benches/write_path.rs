@@ -38,6 +38,10 @@ struct Run {
     probe_batches: u64,
     store_batches: u64,
     savings_pct: f64,
+    /// Cluster-merged put-latency quantiles (µs) from the per-server
+    /// histogram registry.
+    put_p50_us: u64,
+    put_p99_us: u64,
     /// State fingerprint compared across protocols: global uniques and
     /// bytes plus the per-server placement.
     state: (u64, u64, Vec<(u32, usize, u64, usize)>),
@@ -94,6 +98,7 @@ fn run_one(objects: u64, dedup_pct: u8, batching: WriteBatching) -> Run {
             .collect(),
     );
     let logical_mib = stats.logical_bytes as f64 / (1 << 20) as f64;
+    let put = cluster.metrics_snapshot().histogram_total("put_latency");
     let run = Run {
         secs,
         mib_per_s: logical_mib / secs,
@@ -101,6 +106,8 @@ fn run_one(objects: u64, dedup_pct: u8, batching: WriteBatching) -> Run {
         probe_batches: stats.probe_batches,
         store_batches: stats.store_batches,
         savings_pct: stats.savings() * 100.0,
+        put_p50_us: put.p50_us(),
+        put_p99_us: put.p99_us(),
         state,
     };
     cluster.shutdown();
@@ -168,13 +175,19 @@ fn main() {
                  \"off_secs\": {:.3}, \"batched_secs\": {:.3}, \
                  \"off_wire_bytes\": {}, \"batched_wire_bytes\": {}, \
                  \"wire_reduction_pct\": {reduction:.1}, \
-                 \"probe_batches\": {}, \"store_batches\": {}}}",
+                 \"probe_batches\": {}, \"store_batches\": {}, \
+                 \"off_put_p50_us\": {}, \"off_put_p99_us\": {}, \
+                 \"batched_put_p50_us\": {}, \"batched_put_p99_us\": {}}}",
                 off.secs,
                 bat.secs,
                 off.wire_bytes,
                 bat.wire_bytes,
                 bat.probe_batches,
-                bat.store_batches
+                bat.store_batches,
+                off.put_p50_us,
+                off.put_p99_us,
+                bat.put_p50_us,
+                bat.put_p99_us
             ));
         }
     }

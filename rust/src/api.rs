@@ -17,6 +17,9 @@ use crate::failure::{CrashPoint, FailureInjector};
 use crate::kvstore::{LogKv, MemKv};
 use crate::metrics::Metrics;
 use crate::net::{Lane, NetProfile};
+use crate::obs::{
+    FlowClassUtil, MetricsSnapshot, ObsConfig, Registry, ServerSnapshot, TraceDump, CLIENT_SCOPE,
+};
 use crate::placement::pg::PgMap;
 use crate::placement::{rendezvous::Rendezvous, straw2::Straw2, PlacementPolicy};
 use crate::recovery::detector::{self, Detector};
@@ -29,7 +32,7 @@ use crate::storage::proto::{AuditDump, Dir, OsdStats, Req, Resp};
 use crate::util::clock::{Clock, SimClock, WallClock};
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 pub use crate::dedup::consistency::ConsistencyMode as Consistency;
@@ -112,6 +115,13 @@ pub struct ClusterConfig {
     pub meta_io: Option<std::time::Duration>,
     /// Verify chunk digests on read.
     pub verify_read: bool,
+    /// Confirm freshly replicated chunk copies by content with a
+    /// `VerifyCopy` fan-out (off by default; one extra replica-lane
+    /// round trip per unique chunk).
+    pub verify_write: bool,
+    /// Observability: tracing, span sampling and the metrics sampler
+    /// (see [`crate::obs::ObsConfig`]; tracing defaults on).
+    pub obs: ObsConfig,
     /// Time source (wall for production, virtual for deterministic
     /// scheduler/throttling tests).
     pub clock: ClockSource,
@@ -147,6 +157,8 @@ impl Default for ClusterConfig {
             net: None,
             meta_io: None,
             verify_read: false,
+            verify_write: false,
+            obs: ObsConfig::default(),
             clock: ClockSource::Wall,
             maint_flow: FlowConfig::default(),
             verify_inflight_cap: 64,
@@ -382,7 +394,13 @@ pub struct Cluster {
     monitor: Arc<Monitor>,
     pgmap: Arc<PgMap>,
     dir: Dir,
+    /// The cluster-scope metrics entry ([`crate::obs::CLIENT_SCOPE`]):
+    /// client-side and failure-detector activity. Per-server counters
+    /// live on each server's own registry entry.
     metrics: Arc<Metrics>,
+    /// Observability registry: per-server metrics entries, span rings
+    /// and the tail-sampling state.
+    obs: Arc<Registry>,
     clock: Arc<dyn Clock>,
     /// The virtual clock handle when `cfg.clock == ClockSource::Sim`.
     sim: Option<Arc<SimClock>>,
@@ -414,7 +432,11 @@ impl Cluster {
         };
         let pgmap = Arc::new(PgMap::new(policy, cfg.pg_count, cfg.replication.max(2)));
         let dir: Dir = Dir::new();
-        let metrics = Arc::new(Metrics::new());
+        let obs = Registry::new(cfg.obs.clone());
+        // the cluster-scope registry entry doubles as the old "shared"
+        // metrics handle: client + detector increments land here, while
+        // every OSD bumps its own per-server entry.
+        let metrics = obs.server(CLIENT_SCOPE).metrics().clone();
         let sim = match cfg.clock {
             ClockSource::Sim => Some(Arc::new(SimClock::new())),
             ClockSource::Wall => None,
@@ -439,6 +461,7 @@ impl Cluster {
             pgmap,
             dir,
             metrics,
+            obs,
             clock,
             sim,
             provider,
@@ -515,6 +538,8 @@ impl Cluster {
                 )
             }
         };
+        let entry = self.obs.server(id.0);
+        let metrics = entry.metrics().clone();
         let shard = DmShard::new(omap, cit, backref);
         if shard.omap_len() > 0 {
             // cold open with existing layouts: a pre-index store has no
@@ -524,7 +549,7 @@ impl Cluster {
             // the OMAP is the source of truth — re-derive before any lane
             // can consult the index.
             shard.rebuild_backrefs()?;
-            Metrics::add(&self.metrics.backref_rebuilds, 1);
+            Metrics::add(&metrics.backref_rebuilds, 1);
         }
         let shared = Arc::new(OsdShared {
             id,
@@ -535,6 +560,7 @@ impl Cluster {
                 chunker: Chunker::new(self.cfg.chunking),
                 replication: self.cfg.replication,
                 verify_read: self.cfg.verify_read,
+                verify_write: self.cfg.verify_write,
                 meta_io: self.cfg.meta_io,
             },
             map: self.monitor.map_handle(),
@@ -549,7 +575,8 @@ impl Cluster {
             flow: FlowController::new(self.cfg.maint_flow.clone(), self.clock.clone()),
             verify_gate: Gate::new(self.cfg.verify_inflight_cap),
             injector: FailureInjector::new(),
-            metrics: self.metrics.clone(),
+            metrics,
+            obs: entry,
             dir: self.dir.clone(),
             provider: self.provider.clone(),
             clock: self.clock.clone(),
@@ -568,6 +595,8 @@ impl Cluster {
             map: self.monitor.map_handle(),
             pgmap: self.pgmap.clone(),
             dir: self.dir.clone(),
+            clock: self.clock.clone(),
+            obs: self.obs.clone(),
         }
     }
 
@@ -576,9 +605,24 @@ impl Cluster {
         &self.cfg
     }
 
-    /// Shared metrics handle.
+    /// The cluster-scope metrics entry (client + detector activity).
+    /// Per-server counters live on each server's registry entry; use
+    /// [`Cluster::stats`] or [`Cluster::metrics_snapshot`] for totals.
     pub fn metrics(&self) -> Arc<Metrics> {
         self.metrics.clone()
+    }
+
+    /// The observability registry (per-server metrics entries, span
+    /// rings and sampling state).
+    pub fn obs(&self) -> &Arc<Registry> {
+        &self.obs
+    }
+
+    /// The virtual clock handle (`Some` only under [`ClockSource::Sim`]).
+    /// Test hooks that run on OSD threads use this to advance time
+    /// without borrowing the cluster.
+    pub fn sim_clock(&self) -> Option<Arc<SimClock>> {
+        self.sim.clone()
     }
 
     /// Current map epoch.
@@ -810,54 +854,60 @@ impl Cluster {
 
     /// Aggregate statistics.
     pub fn stats(&self) -> ClusterStats {
-        let m = &self.metrics;
+        // every increment lands on exactly one registry entry (one
+        // server's, or the cluster-scope one), so each cluster total is
+        // the straight sum of that counter across entries.
+        let entries = self.obs.entries();
+        let sum = |f: fn(&Metrics) -> &AtomicU64| -> u64 {
+            entries.iter().map(|(_, e)| Metrics::get(f(e.metrics()))).sum()
+        };
         let mut s = ClusterStats {
-            logical_bytes: Metrics::get(&m.bytes_logical),
-            stored_bytes: Metrics::get(&m.bytes_stored),
-            replica_bytes: Metrics::get(&m.bytes_replica),
-            dedup_hits: Metrics::get(&m.dedup_hits),
-            unique_chunks: Metrics::get(&m.unique_chunks),
-            cit_lookups: Metrics::get(&m.cit_lookups),
-            repairs: Metrics::get(&m.repairs),
-            gc_reclaimed: Metrics::get(&m.gc_reclaimed),
-            tx_aborts: Metrics::get(&m.tx_aborts),
-            scrub_chunks_checked: Metrics::get(&m.scrub_chunks_checked),
-            scrub_bytes_verified: Metrics::get(&m.scrub_bytes_verified),
-            scrub_corruptions_found: Metrics::get(&m.scrub_corruptions_found),
-            scrub_repaired: Metrics::get(&m.scrub_repaired),
-            backref_updates: Metrics::get(&m.backref_updates),
-            backref_lookups: Metrics::get(&m.backref_lookups),
-            backref_rebuilds: Metrics::get(&m.backref_rebuilds),
-            backref_mismatches: Metrics::get(&m.backref_mismatches),
-            probe_batches: Metrics::get(&m.probe_batches),
-            probe_hits: Metrics::get(&m.probe_hits),
-            store_batches: Metrics::get(&m.store_batches),
-            batch_items: Metrics::get(&m.batch_items),
-            need_data_resends: Metrics::get(&m.need_data_resends),
-            wire_bytes: Metrics::get(&m.wire_bytes),
-            sched_fires: Metrics::get(&m.sched_fires),
-            sched_skipped_busy: Metrics::get(&m.sched_skipped_busy),
-            flow_granted_scrub: Metrics::get(&m.flow_granted_scrub),
-            flow_granted_rebalance: Metrics::get(&m.flow_granted_rebalance),
-            flow_granted_gc: Metrics::get(&m.flow_granted_gc),
-            flow_waits: Metrics::get(&m.flow_waits),
-            backpressure_busy: Metrics::get(&m.backpressure_busy),
-            backpressure_retries: Metrics::get(&m.backpressure_retries),
-            backpressure_window_shrinks: Metrics::get(&m.backpressure_window_shrinks),
-            backpressure_gave_up: Metrics::get(&m.backpressure_gave_up),
-            flow_granted_recovery: Metrics::get(&m.flow_granted_recovery),
-            detector_probes: Metrics::get(&m.detector_probes),
-            detector_marked_down: Metrics::get(&m.detector_marked_down),
-            detector_marked_up: Metrics::get(&m.detector_marked_up),
-            detector_marked_out: Metrics::get(&m.detector_marked_out),
-            recovery_runs: Metrics::get(&m.recovery_runs),
-            recovery_chunks_scanned: Metrics::get(&m.recovery_chunks_scanned),
-            recovery_chunks_restored: Metrics::get(&m.recovery_chunks_restored),
-            recovery_copies_pushed: Metrics::get(&m.recovery_copies_pushed),
-            recovery_bytes: Metrics::get(&m.recovery_bytes),
-            recovery_omap_recovered: Metrics::get(&m.recovery_omap_recovered),
-            recovery_refs_fixed: Metrics::get(&m.recovery_refs_fixed),
-            recovery_lost: Metrics::get(&m.recovery_lost),
+            logical_bytes: sum(|m| &m.bytes_logical),
+            stored_bytes: sum(|m| &m.bytes_stored),
+            replica_bytes: sum(|m| &m.bytes_replica),
+            dedup_hits: sum(|m| &m.dedup_hits),
+            unique_chunks: sum(|m| &m.unique_chunks),
+            cit_lookups: sum(|m| &m.cit_lookups),
+            repairs: sum(|m| &m.repairs),
+            gc_reclaimed: sum(|m| &m.gc_reclaimed),
+            tx_aborts: sum(|m| &m.tx_aborts),
+            scrub_chunks_checked: sum(|m| &m.scrub_chunks_checked),
+            scrub_bytes_verified: sum(|m| &m.scrub_bytes_verified),
+            scrub_corruptions_found: sum(|m| &m.scrub_corruptions_found),
+            scrub_repaired: sum(|m| &m.scrub_repaired),
+            backref_updates: sum(|m| &m.backref_updates),
+            backref_lookups: sum(|m| &m.backref_lookups),
+            backref_rebuilds: sum(|m| &m.backref_rebuilds),
+            backref_mismatches: sum(|m| &m.backref_mismatches),
+            probe_batches: sum(|m| &m.probe_batches),
+            probe_hits: sum(|m| &m.probe_hits),
+            store_batches: sum(|m| &m.store_batches),
+            batch_items: sum(|m| &m.batch_items),
+            need_data_resends: sum(|m| &m.need_data_resends),
+            wire_bytes: sum(|m| &m.wire_bytes),
+            sched_fires: sum(|m| &m.sched_fires),
+            sched_skipped_busy: sum(|m| &m.sched_skipped_busy),
+            flow_granted_scrub: sum(|m| &m.flow_granted_scrub),
+            flow_granted_rebalance: sum(|m| &m.flow_granted_rebalance),
+            flow_granted_gc: sum(|m| &m.flow_granted_gc),
+            flow_waits: sum(|m| &m.flow_waits),
+            backpressure_busy: sum(|m| &m.backpressure_busy),
+            backpressure_retries: sum(|m| &m.backpressure_retries),
+            backpressure_window_shrinks: sum(|m| &m.backpressure_window_shrinks),
+            backpressure_gave_up: sum(|m| &m.backpressure_gave_up),
+            flow_granted_recovery: sum(|m| &m.flow_granted_recovery),
+            detector_probes: sum(|m| &m.detector_probes),
+            detector_marked_down: sum(|m| &m.detector_marked_down),
+            detector_marked_up: sum(|m| &m.detector_marked_up),
+            detector_marked_out: sum(|m| &m.detector_marked_out),
+            recovery_runs: sum(|m| &m.recovery_runs),
+            recovery_chunks_scanned: sum(|m| &m.recovery_chunks_scanned),
+            recovery_chunks_restored: sum(|m| &m.recovery_chunks_restored),
+            recovery_copies_pushed: sum(|m| &m.recovery_copies_pushed),
+            recovery_bytes: sum(|m| &m.recovery_bytes),
+            recovery_omap_recovered: sum(|m| &m.recovery_omap_recovered),
+            recovery_refs_fixed: sum(|m| &m.recovery_refs_fixed),
+            recovery_lost: sum(|m| &m.recovery_lost),
             per_server: Vec::new(),
         };
         let mut ids = self.live_ids();
@@ -875,6 +925,66 @@ impl Cluster {
             s.replica_bytes = s.per_server.iter().map(|p| p.replica_bytes).sum();
         }
         s
+    }
+
+    /// A typed point-in-time snapshot of every metric in the cluster:
+    /// per-server counters, per-op-class latency histograms (with
+    /// p50/p90/p99 readout), per-lane queue depths and flow-budget
+    /// utilization per maintenance class. See [`MetricsSnapshot`] for
+    /// aggregation, skew/hot-shard detection and the Prometheus-text /
+    /// JSON renderers.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        let osds = self.osds.lock().unwrap();
+        let mut snap = MetricsSnapshot {
+            now_ms: self.clock.now_ms(),
+            servers: Vec::new(),
+        };
+        for (id, entry) in self.obs.entries() {
+            let m = entry.metrics();
+            let mut server = ServerSnapshot {
+                server: id,
+                counters: m.counters(),
+                histograms: m
+                    .histograms()
+                    .into_iter()
+                    .map(|(name, h)| (name, h.snapshot()))
+                    .collect(),
+                queue_depths: entry.gauge_values(),
+                flow: Vec::new(),
+            };
+            if let Some(osd) = osds.get(&ServerId(id)) {
+                let flow = &osd.shared.flow;
+                let weights = flow.config().weights;
+                let total = flow.granted_total();
+                for (i, class) in MaintClass::ALL.into_iter().enumerate() {
+                    let granted = flow.granted(class);
+                    server.flow.push(FlowClassUtil {
+                        class: maint_class_name(class),
+                        granted,
+                        weight: weights[i],
+                        share: if total == 0 {
+                            0.0
+                        } else {
+                            granted as f64 / total as f64
+                        },
+                    });
+                }
+            }
+            snap.servers.push(server);
+        }
+        snap
+    }
+
+    /// Reassembled span trees of every retained (tail- or head-sampled)
+    /// trace, merged across all servers' span rings.
+    pub fn trace_dump(&self) -> TraceDump {
+        self.obs.trace_dump()
+    }
+
+    /// Snapshot history captured by the clock-driven sampler
+    /// ([`crate::obs::ObsConfig::sample_every_ms`]), oldest first.
+    pub fn sampled_snapshots(&self) -> Vec<MetricsSnapshot> {
+        self.obs.samples()
     }
 
     /// Cluster-wide invariant check: for every CIT entry, the refcount
@@ -1150,6 +1260,9 @@ impl Cluster {
             // fire-and-forget, so this cannot stall the clock either
             detector::run_tick(det, &self.monitor, &self.dir, &self.osds, &self.metrics, now);
         }
+        // clock-driven metrics sampler: one snapshot per crossed period
+        // boundary (no-op unless `obs.sample_every_ms` is set)
+        self.obs.maybe_sample(now, || self.metrics_snapshot());
         Ok(now)
     }
 
@@ -1189,14 +1302,28 @@ impl Cluster {
     }
 }
 
+/// Snapshot label of a maintenance class.
+fn maint_class_name(class: MaintClass) -> &'static str {
+    match class {
+        MaintClass::Scrub => "scrub",
+        MaintClass::Rebalance => "rebalance",
+        MaintClass::Gc => "gc",
+        MaintClass::Recovery => "recovery",
+    }
+}
+
 /// Data-path handle: routes object ops to the right server with degraded
-/// fallback to replicas.
+/// fallback to replicas. Every op runs inside a client root span
+/// ([`crate::obs::Registry::with_root`]) — the anchor the tail-sampler's
+/// retention decision and `trace_dump`'s tree reassembly hang off.
 #[derive(Clone)]
 pub struct Client {
     dedup: DedupMode,
     map: Arc<RwLock<crate::cluster::ClusterMap>>,
     pgmap: Arc<PgMap>,
     dir: Dir,
+    clock: Arc<dyn Clock>,
+    obs: Arc<Registry>,
 }
 
 impl Client {
@@ -1230,45 +1357,54 @@ impl Client {
 
     /// Write an object. Returns (logical bytes, unique bytes stored).
     pub fn put_object(&self, name: &str, data: &[u8]) -> Result<(u64, u64)> {
-        // writes do NOT fall back: the primary owns the transaction (a
-        // down primary is the monitor's job to mark out).
-        let chain = self.chain_for(name);
-        let primary = *chain.first().ok_or(Error::NoQuorum)?;
-        let addr = self.dir.lookup(primary, Lane::Frontend)?;
-        let req = Req::PutObject {
-            name: name.to_string(),
-            data: data.to_vec(),
+        let body = || {
+            // writes do NOT fall back: the primary owns the transaction
+            // (a down primary is the monitor's job to mark out).
+            let chain = self.chain_for(name);
+            let primary = *chain.first().ok_or(Error::NoQuorum)?;
+            let addr = self.dir.lookup(primary, Lane::Frontend)?;
+            let req = Req::PutObject {
+                name: name.to_string(),
+                data: data.to_vec(),
+            };
+            let size = req.wire_size();
+            match addr.call(req, size)? {
+                Resp::PutAck { logical, unique } => Ok((logical, unique)),
+                Resp::Err(e) => Err(Error::TxAborted(e)),
+                other => Err(Error::TxAborted(format!("unexpected reply {other:?}"))),
+            }
         };
-        let size = req.wire_size();
-        match addr.call(req, size)? {
-            Resp::PutAck { logical, unique } => Ok((logical, unique)),
-            Resp::Err(e) => Err(Error::TxAborted(e)),
-            other => Err(Error::TxAborted(format!("unexpected reply {other:?}"))),
-        }
+        self.obs.with_root("client/put", || self.clock.now_ms(), body)
     }
 
     /// Read an object (degraded fallback to replica holders).
     pub fn get_object(&self, name: &str) -> Result<Vec<u8>> {
-        match self.frontend_call(name, || Req::GetObject {
-            name: name.to_string(),
-        })? {
-            Resp::Object(data) => Ok(data),
-            Resp::NotFound => Err(Error::ObjectNotFound(name.to_string())),
-            Resp::Err(e) => Err(Error::TxAborted(e)),
-            other => Err(Error::TxAborted(format!("unexpected reply {other:?}"))),
-        }
+        let body = || {
+            match self.frontend_call(name, || Req::GetObject {
+                name: name.to_string(),
+            })? {
+                Resp::Object(data) => Ok(data),
+                Resp::NotFound => Err(Error::ObjectNotFound(name.to_string())),
+                Resp::Err(e) => Err(Error::TxAborted(e)),
+                other => Err(Error::TxAborted(format!("unexpected reply {other:?}"))),
+            }
+        };
+        self.obs.with_root("client/get", || self.clock.now_ms(), body)
     }
 
     /// Delete an object.
     pub fn delete_object(&self, name: &str) -> Result<()> {
-        match self.frontend_call(name, || Req::DeleteObject {
-            name: name.to_string(),
-        })? {
-            Resp::Ok => Ok(()),
-            Resp::NotFound => Err(Error::ObjectNotFound(name.to_string())),
-            Resp::Err(e) => Err(Error::TxAborted(e)),
-            other => Err(Error::TxAborted(format!("unexpected reply {other:?}"))),
-        }
+        let body = || {
+            match self.frontend_call(name, || Req::DeleteObject {
+                name: name.to_string(),
+            })? {
+                Resp::Ok => Ok(()),
+                Resp::NotFound => Err(Error::ObjectNotFound(name.to_string())),
+                Resp::Err(e) => Err(Error::TxAborted(e)),
+                other => Err(Error::TxAborted(format!("unexpected reply {other:?}"))),
+            }
+        };
+        self.obs.with_root("client/delete", || self.clock.now_ms(), body)
     }
 }
 

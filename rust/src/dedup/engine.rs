@@ -759,8 +759,13 @@ pub fn get_object(sh: &OsdShared, name: &str) -> Result<Option<Vec<u8>>> {
                 return Ok(None);
             };
             let mut out = Vec::with_capacity(entry.size as usize);
+            // read amplification: distinct servers whose data answered
+            // this one object read (dedup scatters chunks by content, so
+            // one read fans out across the cluster — this is the cost
+            // side of the savings the paper measures).
+            let mut homes: HashSet<ServerId> = HashSet::new();
             for (fp, len) in &entry.chunks {
-                let data = fetch_chunk(sh, fp)?;
+                let data = fetch_chunk(sh, fp, &mut homes)?;
                 if data.len() != *len as usize {
                     return Err(Error::Corrupt(format!(
                         "chunk {fp} length {} != {}",
@@ -773,20 +778,28 @@ pub fn get_object(sh: &OsdShared, name: &str) -> Result<Option<Vec<u8>>> {
                 }
                 out.extend_from_slice(&data);
             }
+            Metrics::add(&sh.metrics.read_amp_reads, 1);
+            Metrics::add(&sh.metrics.read_amp_homes, homes.len() as u64);
             Ok(Some(out))
         }
     }
 }
 
 /// Fetch one chunk: local, then its content home, then replica copies
-/// (degraded read path — "robust fault tolerance").
-fn fetch_chunk(sh: &OsdShared, fp: &Fingerprint) -> Result<Vec<u8>> {
+/// (degraded read path — "robust fault tolerance"). The server that
+/// answered is added to `homes` (read-amplification accounting).
+fn fetch_chunk(
+    sh: &OsdShared,
+    fp: &Fingerprint,
+    homes: &mut HashSet<ServerId>,
+) -> Result<Vec<u8>> {
     let key = fp.to_bytes().to_vec();
     // central mode keeps data placement identical (raw by fp), so this
     // path is shared by all dedup modes.
     let chain = sh.chunk_chain(fp.placement_key());
     if chain.first() == Some(&sh.id) || sh.cfg.dedup == DedupMode::DiskLocal {
         if let Some(d) = sh.store.get(&key)? {
+            homes.insert(sh.id);
             return Ok(d);
         }
     }
@@ -800,7 +813,10 @@ fn fetch_chunk(sh: &OsdShared, fp: &Fingerprint) -> Result<Vec<u8>> {
                 let req = Req::FetchChunk { fp: *fp };
                 let size = req.wire_size();
                 match addr.call(req, size) {
-                    Ok(Resp::Data(d)) => return Ok(d),
+                    Ok(Resp::Data(d)) => {
+                        homes.insert(*primary);
+                        return Ok(d);
+                    }
                     Ok(_) | Err(_) => {} // fall through to replicas
                 }
             }
@@ -823,6 +839,7 @@ fn fetch_chunk(sh: &OsdShared, fp: &Fingerprint) -> Result<Vec<u8>> {
             None
         };
         if let Some(d) = fetch {
+            homes.insert(*peer);
             return Ok(d);
         }
     }
@@ -922,10 +939,50 @@ pub fn object_fingerprint(digests: &[Fingerprint]) -> Fingerprint {
     Fingerprint::of(&buf)
 }
 
-/// Replicate a chunk's data to the rest of its placement chain.
+/// Replicate a chunk's data to the rest of its placement chain. With
+/// [`crate::storage::osd::OsdConfig::verify_write`] on, each replica is
+/// then asked to confirm its copy by content.
 fn replicate_chunk(sh: &OsdShared, fp: &Fingerprint, data: &[u8]) -> Result<()> {
     let chain = sh.chunk_chain(fp.placement_key());
-    replicate(sh, &chain, &chunk_copy_key(fp), data)
+    replicate(sh, &chain, &chunk_copy_key(fp), data)?;
+    if sh.cfg.verify_write {
+        verify_replicas(sh, &chain, fp);
+    }
+    Ok(())
+}
+
+/// Write-time replica confirmation: ask each replica slot to hash its
+/// copy of `fp` and compare (`VerifyCopy` — only the verdict crosses the
+/// wire). Non-fatal by design: a missing or mismatched copy is counted
+/// in `write_verify_mismatches` and left for scrub/recovery to heal,
+/// never failing a write that already met its durability bar. A `Busy`
+/// shed or a dead peer is skipped (scrub re-probes later).
+fn verify_replicas(sh: &OsdShared, chain: &[ServerId], fp: &Fingerprint) {
+    if sh.cfg.replication <= 1 {
+        return;
+    }
+    for peer in chain.iter().skip(1).take(sh.cfg.replication - 1) {
+        if *peer == sh.id {
+            continue;
+        }
+        let Ok(addr) = sh.dir.lookup(*peer, Lane::Replica) else {
+            continue;
+        };
+        let req = Req::VerifyCopy {
+            key: chunk_copy_key(fp),
+            fp: *fp,
+        };
+        let size = req.wire_size();
+        Metrics::add(&sh.metrics.write_verifies, 1);
+        match addr.call(req, size) {
+            Ok(Resp::CopyState {
+                present: true,
+                matches: true,
+            }) => {}
+            Ok(Resp::Busy) | Err(_) => {} // shed or dead peer: scrub's job
+            Ok(_) => Metrics::add(&sh.metrics.write_verify_mismatches, 1),
+        }
+    }
 }
 
 /// Replicate `key → data` to every chain member except ourselves.

@@ -8,8 +8,9 @@
 //!   for longer than the threshold are *cross-matched* (re-checked); if
 //!   still invalid they are reclaimed — CIT entry, chunk data and replica
 //!   copies. Referenced-but-invalid entries are repaired instead of
-//!   reclaimed (stat → flip, or restore from a replica copy — "recover
-//!   reference errors and lost data chunks"). Valid entries whose
+//!   reclaimed (re-fingerprint the present data → flip, or restore from
+//!   a digest-verified surviving copy — "recover reference errors and
+//!   lost data chunks"). Valid entries whose
 //!   refcount dropped to zero (deleted objects) age out the same way.
 //!   Before any reclaim, the candidate is cross-matched against the local
 //!   **backreference index** (an O(referrers) range read, DESIGN.md §6):
@@ -27,7 +28,7 @@ use crate::metrics::Metrics;
 use crate::net::Lane;
 use crate::sched::flow::MaintClass;
 use crate::storage::osd::OsdShared;
-use crate::storage::proto::{Req, Resp};
+use crate::storage::proto::Req;
 
 /// Outcome of a GC pass.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -191,43 +192,36 @@ fn reclaim(sh: &OsdShared, fp: &Fingerprint) -> Result<()> {
     Ok(())
 }
 
-/// Repair a referenced-but-invalid entry: stat → flip; else restore the
-/// data from a replica copy, then flip. Returns false when the data is
-/// unrecoverable. (The scrub subsystem has its own digest-verifying
-/// variant, `scrub::repair_primary_from_copy`.)
+/// Repair a referenced-but-invalid entry **by content**: present data
+/// is re-fingerprinted before the flag flips — a presence-only stat
+/// would resurrect a chunk deep scrub quarantined as rotten (flag
+/// Invalid, data present but corrupt). Missing or corrupt data is
+/// restored from a digest-verified surviving copy
+/// ([`crate::recovery::fetch_any_copy`]: own replica slot, then the
+/// chain's healthy copies, then the off-chain sweep), then flipped.
+/// Returns false when no healthy copy exists anywhere.
 fn repair(sh: &OsdShared, fp: &Fingerprint) -> Result<bool> {
-    if sh.store.stat(&fp.to_bytes())? {
-        sh.charge_meta_io(); // modeled DM-Shard write
-        sh.shard.cit_set_flag(fp, CommitFlag::Valid, sh.now_ms())?;
-        Metrics::add(&sh.metrics.repairs, 1);
-        return Ok(true);
-    }
-    // try replica copies on the rest of the chain
-    for peer in sh.chunk_chain(fp.placement_key()).iter().skip(1) {
-        let data = if *peer == sh.id {
-            sh.replica_store.get(&chunk_copy_key(fp))?
-        } else if let Ok(addr) = sh.dir.lookup(*peer, Lane::Replica) {
-            match addr.call(
-                Req::FetchCopy {
-                    key: chunk_copy_key(fp),
-                },
-                64,
-            ) {
-                Ok(Resp::Data(d)) => Some(d),
-                _ => None,
-            }
-        } else {
-            None
-        };
-        if let Some(data) = data {
-            sh.charge_maint(MaintClass::Gc, (data.len() as u64).max(64));
-            sh.store.put(&fp.to_bytes(), &data)?;
-            Metrics::add(&sh.metrics.bytes_stored, data.len() as u64);
+    if let Some(data) = sh.store.get(&fp.to_bytes())? {
+        if Fingerprint::of(&data) == *fp {
             sh.charge_meta_io(); // modeled DM-Shard write
             sh.shard.cit_set_flag(fp, CommitFlag::Valid, sh.now_ms())?;
             Metrics::add(&sh.metrics.repairs, 1);
             return Ok(true);
         }
+        // present but rotten: fall through to the verified restore —
+        // never flip a quarantined chunk back to Valid on presence alone
     }
-    Ok(false)
+    let Some(data) = crate::recovery::fetch_any_copy(sh, fp)? else {
+        return Ok(false);
+    };
+    sh.charge_maint(MaintClass::Gc, (data.len() as u64).max(64));
+    let had_data = sh.store.stat(&fp.to_bytes())?;
+    sh.store.put(&fp.to_bytes(), &data)?;
+    if !had_data {
+        Metrics::add(&sh.metrics.bytes_stored, data.len() as u64);
+    }
+    sh.charge_meta_io(); // modeled DM-Shard write
+    sh.shard.cit_set_flag(fp, CommitFlag::Valid, sh.now_ms())?;
+    Metrics::add(&sh.metrics.repairs, 1);
+    Ok(true)
 }

@@ -45,6 +45,13 @@
 //!   every survivor re-replicates the lost chunks and OMAP records from
 //!   surviving copies — most-referenced chunks first — until the cluster
 //!   is back at full replication ([`recovery`], DESIGN.md §11);
+//! * an **observability layer**: trace contexts in every fabric envelope
+//!   with per-server span rings and tail-based slow-op sampling
+//!   (`Cluster::trace_dump` reassembles cross-server trees), a per-server
+//!   metrics registry whose cluster view is an aggregation (skew and
+//!   hot-shard detection), per-op-class latency histograms with
+//!   p50/p90/p99 readout, and std-only Prometheus-text/JSON exposition
+//!   ([`obs`], DESIGN.md §12);
 //! * evaluation machinery: an FIO-like workload generator ([`workload`]),
 //!   crash-point failure injection ([`failure`]) and metrics ([`metrics`]).
 //!
@@ -84,6 +91,7 @@ pub mod hash;
 pub mod kvstore;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod placement;
 pub mod recovery;
 pub mod runtime;

@@ -1,10 +1,22 @@
-//! Cluster metrics: atomic counters plus a fixed-bucket latency histogram.
-//! All counters are cheap relaxed atomics — safe to bump from any lane.
+//! Per-server metrics: atomic counters plus fixed-bucket latency
+//! histograms. All counters are cheap relaxed atomics — safe to bump
+//! from any lane.
+//!
+//! Since the observability overhaul each server owns its **own**
+//! `Metrics` instance, registered in the cluster's
+//! [`crate::obs::Registry`]; the cluster-wide view
+//! ([`crate::api::Cluster::stats`],
+//! [`crate::api::Cluster::metrics_snapshot`]) is an aggregation over
+//! the registry, which is what makes per-server skew and hot-shard
+//! detection observable at all. [`Metrics::counters`] and
+//! [`Metrics::histograms`] are the single authoritative enumeration
+//! the exposition layer renders from.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
-/// Cluster-wide counters (one shared instance per cluster).
+/// One server's counters (one instance per server, plus one
+/// cluster-scope instance for client/detector activity).
 #[derive(Default)]
 pub struct Metrics {
     /// Logical bytes accepted from clients (pre-dedup).
@@ -119,8 +131,34 @@ pub struct Metrics {
     /// copy (quarantined behind an invalid flag; 0 unless more copies
     /// were lost than the replication factor covers).
     pub recovery_lost: AtomicU64,
-    /// Write-path latency histogram.
+    /// Object reads that touched at least one chunk home (the
+    /// read-amplification denominator).
+    pub read_amp_reads: AtomicU64,
+    /// Distinct chunk homes (servers) that served data across all object
+    /// reads — `read_amp_homes / read_amp_reads` is the mean
+    /// read-amplification (the fragmentation signal: how many servers a
+    /// single object read fans out to).
+    pub read_amp_homes: AtomicU64,
+    /// Post-write `VerifyCopy` probes issued by the optional
+    /// write-verification leg (`verify_write`).
+    pub write_verifies: AtomicU64,
+    /// Write-verification probes whose replica was missing or
+    /// digest-mismatched (0 in steady state).
+    pub write_verify_mismatches: AtomicU64,
+    /// Write-path (put) latency histogram.
     pub put_latency: Histogram,
+    /// Read-path (get) latency histogram.
+    pub get_latency: Histogram,
+    /// Delete-path latency histogram.
+    pub delete_latency: Histogram,
+    /// Per-window scrub latency (one sample per scrub window).
+    pub scrub_window_latency: Histogram,
+    /// Per-stage recovery-backfill latency (one sample per stage of
+    /// each recovery job: OMAP re-homing + ensure, then chunk backfill).
+    pub recovery_stage_latency: Histogram,
+    /// Per-chunk rebalance migration latency (one sample per
+    /// `MigrateChunk` round-trip).
+    pub rebalance_migration_latency: Histogram,
 }
 
 impl Metrics {
@@ -139,6 +177,86 @@ impl Metrics {
     #[inline]
     pub fn get(counter: &AtomicU64) -> u64 {
         counter.load(Ordering::Relaxed)
+    }
+
+    /// The authoritative name → value enumeration of every counter.
+    /// The exposition renderers and the aggregation path both consume
+    /// this, so a counter added here automatically shows up everywhere.
+    pub fn counters(&self) -> Vec<(&'static str, u64)> {
+        macro_rules! counters {
+            ($($field:ident),* $(,)?) => {
+                vec![$((stringify!($field), Self::get(&self.$field))),*]
+            };
+        }
+        counters![
+            bytes_logical,
+            bytes_stored,
+            bytes_replica,
+            cit_lookups,
+            dedup_hits,
+            unique_chunks,
+            messages,
+            repairs,
+            gc_reclaimed,
+            tx_aborts,
+            scrub_chunks_checked,
+            scrub_bytes_verified,
+            scrub_corruptions_found,
+            scrub_repaired,
+            backref_updates,
+            backref_lookups,
+            backref_rebuilds,
+            backref_mismatches,
+            probe_batches,
+            probe_hits,
+            store_batches,
+            batch_items,
+            need_data_resends,
+            wire_bytes,
+            sched_fires,
+            sched_skipped_busy,
+            flow_granted_scrub,
+            flow_granted_rebalance,
+            flow_granted_gc,
+            flow_granted_recovery,
+            flow_waits,
+            backpressure_busy,
+            backpressure_retries,
+            backpressure_window_shrinks,
+            backpressure_gave_up,
+            detector_probes,
+            detector_marked_down,
+            detector_marked_up,
+            detector_marked_out,
+            recovery_runs,
+            recovery_chunks_scanned,
+            recovery_chunks_restored,
+            recovery_copies_pushed,
+            recovery_bytes,
+            recovery_omap_recovered,
+            recovery_refs_fixed,
+            recovery_lost,
+            read_amp_reads,
+            read_amp_homes,
+            write_verifies,
+            write_verify_mismatches,
+        ]
+    }
+
+    /// The authoritative name → histogram enumeration (same contract as
+    /// [`Metrics::counters`]).
+    pub fn histograms(&self) -> Vec<(&'static str, &Histogram)> {
+        vec![
+            ("put_latency", &self.put_latency),
+            ("get_latency", &self.get_latency),
+            ("delete_latency", &self.delete_latency),
+            ("scrub_window_latency", &self.scrub_window_latency),
+            ("recovery_stage_latency", &self.recovery_stage_latency),
+            (
+                "rebalance_migration_latency",
+                &self.rebalance_migration_latency,
+            ),
+        ]
     }
 
     /// Space savings so far: 1 - stored/logical (0 when nothing written).
@@ -197,19 +315,84 @@ impl Histogram {
 
     /// Approximate quantile (bucket upper bound) for `q` in [0,1].
     pub fn quantile_us(&self, q: f64) -> u64 {
-        let n = self.count();
-        if n == 0 {
+        self.snapshot().quantile_us(q)
+    }
+
+    /// A point-in-time copy of the histogram (relaxed loads; counts may
+    /// be mid-update skewed by concurrent writers, which is fine for
+    /// monitoring).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// A point-in-time, mergeable copy of a [`Histogram`] with quantile
+/// readout — what [`crate::api::Cluster::metrics_snapshot`] carries per
+/// server, and what the benches derive their p50/p99 figures from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct HistogramSnapshot {
+    /// Number of samples.
+    pub count: u64,
+    /// Sum of all samples in microseconds.
+    pub sum_us: u64,
+    /// Log-scaled sample counts: bucket i covers [2^i, 2^(i+1)) µs.
+    pub buckets: [u64; 32],
+}
+
+impl HistogramSnapshot {
+    /// Mean latency in microseconds (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate quantile (bucket upper bound) for `q` in [0,1] — the
+    /// same log-bucket readout the live histogram serves. Empty → 0.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
             return 0;
         }
-        let target = (n as f64 * q).ceil() as u64;
+        let target = (self.count as f64 * q).ceil() as u64;
         let mut acc = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
-            acc += b.load(Ordering::Relaxed);
+            acc += b;
             if acc >= target {
                 return 1u64 << (i + 1);
             }
         }
         1u64 << 32
+    }
+
+    /// Median (p50) readout in microseconds.
+    pub fn p50_us(&self) -> u64 {
+        self.quantile_us(0.50)
+    }
+
+    /// p90 readout in microseconds.
+    pub fn p90_us(&self) -> u64 {
+        self.quantile_us(0.90)
+    }
+
+    /// p99 readout in microseconds.
+    pub fn p99_us(&self) -> u64 {
+        self.quantile_us(0.99)
+    }
+
+    /// Fold another snapshot into this one (bucket-wise sum) — how the
+    /// cluster-level histogram view is built from per-server snapshots.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
     }
 }
 
@@ -245,5 +428,50 @@ mod tests {
         let h = Histogram::default();
         assert_eq!(h.quantile_us(0.99), 0);
         assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_quantiles_are_monotone() {
+        let h = Histogram::default();
+        for us in [1u64, 10, 100, 1000, 10_000, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 6);
+        assert!(s.p50_us() <= s.p90_us());
+        assert!(s.p90_us() <= s.p99_us());
+        assert!(s.p99_us() > 0);
+        assert_eq!(s.quantile_us(0.5), h.quantile_us(0.5));
+    }
+
+    #[test]
+    fn snapshot_merge_sums_buckets() {
+        let (a, b) = (Histogram::default(), Histogram::default());
+        a.record(Duration::from_micros(10));
+        b.record(Duration::from_micros(10));
+        b.record(Duration::from_millis(100));
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.count, 3);
+        assert_eq!(m.sum_us, 100_020);
+        // the merged p99 must reflect b's slow sample
+        assert!(m.p99_us() >= 100_000, "p99={}", m.p99_us());
+    }
+
+    #[test]
+    fn counter_enumeration_names_are_unique_and_live() {
+        let m = Metrics::new();
+        Metrics::add(&m.read_amp_homes, 3);
+        let counters = m.counters();
+        let names: std::collections::HashSet<&str> =
+            counters.iter().map(|(n, _)| *n).collect();
+        assert_eq!(names.len(), counters.len(), "duplicate counter name");
+        let homes = counters
+            .iter()
+            .find(|(n, _)| *n == "read_amp_homes")
+            .unwrap()
+            .1;
+        assert_eq!(homes, 3);
+        assert_eq!(m.histograms().len(), 6);
     }
 }

@@ -2,6 +2,7 @@
 
 use crate::cluster::ServerId;
 use crate::error::{Error, Result};
+use crate::obs::trace::{self, TraceCtx};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -26,10 +27,15 @@ pub enum Lane {
     Control,
 }
 
-/// One request plus its reply channel.
+/// One request plus its reply channel and the sender's trace context.
 pub struct Envelope<Req, Resp> {
     /// The request payload.
     pub req: Req,
+    /// The sender's span context, stamped by [`Addr::send`] from the
+    /// sending thread's current span ([`crate::obs::trace::current`]) —
+    /// [`TraceCtx::NONE`] for untraced traffic. Receivers parent their
+    /// handler spans under it (DESIGN.md §12).
+    pub ctx: TraceCtx,
     reply: Sender<Resp>,
 }
 
@@ -89,6 +95,13 @@ impl<Req, Resp> Inbox<Req, Resp> {
     /// the channel send, so the reading never under-counts.
     pub fn backlog(&self) -> usize {
         self.depth.load(Ordering::Relaxed).max(0) as usize
+    }
+
+    /// A shared handle on this lane's live depth counter, registered as
+    /// a queue-depth gauge with the observability layer (the inbox
+    /// itself moves into its lane thread; the gauge stays behind).
+    pub fn depth_handle(&self) -> Arc<AtomicI64> {
+        self.depth.clone()
     }
 }
 
@@ -176,16 +189,20 @@ impl<Req, Resp> Clone for Addr<Req, Resp> {
 }
 
 impl<Req, Resp> Addr<Req, Resp> {
-    /// Fire a request without blocking on the reply.
+    /// Fire a request without blocking on the reply. The envelope is
+    /// stamped with the sending thread's current trace context — the
+    /// single place contexts enter the fabric, so propagation needs no
+    /// call-site changes anywhere.
     pub fn send(&self, req: Req, wire_bytes: usize) -> Result<Pending<Resp>> {
         if let Some(p) = &self.profile {
             p.charge(wire_bytes);
         }
+        let ctx = trace::current();
         let (rtx, rrx) = channel();
         // count before the send so the receiver's backlog() never
         // under-reports what is queued
         self.depth.fetch_add(1, Ordering::Relaxed);
-        if self.tx.send(Envelope { req, reply: rtx }).is_err() {
+        if self.tx.send(Envelope { req, ctx, reply: rtx }).is_err() {
             self.depth.fetch_sub(1, Ordering::Relaxed);
             return Err(Error::ServerDown(self.target.0));
         }
@@ -384,6 +401,34 @@ mod tests {
         let env = inbox.recv().unwrap();
         assert_eq!(inbox.backlog(), 2, "the received envelope left the queue");
         env.reply(0);
+    }
+
+    #[test]
+    fn send_stamps_the_senders_trace_context() {
+        let (addr, inbox) = endpoint::<u32, u32>(ServerId(0), None);
+        // untraced thread → NONE
+        let _p = addr.send(1, 4).unwrap();
+        let env = inbox.recv().unwrap();
+        assert!(env.ctx.is_none());
+        env.reply(0);
+        // traced thread → the current span rides along
+        let ctx = TraceCtx::root();
+        trace::set_current(ctx);
+        let _p = addr.send(2, 4).unwrap();
+        trace::clear_current();
+        let env = inbox.recv().unwrap();
+        assert_eq!(env.ctx, ctx);
+        env.reply(0);
+    }
+
+    #[test]
+    fn depth_handle_tracks_backlog() {
+        let (addr, inbox) = endpoint::<u32, u32>(ServerId(0), None);
+        let gauge = inbox.depth_handle();
+        let _p = addr.send(1, 4).unwrap();
+        assert_eq!(gauge.load(Ordering::Relaxed), 1);
+        inbox.recv().unwrap().reply(0);
+        assert_eq!(gauge.load(Ordering::Relaxed), 0);
     }
 
     #[test]

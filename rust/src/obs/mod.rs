@@ -1,0 +1,601 @@
+//! Observability: distributed tracing, the per-server metrics registry
+//! and metric/trace exposition (DESIGN.md §12).
+//!
+//! Three pillars:
+//!
+//! * **Distributed tracing** ([`trace`]) — a [`TraceCtx`] rides in
+//!   every fabric envelope; OSD lane loops open one handler span per
+//!   dispatched request; [`crate::api::Client`] opens a root span per
+//!   `put`/`get`/`delete`. Completed spans land in a per-server
+//!   lock-free ring ([`SpanSink`]) and
+//!   [`crate::api::Cluster::trace_dump`] reassembles cross-server trees
+//!   by span id.
+//! * **Tail-based sampling** — every op is traced, but full trees are
+//!   *retained* only for ops whose root exceeded
+//!   [`ObsConfig::slow_op_threshold_ms`] (slow-op forensics), plus a
+//!   head-sampled 1-in-N exemplar stream
+//!   ([`ObsConfig::head_sample_every`]). The retention decision lives
+//!   at the client root, the span data in per-server rings — a crashed
+//!   server merely truncates a tree, it can never corrupt or stall the
+//!   sampler (the rings are volatile and cleared on kill, like every
+//!   other in-memory state).
+//! * **Per-server metrics registry** ([`Registry`]) — each server owns
+//!   its own [`crate::metrics::Metrics`]; the cluster view is an
+//!   aggregation ([`crate::api::Cluster::metrics_snapshot`]), which
+//!   makes skew/hot-shard detection ([`MetricsSnapshot::skew`],
+//!   [`MetricsSnapshot::hot_servers`]) possible at all.
+//!
+//! Tracing is **default-on and near-zero cost without a sink**: context
+//! propagation is a 24-byte copy plus a thread-local read per message,
+//! and span timing/recording happens only behind the
+//! per-server sink presence check (`benches/obs_overhead.rs` holds the
+//! put path within a few percent of a tracing-off build).
+
+pub mod snapshot;
+pub mod trace;
+
+pub use self::snapshot::{FlowClassUtil, MetricsSnapshot, ServerSnapshot};
+pub use self::trace::{SpanRecord, TraceCtx};
+
+use crate::metrics::Metrics;
+use std::collections::{BTreeMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Pseudo server id for the cluster-scope registry entry: client root
+/// spans, client-side counters and the failure detector's activity.
+pub const CLIENT_SCOPE: u32 = u32::MAX;
+
+/// Observability configuration ([`crate::api::ClusterConfig::obs`]).
+#[derive(Clone, Debug)]
+pub struct ObsConfig {
+    /// Propagate trace contexts and open spans (default on; turning it
+    /// off removes even the per-message context copy).
+    pub tracing: bool,
+    /// Capacity of each server's span ring. 0 detaches the sink
+    /// entirely: contexts still propagate but nothing is timed or
+    /// recorded (the "near-zero cost" mode the overhead bench pins).
+    pub span_ring_capacity: usize,
+    /// Tail-sampling threshold: a client op whose root span runs at
+    /// least this long has its full tree retained for [`TraceDump`].
+    pub slow_op_threshold_ms: u64,
+    /// Head sampling: additionally retain every Nth client op as an
+    /// exemplar (0 = off).
+    pub head_sample_every: u64,
+    /// Bound on distinct retained traces (oldest evicted first).
+    pub retained_traces: usize,
+    /// Period of the clock-driven snapshot sampler in ms (0 = off):
+    /// [`crate::api::Cluster::advance_clock`] captures one
+    /// [`MetricsSnapshot`] per crossed period boundary, so deterministic
+    /// tests can assert metric *trajectories*.
+    pub sample_every_ms: u64,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            tracing: true,
+            span_ring_capacity: 256,
+            slow_op_threshold_ms: 500,
+            head_sample_every: 0,
+            retained_traces: 64,
+            sample_every_ms: 0,
+        }
+    }
+}
+
+/// A bounded, lock-free-indexed ring of completed spans (one per
+/// server). Writers claim a slot with one relaxed `fetch_add` — no
+/// shared lock, no allocation on the hot path beyond the slot write;
+/// under overflow the oldest spans are overwritten (tail sampling makes
+/// that loss benign: retention is decided at the client root, not
+/// here).
+pub struct SpanSink {
+    slots: Vec<Mutex<Option<SpanRecord>>>,
+    head: AtomicUsize,
+}
+
+impl SpanSink {
+    /// A ring with `capacity` slots (callers guarantee `capacity > 0`).
+    pub fn new(capacity: usize) -> SpanSink {
+        SpanSink {
+            slots: (0..capacity.max(1)).map(|_| Mutex::new(None)).collect(),
+            head: AtomicUsize::new(0),
+        }
+    }
+
+    /// Number of slots.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Record one completed span (untraced records are dropped).
+    pub fn record(&self, span: SpanRecord) {
+        if span.trace_id == 0 {
+            return;
+        }
+        let i = self.head.fetch_add(1, Ordering::Relaxed) % self.slots.len();
+        *self.slots[i].lock().unwrap() = Some(span);
+    }
+
+    /// All currently retained spans (unordered).
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        self.slots
+            .iter()
+            .filter_map(|s| *s.lock().unwrap())
+            .collect()
+    }
+
+    /// Crash semantics: a killed server's spans are volatile and die
+    /// with it (called from the OSD kill path so no spans leak across
+    /// `restart_server`).
+    pub fn clear(&self) {
+        for slot in &self.slots {
+            *slot.lock().unwrap() = None;
+        }
+    }
+}
+
+/// One server's observability entry: its metrics instance, its span
+/// ring, and its registered live gauges (per-lane queue depths).
+pub struct ServerObs {
+    metrics: Arc<Metrics>,
+    tracing: bool,
+    sink: Option<SpanSink>,
+    gauges: Mutex<Vec<(&'static str, Arc<AtomicI64>)>>,
+}
+
+impl ServerObs {
+    fn new(cfg: &ObsConfig) -> ServerObs {
+        ServerObs {
+            metrics: Arc::new(Metrics::new()),
+            tracing: cfg.tracing,
+            sink: (cfg.tracing && cfg.span_ring_capacity > 0)
+                .then(|| SpanSink::new(cfg.span_ring_capacity)),
+            gauges: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// This server's metrics instance (the registry entry the OSD bumps
+    /// directly).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Is context propagation enabled?
+    pub fn tracing(&self) -> bool {
+        self.tracing
+    }
+
+    /// This server's span ring (`None` ⇒ the near-zero-cost no-sink
+    /// mode: propagate contexts, record nothing).
+    pub fn sink(&self) -> Option<&SpanSink> {
+        self.sink.as_ref()
+    }
+
+    /// Register a live gauge (e.g. a fabric inbox's queued-request
+    /// depth) under a static name. Re-registering a name replaces the
+    /// old handle, so a respawned server never double-reports.
+    pub fn register_gauge(&self, name: &'static str, handle: Arc<AtomicI64>) {
+        let mut gauges = self.gauges.lock().unwrap();
+        if let Some(slot) = gauges.iter_mut().find(|(n, _)| *n == name) {
+            slot.1 = handle;
+        } else {
+            gauges.push((name, handle));
+        }
+    }
+
+    /// Current value of every registered gauge.
+    pub fn gauge_values(&self) -> Vec<(&'static str, i64)> {
+        self.gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, h)| (*name, h.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Drop all retained spans (kill-path crash semantics).
+    pub fn clear_spans(&self) {
+        if let Some(sink) = &self.sink {
+            sink.clear();
+        }
+    }
+}
+
+/// The cluster's observability registry: per-server entries (metrics +
+/// span ring + gauges), the tail/head sampling state, and the sampled
+/// snapshot history. One instance per [`crate::api::Cluster`], shared
+/// with every [`crate::api::Client`].
+pub struct Registry {
+    cfg: ObsConfig,
+    entries: Mutex<BTreeMap<u32, Arc<ServerObs>>>,
+    retained: Mutex<VecDeque<u64>>,
+    roots_started: AtomicU64,
+    samples: Mutex<Vec<MetricsSnapshot>>,
+    last_sample_ms: AtomicU64,
+}
+
+impl Registry {
+    /// Fresh registry under `cfg`.
+    pub fn new(cfg: ObsConfig) -> Arc<Registry> {
+        Arc::new(Registry {
+            cfg,
+            entries: Mutex::new(BTreeMap::new()),
+            retained: Mutex::new(VecDeque::new()),
+            roots_started: AtomicU64::new(0),
+            samples: Mutex::new(Vec::new()),
+            last_sample_ms: AtomicU64::new(0),
+        })
+    }
+
+    /// The configuration this registry was built with.
+    pub fn cfg(&self) -> &ObsConfig {
+        &self.cfg
+    }
+
+    /// Get-or-create the entry for server `id` (use [`CLIENT_SCOPE`]
+    /// for the cluster-scope entry).
+    pub fn server(&self, id: u32) -> Arc<ServerObs> {
+        self.entries
+            .lock()
+            .unwrap()
+            .entry(id)
+            .or_insert_with(|| Arc::new(ServerObs::new(&self.cfg)))
+            .clone()
+    }
+
+    /// All registered entries, ordered by id.
+    pub fn entries(&self) -> Vec<(u32, Arc<ServerObs>)> {
+        self.entries
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(id, e)| (*id, e.clone()))
+            .collect()
+    }
+
+    /// Mark a trace retained (idempotent; oldest retained trace evicted
+    /// past [`ObsConfig::retained_traces`]).
+    pub fn mark_retained(&self, trace_id: u64) {
+        let mut g = self.retained.lock().unwrap();
+        if g.contains(&trace_id) {
+            return;
+        }
+        g.push_back(trace_id);
+        while g.len() > self.cfg.retained_traces.max(1) {
+            g.pop_front();
+        }
+    }
+
+    /// Trace ids currently retained (oldest first).
+    pub fn retained_ids(&self) -> Vec<u64> {
+        self.retained.lock().unwrap().iter().copied().collect()
+    }
+
+    /// Run `f` inside a fresh client root span named `name`, applying
+    /// the head- and tail-sampling policy on exit. `now_ms` reads the
+    /// cluster's injected clock.
+    pub fn with_root<R>(
+        &self,
+        name: &'static str,
+        now_ms: impl Fn() -> u64,
+        f: impl FnOnce() -> R,
+    ) -> R {
+        if !self.cfg.tracing {
+            return f();
+        }
+        let ctx = TraceCtx::root();
+        let nth = self.roots_started.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.cfg.head_sample_every > 0 && nth % self.cfg.head_sample_every == 0 {
+            self.mark_retained(ctx.trace_id);
+        }
+        let start_ms = now_ms();
+        trace::set_current(ctx);
+        let out = f();
+        trace::clear_current();
+        let end_ms = now_ms();
+        let entry = self.server(CLIENT_SCOPE);
+        if let Some(sink) = entry.sink() {
+            sink.record(SpanRecord {
+                trace_id: ctx.trace_id,
+                span_id: ctx.span_id,
+                parent: 0,
+                server: CLIENT_SCOPE,
+                name,
+                start_ms,
+                end_ms,
+            });
+        }
+        if end_ms.saturating_sub(start_ms) >= self.cfg.slow_op_threshold_ms {
+            self.mark_retained(ctx.trace_id);
+        }
+        out
+    }
+
+    /// Reassemble the retained traces from every server's span ring.
+    pub fn trace_dump(&self) -> TraceDump {
+        let retained: HashSet<u64> = self.retained.lock().unwrap().iter().copied().collect();
+        let mut by_trace: BTreeMap<u64, Vec<SpanRecord>> = BTreeMap::new();
+        for (_, entry) in self.entries() {
+            if let Some(sink) = entry.sink() {
+                for span in sink.snapshot() {
+                    if retained.contains(&span.trace_id) {
+                        by_trace.entry(span.trace_id).or_default().push(span);
+                    }
+                }
+            }
+        }
+        TraceDump {
+            traces: by_trace
+                .into_iter()
+                .map(|(trace_id, mut spans)| {
+                    spans.sort_by_key(|s| (s.start_ms, s.span_id));
+                    TraceTree { trace_id, spans }
+                })
+                .collect(),
+        }
+    }
+
+    /// Clock-driven sampler: capture one snapshot (via `make`) per
+    /// crossed [`ObsConfig::sample_every_ms`] boundary.
+    pub fn maybe_sample(&self, now_ms: u64, make: impl FnOnce() -> MetricsSnapshot) {
+        let period = self.cfg.sample_every_ms;
+        if period == 0 {
+            return;
+        }
+        let last = self.last_sample_ms.load(Ordering::Relaxed);
+        if now_ms / period > last / period {
+            self.last_sample_ms.store(now_ms, Ordering::Relaxed);
+            self.samples.lock().unwrap().push(make());
+        }
+    }
+
+    /// The sampled snapshot history (oldest first).
+    pub fn samples(&self) -> Vec<MetricsSnapshot> {
+        self.samples.lock().unwrap().clone()
+    }
+}
+
+/// One reassembled trace: every retained span of one client operation,
+/// across all servers, ordered by start time.
+#[derive(Clone, Debug)]
+pub struct TraceTree {
+    /// The trace id all spans share.
+    pub trace_id: u64,
+    /// The spans (root first when the root survived its ring).
+    pub spans: Vec<SpanRecord>,
+}
+
+impl TraceTree {
+    /// The client root span (parent 0), if it survived.
+    pub fn root(&self) -> Option<&SpanRecord> {
+        self.spans.iter().find(|s| s.parent == 0)
+    }
+
+    /// Direct children of `span_id`, in start order.
+    pub fn children(&self, span_id: u64) -> Vec<&SpanRecord> {
+        self.spans.iter().filter(|s| s.parent == span_id).collect()
+    }
+
+    /// First span with the given name.
+    pub fn find(&self, name: &str) -> Option<&SpanRecord> {
+        self.spans.iter().find(|s| s.name == name)
+    }
+
+    /// Is `span_id` connected to the client root by parent links within
+    /// this tree?
+    pub fn reachable_from_root(&self, span_id: u64) -> bool {
+        let mut cur = span_id;
+        for _ in 0..=self.spans.len() {
+            let Some(span) = self.spans.iter().find(|s| s.span_id == cur) else {
+                return false;
+            };
+            if span.parent == 0 {
+                return true;
+            }
+            cur = span.parent;
+        }
+        false // parent cycle (cannot happen with unique ids)
+    }
+
+    /// Indented text rendering of the tree (orphaned subtrees — spans
+    /// whose parent rotated out of its ring or died with its server —
+    /// are listed beneath the tree).
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let dur = self.root().map(|r| r.duration_ms()).unwrap_or(0);
+        let count = self.spans.len();
+        let _ = writeln!(out, "trace {} ({} ms, {} spans)", self.trace_id, dur, count);
+        let mut seen: HashSet<u64> = HashSet::new();
+        if let Some(root) = self.root() {
+            self.render_span(&mut out, root, 1, &mut seen);
+        }
+        for span in &self.spans {
+            if !seen.contains(&span.span_id) && !self.reachable_from_root(span.span_id) {
+                let _ = writeln!(out, "  (orphan) {}", Self::line(span));
+                seen.insert(span.span_id);
+                self.render_span_children(&mut out, span.span_id, 2, &mut seen);
+            }
+        }
+        out
+    }
+
+    fn line(span: &SpanRecord) -> String {
+        let server = if span.server == CLIENT_SCOPE {
+            "client".to_string()
+        } else {
+            format!("osd.{}", span.server)
+        };
+        format!(
+            "{} [{}] {}..{} ms",
+            span.name, server, span.start_ms, span.end_ms
+        )
+    }
+
+    fn render_span(
+        &self,
+        out: &mut String,
+        span: &SpanRecord,
+        depth: usize,
+        seen: &mut HashSet<u64>,
+    ) {
+        use std::fmt::Write as _;
+        let _ = writeln!(out, "{}{}", "  ".repeat(depth), Self::line(span));
+        seen.insert(span.span_id);
+        self.render_span_children(out, span.span_id, depth + 1, seen);
+    }
+
+    fn render_span_children(
+        &self,
+        out: &mut String,
+        span_id: u64,
+        depth: usize,
+        seen: &mut HashSet<u64>,
+    ) {
+        for child in self.children(span_id) {
+            if seen.insert(child.span_id) {
+                use std::fmt::Write as _;
+                let _ = writeln!(out, "{}{}", "  ".repeat(depth), Self::line(child));
+                self.render_span_children(out, child.span_id, depth + 1, seen);
+            }
+        }
+    }
+}
+
+/// Every retained trace, reassembled ([`crate::api::Cluster::trace_dump`]).
+#[derive(Clone, Debug, Default)]
+pub struct TraceDump {
+    /// Retained traces, ordered by trace id (creation order).
+    pub traces: Vec<TraceTree>,
+}
+
+impl TraceDump {
+    /// Look up one trace by id.
+    pub fn trace(&self, trace_id: u64) -> Option<&TraceTree> {
+        self.traces.iter().find(|t| t.trace_id == trace_id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(trace: u64, id: u64, parent: u64, name: &'static str) -> SpanRecord {
+        SpanRecord {
+            trace_id: trace,
+            span_id: id,
+            parent,
+            server: 0,
+            name,
+            start_ms: id,
+            end_ms: id + 1,
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let sink = SpanSink::new(2);
+        sink.record(span(1, 1, 0, "a"));
+        sink.record(span(1, 2, 1, "b"));
+        sink.record(span(1, 3, 1, "c"));
+        let mut names: Vec<&str> = sink.snapshot().iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        assert_eq!(names, vec!["b", "c"]);
+        sink.clear();
+        assert!(sink.snapshot().is_empty());
+    }
+
+    #[test]
+    fn untraced_spans_are_dropped() {
+        let sink = SpanSink::new(4);
+        sink.record(span(0, 9, 0, "untraced"));
+        assert!(sink.snapshot().is_empty());
+    }
+
+    #[test]
+    fn retention_is_bounded_and_idempotent() {
+        let reg = Registry::new(ObsConfig {
+            retained_traces: 2,
+            ..ObsConfig::default()
+        });
+        reg.mark_retained(1);
+        reg.mark_retained(1);
+        reg.mark_retained(2);
+        reg.mark_retained(3);
+        assert_eq!(reg.retained_ids(), vec![2, 3]);
+    }
+
+    #[test]
+    fn tree_reassembly_and_reachability() {
+        let reg = Registry::new(ObsConfig::default());
+        let sink_a = reg.server(0);
+        let sink_b = reg.server(1);
+        sink_a.sink().unwrap().record(span(7, 10, 0, "client/put"));
+        sink_a.sink().unwrap().record(span(7, 11, 10, "Frontend/PutObject"));
+        sink_b.sink().unwrap().record(span(7, 12, 11, "Backend/StoreChunkBatch"));
+        sink_b.sink().unwrap().record(span(7, 99, 55, "orphan"));
+        reg.mark_retained(7);
+        let dump = reg.trace_dump();
+        let tree = dump.trace(7).expect("retained trace");
+        assert_eq!(tree.root().unwrap().name, "client/put");
+        assert!(tree.reachable_from_root(12));
+        assert!(!tree.reachable_from_root(99));
+        assert_eq!(tree.children(10).len(), 1);
+        let text = tree.render();
+        assert!(text.contains("Backend/StoreChunkBatch"));
+        assert!(text.contains("(orphan)"));
+    }
+
+    #[test]
+    fn with_root_applies_tail_and_head_sampling() {
+        let reg = Registry::new(ObsConfig {
+            slow_op_threshold_ms: 10,
+            head_sample_every: 4,
+            ..ObsConfig::default()
+        });
+        let clock = AtomicU64::new(0);
+        // ops 1..=3: fast, not retained; op 4: head-sampled; op 5: slow
+        for i in 1..=5u64 {
+            let body = || {
+                if i == 5 {
+                    clock.fetch_add(50, Ordering::Relaxed);
+                }
+            };
+            reg.with_root("client/put", || clock.load(Ordering::Relaxed), body);
+        }
+        assert_eq!(reg.retained_ids().len(), 2);
+        let dump = reg.trace_dump();
+        assert_eq!(dump.traces.len(), 2);
+        // the slow op's root span really ran ≥ threshold
+        let mut roots = dump.traces.iter().filter_map(|t| t.root());
+        assert!(roots.any(|r| r.duration_ms() >= 10));
+    }
+
+    #[test]
+    fn sampler_fires_once_per_period_boundary() {
+        let reg = Registry::new(ObsConfig {
+            sample_every_ms: 100,
+            ..ObsConfig::default()
+        });
+        reg.maybe_sample(50, MetricsSnapshot::default);
+        assert_eq!(reg.samples().len(), 0);
+        reg.maybe_sample(120, MetricsSnapshot::default);
+        reg.maybe_sample(130, MetricsSnapshot::default);
+        reg.maybe_sample(250, MetricsSnapshot::default);
+        assert_eq!(reg.samples().len(), 2);
+    }
+
+    #[test]
+    fn tracing_off_disables_roots_and_sinks() {
+        let reg = Registry::new(ObsConfig {
+            tracing: false,
+            ..ObsConfig::default()
+        });
+        assert!(reg.server(0).sink().is_none());
+        reg.with_root("client/put", || 0, || ());
+        assert!(reg.retained_ids().is_empty());
+        assert!(trace::current().is_none());
+    }
+}

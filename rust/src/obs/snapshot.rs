@@ -1,0 +1,316 @@
+//! Typed, serializable metrics snapshots and their renderers.
+//!
+//! [`crate::api::Cluster::metrics_snapshot`] materializes one
+//! [`MetricsSnapshot`]: per-server counter values, histogram snapshots
+//! (with p50/p90/p99 readout), per-lane queue-depth gauges and
+//! flow-budget utilization per maintenance class. The cluster view is
+//! *derived* — [`MetricsSnapshot::counter_total`] /
+//! [`MetricsSnapshot::histogram_total`] aggregate, and
+//! [`MetricsSnapshot::skew`] / [`MetricsSnapshot::hot_servers`] surface
+//! per-server imbalance, the signal the old single global counter block
+//! erased by construction.
+//!
+//! Both renderers are hand-rolled over `std` only: a Prometheus-style
+//! text exposition ([`MetricsSnapshot::to_prometheus`]) and a JSON
+//! document ([`MetricsSnapshot::to_json`]). All metric names are static
+//! identifiers, so neither format needs an escaping pass.
+
+use crate::metrics::HistogramSnapshot;
+use std::fmt::Write as _;
+
+/// Server label used for the cluster-scope entry (client roots, the
+/// failure detector) in rendered output.
+const CLUSTER_LABEL: &str = "cluster";
+
+/// Flow-budget utilization of one maintenance class on one server.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FlowClassUtil {
+    /// Maintenance class name (`scrub` / `rebalance` / `gc` / `recovery`).
+    pub class: &'static str,
+    /// Tokens granted to this class since boot.
+    pub granted: u64,
+    /// Configured refill weight of this class.
+    pub weight: u32,
+    /// This class's share of all tokens granted on the server (0 when
+    /// nothing was granted yet).
+    pub share: f64,
+}
+
+/// One server's slice of a [`MetricsSnapshot`].
+#[derive(Clone, Debug, Default)]
+pub struct ServerSnapshot {
+    /// Server id ([`crate::obs::CLIENT_SCOPE`] for the cluster-scope
+    /// entry).
+    pub server: u32,
+    /// Counter name → value (from [`crate::metrics::Metrics::counters`]).
+    pub counters: Vec<(&'static str, u64)>,
+    /// Histogram name → point-in-time snapshot with quantile readout.
+    pub histograms: Vec<(&'static str, HistogramSnapshot)>,
+    /// Lane name → queued-request depth (live gauge, fed by the fabric's
+    /// inbox depth counters).
+    pub queue_depths: Vec<(&'static str, i64)>,
+    /// Flow-budget utilization per maintenance class.
+    pub flow: Vec<FlowClassUtil>,
+}
+
+impl ServerSnapshot {
+    fn label(&self) -> String {
+        if self.server == crate::obs::CLIENT_SCOPE {
+            CLUSTER_LABEL.to_string()
+        } else {
+            self.server.to_string()
+        }
+    }
+}
+
+/// A typed point-in-time view of every metric in the cluster.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    /// Capture time (ms since cluster start, from the injected clock).
+    pub now_ms: u64,
+    /// One entry per registered server, plus the cluster-scope entry,
+    /// ordered by id.
+    pub servers: Vec<ServerSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Sum of one counter across every entry (per-server sums ≡ the old
+    /// cluster-global counter, because each increment lands on exactly
+    /// one server's registry entry).
+    pub fn counter_total(&self, name: &str) -> u64 {
+        self.servers
+            .iter()
+            .flat_map(|s| s.counters.iter())
+            .filter(|(n, _)| *n == name)
+            .map(|(_, v)| v)
+            .sum()
+    }
+
+    /// Cluster-level histogram: bucket-wise merge of one histogram
+    /// across every server, with the usual quantile readout.
+    pub fn histogram_total(&self, name: &str) -> HistogramSnapshot {
+        let mut total = HistogramSnapshot::default();
+        for s in &self.servers {
+            for (n, h) in &s.histograms {
+                if *n == name {
+                    total.merge(h);
+                }
+            }
+        }
+        total
+    }
+
+    fn per_server_values(&self, name: &str) -> Vec<(u32, u64)> {
+        self.servers
+            .iter()
+            .filter(|s| s.server != crate::obs::CLIENT_SCOPE)
+            .map(|s| {
+                let v = s
+                    .counters
+                    .iter()
+                    .find(|(n, _)| *n == name)
+                    .map(|(_, v)| *v)
+                    .unwrap_or(0);
+                (s.server, v)
+            })
+            .collect()
+    }
+
+    /// Skew of one counter across real servers: `max / mean` (1.0 means
+    /// perfectly balanced; 0.0 when the counter is zero everywhere).
+    pub fn skew(&self, name: &str) -> f64 {
+        let values = self.per_server_values(name);
+        if values.is_empty() {
+            return 0.0;
+        }
+        let sum: u64 = values.iter().map(|(_, v)| v).sum();
+        if sum == 0 {
+            return 0.0;
+        }
+        let mean = sum as f64 / values.len() as f64;
+        let max = values.iter().map(|(_, v)| *v).max().unwrap_or(0);
+        max as f64 / mean
+    }
+
+    /// Servers whose value of `name` exceeds `factor ×` the per-server
+    /// mean — the hot-shard detector the per-server registry exists for.
+    pub fn hot_servers(&self, name: &str, factor: f64) -> Vec<u32> {
+        let values = self.per_server_values(name);
+        if values.is_empty() {
+            return Vec::new();
+        }
+        let mean = values.iter().map(|(_, v)| v).sum::<u64>() as f64 / values.len() as f64;
+        values
+            .into_iter()
+            .filter(|(_, v)| *v as f64 > factor * mean && *v > 0)
+            .map(|(id, _)| id)
+            .collect()
+    }
+
+    /// Prometheus-style text exposition (`snss_`-prefixed metric names,
+    /// a `server` label per entry, histograms expanded to
+    /// `_count`/`_mean_us`/`_p50_us`/`_p90_us`/`_p99_us` readouts).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "snss_snapshot_ms {}", self.now_ms);
+        for s in &self.servers {
+            let label = s.label();
+            for (name, v) in &s.counters {
+                let _ = writeln!(out, "snss_{name}{{server=\"{label}\"}} {v}");
+            }
+            for (name, h) in &s.histograms {
+                let _ = writeln!(out, "snss_{name}_count{{server=\"{label}\"}} {}", h.count);
+                let _ = writeln!(
+                    out,
+                    "snss_{name}_mean_us{{server=\"{label}\"}} {:.1}",
+                    h.mean_us()
+                );
+                let _ = writeln!(
+                    out,
+                    "snss_{name}_p50_us{{server=\"{label}\"}} {}",
+                    h.p50_us()
+                );
+                let _ = writeln!(
+                    out,
+                    "snss_{name}_p90_us{{server=\"{label}\"}} {}",
+                    h.p90_us()
+                );
+                let _ = writeln!(
+                    out,
+                    "snss_{name}_p99_us{{server=\"{label}\"}} {}",
+                    h.p99_us()
+                );
+            }
+            for (lane, depth) in &s.queue_depths {
+                let _ = writeln!(
+                    out,
+                    "snss_queue_depth{{server=\"{label}\",lane=\"{lane}\"}} {depth}"
+                );
+            }
+            for f in &s.flow {
+                let _ = writeln!(
+                    out,
+                    "snss_flow_granted{{server=\"{label}\",class=\"{}\"}} {}",
+                    f.class, f.granted
+                );
+                let _ = writeln!(
+                    out,
+                    "snss_flow_share{{server=\"{label}\",class=\"{}\"}} {:.3}",
+                    f.class, f.share
+                );
+            }
+        }
+        out
+    }
+
+    /// JSON document (hand-rolled, std-only). All keys are static
+    /// identifiers and all values numeric, so no escaping is needed.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        let _ = write!(out, "{{\"now_ms\":{},\"servers\":[", self.now_ms);
+        for (i, s) in self.servers.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{{\"server\":\"{}\",\"counters\":{{", s.label());
+            for (j, (name, v)) in s.counters.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "\"{name}\":{v}");
+            }
+            out.push_str("},\"histograms\":{");
+            for (j, (name, h)) in s.histograms.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                let _ = write!(
+                    out,
+                    "\"{name}\":{{\"count\":{},\"mean_us\":{:.1},\"p50_us\":{},\"p90_us\":{},\"p99_us\":{}}}",
+                    h.count,
+                    h.mean_us(),
+                    h.p50_us(),
+                    h.p90_us(),
+                    h.p99_us()
+                );
+            }
+            out.push_str("},\"queue_depths\":{");
+            for (j, (lane, depth)) in s.queue_depths.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                let _ = write!(out, "\"{lane}\":{depth}");
+            }
+            out.push_str("},\"flow\":{");
+            for (j, f) in s.flow.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                let _ = write!(
+                    out,
+                    "\"{}\":{{\"granted\":{},\"weight\":{},\"share\":{:.3}}}",
+                    f.class, f.granted, f.weight, f.share
+                );
+            }
+            out.push_str("}}");
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap_with(counts: &[(u32, u64)]) -> MetricsSnapshot {
+        MetricsSnapshot {
+            now_ms: 42,
+            servers: counts
+                .iter()
+                .map(|(id, v)| ServerSnapshot {
+                    server: *id,
+                    counters: vec![("messages", *v)],
+                    ..Default::default()
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn totals_skew_and_hot_servers() {
+        let snap = snap_with(&[(0, 10), (1, 10), (2, 100), (crate::obs::CLIENT_SCOPE, 5)]);
+        assert_eq!(snap.counter_total("messages"), 125);
+        assert_eq!(snap.counter_total("missing"), 0);
+        // mean over real servers = 40, max = 100 → skew 2.5
+        assert!((snap.skew("messages") - 2.5).abs() < 1e-9);
+        assert_eq!(snap.hot_servers("messages", 2.0), vec![2]);
+        assert!(snap.hot_servers("messages", 3.0).is_empty());
+    }
+
+    #[test]
+    fn renderers_cover_every_metric() {
+        let mut snap = snap_with(&[(0, 7)]);
+        snap.servers[0]
+            .histograms
+            .push(("put_latency", HistogramSnapshot::default()));
+        snap.servers[0].queue_depths.push(("Frontend", 3));
+        snap.servers[0].flow.push(FlowClassUtil {
+            class: "scrub",
+            granted: 9,
+            weight: 1,
+            share: 1.0,
+        });
+        let text = snap.to_prometheus();
+        assert!(text.contains("snss_messages{server=\"0\"} 7"));
+        assert!(text.contains("snss_put_latency_p99_us{server=\"0\"} 0"));
+        assert!(text.contains("snss_queue_depth{server=\"0\",lane=\"Frontend\"} 3"));
+        assert!(text.contains("snss_flow_granted{server=\"0\",class=\"scrub\"} 9"));
+        let json = snap.to_json();
+        assert!(json.contains("\"messages\":7"));
+        assert!(json.contains("\"put_latency\""));
+        assert!(json.contains("\"Frontend\":3"));
+        assert!(json.contains("\"scrub\":{\"granted\":9"));
+        assert!(json.starts_with('{') && json.ends_with('}'));
+    }
+}

@@ -1,0 +1,171 @@
+//! Trace-context propagation primitives.
+//!
+//! A [`TraceCtx`] is 24 bytes of plain data — `{trace_id, span_id,
+//! parent}` — stamped into every fabric [`crate::net::Envelope`] at the
+//! single construction site ([`crate::net::Addr::send`]). The sender
+//! does not pass it explicitly: `send` reads the **thread-local current
+//! span** ([`current`]), which the OSD lane loop sets to its handler
+//! span before dispatching, so any nested fabric call made while
+//! serving a request is automatically parented under that request's
+//! span. Crossing a thread boundary *is* crossing a server boundary in
+//! this simulator, which makes the thread-local exactly the right
+//! carrier: context flows along the lane graph (frontend → backend →
+//! replica) with zero signature changes anywhere.
+//!
+//! Span ids are drawn from one process-wide relaxed atomic counter —
+//! unique across every simulated server, so cross-server trees can be
+//! reassembled by id alone ([`crate::api::Cluster::trace_dump`]).
+//! `trace_id == 0` is the reserved "not traced" value ([`TraceCtx::NONE`]).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Trace context carried in every fabric envelope: which trace this
+/// message belongs to, the sender-side span it was issued from, and
+/// that span's parent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// Trace identifier — shared by every span of one client operation.
+    pub trace_id: u64,
+    /// The span this message was sent from (the receiver's parent).
+    pub span_id: u64,
+    /// The sending span's own parent (0 for a client root).
+    pub parent: u64,
+}
+
+impl TraceCtx {
+    /// The "not traced" context (all zeros). Messages sent outside any
+    /// span — admin calls, maintenance workers, heartbeats — carry this
+    /// and produce no spans downstream.
+    pub const NONE: TraceCtx = TraceCtx {
+        trace_id: 0,
+        span_id: 0,
+        parent: 0,
+    };
+
+    /// True for the reserved untraced context.
+    pub fn is_none(&self) -> bool {
+        self.trace_id == 0
+    }
+
+    /// Open a fresh root context (new trace, new root span, parent 0).
+    pub fn root() -> TraceCtx {
+        TraceCtx {
+            trace_id: next_id(),
+            span_id: next_id(),
+            parent: 0,
+        }
+    }
+
+    /// Open a child context of `self`: same trace, fresh span id,
+    /// parented under `self`'s span.
+    pub fn child(&self) -> TraceCtx {
+        TraceCtx {
+            trace_id: self.trace_id,
+            span_id: next_id(),
+            parent: self.span_id,
+        }
+    }
+}
+
+/// One completed span, as retained by a [`crate::obs::SpanSink`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Trace this span belongs to.
+    pub trace_id: u64,
+    /// This span's id (unique process-wide).
+    pub span_id: u64,
+    /// Parent span id (0 for a client root).
+    pub parent: u64,
+    /// Server that executed the span ([`crate::obs::CLIENT_SCOPE`] for
+    /// client roots).
+    pub server: u32,
+    /// Static operation name, e.g. `"Backend/StoreChunkBatch"`.
+    pub name: &'static str,
+    /// Span start (ms since cluster start, from the injected clock).
+    pub start_ms: u64,
+    /// Span end (ms since cluster start).
+    pub end_ms: u64,
+}
+
+impl SpanRecord {
+    /// Wall (or simulated) duration of the span.
+    pub fn duration_ms(&self) -> u64 {
+        self.end_ms.saturating_sub(self.start_ms)
+    }
+}
+
+/// Process-wide span/trace id allocator. Starts at 1 so 0 stays the
+/// reserved "untraced" value.
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Draw a fresh process-unique id (relaxed — only uniqueness matters).
+pub fn next_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+thread_local! {
+    /// The span the current thread is executing inside, stamped into
+    /// every envelope this thread sends.
+    static CURRENT: Cell<TraceCtx> = const { Cell::new(TraceCtx::NONE) };
+}
+
+/// The current thread's active span context ([`TraceCtx::NONE`] when
+/// the thread is not serving a traced request).
+pub fn current() -> TraceCtx {
+    CURRENT.with(|c| c.get())
+}
+
+/// Set the current thread's active span context (lane loops call this
+/// before dispatching a handler; clients call it around an op root).
+pub fn set_current(ctx: TraceCtx) {
+    CURRENT.with(|c| c.set(ctx));
+}
+
+/// Reset the current thread to untraced.
+pub fn clear_current() {
+    set_current(TraceCtx::NONE);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_unique_and_nonzero() {
+        let a = next_id();
+        let b = next_id();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn child_links_to_parent() {
+        let root = TraceCtx::root();
+        assert_eq!(root.parent, 0);
+        assert!(!root.is_none());
+        let child = root.child();
+        assert_eq!(child.trace_id, root.trace_id);
+        assert_eq!(child.parent, root.span_id);
+        assert_ne!(child.span_id, root.span_id);
+    }
+
+    #[test]
+    fn thread_local_roundtrip() {
+        assert!(current().is_none());
+        let ctx = TraceCtx::root();
+        set_current(ctx);
+        assert_eq!(current(), ctx);
+        clear_current();
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn thread_locals_are_independent() {
+        let ctx = TraceCtx::root();
+        set_current(ctx);
+        let seen = std::thread::spawn(current).join().unwrap();
+        assert!(seen.is_none());
+        clear_current();
+    }
+}

@@ -283,12 +283,15 @@ fn run_recovery(sh: &OsdShared, lost: ServerId) -> Result<()> {
     let epoch0 = sh.map.read().unwrap().epoch;
 
     // ---- stage 1: re-home OMAP records, then ensure CIT entries ----
+    let stage1 = Instant::now();
     recover_omap_records(sh, &view)?;
     ensure_affected(sh, &view)?;
     sh.recovery.mark_ensured(lost.0);
     barrier_wait(sh, lost)?;
+    sh.metrics.recovery_stage_latency.record(stage1.elapsed());
 
     // ---- stage 2: chunk backfill, most-referenced first ----
+    let stage2 = Instant::now();
     let tasks = plan::chunk_plan(sh, &view)?;
     for window in tasks.chunks(RECONCILE_WINDOW) {
         let mut fps: Vec<Fingerprint> = Vec::with_capacity(window.len());
@@ -320,6 +323,7 @@ fn run_recovery(sh: &OsdShared, lost: ServerId) -> Result<()> {
             }
         }
     }
+    sh.metrics.recovery_stage_latency.record(stage2.elapsed());
     Ok(())
 }
 

@@ -80,7 +80,7 @@ use self::rate::TokenBucket;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Byte-equivalent cost charged per light-scrub entry probe.
 const LIGHT_ENTRY_COST: u64 = 64;
@@ -343,7 +343,9 @@ fn run_pass(sh: &OsdShared, opts: &ScrubOptions) -> Result<()> {
     fps.sort();
     for window in fps.chunks(opts.window.max(1)) {
         ensure_alive(sh)?;
+        let t0 = Instant::now();
         scrub_window(sh, deep, &mut bucket, window)?;
+        sh.metrics.scrub_window_latency.record(t0.elapsed());
         sh.scrub.update(|st| st.windows += 1);
     }
     Ok(())

@@ -33,6 +33,8 @@ use crate::dedup::Chunker;
 use crate::failure::FailureInjector;
 use crate::metrics::Metrics;
 use crate::net::{endpoint, Inbox, Lane, NetProfile};
+use crate::obs::trace;
+use crate::obs::{ServerObs, SpanRecord};
 use crate::placement::pg::PgMap;
 use crate::sched::backpressure::Gate;
 use crate::sched::flow::{FlowController, MaintClass};
@@ -61,6 +63,11 @@ pub struct OsdConfig {
     pub replication: usize,
     /// Verify chunk digests on read (integrity checking extension).
     pub verify_read: bool,
+    /// After replicating a freshly stored chunk, confirm each replica
+    /// copy by content (`VerifyCopy` fan-out). Off by default: it adds
+    /// one replica-lane round trip per unique chunk; tests use it to
+    /// pin the write path's full cross-server span tree.
+    pub verify_write: bool,
     /// Modeled latency of one synchronous DM-Shard write (the paper's
     /// backend is SQLite on SSD; a flag flip or CIT insert is a
     /// synchronous UPDATE). Charged on the thread issuing the write, so
@@ -105,8 +112,12 @@ pub struct OsdShared {
     pub verify_gate: Gate,
     /// Crash-point/kill failure injector for this server.
     pub injector: FailureInjector,
-    /// Cluster-shared metrics.
+    /// This server's metrics instance (its entry in the cluster's
+    /// [`crate::obs::Registry`]; cluster totals are an aggregation).
     pub metrics: Arc<Metrics>,
+    /// This server's observability entry: span ring, tracing switch and
+    /// live queue-depth gauges (see [`crate::obs`]).
+    pub obs: Arc<ServerObs>,
     /// Fabric directory (server id + lane → address).
     pub dir: Dir,
     /// Fingerprint computation provider (scalar SHA-1 or XLA-batched).
@@ -210,6 +221,9 @@ impl Osd {
         for lane in lanes {
             let (addr, inbox) = endpoint(shared.id, profile);
             shared.dir.register(shared.id, lane, addr);
+            // live queue-depth gauge: the inbox's depth counter outlives
+            // this loop iteration via the registered Arc handle.
+            shared.obs.register_gauge(lane_name(lane), inbox.depth_handle());
             let sh = shared.clone();
             let sd = shutdown.clone();
             threads.push(
@@ -281,12 +295,15 @@ impl Osd {
         }
     }
 
-    /// Abrupt kill: server stops answering; volatile state is lost.
+    /// Abrupt kill: server stops answering; volatile state is lost —
+    /// including every span in the server's ring (traces must never
+    /// leak across a restart).
     pub fn kill(&self) {
         self.shared.injector.kill();
         self.shared.pending.clear();
         self.shared.scrub.clear();
         self.shared.recovery.clear();
+        self.shared.obs.clear_spans();
     }
 
     /// Restart after a kill/crash — see [`OsdShared::restart`].
@@ -312,6 +329,7 @@ fn lane_loop(sh: Arc<OsdShared>, sd: Arc<AtomicBool>, lane: Lane, inbox: Inbox<R
             // crashed/killed server: drop silently (no reply).
             continue;
         }
+        let ctx = env.ctx;
         let (req, replier) = env.split();
         // Replica-side backpressure: a `VerifyCopy` storm past the lane's
         // in-flight cap is shed with a cheap typed NACK *before* any
@@ -330,13 +348,83 @@ fn lane_loop(sh: Arc<OsdShared>, sd: Arc<AtomicBool>, lane: Lane, inbox: Inbox<R
             replier.reply(Resp::Busy);
             continue;
         }
+        // Tracing: run the handler under the envelope's context so any
+        // messages it sends downstream inherit the trace. With a sink the
+        // handler gets a fresh child span, timed and recorded on exit;
+        // with tracing on but no sink (the near-zero-cost mode the
+        // overhead bench pins) the parent context propagates unchanged —
+        // no clock read, no allocation, no ring write.
+        let traced = sh.obs.tracing() && !ctx.is_none();
+        let mut span = None;
+        if traced {
+            if sh.obs.sink().is_some() {
+                let child = ctx.child();
+                trace::set_current(child);
+                span = Some((child, span_name(lane, &req), sh.now_ms()));
+            } else {
+                trace::set_current(ctx);
+            }
+        }
         let resp = dispatch(&sh, lane, req);
+        if let Some((child, name, start_ms)) = span {
+            if let Some(sink) = sh.obs.sink() {
+                sink.record(SpanRecord {
+                    trace_id: child.trace_id,
+                    span_id: child.span_id,
+                    parent: child.parent,
+                    server: sh.id.0,
+                    name,
+                    start_ms,
+                    end_ms: sh.now_ms(),
+                });
+            }
+        }
+        if traced {
+            trace::clear_current();
+        }
         // A crash point may have fired mid-request: a dead server must not
         // reply (the caller sees ServerDown via the dropped channel).
         if sh.injector.is_dead() {
             continue;
         }
         replier.reply(resp);
+    }
+}
+
+/// Static display name of a lane (gauge + span labels).
+fn lane_name(lane: Lane) -> &'static str {
+    match lane {
+        Lane::Frontend => "Frontend",
+        Lane::Backend => "Backend",
+        Lane::Replica => "Replica",
+        Lane::Control => "Control",
+    }
+}
+
+/// Static span name for one dispatched request. Hot-path request types
+/// get precise names; everything else falls back to `<Lane>/Other` so
+/// the name stays `'static` without a per-request allocation.
+fn span_name(lane: Lane, req: &Req) -> &'static str {
+    match req {
+        Req::PutObject { .. } => "Frontend/PutObject",
+        Req::GetObject { .. } => "Frontend/GetObject",
+        Req::DeleteObject { .. } => "Frontend/DeleteObject",
+        Req::ProbeChunks { .. } => "Backend/ProbeChunks",
+        Req::StoreChunkBatch { .. } => "Backend/StoreChunkBatch",
+        Req::StoreChunk { .. } => "Backend/StoreChunk",
+        Req::FetchChunk { .. } => "Backend/FetchChunk",
+        Req::DecRef { .. } => "Backend/DecRef",
+        Req::DecRefBatch { .. } => "Backend/DecRefBatch",
+        Req::PutCopy { .. } => "Replica/PutCopy",
+        Req::FetchCopy { .. } => "Replica/FetchCopy",
+        Req::DeleteCopy { .. } => "Replica/DeleteCopy",
+        Req::VerifyCopy { .. } => "Replica/VerifyCopy",
+        _ => match lane {
+            Lane::Frontend => "Frontend/Other",
+            Lane::Backend => "Backend/Other",
+            Lane::Replica => "Replica/Other",
+            Lane::Control => "Control/Other",
+        },
     }
 }
 
@@ -358,16 +446,33 @@ fn dispatch(sh: &Arc<OsdShared>, lane: Lane, req: Req) -> Resp {
                 Err(e) => err_str(e),
             }
         }
-        (Lane::Frontend, Req::GetObject { name }) => match engine::get_object(sh, &name) {
-            Ok(Some(data)) => Resp::Object(data),
-            Ok(None) => Resp::NotFound,
-            Err(e) => err_str(e),
-        },
-        (Lane::Frontend, Req::DeleteObject { name }) => match engine::delete_object(sh, &name) {
-            Ok(true) => Resp::Ok,
-            Ok(false) => Resp::NotFound,
-            Err(e) => err_str(e),
-        },
+        (Lane::Frontend, Req::GetObject { name }) => {
+            let t0 = Instant::now();
+            match engine::get_object(sh, &name) {
+                Ok(found) => {
+                    sh.metrics.get_latency.record(t0.elapsed());
+                    match found {
+                        Some(data) => Resp::Object(data),
+                        None => Resp::NotFound,
+                    }
+                }
+                Err(e) => err_str(e),
+            }
+        }
+        (Lane::Frontend, Req::DeleteObject { name }) => {
+            let t0 = Instant::now();
+            match engine::delete_object(sh, &name) {
+                Ok(existed) => {
+                    sh.metrics.delete_latency.record(t0.elapsed());
+                    if existed {
+                        Resp::Ok
+                    } else {
+                        Resp::NotFound
+                    }
+                }
+                Err(e) => err_str(e),
+            }
+        }
 
         // ---- backend ----
         (Lane::Backend, Req::StoreChunk { fp, data, refs }) => {

@@ -22,6 +22,7 @@ use crate::net::Lane;
 use crate::sched::flow::MaintClass;
 use crate::storage::osd::OsdShared;
 use crate::storage::proto::{Req, Resp};
+use std::time::Instant;
 
 /// Outcome of one server's rebalance scan.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -72,7 +73,10 @@ pub fn run(sh: &OsdShared) -> Result<RebalanceReport> {
             };
             let size = req.wire_size();
             sh.charge_maint(MaintClass::Rebalance, size as u64);
-            match addr.call(req, size) {
+            let t0 = Instant::now();
+            let outcome = addr.call(req, size);
+            sh.metrics.rebalance_migration_latency.record(t0.elapsed());
+            match outcome {
                 Ok(Resp::Ok) => {
                     sh.shard.cit_delete(&fp)?;
                 }
@@ -92,7 +96,10 @@ pub fn run(sh: &OsdShared) -> Result<RebalanceReport> {
         // budget as scrub windows — the two no longer collide blindly
         let size = req.wire_size();
         sh.charge_maint(MaintClass::Rebalance, size as u64);
-        match addr.call(req, size) {
+        let t0 = Instant::now();
+        let outcome = addr.call(req, size);
+        sh.metrics.rebalance_migration_latency.record(t0.elapsed());
+        match outcome {
             Ok(Resp::Ok) => {
                 sh.shard.cit_delete(&fp)?;
                 sh.store.delete(&fp.to_bytes())?;

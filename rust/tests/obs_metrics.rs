@@ -1,0 +1,167 @@
+//! Integration: the per-server metrics registry and its exposition.
+//!
+//! * Aggregation — after a kill/restart + scrub + GC workload, the
+//!   per-server sums in [`Cluster::metrics_snapshot`] equal the typed
+//!   cluster-global counters in [`Cluster::stats`] (each increment
+//!   lands on exactly one registry entry), and the work really is
+//!   spread across entries (the skew/hot-shard signal the per-server
+//!   registry exists for).
+//! * Sampler — under the virtual clock the periodic sampler captures
+//!   one snapshot per crossed period boundary, with a live put-latency
+//!   histogram (p99 non-zero, p50 ≤ p99).
+
+use snss_dedup::api::{ClockSource, Cluster, ClusterConfig, Consistency, ScrubOptions};
+use snss_dedup::cluster::ServerId;
+use snss_dedup::dedup::Chunking;
+use snss_dedup::obs::{ObsConfig, CLIENT_SCOPE};
+use snss_dedup::workload::{Generator, WorkloadSpec};
+
+const CHUNK: usize = 2048;
+
+fn workload_cluster(obs: ObsConfig, clock: ClockSource) -> Cluster {
+    Cluster::new(ClusterConfig {
+        servers: 3,
+        replication: 2,
+        consistency: Consistency::None,
+        chunking: Chunking::Fixed { size: CHUNK },
+        clock,
+        obs,
+        ..Default::default()
+    })
+    .expect("boot")
+}
+
+#[test]
+fn per_server_sums_match_cluster_stats() {
+    let cluster = workload_cluster(ObsConfig::default(), ClockSource::Wall);
+    let client = cluster.client();
+    let gen = Generator::new(WorkloadSpec {
+        object_size: 16 << 10,
+        unit: CHUNK,
+        dedup_pct: 50,
+        pool_blocks: 32,
+        zipf_theta: 0.0,
+        seed: 0x0B5E,
+    });
+    for i in 0..16 {
+        let (name, data) = gen.named_object(i);
+        client.put_object(&name, &data).expect("put");
+    }
+    for i in [1u64, 5, 9] {
+        let (name, _) = gen.named_object(i);
+        client.delete_object(&name).expect("delete");
+    }
+    // a full kill/restart cycle plus scrub + GC exercises the repair,
+    // scrub and reclaim counters on top of the write-path ones
+    cluster.kill_server(ServerId(1)).unwrap();
+    cluster.restart_server(ServerId(1)).unwrap();
+    cluster.flush_consistency().unwrap();
+    cluster.start_scrub(ScrubOptions::deep()).unwrap();
+    cluster.scrub_wait().unwrap();
+    cluster.run_gc(0).unwrap();
+    let audit = cluster.audit().unwrap();
+    assert!(audit.is_ok(), "{:?}", audit.violations);
+
+    // snapshot first: stats() itself sends GetStats control messages,
+    // which must not land between the two reads of the same atomics
+    let snap = cluster.metrics_snapshot();
+    let stats = cluster.stats();
+    let expect: &[(&str, u64)] = &[
+        ("bytes_logical", stats.logical_bytes),
+        ("dedup_hits", stats.dedup_hits),
+        ("unique_chunks", stats.unique_chunks),
+        ("cit_lookups", stats.cit_lookups),
+        ("repairs", stats.repairs),
+        ("gc_reclaimed", stats.gc_reclaimed),
+        ("tx_aborts", stats.tx_aborts),
+        ("probe_batches", stats.probe_batches),
+        ("probe_hits", stats.probe_hits),
+        ("store_batches", stats.store_batches),
+        ("batch_items", stats.batch_items),
+        ("wire_bytes", stats.wire_bytes),
+        ("scrub_chunks_checked", stats.scrub_chunks_checked),
+        ("scrub_bytes_verified", stats.scrub_bytes_verified),
+        ("backref_updates", stats.backref_updates),
+        ("backref_lookups", stats.backref_lookups),
+        ("backref_rebuilds", stats.backref_rebuilds),
+    ];
+    for (name, want) in expect {
+        assert_eq!(
+            snap.counter_total(name),
+            *want,
+            "per-server sum of {name} diverged from the cluster stat"
+        );
+    }
+    assert!(stats.unique_chunks > 0, "workload stored chunks");
+    assert!(stats.scrub_chunks_checked > 0, "deep scrub ran");
+
+    // the registry really attributes work per server: the cluster-scope
+    // entry plus all three servers exist, and at least two real servers
+    // stored unique chunks (so skew is a meaningful signal)
+    assert_eq!(snap.servers.len(), 4);
+    assert!(snap.servers.iter().any(|s| s.server == CLIENT_SCOPE));
+    let chunk_servers = snap
+        .servers
+        .iter()
+        .filter(|s| s.server != CLIENT_SCOPE)
+        .filter(|s| {
+            s.counters
+                .iter()
+                .any(|(n, v)| *n == "unique_chunks" && *v > 0)
+        })
+        .count();
+    assert!(chunk_servers >= 2, "chunks all landed on one server");
+    assert!(snap.skew("unique_chunks") >= 1.0);
+
+    // every real server exposes its four lane-depth gauges (idle ⇒ 0)
+    // and its four flow-budget classes
+    for s in snap.servers.iter().filter(|s| s.server != CLIENT_SCOPE) {
+        let lanes: Vec<&str> = s.queue_depths.iter().map(|(n, _)| *n).collect();
+        for lane in ["Frontend", "Backend", "Replica", "Control"] {
+            assert!(lanes.contains(&lane), "server {} missing {lane}", s.server);
+        }
+        assert!(s.queue_depths.iter().all(|(_, d)| *d == 0), "idle lanes");
+        let classes: Vec<&str> = s.flow.iter().map(|f| f.class).collect();
+        assert_eq!(classes, vec!["scrub", "rebalance", "gc", "recovery"]);
+    }
+
+    // renderers cover the new metrics end to end
+    let text = snap.to_prometheus();
+    assert!(text.contains("snss_read_amp_reads"));
+    assert!(text.contains("snss_queue_depth"));
+    let json = snap.to_json();
+    assert!(json.contains("\"put_latency\""));
+    cluster.shutdown();
+}
+
+#[test]
+fn sim_clock_sampler_captures_latency_trajectories() {
+    let cluster = workload_cluster(
+        ObsConfig {
+            sample_every_ms: 100,
+            ..ObsConfig::default()
+        },
+        ClockSource::Sim,
+    );
+    let client = cluster.client();
+    let data = vec![7u8; 8 << 10];
+    for i in 0..6u8 {
+        client.put_object(&format!("obj-{i}"), &data).unwrap();
+        assert_eq!(client.get_object(&format!("obj-{i}")).unwrap(), data);
+    }
+
+    assert!(cluster.sampled_snapshots().is_empty(), "no boundary yet");
+    cluster.advance_clock(150).unwrap(); // crosses 100 → one sample
+    cluster.advance_clock(40).unwrap(); // still inside the same period
+    cluster.advance_clock(100).unwrap(); // crosses 200 → second sample
+    let samples = cluster.sampled_snapshots();
+    assert_eq!(samples.len(), 2, "one snapshot per crossed boundary");
+
+    let put = samples.last().unwrap().histogram_total("put_latency");
+    assert_eq!(put.count, 6, "one sample per put");
+    assert!(put.p99_us() > 0, "p99 readout is live");
+    assert!(put.p50_us() <= put.p90_us() && put.p90_us() <= put.p99_us());
+    let get = samples.last().unwrap().histogram_total("get_latency");
+    assert_eq!(get.count, 6, "one sample per get");
+    cluster.shutdown();
+}

@@ -1,0 +1,242 @@
+//! Integration: distributed tracing end to end.
+//!
+//! * Acceptance tree — an over-threshold put through the batched write
+//!   path yields one reassembled cross-server span tree covering
+//!   client root → `Frontend/PutObject` → `Backend/ProbeChunks` +
+//!   `Backend/StoreChunkBatch` → `Replica/VerifyCopy`, fully
+//!   deterministic under the virtual clock (the probe-gap hook advances
+//!   simulated time mid-put to trip the tail sampler).
+//! * Propagation property — with the tail threshold at zero every span
+//!   of every client operation is reachable from its client root.
+//! * Crash semantics — a restarted server's span ring is cleared, so no
+//!   server span leaks across `restart_server`.
+//! * Sampling policy — the tail sampler retains exactly the slow ops;
+//!   the head sampler retains exactly every Nth op.
+
+use snss_dedup::api::{ClockSource, Cluster, ClusterConfig, Consistency, WriteBatching};
+use snss_dedup::cluster::ServerId;
+use snss_dedup::dedup::Chunking;
+use snss_dedup::obs::{ObsConfig, CLIENT_SCOPE};
+
+const CHUNK: usize = 1024;
+
+/// Deterministic cluster: virtual clock, inline-valid flags (no async
+/// flag-manager traffic), batched writes, generous span rings.
+fn boot(obs: ObsConfig) -> Cluster {
+    Cluster::new(ClusterConfig {
+        servers: 3,
+        replication: 2,
+        write_batching: WriteBatching::TwoPhase,
+        consistency: Consistency::None,
+        chunking: Chunking::Fixed { size: CHUNK },
+        clock: ClockSource::Sim,
+        verify_write: true,
+        obs,
+        ..Default::default()
+    })
+    .expect("boot")
+}
+
+/// A payload of `n` distinct chunks (no intra-object duplicates).
+fn unique_payload(n: usize, salt: u8) -> Vec<u8> {
+    let mut data = vec![0u8; n * CHUNK];
+    for (i, block) in data.chunks_mut(CHUNK).enumerate() {
+        for (j, b) in block.iter_mut().enumerate() {
+            *b = ((i * 131 + j * 7) % 251) as u8 ^ salt;
+        }
+    }
+    data
+}
+
+/// Arm the probe-gap hook on `name`'s write primary so the put spends
+/// `ms` of simulated time between its two phases (making it slow under
+/// the tail threshold without perturbing any other op).
+fn arm_slow_put(cluster: &Cluster, name: &str, ms: u64) {
+    let writer = cluster
+        .with_osd(ServerId(0), |sh| sh.object_chain(name)[0])
+        .unwrap();
+    let sim = cluster.sim_clock().unwrap();
+    cluster
+        .with_osd(writer, move |sh| {
+            let hook = move || {
+                sim.advance(ms);
+            };
+            *sh.probe_gap_hook.lock().unwrap() = Some(Box::new(hook));
+        })
+        .unwrap();
+}
+
+#[test]
+fn slow_put_yields_cross_server_span_tree() {
+    let cluster = boot(ObsConfig {
+        slow_op_threshold_ms: 10,
+        span_ring_capacity: 4096,
+        ..ObsConfig::default()
+    });
+    let client = cluster.client();
+
+    arm_slow_put(&cluster, "obj", 50);
+    client.put_object("obj", &unique_payload(16, 0)).unwrap();
+
+    let dump = cluster.trace_dump();
+    assert_eq!(dump.traces.len(), 1, "exactly the slow put is retained");
+    let tree = &dump.traces[0];
+    let root = tree.root().expect("client root span survived");
+    assert_eq!(root.name, "client/put");
+    assert_eq!(root.server, CLIENT_SCOPE);
+    assert!(root.duration_ms() >= 50, "hook advanced the virtual clock");
+
+    // the acceptance chain: client root → frontend handler → batched
+    // two-phase fan-out → post-write replica verification
+    let frontend = tree.find("Frontend/PutObject").expect("frontend span");
+    for name in [
+        "Frontend/PutObject",
+        "Backend/ProbeChunks",
+        "Backend/StoreChunkBatch",
+        "Replica/VerifyCopy",
+    ] {
+        let span = tree.find(name).unwrap_or_else(|| panic!("missing {name}"));
+        assert!(
+            tree.reachable_from_root(span.span_id),
+            "{name} must parent-link back to the client root"
+        );
+    }
+    // the tree really crosses servers: batched groups only form for
+    // remote chunk homes, so the probe lands off the write primary
+    let probe = tree.find("Backend/ProbeChunks").unwrap();
+    assert_ne!(probe.server, frontend.server, "probe span is remote");
+    cluster.shutdown();
+}
+
+#[test]
+fn every_span_is_reachable_from_its_client_root() {
+    // threshold 0: every op is tail-retained, so the dump is the full
+    // population and reachability can be asserted universally
+    let cluster = boot(ObsConfig {
+        slow_op_threshold_ms: 0,
+        span_ring_capacity: 8192,
+        retained_traces: 256,
+        ..ObsConfig::default()
+    });
+    let client = cluster.client();
+    let mut ops = 0usize;
+    for i in 0..8u8 {
+        let name = format!("obj-{i}");
+        let data = unique_payload(8, i);
+        client.put_object(&name, &data).unwrap();
+        assert_eq!(client.get_object(&name).unwrap(), data);
+        ops += 2;
+    }
+    for i in [0u8, 3, 6] {
+        client.delete_object(&format!("obj-{i}")).unwrap();
+        ops += 1;
+    }
+
+    let dump = cluster.trace_dump();
+    assert_eq!(dump.traces.len(), ops, "one retained trace per client op");
+    for tree in &dump.traces {
+        let root = tree.root().expect("root survived (ring is oversized)");
+        assert!(root.name.starts_with("client/"), "{}", root.name);
+        for span in &tree.spans {
+            assert!(
+                tree.reachable_from_root(span.span_id),
+                "span {} ({}) orphaned in trace {}",
+                span.span_id,
+                span.name,
+                tree.trace_id
+            );
+        }
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn restart_clears_server_spans() {
+    let cluster = boot(ObsConfig {
+        slow_op_threshold_ms: 0,
+        span_ring_capacity: 4096,
+        ..ObsConfig::default()
+    });
+    let client = cluster.client();
+    for i in 0..3u8 {
+        client
+            .put_object(&format!("obj-{i}"), &unique_payload(8, i))
+            .unwrap();
+    }
+    let before = cluster.trace_dump();
+    assert!(
+        before
+            .traces
+            .iter()
+            .flat_map(|t| t.spans.iter())
+            .any(|s| s.server != CLIENT_SCOPE),
+        "sanity: server-side spans exist before the restarts"
+    );
+
+    for s in 0..3 {
+        cluster.kill_server(ServerId(s)).unwrap();
+        cluster.restart_server(ServerId(s)).unwrap();
+    }
+    let after = cluster.trace_dump();
+    assert_eq!(after.traces.len(), 3, "retention survives the restarts");
+    for tree in &after.traces {
+        for span in &tree.spans {
+            assert_eq!(
+                span.server, CLIENT_SCOPE,
+                "span {} leaked across restart_server",
+                span.name
+            );
+        }
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn tail_sampler_retains_exactly_the_slow_ops() {
+    let cluster = boot(ObsConfig {
+        slow_op_threshold_ms: 10,
+        span_ring_capacity: 4096,
+        ..ObsConfig::default()
+    });
+    let client = cluster.client();
+    let mut slow = Vec::new();
+    for i in 0..6u8 {
+        let name = format!("obj-{i}");
+        if i % 2 == 0 {
+            arm_slow_put(&cluster, &name, 50);
+            slow.push(name.clone());
+        }
+        client.put_object(&name, &unique_payload(8, i)).unwrap();
+    }
+    assert_eq!(slow.len(), 3);
+    let dump = cluster.trace_dump();
+    assert_eq!(dump.traces.len(), slow.len(), "only the slow ops retained");
+    for tree in &dump.traces {
+        let root = tree.root().expect("root");
+        assert!(root.duration_ms() >= 10, "retained op really was slow");
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn head_sampler_retains_every_nth_op() {
+    let cluster = boot(ObsConfig {
+        // tail sampling effectively off; only the 1-in-3 exemplar stream
+        slow_op_threshold_ms: 1_000_000,
+        head_sample_every: 3,
+        span_ring_capacity: 4096,
+        ..ObsConfig::default()
+    });
+    let client = cluster.client();
+    for i in 0..9u8 {
+        client
+            .put_object(&format!("obj-{i}"), &unique_payload(4, i))
+            .unwrap();
+    }
+    let dump = cluster.trace_dump();
+    assert_eq!(dump.traces.len(), 3, "every 3rd of 9 ops is an exemplar");
+    for tree in &dump.traces {
+        assert_eq!(tree.root().expect("root").name, "client/put");
+    }
+    cluster.shutdown();
+}
