@@ -3,9 +3,9 @@
 //! A `Cluster` assembles the monitor, the placement layer, one OSD
 //! thread-group per server, the optional failure detector and the shared
 //! metrics, then hands out cheap clonable [`Client`] handles. Admin
-//! operations (add/kill/restart/remove server, rebalance, GC, audit,
-//! scrub, recovery) live on the cluster object; data operations live on
-//! clients.
+//! operations (add/kill/restart/remove/rejoin server, rebalance, GC,
+//! audit, scrub, recovery) live on the cluster object; data operations
+//! live on clients.
 
 use crate::cluster::{Monitor, ServerId, ServerState};
 use crate::dedup::consistency::ConsistencyMode;
@@ -37,7 +37,10 @@ use std::sync::{Arc, Mutex, RwLock};
 
 pub use crate::dedup::consistency::ConsistencyMode as Consistency;
 pub use crate::dedup::engine::{DedupMode, WriteBatching};
-pub use crate::recovery::{FailureDetection, RecoveryState, RecoveryStatus};
+pub use crate::recovery::{
+    FailureDetection, ObserverHook, ObserverVerdict, RecoveryState, RecoveryStatus,
+};
+pub use crate::storage::rebalance::{RebalanceState, RebalanceStatus};
 pub use crate::sched::flow::{FlowConfig, MaintClass};
 pub use crate::sched::{SchedStatus, ScrubSchedule};
 pub use crate::scrub::{ScrubKind, ScrubOptions, ScrubState, ScrubStatus};
@@ -265,6 +268,12 @@ pub struct ClusterStats {
     /// Referenced chunks with no surviving copy anywhere (quarantined;
     /// 0 unless more copies were lost than replication covers).
     pub recovery_lost: u64,
+    /// `Out` servers wiped and re-admitted by [`Cluster::rejoin_server`].
+    pub membership_rejoins: u64,
+    /// Local-state wipes performed on the rejoin path.
+    pub membership_wipes: u64,
+    /// Map-change events that auto-enqueued a cluster-wide rebalance.
+    pub membership_auto_rebalances: u64,
     /// Per-server snapshots.
     pub per_server: Vec<OsdStats>,
 }
@@ -383,6 +392,43 @@ impl RecoveryReport {
     pub fn first_failure(&self) -> Option<String> {
         self.per_server.iter().find_map(|s| match &s.state {
             RecoveryState::Failed(e) => Some(format!("osd.{}: {e}", s.server)),
+            _ => None,
+        })
+    }
+}
+
+/// Cluster-wide rebalance report: per-server worker snapshots plus
+/// their aggregate (see [`crate::storage::rebalance`] for field
+/// semantics). Named distinctly from the per-scan
+/// [`crate::storage::rebalance::RebalanceReport`].
+#[derive(Clone, Debug, Default)]
+pub struct RebalanceProgress {
+    /// One status per live server polled.
+    pub per_server: Vec<RebalanceStatus>,
+    /// Completed scans across all servers.
+    pub runs: u64,
+    /// Chunks migrated to their new primary.
+    pub chunks_moved: u64,
+    /// Bytes of chunk data migrated.
+    pub chunk_bytes_moved: u64,
+    /// OMAP records re-homed.
+    pub omap_moved: u64,
+    /// Moves skipped because the destination was unreachable.
+    pub skipped_unreachable: u64,
+}
+
+impl RebalanceProgress {
+    /// Is any server's rebalance scan still queued or running?
+    pub fn is_running(&self) -> bool {
+        self.per_server.iter().any(|s| {
+            s.queued > 0 || matches!(s.state, RebalanceState::Queued | RebalanceState::Running)
+        })
+    }
+
+    /// First per-server failure, if any scan aborted.
+    pub fn first_failure(&self) -> Option<String> {
+        self.per_server.iter().find_map(|s| match &s.state {
+            RebalanceState::Failed(e) => Some(format!("osd.{}: {e}", s.server)),
             _ => None,
         })
     }
@@ -571,6 +617,7 @@ impl Cluster {
             pending: crate::dedup::consistency::PendingFlags::new(),
             scrub: crate::scrub::ScrubCtl::for_server(id.0),
             recovery: crate::recovery::RecoveryCtl::for_server(id.0),
+            rebalance: crate::storage::rebalance::RebalanceCtl::for_server(id.0),
             sched: SchedCtl::new(),
             flow: FlowController::new(self.cfg.maint_flow.clone(), self.clock.clone()),
             verify_gate: Gate::new(self.cfg.verify_inflight_cap),
@@ -633,14 +680,21 @@ impl Cluster {
     // ---- membership / failure admin ----
 
     /// Add a server and rebalance the whole cluster onto the new map.
+    /// The map change auto-enqueues a rebalance scan on every server
+    /// ([`crate::membership::auto_rebalance`]); this call then blocks
+    /// until the scans drain so the newcomer holds its share on return.
     pub fn add_server(&self) -> Result<ServerId> {
-        let (id, _) = self.monitor.add_server(1.0);
-        self.spawn_osd(id)?;
-        if let Some(det) = &self.detector {
-            det.register(id, self.clock.now_ms());
-        }
-        self.rebalance()?;
-        Ok(id)
+        let body = || {
+            let (id, _) = self.monitor.add_server(1.0);
+            self.spawn_osd(id)?;
+            if let Some(det) = &self.detector {
+                det.register(id, self.clock.now_ms());
+            }
+            crate::membership::auto_rebalance(&self.monitor, &self.dir, &self.metrics);
+            self.rebalance_wait()?;
+            Ok(id)
+        };
+        self.obs.with_root("membership/join", || self.clock.now_ms(), body)
     }
 
     /// Abrupt, silent crash of a server. The map is not touched here:
@@ -738,18 +792,90 @@ impl Cluster {
     /// detector's out-transition. [`Error::ServerRemoved`] when already
     /// out, [`Error::UnknownServer`] for ids the map has never seen.
     pub fn remove_server(&self, id: ServerId) -> Result<()> {
-        match self.monitor.map().server(id) {
-            None => return Err(Error::UnknownServer(id.0)),
-            Some(s) if s.state == ServerState::Out => {
-                return Err(Error::ServerRemoved(id.0));
+        let body = || {
+            match self.monitor.map().server(id) {
+                None => return Err(Error::UnknownServer(id.0)),
+                Some(s) if s.state == ServerState::Out => {
+                    return Err(Error::ServerRemoved(id.0));
+                }
+                Some(_) => {}
             }
-            Some(_) => {}
-        }
-        if let Some(osd) = self.osds.lock().unwrap().get(&id) {
-            osd.kill();
-        }
-        self.monitor.mark_out(id)?;
-        detector::trigger_recovery(&self.monitor, &self.dir, id);
+            if let Some(osd) = self.osds.lock().unwrap().get(&id) {
+                osd.kill();
+            }
+            self.monitor.mark_out(id)?;
+            detector::trigger_recovery(&self.monitor, &self.dir, id);
+            crate::membership::auto_rebalance(&self.monitor, &self.dir, &self.metrics);
+            Ok(())
+        };
+        self.obs.with_root("membership/evict", || self.clock.now_ms(), body)
+    }
+
+    /// Wipe-and-rejoin an `Out` server: fence whatever is left of the
+    /// old identity, erase its entire local state (OMAP, CIT,
+    /// backreference index, chunk + replica stores), then re-admit it
+    /// `Up` with zero holdings — recovery and the auto-enqueued
+    /// rebalance backfill it from authoritative copies. Rejoining
+    /// *with* the stale state is never offered: its refcounts and
+    /// references describe a map edition that no longer exists, and
+    /// merging them would double-count shared chunks or resurrect
+    /// deleted objects (DESIGN.md §13). [`Error::NotRemoved`] when the
+    /// server is not `Out` (a live identity restarts via
+    /// [`Cluster::restart_server`] instead), [`Error::UnknownServer`]
+    /// for ids the map has never seen. Like a restart, the rejoined
+    /// server re-queues recovery backfill for every server still `Out`.
+    pub fn rejoin_server(&self, id: ServerId) -> Result<()> {
+        let body = || {
+            match self.monitor.map().server(id) {
+                None => return Err(Error::UnknownServer(id.0)),
+                Some(s) if s.state != ServerState::Out => {
+                    return Err(Error::NotRemoved(id.0));
+                }
+                Some(_) => {}
+            }
+            let shared = {
+                let osds = self.osds.lock().unwrap();
+                let osd = osds.get(&id).ok_or(Error::ServerDown(id.0))?;
+                // fence: idempotent when the out-transition already
+                // killed it, and load-bearing when the server is a
+                // fail-slow zombie that was marked out while running —
+                // no lane may serve stale state once the wipe starts
+                osd.kill();
+                osd.shared.clone()
+            };
+            crate::membership::wipe_local_state(&shared)?;
+            shared.injector.revive();
+            if let Some(det) = &self.detector {
+                // fresh proof of life, as on restart: the new
+                // incarnation is not judged on the old one's silence
+                det.register(id, self.clock.now_ms());
+            }
+            self.monitor.mark_up(id)?;
+            Metrics::add(&self.metrics.membership_rejoins, 1);
+            // the rejoined server missed every recovery trigger while
+            // fenced: re-queue backfill for the servers still Out
+            for s in &self.monitor.map().servers {
+                if s.state == ServerState::Out {
+                    shared.recovery.enqueue(s.id.0);
+                }
+            }
+            crate::membership::auto_rebalance(&self.monitor, &self.dir, &self.metrics);
+            Ok(())
+        };
+        self.obs.with_root("membership/rejoin", || self.clock.now_ms(), body)
+    }
+
+    /// Install (or clear with `None`) the failure detector's per-
+    /// observer test hook: every heartbeat verdict passes through it
+    /// with the observer's index, so tests model a flaky or lying
+    /// observer and prove the quorum holds ([`ObserverHook`],
+    /// [`crate::recovery::detector`]). [`Error::Invalid`] when the
+    /// cluster was built without [`ClusterConfig::failure_detection`].
+    pub fn set_observer_hook(&self, hook: Option<ObserverHook>) -> Result<()> {
+        let det = self.detector.as_ref().ok_or_else(|| {
+            Error::Invalid("observer hook needs failure_detection".into())
+        })?;
+        det.set_observer_hook(hook);
         Ok(())
     }
 
@@ -791,12 +917,24 @@ impl Cluster {
         Ok(())
     }
 
-    /// Trigger the rebalance scan on every server (after map changes).
+    /// Trigger a rebalance scan on every live server (after map
+    /// changes) and block until the scans drain — the synchronous
+    /// admin form of the auto-enqueue that membership events fire.
+    /// Scans run on each server's rebalance worker; use
+    /// [`Cluster::rebalance_status`] to watch them without blocking.
     pub fn rebalance(&self) -> Result<()> {
-        for id in self.live_ids() {
-            let _ = self.control(id, Req::Rebalance)?;
+        let mut ids = self.live_ids();
+        ids.sort();
+        for id in ids {
+            match self.control(id, Req::StartRebalance) {
+                Ok(_) => {}
+                // a dead server cannot hold misplaced data a scan
+                // would find; it rebalances after restart/rejoin
+                Err(Error::ServerDown(_)) => {}
+                Err(e) => return Err(e),
+            }
         }
-        Ok(())
+        self.rebalance_wait().map(|_| ())
     }
 
     /// Audit + re-derive the backreference index on every live server
@@ -908,6 +1046,9 @@ impl Cluster {
             recovery_omap_recovered: sum(|m| &m.recovery_omap_recovered),
             recovery_refs_fixed: sum(|m| &m.recovery_refs_fixed),
             recovery_lost: sum(|m| &m.recovery_lost),
+            membership_rejoins: sum(|m| &m.membership_rejoins),
+            membership_wipes: sum(|m| &m.membership_wipes),
+            membership_auto_rebalances: sum(|m| &m.membership_auto_rebalances),
             per_server: Vec::new(),
         };
         let mut ids = self.live_ids();
@@ -1181,6 +1322,48 @@ impl Cluster {
     pub fn recovery_wait(&self) -> Result<RecoveryReport> {
         loop {
             let report = self.recovery_status()?;
+            if !report.is_running() {
+                return Ok(report);
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+    }
+
+    /// Snapshot every live server's rebalance-worker progress,
+    /// aggregated into a [`RebalanceProgress`]. Dead servers are
+    /// skipped (their queued scans are volatile; restart/rejoin paths
+    /// re-enqueue on the next map change).
+    pub fn rebalance_status(&self) -> Result<RebalanceProgress> {
+        let mut report = RebalanceProgress::default();
+        let mut ids = self.live_ids();
+        ids.sort();
+        for id in ids {
+            match self.control(id, Req::RebalanceStatus) {
+                Ok(Resp::Rebalance(st)) => {
+                    report.runs += st.runs;
+                    report.chunks_moved += st.chunks_moved;
+                    report.chunk_bytes_moved += st.chunk_bytes_moved;
+                    report.omap_moved += st.omap_moved;
+                    report.skipped_unreachable += st.skipped_unreachable;
+                    report.per_server.push(st);
+                }
+                Ok(_) => {}
+                Err(Error::ServerDown(_)) => {} // dead servers skipped
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(report)
+    }
+
+    /// Block until no live server's rebalance scan is queued or
+    /// running; returns the final aggregated report. The same
+    /// finite-budget caveat as [`Cluster::recovery_wait`] applies:
+    /// scans charge the Rebalance flow class, so virtual-clock tests
+    /// with a finite budget should poll [`Cluster::rebalance_status`]
+    /// interleaved with [`Cluster::advance_clock`] instead.
+    pub fn rebalance_wait(&self) -> Result<RebalanceProgress> {
+        loop {
+            let report = self.rebalance_status()?;
             if !report.is_running() {
                 return Ok(report);
             }

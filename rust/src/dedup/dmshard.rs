@@ -432,6 +432,19 @@ impl DmShard {
         self.cit.sync()?;
         self.backref.sync()
     }
+
+    /// Erase all three stores (wipe-and-rejoin). Taken under both
+    /// read-modify-write locks so no concurrent OMAP/CIT mutation can
+    /// interleave with the wipe and resurrect a partial record; callers
+    /// must have fenced the server's lanes first, this is belt and
+    /// braces.
+    pub fn wipe(&self) -> Result<()> {
+        let _omap_guard = self.omap_rmw.lock().unwrap();
+        let _cit_guard = self.rmw.lock().unwrap();
+        self.omap.clear()?;
+        self.cit.clear()?;
+        self.backref.clear()
+    }
 }
 
 #[cfg(test)]
@@ -463,6 +476,33 @@ mod tests {
         assert_eq!(d, BackrefDelta { added: 0, removed: 1 });
         assert!(s.omap_get("obj").unwrap().is_none());
         assert!(s.omap_delete("obj").unwrap().is_none(), "second delete");
+    }
+
+    #[test]
+    fn wipe_empties_all_three_stores() {
+        let s = shard();
+        let e = OmapEntry::new(
+            "obj".into(),
+            Fingerprint::of(b"obj"),
+            vec![(Fingerprint::of(b"c"), 10)],
+        );
+        s.omap_put(&e).unwrap();
+        s.cit_put(
+            &Fingerprint::of(b"c"),
+            &CitEntry {
+                refcount: 1,
+                flag: CommitFlag::Valid,
+                len: 10,
+                flagged_at_ms: 0,
+            },
+        )
+        .unwrap();
+        assert!(s.omap_len() > 0 && s.cit_len() > 0 && s.backref_len() > 0);
+        s.wipe().unwrap();
+        assert_eq!(s.omap_len(), 0);
+        assert_eq!(s.cit_len(), 0);
+        assert_eq!(s.backref_len(), 0);
+        assert!(s.omap_get("obj").unwrap().is_none());
     }
 
     #[test]

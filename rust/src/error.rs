@@ -19,8 +19,12 @@ pub enum Error {
     UnknownServer(u32),
     /// The server was marked `Out` (removed from the cluster, its data
     /// re-replicated elsewhere); it cannot be restarted back into the
-    /// map — its state is stale by construction.
+    /// map — its state is stale by construction. The only way back in
+    /// is [`crate::api::Cluster::rejoin_server`], which wipes first.
     ServerRemoved(u32),
+    /// The server is not marked `Out` — wipe-and-rejoin only applies to
+    /// removed servers (an Up/Down server is still a live identity).
+    NotRemoved(u32),
     /// The cluster has no live server able to serve the request.
     NoQuorum,
     /// A write transaction was aborted (partial failure, rolled back).
@@ -47,6 +51,9 @@ impl fmt::Display for Error {
             Error::UnknownServer(id) => write!(f, "unknown server osd.{id}"),
             Error::ServerRemoved(id) => {
                 write!(f, "server osd.{id} was marked out and removed from the cluster")
+            }
+            Error::NotRemoved(id) => {
+                write!(f, "server osd.{id} is not removed (rejoin requires an out server)")
             }
             Error::NoQuorum => write!(f, "no live server available"),
             Error::TxAborted(why) => write!(f, "transaction aborted: {why}"),
@@ -83,6 +90,7 @@ mod tests {
         assert_eq!(Error::ServerDown(3).to_string(), "server osd.3 is down");
         assert_eq!(Error::UnknownServer(9).to_string(), "unknown server osd.9");
         assert!(Error::ServerRemoved(2).to_string().contains("osd.2"));
+        assert!(Error::NotRemoved(4).to_string().contains("osd.4"));
         assert!(Error::ObjectNotFound("x".into()).to_string().contains("x"));
         let e: Error = std::io::Error::new(std::io::ErrorKind::Other, "boom").into();
         assert!(matches!(e, Error::Io(_)));

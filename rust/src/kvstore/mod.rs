@@ -59,6 +59,16 @@ pub trait KvStore: Send + Sync {
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
+    /// Delete every live key (wipe-and-rejoin support). The default walks
+    /// `keys` and deletes one at a time, which keeps any per-store
+    /// accounting exact; implementations with a cheaper truncate may
+    /// override it.
+    fn clear(&self) -> Result<()> {
+        for key in self.keys()? {
+            self.delete(&key)?;
+        }
+        Ok(())
+    }
     /// Flush buffered writes to stable storage (no-op for MemKv).
     fn sync(&self) -> Result<()>;
 }
@@ -83,6 +93,9 @@ pub(crate) mod conformance {
         let mut keys = kv.keys().unwrap();
         keys.sort();
         assert_eq!(keys, vec![b"b".to_vec()]);
+        kv.clear().unwrap();
+        assert!(kv.is_empty(), "clear removes every live key");
+        assert_eq!(kv.get(b"b").unwrap(), None);
     }
 
     pub fn binary_safety(kv: &dyn KvStore) {

@@ -45,6 +45,11 @@
 //!   every survivor re-replicates the lost chunks and OMAP records from
 //!   surviving copies — most-referenced chunks first — until the cluster
 //!   is back at full replication ([`recovery`], DESIGN.md §11);
+//! * **elastic membership**: wipe-and-rejoin re-admits an `Out` server
+//!   only after erasing its stale state, a quorum of independent
+//!   heartbeat observers gates every eviction, and map changes
+//!   auto-enqueue flow-controlled rebalance scans — no operator call
+//!   ([`membership`], DESIGN.md §13);
 //! * an **observability layer**: trace contexts in every fabric envelope
 //!   with per-server span rings and tail-based slow-op sampling
 //!   (`Cluster::trace_dump` reassembles cross-server trees), a per-server
@@ -89,6 +94,7 @@ pub mod error;
 pub mod failure;
 pub mod hash;
 pub mod kvstore;
+pub mod membership;
 pub mod metrics;
 pub mod net;
 pub mod obs;

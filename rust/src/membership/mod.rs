@@ -1,0 +1,69 @@
+//! Elastic membership: wipe-and-rejoin and map-change auto-rebalance.
+//!
+//! The paper's shared-nothing design assumes the cluster map can change
+//! — servers join, fail, and return — while content-addressed placement
+//! and dedup metadata stay consistent. This module closes the loop that
+//! [`crate::recovery`] opened:
+//!
+//! * **Wipe-and-rejoin** ([`crate::api::Cluster::rejoin_server`]) — an
+//!   `Out` server is re-admitted only after its *entire* local state
+//!   (OMAP, CIT, backreference index, chunk store, replica store) is
+//!   erased. The old identity was fenced on the out-transition and
+//!   recovery re-homed its holdings onto the survivors, so every
+//!   refcount in its CIT and every reference in its OMAP is stale by
+//!   construction: re-admitting them would double-count shared chunks
+//!   (corrupting GC's reclaim decisions) or resurrect deleted objects.
+//!   An empty server re-admitted Up is merely *underweighted* — exactly
+//!   the state `add_server` creates — and the normal rebalance/recovery
+//!   machinery backfills it from authoritative copies.
+//! * **Auto-rebalance** ([`auto_rebalance`]) — every map-change event
+//!   (add, detector out, rejoin) fans a [`Req::StartRebalance`] to every
+//!   `Up` server's control lane, fire-and-forget. The per-server
+//!   rebalance workers ([`crate::storage::rebalance`]) run the scans,
+//!   charging [`crate::sched::flow::MaintClass::Rebalance`] from the
+//!   shared maintenance budget — no operator call, no unthrottled burst.
+//! * **Detector quorum** lives in [`crate::recovery::detector`]: the
+//!   Down→Out path that makes rejoin necessary now requires a
+//!   configurable quorum of independent heartbeat observers, so one
+//!   flaky control path cannot evict a healthy server.
+//!
+//! Observability: [`crate::metrics::Metrics::membership_rejoins`],
+//! [`crate::metrics::Metrics::membership_wipes`] and
+//! [`crate::metrics::Metrics::membership_auto_rebalances`] count the
+//! three events; the join/evict paths run under `membership/*` root
+//! trace spans.
+
+use crate::cluster::{Monitor, ServerState};
+use crate::metrics::Metrics;
+use crate::net::Lane;
+use crate::storage::osd::OsdShared;
+use crate::storage::proto::{Dir, Req};
+
+/// Fan a queued rebalance scan to every `Up` server (fire-and-forget:
+/// the control-lane handler only enqueues on the rebalance worker) and
+/// count one auto-rebalance event. Called on every map-change event —
+/// server added, detector out-transition, admin removal, rejoin.
+pub fn auto_rebalance(monitor: &Monitor, dir: &Dir, metrics: &Metrics) {
+    Metrics::add(&metrics.membership_auto_rebalances, 1);
+    let map = monitor.map();
+    for s in map.servers.iter().filter(|s| s.state == ServerState::Up) {
+        if let Ok(addr) = dir.lookup(s.id, Lane::Control) {
+            let req = Req::StartRebalance;
+            let size = req.wire_size();
+            let _ = addr.send(req, size);
+        }
+    }
+}
+
+/// Erase one server's entire local state — DM-Shard (OMAP + CIT +
+/// backreference index), primary chunk store and replica store — and
+/// count the wipe. The caller must have fenced the server first (lanes
+/// dead, workers cleared): this is the "wipe" half of wipe-and-rejoin,
+/// never valid on a live identity.
+pub(crate) fn wipe_local_state(sh: &OsdShared) -> crate::error::Result<()> {
+    sh.shard.wipe()?;
+    sh.store.clear()?;
+    sh.replica_store.clear()?;
+    Metrics::add(&sh.metrics.membership_wipes, 1);
+    Ok(())
+}

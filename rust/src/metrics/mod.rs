@@ -145,6 +145,15 @@ pub struct Metrics {
     /// Write-verification probes whose replica was missing or
     /// digest-mismatched (0 in steady state).
     pub write_verify_mismatches: AtomicU64,
+    /// Out servers re-admitted by wipe-and-rejoin
+    /// ([`crate::api::Cluster::rejoin_server`]).
+    pub membership_rejoins: AtomicU64,
+    /// Local-state wipes performed on the rejoin path (KV + CIT + OMAP
+    /// + chunk/replica stores erased before re-admission).
+    pub membership_wipes: AtomicU64,
+    /// Rebalance scans auto-enqueued by membership changes (add, out,
+    /// rejoin) — one per map-change event, fanned to every Up server.
+    pub membership_auto_rebalances: AtomicU64,
     /// Write-path (put) latency histogram.
     pub put_latency: Histogram,
     /// Read-path (get) latency histogram.
@@ -240,6 +249,9 @@ impl Metrics {
             read_amp_homes,
             write_verifies,
             write_verify_mismatches,
+            membership_rejoins,
+            membership_wipes,
+            membership_auto_rebalances,
         ]
     }
 

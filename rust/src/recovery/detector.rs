@@ -17,6 +17,17 @@
 //!    └────────── ping answers ────────────────┘          (sticky; fence + recovery)
 //! ```
 //!
+//! **Quorum.** Each due probe round runs
+//! [`FailureDetection::observers`] independent heartbeats and the
+//! verdicts vote: the round only counts as evidence of death when at
+//! least [`FailureDetection::out_quorum`] observers report a dropped
+//! envelope. One flaky or lying observer (a bad control path, a
+//! partitioned prober) can therefore never walk a healthy server down
+//! the Down→Out path as long as `out_quorum ≥ 2` — a single dissenting
+//! `Alive` answer is proof of life and resets the silence window. A
+//! genuinely dead lane drops every observer's envelope, so the quorum is
+//! met on the same tick it would have been without voting.
+//!
 //! *Silence* is measured from the last proof of life (`last_ok_ms`,
 //! seeded at registration time), so a single large
 //! [`crate::api::Cluster::advance_clock`] jump past `grace + out` marks a
@@ -67,6 +78,13 @@ pub struct FailureDetection {
     /// removed from placement, and recovery backfill re-replicates its
     /// data from surviving copies. Must be ≥ `grace_ticks`.
     pub out_ticks: u64,
+    /// Independent heartbeat observers per probe round. Each runs its
+    /// own ping; their verdicts vote (see the module docs).
+    pub observers: u32,
+    /// Dead votes required before a probe round counts as evidence of
+    /// death. With `out_quorum ≥ 2` a single flaky observer can never
+    /// evict a healthy server. Must be in `1..=observers`.
+    pub out_quorum: u32,
 }
 
 impl Default for FailureDetection {
@@ -75,12 +93,15 @@ impl Default for FailureDetection {
             probe_every_ticks: 250,
             grace_ticks: 1_000,
             out_ticks: 5_000,
+            observers: 3,
+            out_quorum: 2,
         }
     }
 }
 
 impl FailureDetection {
-    /// Reject degenerate windows (zero grace, out shorter than grace).
+    /// Reject degenerate windows (zero grace, out shorter than grace)
+    /// and unsatisfiable quorums (zero observers, quorum > observers).
     pub fn validate(&self) -> Result<()> {
         if self.probe_every_ticks == 0 || self.grace_ticks == 0 {
             return Err(crate::error::Error::Invalid(
@@ -90,6 +111,16 @@ impl FailureDetection {
         if self.out_ticks < self.grace_ticks {
             return Err(crate::error::Error::Invalid(
                 "failure_detection out_ticks must be >= grace_ticks".into(),
+            ));
+        }
+        if self.observers == 0 || self.out_quorum == 0 {
+            return Err(crate::error::Error::Invalid(
+                "failure_detection observers and out_quorum must be > 0".into(),
+            ));
+        }
+        if self.out_quorum > self.observers {
+            return Err(crate::error::Error::Invalid(
+                "failure_detection out_quorum must be <= observers".into(),
             ));
         }
         Ok(())
@@ -104,11 +135,19 @@ struct Health {
     last_probe_ms: Option<u64>,
 }
 
+/// A fault-injection hook mapping one observer's raw heartbeat verdict
+/// to the verdict the vote actually counts: `(observer index, probed
+/// server, raw verdict) → counted verdict`. Tests use it to model a
+/// lying or flaky observer without breaking a real control lane.
+pub type ObserverHook =
+    Box<dyn Fn(usize, ServerId, ObserverVerdict) -> ObserverVerdict + Send + Sync>;
+
 /// Cluster-level failure detector state (one per cluster, shared by the
 /// wall-clock thread and the virtual-clock tick path).
 pub struct Detector {
     cfg: FailureDetection,
     inner: Mutex<HashMap<u32, Health>>,
+    observer_hook: Mutex<Option<ObserverHook>>,
 }
 
 impl Detector {
@@ -117,12 +156,19 @@ impl Detector {
         Detector {
             cfg,
             inner: Mutex::new(HashMap::new()),
+            observer_hook: Mutex::new(None),
         }
     }
 
     /// The configured windows.
     pub fn config(&self) -> &FailureDetection {
         &self.cfg
+    }
+
+    /// Install (or with `None` remove) the per-observer fault-injection
+    /// hook — see [`ObserverHook`].
+    pub fn set_observer_hook(&self, hook: Option<ObserverHook>) {
+        *self.observer_hook.lock().unwrap() = hook;
     }
 
     /// (Re-)register a server with a fresh proof of life at `now`.
@@ -140,8 +186,9 @@ impl Detector {
     }
 }
 
-/// One heartbeat's three-way verdict.
-enum Verdict {
+/// One heartbeat observer's three-way verdict.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObserverVerdict {
     /// The control lane answered: proof of life.
     Alive,
     /// The envelope was dropped without a reply: crash-semantics
@@ -151,19 +198,49 @@ enum Verdict {
     Unknown,
 }
 
-fn ping(dir: &Dir, id: ServerId) -> Verdict {
+fn ping(dir: &Dir, id: ServerId) -> ObserverVerdict {
     let Ok(addr) = dir.lookup(id, Lane::Control) else {
-        return Verdict::Dead; // deregistered: permanently gone
+        return ObserverVerdict::Dead; // deregistered: permanently gone
     };
     let req = Req::Ping;
     let size = req.wire_size();
     match addr.send(req, size) {
-        Err(_) => Verdict::Dead,
+        Err(_) => ObserverVerdict::Dead,
         Ok(pending) => match pending.wait_for(PING_WAIT) {
-            Ok(Some(_)) => Verdict::Alive,
-            Ok(None) => Verdict::Unknown,
-            Err(_) => Verdict::Dead,
+            Ok(Some(_)) => ObserverVerdict::Alive,
+            Ok(None) => ObserverVerdict::Unknown,
+            Err(_) => ObserverVerdict::Dead,
         },
+    }
+}
+
+/// Run one quorum probe round against `id`: every observer pings, the
+/// hook (if any) rewrites each raw verdict, and the votes aggregate. A
+/// round is `Dead` only when at least `out_quorum` observers saw a
+/// dropped envelope; any surviving `Alive` answer below that bar is
+/// proof of life; all-inconclusive stays inconclusive.
+fn probe_round(det: &Detector, dir: &Dir, id: ServerId, metrics: &Metrics) -> ObserverVerdict {
+    let hook = det.observer_hook.lock().unwrap();
+    let mut alive = 0u32;
+    let mut dead = 0u32;
+    for observer in 0..det.cfg.observers {
+        Metrics::add(&metrics.detector_probes, 1);
+        let mut verdict = ping(dir, id);
+        if let Some(h) = hook.as_ref() {
+            verdict = h(observer as usize, id, verdict);
+        }
+        match verdict {
+            ObserverVerdict::Alive => alive += 1,
+            ObserverVerdict::Dead => dead += 1,
+            ObserverVerdict::Unknown => {}
+        }
+    }
+    if dead >= det.cfg.out_quorum {
+        ObserverVerdict::Dead
+    } else if alive > 0 {
+        ObserverVerdict::Alive
+    } else {
+        ObserverVerdict::Unknown
     }
 }
 
@@ -206,8 +283,7 @@ pub(crate) fn run_tick(
         if !due {
             continue;
         }
-        Metrics::add(&metrics.detector_probes, 1);
-        let verdict = ping(dir, s.id);
+        let verdict = probe_round(det, dir, s.id, metrics);
         // Transitions are decided against a *fresh* state read, not the
         // snapshot the probe loop iterates (the probe itself waits up to
         // PING_WAIT, and an admin remove_server may have marked the
@@ -219,7 +295,7 @@ pub(crate) fn run_tick(
             continue;
         }
         match verdict {
-            Verdict::Alive => {
+            ObserverVerdict::Alive => {
                 det.inner.lock().unwrap().get_mut(&s.id.0).unwrap().last_ok_ms = now;
                 if fresh == Some(ServerState::Down) {
                     // heartbeats resumed: transient failure over
@@ -227,8 +303,8 @@ pub(crate) fn run_tick(
                     Metrics::add(&metrics.detector_marked_up, 1);
                 }
             }
-            Verdict::Unknown => {}
-            Verdict::Dead => {
+            ObserverVerdict::Unknown => {}
+            ObserverVerdict::Dead => {
                 let silent = now.saturating_sub(last_ok);
                 if silent >= det.cfg.out_ticks {
                     let _ = monitor.mark_out(s.id);
@@ -248,6 +324,9 @@ pub(crate) fn run_tick(
             osd.kill();
         }
         trigger_recovery(monitor, dir, lost);
+        // the out-transition changed the map: survivors whose PGs
+        // re-primaried must migrate, same as any other map change
+        crate::membership::auto_rebalance(monitor, dir, metrics);
     }
 }
 
@@ -281,9 +360,36 @@ mod tests {
             grace_ticks: 100,
             out_ticks: 50,
             probe_every_ticks: 10,
+            ..Default::default()
         }
         .validate()
         .is_err());
+        assert!(FailureDetection {
+            observers: 0,
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+        assert!(FailureDetection {
+            out_quorum: 0,
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+        assert!(FailureDetection {
+            observers: 2,
+            out_quorum: 3,
+            ..Default::default()
+        }
+        .validate()
+        .is_err());
+        assert!(FailureDetection {
+            observers: 1,
+            out_quorum: 1,
+            ..Default::default()
+        }
+        .validate()
+        .is_ok());
     }
 
     #[test]

@@ -53,7 +53,7 @@
 pub mod detector;
 mod plan;
 
-pub use self::detector::{Detector, FailureDetection};
+pub use self::detector::{Detector, FailureDetection, ObserverHook, ObserverVerdict};
 
 use crate::cluster::{ServerId, ServerState};
 use crate::dedup::cit::CommitFlag;

@@ -34,6 +34,15 @@ pub trait StorageBackend: Send + Sync {
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
+    /// Delete every stored value (wipe-and-rejoin support). The default
+    /// walks `keys` and deletes one at a time so the byte/count
+    /// accounting stays exact for any implementation.
+    fn clear(&self) -> Result<()> {
+        for key in self.keys()? {
+            self.delete(&key)?;
+        }
+        Ok(())
+    }
 }
 
 /// In-memory backend.
@@ -234,6 +243,9 @@ mod tests {
         assert_eq!(store.stored_bytes(), 1000);
         let keys = store.keys().unwrap();
         assert_eq!(keys, vec![b"k2".to_vec()]);
+        store.clear().unwrap();
+        assert!(store.is_empty(), "clear removes every stored value");
+        assert_eq!(store.stored_bytes(), 0, "clear keeps accounting exact");
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! The object storage server (OSS/OSD).
 //!
-//! One `Osd` runs eight threads over a shared per-server state
+//! One `Osd` runs nine threads over a shared per-server state
 //! ([`OsdShared`], which models everything that survives a crash — the
 //! chunk store, the replica store and the DM-Shard are "disk"; the
 //! pending-flag queue and any in-flight scrub or recovery job are
@@ -15,7 +15,9 @@
 //! * **maintenance scheduler** — fires the periodic scrub cadence
 //!   ([`crate::sched`]);
 //! * **recovery worker** — re-replicates after a server loss
-//!   ([`crate::recovery`]).
+//!   ([`crate::recovery`]);
+//! * **rebalance worker** — migrates holdings after a map change
+//!   ([`crate::storage::rebalance`]).
 //!
 //! Kill/crash semantics: lanes keep running but silently *drop* every
 //! envelope while the injector reports dead — callers observe a closed
@@ -102,6 +104,9 @@ pub struct OsdShared {
     /// progress (a crash drops queued jobs; restart re-queues recovery
     /// for every `Out` server in the map).
     pub recovery: crate::recovery::RecoveryCtl,
+    /// Volatile: rebalance-worker one-slot job queue and progress (a
+    /// crash drops the pending scan; the next map change re-queues it).
+    pub rebalance: rebalance::RebalanceCtl,
     /// Maintenance scheduler: the armed periodic-scrub cadence and its
     /// fire accounting (configuration-like — survives kill/restart).
     pub sched: SchedCtl,
@@ -288,6 +293,19 @@ impl Osd {
             );
         }
 
+        // rebalance worker thread: runs queued migration scans after a
+        // map change (auto-rebalance), concurrently with foreground I/O.
+        {
+            let sh = shared.clone();
+            let sd = shutdown.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("{}-rebalance", shared.id))
+                    .spawn(move || rebalance::rebalance_loop(sh, sd))
+                    .expect("spawn rebalance"),
+            );
+        }
+
         Osd {
             shared,
             shutdown,
@@ -303,6 +321,7 @@ impl Osd {
         self.shared.pending.clear();
         self.shared.scrub.clear();
         self.shared.recovery.clear();
+        self.shared.rebalance.clear();
         self.shared.obs.clear_spans();
     }
 
@@ -743,6 +762,11 @@ fn dispatch(sh: &Arc<OsdShared>, lane: Lane, req: Req) -> Resp {
             Resp::Ok
         }
         (Lane::Control, Req::RecoveryStatus) => Resp::Recovery(sh.recovery.status()),
+        (Lane::Control, Req::StartRebalance) => {
+            sh.rebalance.enqueue();
+            Resp::Ok
+        }
+        (Lane::Control, Req::RebalanceStatus) => Resp::Rebalance(sh.rebalance.status()),
         (Lane::Control, Req::RecoveryProbe { lost }) => Resp::RecoveryAck {
             ensure_done: sh.recovery.is_ensured(lost),
         },

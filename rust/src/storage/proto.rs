@@ -11,6 +11,7 @@ use crate::dedup::fingerprint::Fingerprint;
 use crate::recovery::RecoveryStatus;
 use crate::sched::{SchedStatus, ScrubSchedule};
 use crate::scrub::{ScrubOptions, ScrubStatus};
+use crate::storage::rebalance::RebalanceStatus;
 
 /// All messages a server can receive.
 #[derive(Debug)]
@@ -116,8 +117,15 @@ pub enum Req {
     // ---- control lane (admin) ----
     /// Push a new cluster map epoch.
     ApplyMap(ClusterMap),
-    /// Scan and migrate data that no longer belongs here.
+    /// Scan and migrate data that no longer belongs here, synchronously
+    /// (the reply waits for the whole scan; see [`Req::StartRebalance`]
+    /// for the queued form).
     Rebalance,
+    /// Queue a rebalance scan on this server's rebalance worker
+    /// (map-change auto-rebalance path; the handler only enqueues).
+    StartRebalance,
+    /// Snapshot this server's rebalance worker progress.
+    RebalanceStatus,
     /// Drain the async consistency queue (tests/benches quiesce).
     FlushConsistency,
     /// Run a GC pass; entries invalid for longer than `threshold_ms` are
@@ -227,6 +235,8 @@ pub enum Resp {
     Scrub(ScrubStatus),
     /// Recovery worker progress snapshot.
     Recovery(RecoveryStatus),
+    /// Rebalance worker progress snapshot.
+    Rebalance(RebalanceStatus),
     /// Ensure-barrier answer (see [`Req::RecoveryProbe`]).
     RecoveryAck {
         /// True when the OMAP + ensure stage for the probed job is done

@@ -22,7 +22,12 @@ use crate::net::Lane;
 use crate::sched::flow::MaintClass;
 use crate::storage::osd::OsdShared;
 use crate::storage::proto::{Req, Resp};
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Worker poll interval for new jobs / shutdown.
+const POLL: Duration = Duration::from_millis(50);
 
 /// Outcome of one server's rebalance scan.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -39,6 +44,170 @@ pub struct RebalanceReport {
     /// are still reviving, and one dead home must not stall every other
     /// migration.
     pub skipped_unreachable: usize,
+}
+
+/// Lifecycle of a server's queued rebalance work.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub enum RebalanceState {
+    /// No rebalance has run since boot (or the last crash wiped it).
+    #[default]
+    Idle,
+    /// A scan is queued, waiting for the worker thread.
+    Queued,
+    /// A scan is in progress.
+    Running,
+    /// The last scan completed.
+    Done,
+    /// The last scan aborted (server died mid-pass, or an I/O error).
+    Failed(String),
+}
+
+/// One server's rebalance progress snapshot. The move counters are
+/// cumulative across scans since boot (a map change mid-scan re-queues
+/// another scan; callers gating on "migrations drained" look at `state`
+/// + `queued`, not the counters).
+#[derive(Clone, Debug, Default)]
+pub struct RebalanceStatus {
+    /// Server id.
+    pub server: u32,
+    /// Worker lifecycle state.
+    pub state: RebalanceState,
+    /// Scans still queued behind the current one (0 or 1: queued scans
+    /// collapse — one full scan covers every pending map change).
+    pub queued: usize,
+    /// Completed scans since boot.
+    pub runs: u64,
+    /// Chunks (CIT entry + data, or raw objects) migrated, cumulative.
+    pub chunks_moved: u64,
+    /// Bytes of migrated chunk data, cumulative.
+    pub chunk_bytes_moved: u64,
+    /// OMAP records migrated, cumulative.
+    pub omap_moved: u64,
+    /// Entries whose new home was unreachable, cumulative (left in
+    /// place for a later scan).
+    pub skipped_unreachable: u64,
+    /// Current/last scan start (ms since cluster start).
+    pub started_ms: u64,
+    /// Current/last scan end (ms since cluster start; 0 while running).
+    pub finished_ms: u64,
+}
+
+#[derive(Default)]
+struct CtlInner {
+    pending: bool,
+    status: RebalanceStatus,
+}
+
+/// Per-server rebalance control block: a collapsing one-slot job queue
+/// plus the externally visible status, mirroring
+/// [`crate::recovery::RecoveryCtl`]. Volatile — a crash drops the
+/// pending scan and fails the running one; the next map change (or
+/// explicit [`crate::api::Cluster::rebalance`]) re-queues it.
+#[derive(Default)]
+pub struct RebalanceCtl {
+    inner: Mutex<CtlInner>,
+    cv: Condvar,
+}
+
+impl RebalanceCtl {
+    /// Idle control block.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Idle control block that already knows its server id.
+    pub fn for_server(server: u32) -> Self {
+        let ctl = Self::default();
+        ctl.inner.lock().unwrap().status.server = server;
+        ctl
+    }
+
+    /// Queue a rebalance scan (idempotent: triggers while one is already
+    /// pending collapse; a trigger while a scan is *running* stays
+    /// pending so the worker runs one more full scan afterwards — the
+    /// running scan may have walked holdings before the newest map
+    /// epoch landed).
+    pub fn enqueue(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.pending = true;
+        if !matches!(g.status.state, RebalanceState::Running) {
+            g.status.state = RebalanceState::Queued;
+        }
+        self.cv.notify_one();
+    }
+
+    /// Current status snapshot (with the live queue depth).
+    pub fn status(&self) -> RebalanceStatus {
+        let g = self.inner.lock().unwrap();
+        let mut st = g.status.clone();
+        st.queued = usize::from(g.pending);
+        st
+    }
+
+    fn take_job(&self, timeout: Duration) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if !g.pending {
+            g = self.cv.wait_timeout(g, timeout).unwrap().0;
+        }
+        std::mem::take(&mut g.pending)
+    }
+
+    fn update(&self, f: impl FnOnce(&mut RebalanceStatus)) {
+        f(&mut self.inner.lock().unwrap().status);
+    }
+
+    /// Crash semantics (called from `Osd::kill`): the pending scan is
+    /// volatile and dies with the process.
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.pending = false;
+        if matches!(
+            g.status.state,
+            RebalanceState::Queued | RebalanceState::Running
+        ) {
+            g.status = RebalanceStatus {
+                server: g.status.server,
+                state: RebalanceState::Failed("server crashed".into()),
+                ..Default::default()
+            };
+        }
+    }
+}
+
+/// The per-server rebalance worker thread body (spawned by
+/// [`crate::storage::osd::Osd::spawn`]). Waits for queued scans and
+/// runs one full [`run`] pass per job.
+pub fn rebalance_loop(sh: Arc<OsdShared>, sd: Arc<AtomicBool>) {
+    while !sd.load(Ordering::SeqCst) {
+        if !sh.rebalance.take_job(POLL) {
+            continue;
+        }
+        if sh.injector.is_dead() {
+            continue; // the kill-time clear() already failed the status
+        }
+        let started = sh.now_ms();
+        sh.rebalance.update(|st| {
+            st.state = RebalanceState::Running;
+            st.started_ms = started;
+            st.finished_ms = 0;
+        });
+        let outcome = run(&sh);
+        let finished = sh.now_ms();
+        sh.rebalance.update(|st| {
+            st.finished_ms = finished;
+            match &outcome {
+                Ok(report) => {
+                    st.state = RebalanceState::Done;
+                    st.runs += 1;
+                    st.chunks_moved += report.chunks_moved as u64;
+                    st.chunk_bytes_moved += report.chunk_bytes_moved;
+                    st.omap_moved += report.omap_moved as u64;
+                    st.skipped_unreachable += report.skipped_unreachable as u64;
+                }
+                Err(e) => st.state = RebalanceState::Failed(e.to_string()),
+            }
+        });
+    }
 }
 
 /// Scan local holdings and migrate what no longer belongs here.

@@ -1,0 +1,249 @@
+//! Elastic-membership churn under a deterministic virtual clock
+//! (`snss_dedup::membership`, DESIGN.md §13).
+//!
+//! The headline harness for wipe-and-rejoin: servers join, fail, get
+//! evicted by the quorum detector and rejoin — under continuous
+//! put/get/delete traffic — and on every seed the cluster must converge
+//! to full replication (a second deep scrub with nothing left to do), a
+//! zero-finding audit, zero abandoned backpressure probes, and every
+//! surviving object readable byte-for-byte. A companion test pins the
+//! quorum argument end to end: one persistently flaky heartbeat
+//! observer, lying about *every* server under the same traffic, never
+//! evicts anyone.
+
+use snss_dedup::api::{
+    ClockSource, Cluster, ClusterConfig, FailureDetection, ObserverVerdict, ScrubOptions,
+};
+use snss_dedup::cluster::{ServerId, ServerState};
+use snss_dedup::dedup::Chunking;
+use snss_dedup::util::rng::{SplitMix64, XorShift128Plus};
+use std::collections::HashMap;
+
+const TICK: u64 = 10;
+const PROBE: u64 = 10;
+const GRACE: u64 = 40;
+const OUT: u64 = 120;
+
+fn churn_config() -> ClusterConfig {
+    ClusterConfig {
+        servers: 4,
+        replication: 2,
+        chunking: Chunking::Fixed { size: 1024 },
+        clock: ClockSource::Sim,
+        failure_detection: Some(FailureDetection {
+            probe_every_ticks: PROBE,
+            grace_ticks: GRACE,
+            out_ticks: OUT,
+            observers: 3,
+            out_quorum: 2,
+        }),
+        ..Default::default()
+    }
+}
+
+fn payload(seed: u64, len: usize) -> Vec<u8> {
+    let mut rng = XorShift128Plus::new(seed);
+    let mut v = vec![0u8; len];
+    rng.fill_bytes(&mut v);
+    v
+}
+
+/// What the test believes the cluster holds: object name → (payload
+/// seed, payload length) of the last *successful* put. A failed put or
+/// any delete drops the name — its durable state is legitimately
+/// unknown mid-failure, so nothing is asserted about it later.
+type Model = HashMap<String, (u64, usize)>;
+
+/// Drive `steps` random client ops, advancing the virtual clock one
+/// tick per op (so detector probes, schedules and flow refill keep
+/// moving with the traffic). Data-path errors are tolerated — servers
+/// are dead or mid-eviction on purpose — but any *successful* read of a
+/// modeled object must return exactly the modeled bytes.
+fn traffic(cluster: &Cluster, rng: &mut SplitMix64, model: &mut Model, steps: usize) {
+    let client = cluster.client();
+    for _ in 0..steps {
+        let name = format!("obj-{}", rng.below(16));
+        match rng.below(4) {
+            0 | 1 => {
+                let seed = rng.next_u64();
+                let len = 1024 + rng.below(8 * 1024) as usize;
+                match client.put_object(&name, &payload(seed, len)) {
+                    Ok(_) => {
+                        model.insert(name, (seed, len));
+                    }
+                    Err(_) => {
+                        model.remove(&name);
+                    }
+                }
+            }
+            2 => {
+                if let Ok(data) = client.get_object(&name) {
+                    if let Some((seed, len)) = model.get(&name) {
+                        assert_eq!(data, payload(*seed, *len), "{name} content diverged");
+                    }
+                }
+            }
+            _ => {
+                let _ = client.delete_object(&name);
+                model.remove(&name);
+            }
+        }
+        cluster.advance_clock(TICK).unwrap();
+    }
+}
+
+/// Converge-and-verify: settle async flags, heal with one deep scrub +
+/// GC, demand a zero-finding audit, then prove full replication with a
+/// second deep scrub that must find nothing to repair. Finally every
+/// modeled object must read back byte-for-byte.
+fn assert_converged(cluster: &Cluster, model: &Model, ctx: &str) {
+    cluster.flush_consistency().unwrap();
+    cluster.start_scrub(ScrubOptions::deep()).unwrap();
+    let heal = cluster.scrub_wait().unwrap();
+    assert!(heal.all_done(), "{ctx}: {:?}", heal.first_failure());
+    cluster.run_gc(0).unwrap();
+    let audit = cluster.audit().unwrap();
+    assert!(audit.is_ok(), "{ctx}: audit violations {:?}", audit.violations);
+    cluster.start_scrub(ScrubOptions::deep()).unwrap();
+    let scrub = cluster.scrub_wait().unwrap();
+    assert!(scrub.all_done(), "{ctx}: {:?}", scrub.first_failure());
+    assert_eq!(
+        scrub.repaired + scrub.lost + scrub.corruptions_found,
+        0,
+        "{ctx}: not at full replication: {scrub:?}"
+    );
+    let client = cluster.client();
+    for (name, (seed, len)) in model {
+        assert_eq!(
+            client.get_object(name).unwrap(),
+            payload(*seed, *len),
+            "{ctx}: {name} lost in the churn"
+        );
+    }
+}
+
+/// One full churn cycle for one seed: traffic → silent crash → quorum
+/// eviction (detector-driven, traffic still running) → recovery →
+/// wipe-and-rejoin → cluster growth → more traffic → converge.
+fn churn_case(seed: u64) {
+    let mut rng = SplitMix64::new(seed);
+    let cluster = Cluster::new(churn_config()).unwrap();
+    let victim = ServerId(1);
+    let mut model = Model::new();
+
+    // steady-state traffic first, so the victim holds real data
+    traffic(&cluster, &mut rng, &mut model, 16);
+
+    // silent crash; the quorum detector walks it Down → Out while the
+    // client keeps hammering the cluster
+    cluster.kill_server(victim).unwrap();
+    let mut steps = 0u64;
+    while cluster.server_state(victim).unwrap() != ServerState::Out {
+        assert!(
+            steps < (GRACE + OUT) / TICK + 32,
+            "seed {seed}: victim never marked Out under traffic"
+        );
+        traffic(&cluster, &mut rng, &mut model, 1);
+        steps += 1;
+    }
+
+    // recovery backfill re-replicates the victim's holdings (default
+    // budget is unlimited, so the workers run free of the virtual clock)
+    let report = cluster.recovery_wait().unwrap();
+    assert!(report.first_failure().is_none(), "seed {seed}: {report:?}");
+
+    // wipe-and-rejoin the evicted server, then grow the cluster — two
+    // more map changes, each auto-rebalanced
+    cluster.rejoin_server(victim).unwrap();
+    assert_eq!(cluster.server_state(victim).unwrap(), ServerState::Up);
+    cluster.rebalance_wait().unwrap();
+    let added = cluster.add_server().unwrap();
+    assert_eq!(cluster.server_state(added).unwrap(), ServerState::Up);
+
+    // traffic over the grown five-server map
+    traffic(&cluster, &mut rng, &mut model, 12);
+
+    assert_converged(&cluster, &model, &format!("seed {seed}"));
+
+    let stats = cluster.stats();
+    assert_eq!(
+        stats.backpressure_gave_up, 0,
+        "seed {seed}: probes abandoned under backpressure"
+    );
+    assert_eq!(stats.detector_marked_out, 1, "seed {seed}");
+    assert_eq!(stats.membership_rejoins, 1, "seed {seed}");
+    assert_eq!(stats.membership_wipes, 1, "seed {seed}");
+    assert!(
+        stats.membership_auto_rebalances >= 3,
+        "seed {seed}: out + rejoin + add are map changes: {}",
+        stats.membership_auto_rebalances
+    );
+    cluster.shutdown();
+}
+
+/// The acceptance loop: the full churn cycle must converge on every one
+/// of 8 deterministic seeds.
+#[test]
+fn membership_churn_converges_on_every_seed() {
+    for seed in 0..8 {
+        churn_case(seed);
+    }
+}
+
+/// Quorum regression under traffic: one observer lying "dead" about
+/// *every* server, for twice the grace+out window of continuous load,
+/// never walks anyone Down — let alone Out — because the two honest
+/// Alive votes stay below the out quorum every round.
+#[test]
+fn flaky_observer_never_evicts_anyone_under_traffic() {
+    let mut rng = SplitMix64::new(0xF1A5);
+    let cluster = Cluster::new(churn_config()).unwrap();
+    cluster
+        .set_observer_hook(Some(Box::new(|observer, _id, verdict| {
+            if observer == 0 {
+                ObserverVerdict::Dead
+            } else {
+                verdict
+            }
+        })))
+        .unwrap();
+    let mut model = Model::new();
+    traffic(
+        &cluster,
+        &mut rng,
+        &mut model,
+        (2 * (GRACE + OUT) / TICK) as usize,
+    );
+    for id in 0..4u32 {
+        assert_eq!(
+            cluster.server_state(ServerId(id)).unwrap(),
+            ServerState::Up,
+            "osd.{id} evicted by a single flaky observer"
+        );
+    }
+    let stats = cluster.stats();
+    assert_eq!(stats.detector_marked_down, 0, "liar outvoted every round");
+    assert_eq!(stats.detector_marked_out, 0);
+    assert_eq!(stats.membership_auto_rebalances, 0, "no map change happened");
+    assert_converged(&cluster, &model, "flaky observer");
+    cluster.shutdown();
+}
+
+/// Repeat-churn determinism: the same seed twice produces the same
+/// surviving model — the harness has no hidden wall-time dependence in
+/// what it asserts about.
+#[test]
+fn churn_is_deterministic_for_a_fixed_seed() {
+    let run = |seed: u64| {
+        let mut rng = SplitMix64::new(seed);
+        let cluster = Cluster::new(churn_config()).unwrap();
+        let mut model = Model::new();
+        traffic(&cluster, &mut rng, &mut model, 24);
+        let mut names: Vec<String> = model.keys().cloned().collect();
+        names.sort();
+        let seeds: Vec<(u64, usize)> = names.iter().map(|n| model[n]).collect();
+        cluster.shutdown();
+        (names, seeds)
+    };
+    assert_eq!(run(7), run(7), "same seed, same surviving model");
+}

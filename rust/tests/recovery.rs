@@ -10,7 +10,8 @@
 //! central-mode deep scrub of raw chunks on non-metadata servers.
 
 use snss_dedup::api::{
-    ClockSource, Cluster, ClusterConfig, DedupMode, FailureDetection, ScrubOptions,
+    ClockSource, Cluster, ClusterConfig, DedupMode, FailureDetection, ObserverVerdict,
+    ScrubOptions,
 };
 use snss_dedup::cluster::{ServerId, ServerState};
 use snss_dedup::dedup::Chunking;
@@ -40,6 +41,8 @@ fn sim_detector_config() -> ClusterConfig {
             probe_every_ticks: PROBE,
             grace_ticks: GRACE,
             out_ticks: OUT,
+            observers: 3,
+            out_quorum: 2,
         }),
         ..Default::default()
     }
@@ -197,6 +200,7 @@ fn wall_clock_detector_marks_out_and_recovers() {
             probe_every_ticks: 20,
             grace_ticks: 80,
             out_ticks: 240,
+            ..Default::default()
         }),
         ..Default::default()
     })
@@ -288,6 +292,160 @@ fn remove_server_rereplicates_and_errors_are_typed() {
         cluster.restart_server(victim),
         Err(Error::ServerRemoved(1))
     ));
+    cluster.shutdown();
+}
+
+/// Detector-quorum matrix, liar side: with `observers: 3, out_quorum:
+/// 2`, one observer that persistently swears a healthy server is dead
+/// can never walk it Down — let alone Out — no matter how long the
+/// campaign runs. The two honest `Alive` answers outvote it every round
+/// and keep resetting the silence window.
+#[test]
+fn single_lying_observer_never_evicts_a_healthy_server() {
+    let cluster = Cluster::new(sim_detector_config()).unwrap();
+    populate(&cluster, 4);
+    let target = ServerId(1);
+    cluster
+        .set_observer_hook(Some(Box::new(move |observer, id, verdict| {
+            if observer == 0 && id == target {
+                ObserverVerdict::Dead // a bad control path cries wolf
+            } else {
+                verdict
+            }
+        })))
+        .unwrap();
+    // far past grace + out: a lone dead vote below quorum is not evidence
+    for _ in 0..(2 * (GRACE + OUT) / TICK) {
+        cluster.advance_clock(TICK).unwrap();
+    }
+    assert_eq!(cluster.server_state(target).unwrap(), ServerState::Up);
+    let stats = cluster.stats();
+    assert_eq!(stats.detector_marked_down, 0, "liar outvoted every round");
+    assert_eq!(stats.detector_marked_out, 0);
+    assert!(
+        stats.detector_probes > 0,
+        "probe rounds must actually have run"
+    );
+    assert!(cluster.audit().unwrap().is_ok());
+    cluster.shutdown();
+}
+
+/// Detector-quorum matrix, veto side: one observer that insists a dead
+/// server is alive cannot keep it in the map — the two honest dropped-
+/// envelope verdicts meet the quorum, and the victim walks Down → Out
+/// within the usual grace + out windows.
+#[test]
+fn quorum_of_true_verdicts_evicts_a_dead_server_despite_a_liar() {
+    let objects = 8;
+    let cluster = Cluster::new(sim_detector_config()).unwrap();
+    populate(&cluster, objects);
+    let victim = ServerId(2);
+    cluster
+        .set_observer_hook(Some(Box::new(move |observer, id, verdict| {
+            if observer == 0 && id == victim {
+                ObserverVerdict::Alive // swears the corpse is fine
+            } else {
+                verdict
+            }
+        })))
+        .unwrap();
+    cluster.kill_server(victim).unwrap();
+    assert!(
+        advance_until(&cluster, (GRACE + OUT) / TICK + 4, || {
+            cluster.server_state(victim).unwrap() == ServerState::Out
+        }),
+        "two true dead votes meet the quorum; the liar cannot veto"
+    );
+    let report = cluster.recovery_wait().unwrap();
+    assert!(report.first_failure().is_none(), "{report:?}");
+    assert!(cluster.audit().unwrap().is_ok());
+    assert_all_readable(&cluster, objects);
+    cluster.shutdown();
+}
+
+/// Wipe-and-rejoin: an `Out` server stays fenced against `restart_server`
+/// (the one-way door regression), comes back only through
+/// `rejoin_server` — which wipes it empty — and the auto-enqueued
+/// rebalance refills its share of the keyspace. Typed errors guard the
+/// edges: unknown ids and not-Out servers are rejected.
+#[test]
+fn wipe_and_rejoin_readmits_an_out_server_empty() {
+    let objects = 16;
+    let cluster = Cluster::new(ClusterConfig {
+        servers: 4,
+        replication: 2,
+        chunking: Chunking::Fixed { size: 1024 },
+        ..Default::default()
+    })
+    .unwrap();
+    populate(&cluster, objects);
+
+    // typed errors first: rejoin applies to Out servers only
+    assert!(matches!(
+        cluster.rejoin_server(ServerId(99)),
+        Err(Error::UnknownServer(99))
+    ));
+    assert!(matches!(
+        cluster.rejoin_server(ServerId(1)),
+        Err(Error::NotRemoved(1))
+    ));
+
+    let victim = ServerId(1);
+    cluster.remove_server(victim).unwrap();
+    let report = cluster.recovery_wait().unwrap();
+    assert!(report.first_failure().is_none(), "{report:?}");
+
+    // fenced-without-wipe regression: the Out server stays fenced — no
+    // restart path may readmit its stale state
+    assert!(matches!(
+        cluster.restart_server(victim),
+        Err(Error::ServerRemoved(1))
+    ));
+    assert!(cluster.is_dead(victim), "Out server must stay fenced");
+
+    cluster.rejoin_server(victim).unwrap();
+    assert_eq!(cluster.server_state(victim).unwrap(), ServerState::Up);
+    assert!(!cluster.is_dead(victim), "rejoined server serves again");
+    // double rejoin: it is Up now, so the same typed error applies
+    assert!(matches!(
+        cluster.rejoin_server(victim),
+        Err(Error::NotRemoved(1))
+    ));
+
+    // the rejoin wiped it empty and auto-enqueued a rebalance; wait the
+    // scans out, then heal-and-verify back to steady state
+    cluster.rebalance_wait().unwrap();
+    cluster.flush_consistency().unwrap();
+    cluster.start_scrub(ScrubOptions::deep()).unwrap();
+    cluster.scrub_wait().unwrap();
+    cluster.run_gc(0).unwrap();
+    let audit = cluster.audit().unwrap();
+    assert!(audit.is_ok(), "{:?}", audit.violations);
+    cluster.start_scrub(ScrubOptions::deep()).unwrap();
+    let scrub = cluster.scrub_wait().unwrap();
+    assert_eq!(
+        scrub.repaired + scrub.lost + scrub.corruptions_found,
+        0,
+        "rejoin left degradation behind: {scrub:?}"
+    );
+    assert_all_readable(&cluster, objects);
+
+    let stats = cluster.stats();
+    assert_eq!(stats.membership_rejoins, 1);
+    assert_eq!(stats.membership_wipes, 1);
+    assert!(
+        stats.membership_auto_rebalances >= 2,
+        "remove + rejoin are both map changes: {stats:?}"
+    );
+    let back = stats
+        .per_server
+        .iter()
+        .find(|p| p.server == victim.0)
+        .expect("rejoined server reports stats");
+    assert!(
+        back.bytes_stored > 0,
+        "rebalance re-homed chunks onto the rejoined server"
+    );
     cluster.shutdown();
 }
 
