@@ -1,0 +1,254 @@
+//! Read-path macro-bench: per-home batched fetches
+//! (`ReadBatching::PerHome`) vs the legacy per-chunk `FetchChunk`
+//! fan-out, with the hot-chunk cache on and off, across dedup ratios.
+//!
+//! ```text
+//! cargo bench --bench read_path                  # 5k + 20k objects
+//! BENCH_SCALE=small cargo bench --bench read_path    # 5k only
+//! ```
+//!
+//! Every configuration drives the *same* deterministic corpus; each
+//! read is byte-compared against the generator **before** any number
+//! is reported. The batched path must not send more backend read
+//! messages than the legacy path at 0% dedup, and must cut them at
+//! ≥50% dedup. Inline-valid consistency keeps commit flags
+//! deterministic so read routing depends only on content. Results go
+//! to stdout, to `bench_out/read_path.tsv`, and to
+//! `BENCH_readpath.json` at the repository root.
+
+use snss_dedup::api::{
+    CacheConfig, Cluster, ClusterConfig, Consistency, ReadBatching,
+};
+use snss_dedup::dedup::Chunking;
+use snss_dedup::workload::{Generator, WorkloadSpec};
+use std::io::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+const SERVERS: usize = 4;
+const THREADS: usize = 4;
+const OBJECT_SIZE: usize = 8 << 10;
+const CHUNK: usize = 2 << 10;
+/// Read passes over the corpus — pass 2 is where the cache pays.
+const PASSES: u64 = 2;
+
+/// One configuration's outcome over the read phase.
+struct Run {
+    secs: f64,
+    mib_per_s: f64,
+    wire_bytes: u64,
+    /// Backend read messages: `FetchChunkBatch` + legacy `FetchChunk`.
+    read_msgs: u64,
+    cache_hit_pct: f64,
+    get_p50_us: u64,
+    get_p99_us: u64,
+}
+
+fn run_one(objects: u64, dedup_pct: u8, batching: ReadBatching, cache_bytes: u64) -> Run {
+    let cluster = Cluster::new(ClusterConfig {
+        servers: SERVERS,
+        replication: 1,
+        read_batching: batching,
+        cache: CacheConfig {
+            capacity_bytes: cache_bytes,
+            ..CacheConfig::default()
+        },
+        consistency: Consistency::None,
+        chunking: Chunking::Fixed { size: CHUNK },
+        ..Default::default()
+    })
+    .expect("boot cluster");
+    let gen = Arc::new(Generator::new(WorkloadSpec {
+        object_size: OBJECT_SIZE,
+        unit: CHUNK,
+        dedup_pct,
+        pool_blocks: 512,
+        zipf_theta: 0.0,
+        seed: 0x2EAD ^ objects,
+    }));
+
+    // write the corpus (not timed — this bench is about reads)
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let client = cluster.client();
+        let gen = gen.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut idx = t as u64;
+            while idx < objects {
+                let (name, data) = gen.named_object(idx);
+                client.put_object(&name, &data).expect("bench put");
+                idx += THREADS as u64;
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    cluster.flush_consistency().ok();
+    let before = cluster.stats();
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let client = cluster.client();
+        let gen = gen.clone();
+        handles.push(std::thread::spawn(move || {
+            for _pass in 0..PASSES {
+                let mut idx = t as u64;
+                while idx < objects {
+                    let (name, data) = gen.named_object(idx);
+                    // byte identity is a precondition for every number
+                    // this bench reports
+                    assert_eq!(
+                        client.get_object(&name).expect("bench get"),
+                        data,
+                        "read diverged from the written corpus"
+                    );
+                    idx += THREADS as u64;
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let after = cluster.stats();
+
+    let read_mib =
+        (before.logical_bytes as f64 * PASSES as f64) / (1 << 20) as f64;
+    let probes = after.read_cache_hits - before.read_cache_hits
+        + (after.read_cache_misses - before.read_cache_misses);
+    let get = cluster.metrics_snapshot().histogram_total("get_latency");
+    let run = Run {
+        secs,
+        mib_per_s: read_mib / secs,
+        wire_bytes: after.wire_bytes - before.wire_bytes,
+        read_msgs: after.read_batches - before.read_batches + after.read_chunk_fetches
+            - before.read_chunk_fetches,
+        cache_hit_pct: 100.0 * (after.read_cache_hits - before.read_cache_hits) as f64
+            / probes.max(1) as f64,
+        get_p50_us: get.p50_us(),
+        get_p99_us: get.p99_us(),
+    };
+    cluster.shutdown();
+    run
+}
+
+fn main() {
+    let sizes: &[u64] = match std::env::var("BENCH_SCALE").as_deref() {
+        Ok("small") => &[5_000],
+        _ => &[5_000, 20_000],
+    };
+    let ratios: &[u8] = &[0, 50, 90];
+    let default_cache = CacheConfig::default().capacity_bytes;
+    // (label, batching, cache capacity): the full 2×2
+    let configs: &[(&str, ReadBatching, u64)] = &[
+        ("legacy", ReadBatching::Off, 0),
+        ("legacy+cache", ReadBatching::Off, default_cache),
+        ("batched", ReadBatching::PerHome, 0),
+        ("batched+cache", ReadBatching::PerHome, default_cache),
+    ];
+    println!("== read path: per-home FetchChunkBatch vs per-chunk FetchChunk ==");
+    println!(
+        "{:<8} {:>6} {:<14} {:>10} {:>12} {:>12} {:>9} {:>9} {:>8}",
+        "objects", "dedup%", "config", "MiB/s", "read msgs", "wireMB", "p50 µs", "p99 µs", "hit %"
+    );
+    let mut json_points = Vec::new();
+    for &objects in sizes {
+        for &pct in ratios {
+            let mut msgs_nocache: Vec<(&str, u64)> = Vec::new();
+            for &(label, batching, cache) in configs {
+                let r = run_one(objects, pct, batching, cache);
+                if cache == 0 {
+                    msgs_nocache.push((label, r.read_msgs));
+                }
+                let mb = r.wire_bytes as f64 / (1 << 20) as f64;
+                println!(
+                    "{:<8} {:>6} {:<14} {:>10.1} {:>12} {:>12.1} {:>9} {:>9} {:>7.1}%",
+                    objects,
+                    pct,
+                    label,
+                    r.mib_per_s,
+                    r.read_msgs,
+                    mb,
+                    r.get_p50_us,
+                    r.get_p99_us,
+                    r.cache_hit_pct
+                );
+                record(
+                    "read_path",
+                    "objects\tdedup_pct\tconfig\tsecs\tmib_per_s\tread_msgs\twire_bytes\t\
+                     get_p50_us\tget_p99_us\tcache_hit_pct",
+                    &format!(
+                        "{objects}\t{pct}\t{label}\t{:.3}\t{:.1}\t{}\t{}\t{}\t{}\t{:.1}",
+                        r.secs,
+                        r.mib_per_s,
+                        r.read_msgs,
+                        r.wire_bytes,
+                        r.get_p50_us,
+                        r.get_p99_us,
+                        r.cache_hit_pct
+                    ),
+                );
+                json_points.push(format!(
+                    "    {{\"objects\": {objects}, \"dedup_pct\": {pct}, \
+                     \"config\": \"{label}\", \"secs\": {:.3}, \
+                     \"mib_per_s\": {:.1}, \"read_msgs\": {}, \
+                     \"wire_bytes\": {}, \"get_p50_us\": {}, \
+                     \"get_p99_us\": {}, \"cache_hit_pct\": {:.1}}}",
+                    r.secs,
+                    r.mib_per_s,
+                    r.read_msgs,
+                    r.wire_bytes,
+                    r.get_p50_us,
+                    r.get_p99_us,
+                    r.cache_hit_pct
+                ));
+            }
+            // message-budget acceptance on the cache-off pair (message
+            // counts are deterministic; wall time is not)
+            let legacy = msgs_nocache.iter().find(|(l, _)| *l == "legacy").unwrap().1;
+            let batched = msgs_nocache.iter().find(|(l, _)| *l == "batched").unwrap().1;
+            assert!(
+                batched <= legacy,
+                "batched read path regressed message count at {pct}% dedup: \
+                 {batched} > {legacy}"
+            );
+            if pct >= 50 {
+                assert!(
+                    batched < legacy,
+                    "batched read path must cut backend messages at {pct}% dedup: \
+                     {batched} vs {legacy}"
+                );
+            }
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"read_path\",\n  \"servers\": {SERVERS},\n  \
+         \"object_size\": {OBJECT_SIZE},\n  \"chunk\": {CHUNK},\n  \
+         \"read_passes\": {PASSES},\n  \"points\": [\n{}\n  ]\n}}\n",
+        json_points.join(",\n")
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_readpath.json");
+    std::fs::write(path, json).expect("write BENCH_readpath.json");
+    println!("summary written to BENCH_readpath.json");
+}
+
+/// Append one TSV row under `bench_out/` (same format as
+/// `common::record`; duplicated so this driver stays self-contained).
+fn record(bench: &str, header: &str, row: &str) {
+    let _ = std::fs::create_dir_all("bench_out");
+    let path = format!("bench_out/{bench}.tsv");
+    let new = !std::path::Path::new(&path).exists();
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+    {
+        if new {
+            let _ = writeln!(f, "{header}");
+        }
+        let _ = writeln!(f, "{row}");
+    }
+}

@@ -35,8 +35,9 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
+pub use crate::dedup::cache::{CacheConfig, DupPolicy};
 pub use crate::dedup::consistency::ConsistencyMode as Consistency;
-pub use crate::dedup::engine::{DedupMode, WriteBatching};
+pub use crate::dedup::engine::{DedupMode, ReadBatching, WriteBatching};
 pub use crate::recovery::{
     FailureDetection, ObserverHook, ObserverVerdict, RecoveryState, RecoveryStatus,
 };
@@ -103,6 +104,18 @@ pub struct ClusterConfig {
     /// Write-path chunk scatter protocol: per-home two-phase batches
     /// (the default) or the legacy per-chunk `StoreChunk` fan-out.
     pub write_batching: WriteBatching,
+    /// Read-path chunk gather protocol: per-home `FetchChunkBatch`
+    /// messages (the default) or the legacy per-chunk `FetchChunk`
+    /// fan-out (DESIGN.md §14).
+    pub read_batching: ReadBatching,
+    /// Per-server hot-chunk cache sizing/admission (capacity 0
+    /// disables caching).
+    pub cache: CacheConfig,
+    /// Fragmentation-aware selective duplication of hot remote chunks
+    /// (`None` = off, the default): plant extra locality copies of
+    /// chunks this server keeps fetching over the fabric, under the
+    /// rebalance class of the maintenance flow budget.
+    pub selective_dup: Option<DupPolicy>,
     /// Chunking policy.
     pub chunking: Chunking,
     /// Placement policy.
@@ -153,6 +166,9 @@ impl Default for ClusterConfig {
             dedup: DedupMode::ClusterWide,
             consistency: ConsistencyMode::AsyncTagged,
             write_batching: WriteBatching::TwoPhase,
+            read_batching: ReadBatching::PerHome,
+            cache: CacheConfig::default(),
+            selective_dup: None,
             chunking: Chunking::Fixed { size: 64 * 1024 },
             placement: Placement::Straw2,
             durability: Durability::Memory,
@@ -268,6 +284,40 @@ pub struct ClusterStats {
     /// Referenced chunks with no surviving copy anywhere (quarantined;
     /// 0 unless more copies were lost than replication covers).
     pub recovery_lost: u64,
+    /// Object reads counted by the read-amplification accounting.
+    pub read_amp_reads: u64,
+    /// Distinct chunk homes touched across all counted object reads
+    /// (`read_amp_homes / read_amp_reads` = mean fan-out per read).
+    pub read_amp_homes: u64,
+    /// `FetchChunkBatch` messages sent (batched read path; ≤ 1 per
+    /// distinct live chunk home per read, plus Busy retries).
+    pub read_batches: u64,
+    /// Chunk fetches carried inside `FetchChunkBatch` messages.
+    pub read_batch_items: u64,
+    /// Single-chunk `FetchChunk` messages sent (legacy path + degraded
+    /// fallback; 0 on a healthy batched cluster).
+    pub read_chunk_fetches: u64,
+    /// Chunks the batched read path degraded to the per-item path.
+    pub read_fallbacks: u64,
+    /// Chunk fetches that fell back after a home stayed `Busy` through
+    /// its granted retry.
+    pub read_degraded_busy: u64,
+    /// Chunk fetches that fell back on a dead/unreachable/missing home.
+    pub read_degraded_dead: u64,
+    /// Hot-chunk cache hits.
+    pub read_cache_hits: u64,
+    /// Hot-chunk cache misses.
+    pub read_cache_misses: u64,
+    /// Payloads admitted to hot-chunk caches.
+    pub read_cache_insertions: u64,
+    /// Cache entries evicted by capacity pressure.
+    pub read_cache_evictions: u64,
+    /// Cache entries dropped by coherence invalidation hooks.
+    pub read_cache_invalidations: u64,
+    /// Locality copies planted by selective duplication.
+    pub dup_chunks_planted: u64,
+    /// Planted locality copies evicted to respect the byte budget.
+    pub dup_chunks_evicted: u64,
     /// `Out` servers wiped and re-admitted by [`Cluster::rejoin_server`].
     pub membership_rejoins: u64,
     /// Local-state wipes performed on the rejoin path.
@@ -608,6 +658,9 @@ impl Cluster {
                 verify_read: self.cfg.verify_read,
                 verify_write: self.cfg.verify_write,
                 meta_io: self.cfg.meta_io,
+                read_batching: self.cfg.read_batching,
+                cache: self.cfg.cache,
+                selective_dup: self.cfg.selective_dup,
             },
             map: self.monitor.map_handle(),
             pgmap: self.pgmap.clone(),
@@ -615,6 +668,7 @@ impl Cluster {
             store,
             replica_store: replica,
             pending: crate::dedup::consistency::PendingFlags::new(),
+            chunk_cache: crate::dedup::cache::ChunkCache::new(self.cfg.cache),
             scrub: crate::scrub::ScrubCtl::for_server(id.0),
             recovery: crate::recovery::RecoveryCtl::for_server(id.0),
             rebalance: crate::storage::rebalance::RebalanceCtl::for_server(id.0),
@@ -1046,6 +1100,21 @@ impl Cluster {
             recovery_omap_recovered: sum(|m| &m.recovery_omap_recovered),
             recovery_refs_fixed: sum(|m| &m.recovery_refs_fixed),
             recovery_lost: sum(|m| &m.recovery_lost),
+            read_amp_reads: sum(|m| &m.read_amp_reads),
+            read_amp_homes: sum(|m| &m.read_amp_homes),
+            read_batches: sum(|m| &m.read_batches),
+            read_batch_items: sum(|m| &m.read_batch_items),
+            read_chunk_fetches: sum(|m| &m.read_chunk_fetches),
+            read_fallbacks: sum(|m| &m.read_fallbacks),
+            read_degraded_busy: sum(|m| &m.read_degraded_busy),
+            read_degraded_dead: sum(|m| &m.read_degraded_dead),
+            read_cache_hits: sum(|m| &m.read_cache_hits),
+            read_cache_misses: sum(|m| &m.read_cache_misses),
+            read_cache_insertions: sum(|m| &m.read_cache_insertions),
+            read_cache_evictions: sum(|m| &m.read_cache_evictions),
+            read_cache_invalidations: sum(|m| &m.read_cache_invalidations),
+            dup_chunks_planted: sum(|m| &m.dup_chunks_planted),
+            dup_chunks_evicted: sum(|m| &m.dup_chunks_evicted),
             membership_rejoins: sum(|m| &m.membership_rejoins),
             membership_wipes: sum(|m| &m.membership_wipes),
             membership_auto_rebalances: sum(|m| &m.membership_auto_rebalances),

@@ -1,0 +1,442 @@
+//! Per-server hot-chunk cache + selective-duplication tracker (DESIGN.md §14).
+//!
+//! The cluster-wide content placement that buys the paper's space
+//! savings also fragments reads: a dedup'd object's chunks live on
+//! whichever servers their fingerprints hash to, so one `get` fans out
+//! across the cluster. This module is the read path's answer:
+//!
+//! * [`ChunkCache`] — a size-bounded, refcount- and recency-aware
+//!   (segmented-LRU) payload cache consulted before any store or fabric
+//!   hop. Values are content-addressed (keyed by fingerprint), so a hit
+//!   can never serve *wrong* bytes; invalidation hooks in GC reclaim,
+//!   scrub quarantine, recovery re-homing, rebalance migration and the
+//!   rejoin wipe keep a cached chunk from outliving its CIT entry.
+//! * The selective-duplication tracker ([`ChunkCache::note_remote_fetch`]
+//!   / [`ChunkCache::plant_register`]) — counts remote fetches per chunk
+//!   so the engine can plant extra locality copies of hot fragmenting
+//!   chunks (arXiv:2411.01407's partial-repetition idea) under a byte
+//!   budget, governed by [`DupPolicy`].
+//!
+//! Everything lives behind one mutex: the cache is touched once per
+//! chunk read, and the simulated fabric dominates latency by orders of
+//! magnitude.
+
+use crate::dedup::fingerprint::Fingerprint;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
+
+/// Sizing and admission policy for the per-server [`ChunkCache`].
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    /// Total payload bytes the cache may hold; `0` disables the cache
+    /// entirely (every lookup misses, every insert is dropped).
+    pub capacity_bytes: u64,
+    /// Local backref refcount at or above which a chunk is admitted
+    /// straight into the protected segment: heavily shared chunks are
+    /// exactly the ones many objects' reads will come back for.
+    pub hot_band: u64,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            capacity_bytes: 64 << 20,
+            hot_band: 2,
+        }
+    }
+}
+
+/// Policy for fragmentation-aware selective duplication: when a chunk
+/// keeps getting fetched over the fabric *and* reads are fanning out
+/// wide, plant a local replica-slot copy of it so future reads stay
+/// home. Copies are ordinary replica-store entries (`c:<fp>`), so
+/// audit/GC/recovery reasoning is unchanged.
+#[derive(Clone, Copy, Debug)]
+pub struct DupPolicy {
+    /// Remote fetches of one chunk observed by one server before that
+    /// server plants a locality copy.
+    pub fetch_threshold: u32,
+    /// Minimum mean read amplification (distinct homes touched per
+    /// object read, ×100 — `150` means 1.5 homes/read) before any
+    /// planting happens: duplication only pays when reads fragment.
+    pub min_mean_amp_x100: u64,
+    /// Byte budget for planted copies per server; planting past the
+    /// budget evicts the oldest planted copies first.
+    pub max_bytes: u64,
+}
+
+impl Default for DupPolicy {
+    fn default() -> Self {
+        DupPolicy {
+            fetch_threshold: 3,
+            min_mean_amp_x100: 150,
+            max_bytes: 16 << 20,
+        }
+    }
+}
+
+/// One resident cache entry.
+struct Slot {
+    data: Vec<u8>,
+    seq: u64,
+    protected: bool,
+}
+
+/// Mutex-guarded cache state (see module docs for why one lock is fine).
+struct Inner {
+    seq: u64,
+    map: HashMap<Fingerprint, Slot>,
+    /// Recency index of the probation segment (seq → fp).
+    probation: BTreeMap<u64, Fingerprint>,
+    /// Recency index of the protected segment (seq → fp).
+    protected: BTreeMap<u64, Fingerprint>,
+    bytes: u64,
+    protected_bytes: u64,
+    /// Remote-fetch counts feeding the selective-duplication policy.
+    fetches: HashMap<Fingerprint, u32>,
+    /// Locality copies this server has planted: fp → (plant seq, len).
+    planted: HashMap<Fingerprint, (u64, u64)>,
+    planted_order: BTreeMap<u64, Fingerprint>,
+    planted_bytes: u64,
+}
+
+/// Per-server hot-chunk cache: segmented LRU (probation + protected)
+/// over chunk payloads, keyed by fingerprint. See module docs.
+pub struct ChunkCache {
+    cfg: CacheConfig,
+    inner: Mutex<Inner>,
+}
+
+impl ChunkCache {
+    /// Fraction of capacity reserved for the protected segment (¾).
+    fn protected_target(&self) -> u64 {
+        self.cfg.capacity_bytes / 4 * 3
+    }
+
+    /// New empty cache with the given sizing policy.
+    pub fn new(cfg: CacheConfig) -> Self {
+        ChunkCache {
+            cfg,
+            inner: Mutex::new(Inner {
+                seq: 0,
+                map: HashMap::new(),
+                probation: BTreeMap::new(),
+                protected: BTreeMap::new(),
+                bytes: 0,
+                protected_bytes: 0,
+                fetches: HashMap::new(),
+                planted: HashMap::new(),
+                planted_order: BTreeMap::new(),
+                planted_bytes: 0,
+            }),
+        }
+    }
+
+    /// Look up a chunk payload. A probation hit is promoted to the
+    /// protected segment (the second touch is the SLRU hotness signal);
+    /// a protected hit refreshes recency.
+    pub fn get(&self, fp: &Fingerprint) -> Option<Vec<u8>> {
+        let mut g = self.inner.lock().unwrap();
+        let inner = &mut *g;
+        let slot = inner.map.get_mut(fp)?;
+        let from = if slot.protected {
+            &mut inner.protected
+        } else {
+            &mut inner.probation
+        };
+        from.remove(&slot.seq);
+        inner.seq += 1;
+        slot.seq = inner.seq;
+        if !slot.protected {
+            slot.protected = true;
+            inner.protected_bytes += slot.data.len() as u64;
+        }
+        inner.protected.insert(slot.seq, *fp);
+        let data = slot.data.clone();
+        self.rebalance(inner);
+        Some(data)
+    }
+
+    /// Insert a chunk payload. `hot` (refcount ≥ [`CacheConfig::hot_band`]
+    /// at admission time) lands it straight in the protected segment.
+    /// Returns how many resident entries were evicted to make room.
+    pub fn insert(&self, fp: Fingerprint, data: &[u8], hot: bool) -> u64 {
+        let len = data.len() as u64;
+        // Refuse oversized entries: one giant chunk must not flush the
+        // whole working set.
+        if self.cfg.capacity_bytes == 0 || len > self.cfg.capacity_bytes / 4 {
+            return 0;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let inner = &mut *g;
+        if let Some(slot) = inner.map.get(&fp) {
+            // Already resident (content-addressed, so same bytes):
+            // refresh recency only.
+            let (seq, protected) = (slot.seq, slot.protected);
+            let from = if protected {
+                &mut inner.protected
+            } else {
+                &mut inner.probation
+            };
+            from.remove(&seq);
+            inner.seq += 1;
+            let new_seq = inner.seq;
+            let slot = inner.map.get_mut(&fp).unwrap();
+            slot.seq = new_seq;
+            if protected {
+                inner.protected.insert(new_seq, fp);
+            } else {
+                inner.probation.insert(new_seq, fp);
+            }
+            return 0;
+        }
+        inner.seq += 1;
+        let seq = inner.seq;
+        inner.map.insert(
+            fp,
+            Slot {
+                data: data.to_vec(),
+                seq,
+                protected: hot,
+            },
+        );
+        inner.bytes += len;
+        if hot {
+            inner.protected_bytes += len;
+            inner.protected.insert(seq, fp);
+        } else {
+            inner.probation.insert(seq, fp);
+        }
+        self.rebalance(inner);
+        let mut evicted = 0;
+        while inner.bytes > self.cfg.capacity_bytes {
+            let victim = inner
+                .probation
+                .iter()
+                .next()
+                .or_else(|| inner.protected.iter().next())
+                .map(|(_, fp)| *fp);
+            let Some(victim) = victim else { break };
+            Self::remove_slot(inner, &victim);
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// Demote oldest protected entries to probation until the protected
+    /// segment fits its ¾-of-capacity target.
+    fn rebalance(&self, inner: &mut Inner) {
+        while inner.protected_bytes > self.protected_target() {
+            let Some((&seq, &fp)) = inner.protected.iter().next() else {
+                break;
+            };
+            inner.protected.remove(&seq);
+            let slot = inner.map.get_mut(&fp).unwrap();
+            slot.protected = false;
+            inner.protected_bytes -= slot.data.len() as u64;
+            inner.probation.insert(seq, fp);
+        }
+    }
+
+    /// Unlink one resident entry (all indices + byte accounting).
+    fn remove_slot(inner: &mut Inner, fp: &Fingerprint) -> bool {
+        let Some(slot) = inner.map.remove(fp) else {
+            return false;
+        };
+        let len = slot.data.len() as u64;
+        inner.bytes -= len;
+        if slot.protected {
+            inner.protected_bytes -= len;
+            inner.protected.remove(&slot.seq);
+        } else {
+            inner.probation.remove(&slot.seq);
+        }
+        true
+    }
+
+    /// Drop a chunk from the cache (and reset its remote-fetch count so
+    /// a reclaimed chunk must re-earn duplication). Returns whether a
+    /// resident entry was actually dropped — the invalidation hooks use
+    /// this to count only real invalidations.
+    pub fn invalidate(&self, fp: &Fingerprint) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        g.fetches.remove(fp);
+        Self::remove_slot(&mut g, fp)
+    }
+
+    /// Empty the cache and all selective-duplication bookkeeping. Wired
+    /// into `Osd::kill` and the rejoin wipe, like the span ring.
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.map.clear();
+        g.probation.clear();
+        g.protected.clear();
+        g.bytes = 0;
+        g.protected_bytes = 0;
+        g.fetches.clear();
+        g.planted.clear();
+        g.planted_order.clear();
+        g.planted_bytes = 0;
+    }
+
+    /// Whether a chunk is resident (tests and invalidation proofs).
+    pub fn contains(&self, fp: &Fingerprint) -> bool {
+        self.inner.lock().unwrap().map.contains_key(fp)
+    }
+
+    /// Total resident payload bytes.
+    pub fn bytes(&self) -> u64 {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Resident entry count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    // ----------------------------------------------------------------
+    // selective-duplication tracker
+    // ----------------------------------------------------------------
+
+    /// Record that this server fetched `fp` over the fabric; returns the
+    /// running count the [`DupPolicy::fetch_threshold`] gate compares.
+    pub fn note_remote_fetch(&self, fp: &Fingerprint) -> u32 {
+        let mut g = self.inner.lock().unwrap();
+        let n = g.fetches.entry(*fp).or_insert(0);
+        *n = n.saturating_add(1);
+        *n
+    }
+
+    /// Register a planted locality copy of `len` bytes and return the
+    /// oldest previously planted fingerprints that must be evicted to
+    /// keep the total under `max_bytes` (the engine deletes their
+    /// replica-store entries). The fresh plant itself is never evicted.
+    pub fn plant_register(&self, fp: &Fingerprint, len: u64, max_bytes: u64) -> Vec<Fingerprint> {
+        let mut g = self.inner.lock().unwrap();
+        if g.planted.contains_key(fp) {
+            return Vec::new();
+        }
+        g.seq += 1;
+        let seq = g.seq;
+        g.planted.insert(*fp, (seq, len));
+        g.planted_order.insert(seq, *fp);
+        g.planted_bytes += len;
+        let mut victims = Vec::new();
+        while g.planted_bytes > max_bytes && g.planted.len() > 1 {
+            let Some((&vseq, &vfp)) = g.planted_order.iter().next() else {
+                break;
+            };
+            if vfp == *fp {
+                break;
+            }
+            g.planted_order.remove(&vseq);
+            let (_, vlen) = g.planted.remove(&vfp).unwrap();
+            g.planted_bytes -= vlen;
+            victims.push(vfp);
+        }
+        victims
+    }
+
+    /// Whether this server planted a locality copy of `fp` (the read
+    /// path digest-verifies such copies before serving them).
+    pub fn planted_contains(&self, fp: &Fingerprint) -> bool {
+        self.inner.lock().unwrap().planted.contains_key(fp)
+    }
+
+    /// Total bytes of planted locality copies.
+    pub fn planted_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().planted_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp(n: u8) -> Fingerprint {
+        Fingerprint::of(&[n; 7])
+    }
+
+    fn cache(capacity: u64) -> ChunkCache {
+        ChunkCache::new(CacheConfig {
+            capacity_bytes: capacity,
+            hot_band: 2,
+        })
+    }
+
+    #[test]
+    fn hit_miss_and_promotion() {
+        let c = cache(4096);
+        assert!(c.get(&fp(1)).is_none());
+        c.insert(fp(1), &[1u8; 100], false);
+        assert_eq!(c.get(&fp(1)).unwrap(), vec![1u8; 100]);
+        // promoted on first hit: still resident, still correct
+        assert_eq!(c.get(&fp(1)).unwrap(), vec![1u8; 100]);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), 100);
+    }
+
+    #[test]
+    fn eviction_prefers_probation_over_protected() {
+        let c = cache(1000);
+        c.insert(fp(1), &[1u8; 200], true); // protected (hot band)
+        c.insert(fp(2), &[2u8; 200], false); // probation
+        c.insert(fp(3), &[3u8; 200], false); // probation
+        // 700 more bytes forces eviction; probation-first means the
+        // cold fp(2) goes before the hot fp(1).
+        c.insert(fp(4), &[4u8; 200], false);
+        c.insert(fp(5), &[5u8; 200], false);
+        assert!(c.contains(&fp(1)), "protected entry survived");
+        assert!(!c.contains(&fp(2)), "oldest probation entry evicted");
+        assert!(c.bytes() <= 1000);
+    }
+
+    #[test]
+    fn oversized_and_zero_capacity_rejected() {
+        let c = cache(1000);
+        assert_eq!(c.insert(fp(1), &[0u8; 600], false), 0);
+        assert!(!c.contains(&fp(1)), "oversized entry not admitted");
+        let z = cache(0);
+        z.insert(fp(2), &[0u8; 4], false);
+        assert!(!z.contains(&fp(2)), "zero capacity disables cache");
+    }
+
+    #[test]
+    fn invalidate_and_clear() {
+        let c = cache(4096);
+        c.insert(fp(1), &[1u8; 10], false);
+        c.insert(fp(2), &[2u8; 10], true);
+        assert!(c.invalidate(&fp(1)));
+        assert!(!c.invalidate(&fp(1)), "second invalidate is a no-op");
+        assert!(c.contains(&fp(2)));
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.bytes(), 0);
+    }
+
+    #[test]
+    fn fetch_counter_and_plant_budget() {
+        let c = cache(4096);
+        assert_eq!(c.note_remote_fetch(&fp(1)), 1);
+        assert_eq!(c.note_remote_fetch(&fp(1)), 2);
+        // invalidation resets hotness
+        c.invalidate(&fp(1));
+        assert_eq!(c.note_remote_fetch(&fp(1)), 1);
+
+        assert!(c.plant_register(&fp(1), 300, 500).is_empty());
+        assert!(c.planted_contains(&fp(1)));
+        // re-registering is a no-op
+        assert!(c.plant_register(&fp(1), 300, 500).is_empty());
+        assert_eq!(c.planted_bytes(), 300);
+        // budget overflow evicts the oldest plant, never the fresh one
+        let victims = c.plant_register(&fp(2), 300, 500);
+        assert_eq!(victims, vec![fp(1)]);
+        assert!(c.planted_contains(&fp(2)));
+        assert_eq!(c.planted_bytes(), 300);
+    }
+}

@@ -31,10 +31,13 @@ use crate::error::{Error, Result};
 use crate::failure::CrashPoint;
 use crate::metrics::Metrics;
 use crate::net::{Lane, Pending};
+use crate::sched::flow::MaintClass;
 use crate::storage::osd::OsdShared;
 use crate::storage::proto::{ChunkAck, ChunkPut, Req, Resp};
 use std::borrow::Cow;
 use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::atomic::Ordering;
+use std::time::Duration;
 
 /// Which deduplication architecture the cluster runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -75,6 +78,26 @@ pub enum WriteBatching {
     /// — ≤ 2 messages per distinct home per put.
     TwoPhase,
 }
+
+/// Which protocol the read path uses to gather a dedup'd object's
+/// chunks from their content homes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadBatching {
+    /// Legacy protocol: one `FetchChunk` message per chunk occurrence —
+    /// O(chunks) fabric messages per read.
+    Off,
+    /// Per-home gather: the chunk list is grouped by placement chain
+    /// and fetched with one `FetchChunkBatch` per distinct live home
+    /// (after the hot-chunk cache and local stores are consulted), with
+    /// per-item fallback to the legacy path for misses and dead homes —
+    /// ≤ 1 backend message per distinct live chunk home per read.
+    PerHome,
+}
+
+/// Backoff before the single retry the read path grants a `Busy` chunk
+/// home (the AIMD-style courtesy the recovery prober extends, collapsed
+/// to one attempt because a reader can always fall back to replicas).
+const READ_RETRY_BACKOFF_US: u64 = 50;
 
 /// Sentinel for "this server just crashed mid-transaction": the lane loop
 /// checks the injector and drops the reply, so the message text never
@@ -707,6 +730,8 @@ pub fn absorb_migrated_chunk(
     valid: bool,
 ) -> Result<()> {
     let now = sh.now_ms();
+    // coherence: this server's view of the chunk is about to change
+    invalidate_chunk(sh, fp);
     sh.shard.cit_update(fp, |cur| match cur {
         Some(mut e) => {
             e.refcount += refcount;
@@ -740,10 +765,19 @@ pub fn get_object(sh: &OsdShared, name: &str) -> Result<Option<Vec<u8>>> {
     match sh.cfg.dedup {
         DedupMode::None => {
             if let Some(d) = sh.store.get(&raw_object_key(name))? {
+                // raw-mode reads count toward mean read amplification
+                // too: one read answered by one home (this server).
+                Metrics::add(&sh.metrics.read_amp_reads, 1);
+                Metrics::add(&sh.metrics.read_amp_homes, 1);
                 return Ok(Some(d));
             }
             // degraded read from a replica copy of the raw object
-            Ok(sh.replica_store.get(&raw_object_key(name))?)
+            let d = sh.replica_store.get(&raw_object_key(name))?;
+            if d.is_some() {
+                Metrics::add(&sh.metrics.read_amp_reads, 1);
+                Metrics::add(&sh.metrics.read_amp_homes, 1);
+            }
+            Ok(d)
         }
         _ => {
             // OMAP lookup: local shard, else a replica copy we hold.
@@ -764,8 +798,23 @@ pub fn get_object(sh: &OsdShared, name: &str) -> Result<Option<Vec<u8>>> {
             // one read fans out across the cluster — this is the cost
             // side of the savings the paper measures).
             let mut homes: HashSet<ServerId> = HashSet::new();
+            // DiskLocal never leaves this server, so there is nothing
+            // to batch; the other modes gather per home by default.
+            let batched = if sh.cfg.read_batching == ReadBatching::PerHome
+                && sh.cfg.dedup != DedupMode::DiskLocal
+            {
+                Some(fetch_chunks_batched(sh, &entry.chunks, &mut homes)?)
+            } else {
+                None
+            };
             for (fp, len) in &entry.chunks {
-                let data = fetch_chunk(sh, fp, &mut homes)?;
+                let data = match &batched {
+                    Some(m) => m
+                        .get(fp)
+                        .cloned()
+                        .ok_or_else(|| Error::ChunkMissing(fp.to_hex()))?,
+                    None => fetch_chunk(sh, fp, &mut homes)?,
+                };
                 if data.len() != *len as usize {
                     return Err(Error::Corrupt(format!(
                         "chunk {fp} length {} != {}",
@@ -793,6 +842,14 @@ fn fetch_chunk(
     fp: &Fingerprint,
     homes: &mut HashSet<ServerId>,
 ) -> Result<Vec<u8>> {
+    // hot-chunk cache first: content-addressed, so a hit can never be
+    // wrong bytes (DESIGN.md §14).
+    if let Some(d) = sh.chunk_cache.get(fp) {
+        Metrics::add(&sh.metrics.read_cache_hits, 1);
+        homes.insert(sh.id);
+        return Ok(d);
+    }
+    Metrics::add(&sh.metrics.read_cache_misses, 1);
     let key = fp.to_bytes().to_vec();
     // central mode keeps data placement identical (raw by fp), so this
     // path is shared by all dedup modes.
@@ -800,6 +857,7 @@ fn fetch_chunk(
     if chain.first() == Some(&sh.id) || sh.cfg.dedup == DedupMode::DiskLocal {
         if let Some(d) = sh.store.get(&key)? {
             homes.insert(sh.id);
+            cache_insert(sh, fp, &d);
             return Ok(d);
         }
     }
@@ -810,14 +868,34 @@ fn fetch_chunk(
     if chain.first() != Some(&sh.id) {
         if let Some(primary) = chain.first() {
             if let Ok(addr) = sh.dir.lookup(*primary, Lane::Backend) {
-                let req = Req::FetchChunk { fp: *fp };
-                let size = req.wire_size();
-                match addr.call(req, size) {
-                    Ok(Resp::Data(d)) => {
-                        homes.insert(*primary);
-                        return Ok(d);
+                let mut retried = false;
+                loop {
+                    let req = Req::FetchChunk { fp: *fp };
+                    let size = req.wire_size();
+                    Metrics::add(&sh.metrics.read_chunk_fetches, 1);
+                    match addr.call(req, size) {
+                        Ok(Resp::Data(d)) => {
+                            homes.insert(*primary);
+                            cache_insert(sh, fp, &d);
+                            maybe_plant_dup(sh, fp, &d);
+                            return Ok(d);
+                        }
+                        // a Busy home is alive: grant it one short
+                        // backoff before burdening the replicas
+                        Ok(Resp::Busy) if !retried => {
+                            retried = true;
+                            Metrics::add(&sh.metrics.backpressure_retries, 1);
+                            std::thread::sleep(Duration::from_micros(READ_RETRY_BACKOFF_US));
+                        }
+                        Ok(Resp::Busy) => {
+                            Metrics::add(&sh.metrics.read_degraded_busy, 1);
+                            break; // fall through to replicas
+                        }
+                        Ok(_) | Err(_) => {
+                            Metrics::add(&sh.metrics.read_degraded_dead, 1);
+                            break; // fall through to replicas
+                        }
                     }
-                    Ok(_) | Err(_) => {} // fall through to replicas
                 }
             }
         }
@@ -844,6 +922,189 @@ fn fetch_chunk(
         }
     }
     Err(Error::ChunkMissing(fp.to_hex()))
+}
+
+/// Batched read gather ([`ReadBatching::PerHome`], DESIGN.md §14): map
+/// every *unique* fingerprint of one object to its payload, touching
+/// each distinct live chunk home with at most one `FetchChunkBatch`.
+///
+/// Resolution order per chunk: hot-chunk cache → local primary store →
+/// a digest-verified replica slot this server holds (chain membership
+/// or a planted locality copy) → the per-home batch. Batch misses, Busy
+/// homes (after one retry) and dead homes degrade per item through the
+/// legacy [`fetch_chunk`] path, so fault tolerance is exactly the
+/// unbatched path's.
+fn fetch_chunks_batched(
+    sh: &OsdShared,
+    chunks: &[(Fingerprint, u32)],
+    homes: &mut HashSet<ServerId>,
+) -> Result<HashMap<Fingerprint, Vec<u8>>> {
+    let mut out: HashMap<Fingerprint, Vec<u8>> = HashMap::new();
+    let mut fallback: Vec<Fingerprint> = Vec::new();
+    let mut by_home: BTreeMap<ServerId, Vec<Fingerprint>> = BTreeMap::new();
+    let mut seen: HashSet<Fingerprint> = HashSet::new();
+    for (fp, _len) in chunks {
+        if !seen.insert(*fp) {
+            continue; // intra-object duplicate: fetch once
+        }
+        if let Some(d) = sh.chunk_cache.get(fp) {
+            Metrics::add(&sh.metrics.read_cache_hits, 1);
+            homes.insert(sh.id);
+            out.insert(*fp, d);
+            continue;
+        }
+        Metrics::add(&sh.metrics.read_cache_misses, 1);
+        let chain = sh.chunk_chain(fp.placement_key());
+        if chain.first() == Some(&sh.id) {
+            if let Some(d) = sh.store.get(&fp.to_bytes())? {
+                homes.insert(sh.id);
+                cache_insert(sh, fp, &d);
+                out.insert(*fp, d);
+            } else {
+                // we are the home but the data is gone: degraded path
+                fallback.push(*fp);
+            }
+            continue;
+        }
+        // a replica slot we hold (chain member or planted locality
+        // copy) saves the fabric hop — but only digest-verified, so a
+        // rotten copy falls through to the home exactly as the legacy
+        // path would prefer the primary's bytes.
+        if chain.contains(&sh.id) || sh.chunk_cache.planted_contains(fp) {
+            if let Some(d) = sh.replica_store.get(&chunk_copy_key(fp))? {
+                if Fingerprint::of(&d) == *fp {
+                    homes.insert(sh.id);
+                    cache_insert(sh, fp, &d);
+                    out.insert(*fp, d);
+                    continue;
+                }
+            }
+        }
+        match chain.first() {
+            Some(home) => by_home.entry(*home).or_default().push(*fp),
+            None => fallback.push(*fp),
+        }
+    }
+    // one batch per distinct home: send all, then gather (the same
+    // scatter shape as the write path's probe phase).
+    let mut pendings: Vec<(ServerId, Vec<Fingerprint>, Option<Pending<Resp>>)> = Vec::new();
+    for (home, fps) in by_home {
+        let req = Req::FetchChunkBatch { fps: fps.clone() };
+        Metrics::add(&sh.metrics.read_batches, 1);
+        Metrics::add(&sh.metrics.read_batch_items, fps.len() as u64);
+        let pending = backend_send(sh, home, req).ok();
+        pendings.push((home, fps, pending));
+    }
+    for (home, fps, pending) in pendings {
+        let mut resp = match pending {
+            Some(p) => p.wait(),
+            None => Err(Error::ServerDown(home.0)),
+        };
+        if matches!(resp, Ok(Resp::Busy)) {
+            // honor Busy with one retried batch before degrading
+            Metrics::add(&sh.metrics.backpressure_retries, 1);
+            std::thread::sleep(Duration::from_micros(READ_RETRY_BACKOFF_US));
+            let req = Req::FetchChunkBatch { fps: fps.clone() };
+            Metrics::add(&sh.metrics.read_batches, 1);
+            Metrics::add(&sh.metrics.read_batch_items, fps.len() as u64);
+            resp = backend_call(sh, home, req);
+        }
+        match resp {
+            Ok(Resp::ChunkBatch { items }) if items.len() == fps.len() => {
+                for (fp, item) in fps.iter().zip(items) {
+                    match item {
+                        Some(d) => {
+                            homes.insert(home);
+                            cache_insert(sh, fp, &d);
+                            maybe_plant_dup(sh, fp, &d);
+                            out.insert(*fp, d);
+                        }
+                        None => fallback.push(*fp),
+                    }
+                }
+            }
+            Ok(Resp::Busy) => {
+                Metrics::add(&sh.metrics.read_degraded_busy, fps.len() as u64);
+                fallback.extend(fps);
+            }
+            Ok(_) | Err(_) => {
+                Metrics::add(&sh.metrics.read_degraded_dead, fps.len() as u64);
+                fallback.extend(fps);
+            }
+        }
+    }
+    // per-item degraded fallback through the legacy path (replica
+    // copies, etc.) — a single lost chunk home never fails the read as
+    // long as any copy survives.
+    for fp in fallback {
+        if out.contains_key(&fp) {
+            continue;
+        }
+        Metrics::add(&sh.metrics.read_fallbacks, 1);
+        let d = fetch_chunk(sh, &fp, homes)?;
+        out.insert(fp, d);
+    }
+    Ok(out)
+}
+
+/// Admit freshly fetched chunk bytes to the hot-chunk cache, classed
+/// hot (protected segment) when the local backref index says the chunk
+/// is shared at or above the configured hot band.
+fn cache_insert(sh: &OsdShared, fp: &Fingerprint, data: &[u8]) {
+    if sh.cfg.cache.capacity_bytes == 0 {
+        return;
+    }
+    let hot = sh
+        .shard
+        .backref_refs(fp)
+        .map(|n| n >= sh.cfg.cache.hot_band)
+        .unwrap_or(false);
+    let evicted = sh.chunk_cache.insert(*fp, data, hot);
+    Metrics::add(&sh.metrics.read_cache_insertions, 1);
+    Metrics::add(&sh.metrics.read_cache_evictions, evicted);
+}
+
+/// Fragmentation-aware selective duplication (DESIGN.md §14): when a
+/// remotely homed chunk keeps getting fetched over the fabric while
+/// reads are fanning out wide, plant a locality copy in this server's
+/// replica store — an ordinary replica-slot copy (`c:<fp>`), so
+/// audit/GC/recovery reasoning is unchanged — charged to the rebalance
+/// class of the maintenance flow budget (non-blocking: a dry budget
+/// skips the plant rather than stalling the read).
+fn maybe_plant_dup(sh: &OsdShared, fp: &Fingerprint, data: &[u8]) {
+    let Some(policy) = sh.cfg.selective_dup else {
+        return;
+    };
+    if sh.cfg.dedup != DedupMode::ClusterWide {
+        return;
+    }
+    let n = sh.chunk_cache.note_remote_fetch(fp);
+    if n < policy.fetch_threshold || sh.chunk_cache.planted_contains(fp) {
+        return;
+    }
+    // only worth a copy when reads actually fragment
+    let reads = sh.metrics.read_amp_reads.load(Ordering::Relaxed);
+    let amp_homes = sh.metrics.read_amp_homes.load(Ordering::Relaxed);
+    if reads == 0 || amp_homes * 100 < policy.min_mean_amp_x100 * reads {
+        return;
+    }
+    // chain members already hold a copy in their replica slot
+    if sh.chunk_chain(fp.placement_key()).contains(&sh.id) {
+        return;
+    }
+    let Some(granted) = sh.flow.try_take(MaintClass::Rebalance, data.len() as u64) else {
+        return;
+    };
+    Metrics::add(&sh.metrics.flow_granted_rebalance, granted);
+    if sh.replica_store.put(&chunk_copy_key(fp), data).is_err() {
+        return;
+    }
+    Metrics::add(&sh.metrics.dup_chunks_planted, 1);
+    Metrics::add(&sh.metrics.bytes_replica, data.len() as u64);
+    for victim in sh.chunk_cache.plant_register(fp, data.len() as u64, policy.max_bytes) {
+        let _ = sh.replica_store.delete(&chunk_copy_key(&victim));
+        Metrics::add(&sh.metrics.dup_chunks_evicted, 1);
+    }
 }
 
 // --------------------------------------------------------------------
@@ -901,6 +1162,17 @@ pub fn delete_object(sh: &OsdShared, name: &str) -> Result<bool> {
 // --------------------------------------------------------------------
 // helpers
 // --------------------------------------------------------------------
+
+/// Cache-coherence hook (DESIGN.md §14): drop one chunk from this
+/// server's hot-chunk cache after an event that retired or rewrote its
+/// local data — GC reclaim, scrub quarantine/repair, recovery
+/// re-homing, rebalance migration. Keeps the invariant that a cached
+/// chunk never outlives its CIT entry on the same server.
+pub fn invalidate_chunk(sh: &OsdShared, fp: &Fingerprint) {
+    if sh.chunk_cache.invalidate(fp) {
+        Metrics::add(&sh.metrics.read_cache_invalidations, 1);
+    }
+}
 
 /// Key for a whole raw object (no-dedup mode).
 pub fn raw_object_key(name: &str) -> Vec<u8> {

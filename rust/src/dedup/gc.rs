@@ -157,6 +157,8 @@ fn indexed_live_refs(sh: &OsdShared, fp: &Fingerprint) -> Result<Option<u64>> {
 }
 
 fn reclaim(sh: &OsdShared, fp: &Fingerprint) -> Result<()> {
+    // coherence: the CIT entry dies, so the cached payload must too
+    crate::dedup::engine::invalidate_chunk(sh, fp);
     sh.shard.cit_delete(fp)?;
     if let Ok(Some(data)) = sh.store.get(&fp.to_bytes()) {
         // reclaim I/O draws from the shared maintenance budget
@@ -214,6 +216,8 @@ fn repair(sh: &OsdShared, fp: &Fingerprint) -> Result<bool> {
     let Some(data) = crate::recovery::fetch_any_copy(sh, fp)? else {
         return Ok(false);
     };
+    // coherence: the local bytes are about to be rewritten
+    crate::dedup::engine::invalidate_chunk(sh, fp);
     sh.charge_maint(MaintClass::Gc, (data.len() as u64).max(64));
     let had_data = sh.store.stat(&fp.to_bytes())?;
     sh.store.put(&fp.to_bytes(), &data)?;

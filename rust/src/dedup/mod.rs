@@ -11,7 +11,10 @@
 //! * [`consistency`] — asynchronous tagged consistency plus the sync
 //!   chunk-/object-granularity comparators of Figure 5(b) (§2.4).
 //! * [`gc`] — the garbage-collection pass over invalid commit flags.
+//! * [`cache`] — the per-server hot-chunk cache and the
+//!   fragmentation-aware selective-duplication tracker (§14).
 
+pub mod cache;
 pub mod chunker;
 pub mod cit;
 pub mod consistency;

@@ -64,6 +64,9 @@ pub(crate) fn wipe_local_state(sh: &OsdShared) -> crate::error::Result<()> {
     sh.shard.wipe()?;
     sh.store.clear()?;
     sh.replica_store.clear()?;
+    // coherence: no cached payload (or planted-copy bookkeeping) may
+    // survive the wipe — the rejoined server starts empty
+    sh.chunk_cache.clear();
     Metrics::add(&sh.metrics.membership_wipes, 1);
     Ok(())
 }

@@ -139,6 +139,42 @@ pub struct Metrics {
     /// read-amplification (the fragmentation signal: how many servers a
     /// single object read fans out to).
     pub read_amp_homes: AtomicU64,
+    /// `FetchChunkBatch` messages sent by the batched read path (one
+    /// per distinct live chunk home per read, plus Busy retries).
+    pub read_batches: AtomicU64,
+    /// Chunk fetches carried inside `FetchChunkBatch` messages.
+    pub read_batch_items: AtomicU64,
+    /// Single-chunk `FetchChunk` messages sent (legacy read path and
+    /// per-item degraded fallback; 0 on a healthy batched cluster).
+    pub read_chunk_fetches: AtomicU64,
+    /// Chunks the batched read path degraded to the per-item legacy
+    /// path (batch miss, Busy after retry, or dead home).
+    pub read_fallbacks: AtomicU64,
+    /// Chunk fetches that fell back after a home answered `Busy` twice
+    /// (once plus the granted retry).
+    pub read_degraded_busy: AtomicU64,
+    /// Chunk fetches that fell back because the home was dead,
+    /// unreachable, or missing the chunk.
+    pub read_degraded_dead: AtomicU64,
+    /// Hot-chunk cache hits (payload served without a store or fabric
+    /// hop).
+    pub read_cache_hits: AtomicU64,
+    /// Hot-chunk cache misses.
+    pub read_cache_misses: AtomicU64,
+    /// Payloads admitted to the hot-chunk cache.
+    pub read_cache_insertions: AtomicU64,
+    /// Cache entries evicted by capacity pressure.
+    pub read_cache_evictions: AtomicU64,
+    /// Cache entries dropped by coherence invalidation hooks (GC
+    /// reclaim, scrub quarantine, recovery re-home, rebalance
+    /// migration).
+    pub read_cache_invalidations: AtomicU64,
+    /// Locality copies planted by fragmentation-aware selective
+    /// duplication.
+    pub dup_chunks_planted: AtomicU64,
+    /// Planted locality copies evicted to respect the duplication byte
+    /// budget.
+    pub dup_chunks_evicted: AtomicU64,
     /// Post-write `VerifyCopy` probes issued by the optional
     /// write-verification leg (`verify_write`).
     pub write_verifies: AtomicU64,
@@ -247,6 +283,19 @@ impl Metrics {
             recovery_lost,
             read_amp_reads,
             read_amp_homes,
+            read_batches,
+            read_batch_items,
+            read_chunk_fetches,
+            read_fallbacks,
+            read_degraded_busy,
+            read_degraded_dead,
+            read_cache_hits,
+            read_cache_misses,
+            read_cache_insertions,
+            read_cache_evictions,
+            read_cache_invalidations,
+            dup_chunks_planted,
+            dup_chunks_evicted,
             write_verifies,
             write_verify_mismatches,
             membership_rejoins,

@@ -516,6 +516,7 @@ fn restore_primary(sh: &OsdShared, task: &ChunkTask) -> Result<()> {
         sh.charge_meta_io();
         sh.shard
             .cit_set_flag(&task.fp, CommitFlag::Invalid, sh.now_ms())?;
+        crate::dedup::engine::invalidate_chunk(sh, &task.fp);
         if task.refcount > 0 {
             sh.recovery.update(|st| st.lost_chunks += 1);
             Metrics::add(&sh.metrics.recovery_lost, 1);
@@ -525,6 +526,9 @@ fn restore_primary(sh: &OsdShared, task: &ChunkTask) -> Result<()> {
     if sh.injector.maybe_crash(CrashPoint::BeforeRecoveryCopy) {
         return Err(Error::ServerDown(sh.id.0));
     }
+    // coherence: this server just became (or re-became) the chunk's
+    // home — drop any cached payload before the re-homed write
+    crate::dedup::engine::invalidate_chunk(sh, &task.fp);
     sh.store.put(&key, &data)?;
     Metrics::add(&sh.metrics.bytes_stored, data.len() as u64);
     if sh.injector.maybe_crash(CrashPoint::AfterRecoveryCopy) {
@@ -703,6 +707,7 @@ fn central_restore(sh: &OsdShared, task: &ChunkTask) -> Result<()> {
             sh.charge_meta_io();
             sh.shard
                 .cit_set_flag(&task.fp, CommitFlag::Invalid, sh.now_ms())?;
+            crate::dedup::engine::invalidate_chunk(sh, &task.fp);
             if task.refcount > 0 {
                 sh.recovery.update(|st| st.lost_chunks += 1);
                 Metrics::add(&sh.metrics.recovery_lost, 1);

@@ -66,7 +66,7 @@ pub mod rate;
 
 use crate::cluster::ServerId;
 use crate::dedup::cit::{CitEntry, CommitFlag};
-use crate::dedup::engine::{chunk_copy_key, DedupMode};
+use crate::dedup::engine::{self, chunk_copy_key, DedupMode};
 use crate::dedup::fingerprint::Fingerprint;
 use crate::error::{Error, Result};
 use crate::failure::CrashPoint;
@@ -551,6 +551,9 @@ fn check_presence_and_data(sh: &OsdShared, deep: bool, targets: &[Fingerprint]) 
                         // matching it in case a replica reappears.
                         sh.charge_meta_io();
                         sh.shard.cit_set_flag(fp, CommitFlag::Invalid, sh.now_ms())?;
+                        // coherence: a quarantined chunk must not keep
+                        // serving from the cache
+                        engine::invalidate_chunk(sh, fp);
                     }
                     continue;
                 }
@@ -582,6 +585,8 @@ fn repair_primary_from_copy(sh: &OsdShared, fp: &Fingerprint) -> Result<bool> {
     let Some(good) = crate::recovery::fetch_any_copy(sh, fp)? else {
         return Ok(false);
     };
+    // coherence: the local bytes are about to be rewritten
+    engine::invalidate_chunk(sh, fp);
     sh.store.put(&fp.to_bytes(), &good)?;
     if sh.injector.maybe_crash(CrashPoint::AfterScrubRepair) {
         return Err(Error::ServerDown(sh.id.0));
@@ -650,6 +655,7 @@ fn deep_verify_remote_raw(sh: &OsdShared, fp: &Fingerprint, entry: &CitEntry) ->
             sh.scrub.update(|st| st.lost += 1);
             sh.charge_meta_io();
             sh.shard.cit_set_flag(fp, CommitFlag::Invalid, sh.now_ms())?;
+            engine::invalidate_chunk(sh, fp);
         }
     }
     Ok(())
@@ -692,6 +698,7 @@ fn deep_verify(sh: &OsdShared, mut reads: Vec<(Fingerprint, Vec<u8>)>) -> Result
             sh.scrub.update(|st| st.lost += 1);
             sh.charge_meta_io();
             sh.shard.cit_set_flag(&fp, CommitFlag::Invalid, sh.now_ms())?;
+            engine::invalidate_chunk(sh, &fp);
         }
     }
 

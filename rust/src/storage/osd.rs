@@ -28,7 +28,8 @@
 use crate::cluster::{ClusterMap, ServerId};
 use crate::dedup::consistency::{ConsistencyMode, PendingFlags};
 use crate::dedup::dmshard::DmShard;
-use crate::dedup::engine::{self, DedupMode, WriteBatching};
+use crate::dedup::cache::{CacheConfig, ChunkCache, DupPolicy};
+use crate::dedup::engine::{self, DedupMode, ReadBatching, WriteBatching};
 use crate::dedup::fingerprint::FingerprintProvider;
 use crate::dedup::gc;
 use crate::dedup::Chunker;
@@ -76,6 +77,14 @@ pub struct OsdConfig {
     /// serialization effects (transaction locks, single metadata server)
     /// emerge exactly where the paper's do. `None` = free (unit tests).
     pub meta_io: Option<Duration>,
+    /// Read-path chunk gather protocol (per-chunk `FetchChunk` vs
+    /// per-home `FetchChunkBatch`).
+    pub read_batching: ReadBatching,
+    /// Hot-chunk cache sizing/admission (capacity 0 disables it).
+    pub cache: CacheConfig,
+    /// Fragmentation-aware selective duplication of hot remote chunks;
+    /// `None` (the default) disables planting.
+    pub selective_dup: Option<DupPolicy>,
 }
 
 /// Everything a server owns that survives kill+restart (disk-like), plus
@@ -97,6 +106,10 @@ pub struct OsdShared {
     pub replica_store: Box<dyn StorageBackend>,
     /// Volatile: the async-consistency registration queue.
     pub pending: PendingFlags,
+    /// Volatile: hot-chunk payload cache + selective-duplication
+    /// tracker (cleared on kill and on the rejoin wipe — a cached chunk
+    /// never survives an event that could retire its CIT entry).
+    pub chunk_cache: ChunkCache,
     /// Volatile: scrub-worker job hand-off and progress (a crash aborts
     /// the running pass).
     pub scrub: crate::scrub::ScrubCtl,
@@ -323,6 +336,7 @@ impl Osd {
         self.shared.recovery.clear();
         self.shared.rebalance.clear();
         self.shared.obs.clear_spans();
+        self.shared.chunk_cache.clear();
     }
 
     /// Restart after a kill/crash — see [`OsdShared::restart`].
@@ -432,6 +446,7 @@ fn span_name(lane: Lane, req: &Req) -> &'static str {
         Req::StoreChunkBatch { .. } => "Backend/StoreChunkBatch",
         Req::StoreChunk { .. } => "Backend/StoreChunk",
         Req::FetchChunk { .. } => "Backend/FetchChunk",
+        Req::FetchChunkBatch { .. } => "Backend/FetchChunkBatch",
         Req::DecRef { .. } => "Backend/DecRef",
         Req::DecRefBatch { .. } => "Backend/DecRefBatch",
         Req::PutCopy { .. } => "Replica/PutCopy",
@@ -548,6 +563,16 @@ fn dispatch(sh: &Arc<OsdShared>, lane: Lane, req: Req) -> Resp {
             Ok(None) => Resp::NotFound,
             Err(e) => err_str(e),
         },
+        (Lane::Backend, Req::FetchChunkBatch { fps }) => {
+            // per-item misses answer `None` (never a whole-message
+            // error): the reader falls back chunk by chunk, so one
+            // missing chunk can't degrade its batch-mates.
+            let items = fps
+                .iter()
+                .map(|fp| sh.store.get(&fp.to_bytes()).ok().flatten())
+                .collect();
+            Resp::ChunkBatch { items }
+        }
         (Lane::Backend, Req::DecRef { fp, refs }) => match engine::dec_ref_local(sh, &fp, refs) {
             Ok(()) => Resp::Ok,
             Err(e) => err_str(e),

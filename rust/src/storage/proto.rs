@@ -43,6 +43,10 @@ pub enum Req {
     StoreChunkBatch { items: Vec<ChunkPut> },
     /// Fetch chunk data by fingerprint.
     FetchChunk { fp: Fingerprint },
+    /// Batched read path: fetch every listed chunk homed here in one
+    /// message (the read-side mirror of [`Req::ProbeChunks`]). Misses
+    /// come back as `None` so the reader can fall back per item.
+    FetchChunkBatch { fps: Vec<Fingerprint> },
     /// Decrement a chunk's refcount by `refs` (delete / tx rollback).
     DecRef { fp: Fingerprint, refs: u64 },
     /// Batched [`Req::DecRef`]: all of one object's refcount releases
@@ -211,6 +215,12 @@ pub enum Resp {
         /// Per-item outcome (grant, store, or NeedData NACK).
         acks: Vec<ChunkAck>,
     },
+    /// `FetchChunkBatch` answer: one payload per requested fingerprint
+    /// (same order); `None` = not stored here (degraded fallback).
+    ChunkBatch {
+        /// Per-item payload or miss marker.
+        items: Vec<Option<Vec<u8>>>,
+    },
     /// Stat outcome.
     ChunkStat {
         exists_data: bool,
@@ -341,7 +351,7 @@ impl Req {
             Req::PutObject { name, data } => name.len() + data.len(),
             Req::GetObject { name } | Req::DeleteObject { name } => name.len(),
             Req::StoreChunk { data, .. } => 20 + data.len(),
-            Req::ProbeChunks { fps } => 20 * fps.len(),
+            Req::ProbeChunks { fps } | Req::FetchChunkBatch { fps } => 20 * fps.len(),
             Req::StoreChunkBatch { items } => items
                 .iter()
                 .map(|i| 29 + i.data.as_ref().map_or(0, Vec::len))

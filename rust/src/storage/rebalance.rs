@@ -248,6 +248,8 @@ pub fn run(sh: &OsdShared) -> Result<RebalanceReport> {
             match outcome {
                 Ok(Resp::Ok) => {
                     sh.shard.cit_delete(&fp)?;
+                    // coherence: the CIT entry left this server
+                    crate::dedup::engine::invalidate_chunk(sh, &fp);
                 }
                 Ok(_) => {}
                 Err(Error::ServerDown(_)) => report.skipped_unreachable += 1,
@@ -272,6 +274,8 @@ pub fn run(sh: &OsdShared) -> Result<RebalanceReport> {
             Ok(Resp::Ok) => {
                 sh.shard.cit_delete(&fp)?;
                 sh.store.delete(&fp.to_bytes())?;
+                // coherence: chunk + CIT entry migrated away
+                crate::dedup::engine::invalidate_chunk(sh, &fp);
                 report.chunks_moved += 1;
                 report.chunk_bytes_moved += data.len() as u64;
             }

@@ -1,0 +1,417 @@
+//! Integration: the production read path (DESIGN.md §14).
+//!
+//! * Byte identity — batched and legacy reads return identical bytes
+//!   across dedup ratios (0/50/90%).
+//! * Message budget — a batched read costs at most one
+//!   `FetchChunkBatch` per distinct live remote chunk home, and a
+//!   repeat read is answered entirely from the hot-chunk cache.
+//! * Degraded reads — a killed chunk home degrades per item through
+//!   the legacy fallback; the bytes still come back correct.
+//! * Cache coherence — the invalidation matrix (GC reclaim, scrub
+//!   quarantine, recovery re-home, rejoin wipe, kill) proves no stale
+//!   cache entry survives any event that retires a CIT entry.
+//! * Selective duplication — a hot remote chunk gets a planted
+//!   locality copy, after which reads of it stop touching the fabric.
+
+use snss_dedup::api::{
+    CacheConfig, Cluster, ClusterConfig, ClockSource, Consistency, DedupMode, DupPolicy,
+    ReadBatching, ScrubOptions,
+};
+use snss_dedup::cluster::ServerId;
+use snss_dedup::dedup::Chunking;
+use snss_dedup::workload::{Generator, WorkloadSpec};
+use snss_dedup::Fingerprint;
+
+const CHUNK: usize = 2048;
+
+/// Inline-valid consistency keeps commit flags deterministic, so the
+/// message-budget counters can be asserted exactly.
+fn boot(servers: usize, cfg: impl FnOnce(&mut ClusterConfig)) -> Cluster {
+    let mut c = ClusterConfig {
+        servers,
+        replication: 1,
+        consistency: Consistency::None,
+        chunking: Chunking::Fixed { size: CHUNK },
+        ..Default::default()
+    };
+    cfg(&mut c);
+    Cluster::new(c).expect("boot")
+}
+
+/// A payload of `n` distinct chunks (no intra-object duplicates).
+fn unique_payload(n: usize) -> Vec<u8> {
+    let mut data = vec![0u8; n * CHUNK];
+    for (i, block) in data.chunks_mut(CHUNK).enumerate() {
+        for (j, b) in block.iter_mut().enumerate() {
+            *b = ((i * 131 + j * 7) % 251) as u8;
+        }
+    }
+    data
+}
+
+/// Find an object name whose frontend primary is `want` (or, with
+/// `invert`, is anything but `want`).
+fn name_with_primary(cluster: &Cluster, want: ServerId, invert: bool) -> String {
+    for i in 0..256 {
+        let cand = format!("rp-{i}");
+        let primary = cluster
+            .with_osd(ServerId(0), |sh| sh.object_chain(&cand)[0])
+            .unwrap();
+        if (primary == want) != invert {
+            return cand;
+        }
+    }
+    panic!("no object name with the required primary found");
+}
+
+#[test]
+fn batched_and_legacy_reads_byte_identical_across_dedup_ratios() {
+    for dedup_pct in [0u8, 50, 90] {
+        let gen = Generator::new(WorkloadSpec {
+            object_size: 8 << 10,
+            unit: CHUNK,
+            dedup_pct,
+            pool_blocks: 24,
+            zipf_theta: 0.0,
+            seed: 0x5EED ^ dedup_pct as u64,
+        });
+        for batching in [ReadBatching::Off, ReadBatching::PerHome] {
+            let cluster = boot(4, |c| c.read_batching = batching);
+            let client = cluster.client();
+            for i in 0..12 {
+                let (name, data) = gen.named_object(i);
+                client.put_object(&name, &data).expect("put");
+            }
+            // two passes: cold (store/fabric) and warm (cache) reads
+            for pass in 0..2 {
+                for i in 0..12 {
+                    let (name, data) = gen.named_object(i);
+                    assert_eq!(
+                        client.get_object(&name).unwrap(),
+                        data,
+                        "{batching:?} dedup={dedup_pct}% pass={pass} object={i}"
+                    );
+                }
+            }
+            let audit = cluster.audit().unwrap();
+            assert!(audit.is_ok(), "{batching:?}: {:?}", audit.violations);
+            cluster.shutdown();
+        }
+    }
+}
+
+#[test]
+fn batched_read_message_budget_is_one_per_remote_home() {
+    let cluster = boot(4, |_| {});
+    let client = cluster.client();
+    let data = unique_payload(32);
+
+    let reader = cluster
+        .with_osd(ServerId(0), |sh| sh.object_chain("obj")[0])
+        .unwrap();
+    let mut remote_homes = std::collections::HashSet::new();
+    let mut unique = 0u64;
+    for chunk in data.chunks(CHUNK) {
+        let fp = Fingerprint::of(chunk);
+        let home = cluster
+            .with_osd(ServerId(0), |sh| sh.chunk_chain(fp.placement_key())[0])
+            .unwrap();
+        unique += 1;
+        if home != reader {
+            remote_homes.insert(home);
+        }
+    }
+    let remote_homes = remote_homes.len() as u64;
+    assert!(remote_homes >= 1, "workload places no chunk remotely");
+
+    client.put_object("obj", &data).unwrap();
+    let before = cluster.stats();
+    assert_eq!(client.get_object("obj").unwrap(), data);
+    let after = cluster.stats();
+    assert_eq!(
+        after.read_batches - before.read_batches,
+        remote_homes,
+        "≤ 1 backend message per distinct live chunk home per read"
+    );
+    assert_eq!(
+        after.read_chunk_fetches, before.read_chunk_fetches,
+        "no per-chunk messages on a healthy batched read"
+    );
+    assert_eq!(after.read_fallbacks, before.read_fallbacks);
+
+    // warm read: everything from the hot-chunk cache, zero fabric msgs
+    assert_eq!(client.get_object("obj").unwrap(), data);
+    let warm = cluster.stats();
+    assert_eq!(warm.read_batches, after.read_batches);
+    assert_eq!(warm.read_chunk_fetches, after.read_chunk_fetches);
+    assert_eq!(
+        warm.read_cache_hits - after.read_cache_hits,
+        unique,
+        "repeat read must be answered entirely from cache"
+    );
+    cluster.shutdown();
+}
+
+#[test]
+fn degraded_read_with_killed_home_falls_back_per_item() {
+    let cluster = boot(4, |c| c.replication = 2);
+    let client = cluster.client();
+    let data = unique_payload(16);
+
+    let reader = cluster
+        .with_osd(ServerId(0), |sh| sh.object_chain("victim-obj")[0])
+        .unwrap();
+    // pick the primary of a chunk whose whole chain avoids the reader,
+    // so killing it forces a fabric batch to degrade (the reader can't
+    // quietly serve that chunk from its own replica slot)
+    let mut victim = None;
+    for chunk in data.chunks(CHUNK) {
+        let fp = Fingerprint::of(chunk);
+        let chain = cluster
+            .with_osd(ServerId(0), |sh| sh.chunk_chain(fp.placement_key()))
+            .unwrap();
+        if !chain.contains(&reader) {
+            victim = Some(chain[0]);
+            break;
+        }
+    }
+    let victim = victim.expect("no remote chunk home to kill");
+
+    client.put_object("victim-obj", &data).unwrap();
+    cluster.kill_server(victim).unwrap();
+
+    let before = cluster.stats();
+    assert_eq!(
+        client.get_object("victim-obj").unwrap(),
+        data,
+        "read must survive a dead chunk home via replica copies"
+    );
+    let after = cluster.stats();
+    assert!(
+        after.read_degraded_dead > before.read_degraded_dead,
+        "the dead home must be counted as a degraded fallback"
+    );
+    assert!(
+        after.read_fallbacks > before.read_fallbacks,
+        "batch items on the dead home must fall back per item"
+    );
+    cluster.shutdown();
+}
+
+#[test]
+fn gc_reclaim_invalidates_cached_chunk() {
+    let cluster = boot(4, |c| c.clock = ClockSource::Sim);
+    let client = cluster.client();
+    let data = unique_payload(1);
+    let fp = Fingerprint::of(&data);
+    let home = cluster
+        .with_osd(ServerId(0), |sh| sh.chunk_chain(fp.placement_key())[0])
+        .unwrap();
+    // route the object through the chunk's home so the (local-primary)
+    // read populates the cache on the same server GC will reclaim on
+    let name = name_with_primary(&cluster, home, false);
+
+    client.put_object(&name, &data).unwrap();
+    assert_eq!(client.get_object(&name).unwrap(), data);
+    assert!(
+        cluster.with_osd(home, |sh| sh.chunk_cache.contains(&fp)).unwrap(),
+        "read must have cached the chunk at its home"
+    );
+
+    client.delete_object(&name).unwrap();
+    cluster.flush_consistency().unwrap();
+    cluster.advance_clock(10).unwrap();
+    let before = cluster.stats();
+    cluster.run_gc(0).unwrap();
+    let after = cluster.stats();
+    assert!(after.gc_reclaimed > before.gc_reclaimed, "GC must reclaim");
+    assert!(
+        !cluster.with_osd(home, |sh| sh.chunk_cache.contains(&fp)).unwrap(),
+        "a reclaimed chunk must not survive in the cache"
+    );
+    assert!(after.read_cache_invalidations > before.read_cache_invalidations);
+    cluster.shutdown();
+}
+
+#[test]
+fn scrub_quarantine_invalidates_cached_chunk() {
+    let cluster = boot(4, |c| c.clock = ClockSource::Sim);
+    let client = cluster.client();
+    let data = unique_payload(1);
+    let fp = Fingerprint::of(&data);
+    let home = cluster
+        .with_osd(ServerId(0), |sh| sh.chunk_chain(fp.placement_key())[0])
+        .unwrap();
+    client.put_object("scrub-obj", &data).unwrap();
+
+    // cache the chunk at its home, then lose the primary bytes with no
+    // replica anywhere (replication 1): scrub must quarantine it
+    cluster
+        .with_osd(home, |sh| {
+            sh.chunk_cache.insert(fp, &data, false);
+            sh.store.delete(&fp.to_bytes()).unwrap();
+        })
+        .unwrap();
+    cluster.start_scrub(ScrubOptions::deep()).unwrap();
+    cluster.scrub_wait().unwrap();
+    assert!(
+        !cluster.with_osd(home, |sh| sh.chunk_cache.contains(&fp)).unwrap(),
+        "a quarantined chunk must not survive in the cache"
+    );
+    cluster.shutdown();
+}
+
+#[test]
+fn recovery_rehome_invalidates_cached_chunk() {
+    let cluster = boot(4, |c| {
+        c.replication = 2;
+        c.clock = ClockSource::Sim;
+    });
+    let client = cluster.client();
+    let data = unique_payload(1);
+    let fp = Fingerprint::of(&data);
+    let old_home = cluster
+        .with_osd(ServerId(0), |sh| sh.chunk_chain(fp.placement_key())[0])
+        .unwrap();
+    // keep the object's OMAP off the server we are about to remove
+    let name = name_with_primary(&cluster, old_home, true);
+    client.put_object(&name, &data).unwrap();
+
+    // prime every survivor's cache: whoever becomes the new home must
+    // invalidate before adopting the re-homed chunk
+    for s in 0..4 {
+        let id = ServerId(s);
+        if id != old_home {
+            cluster
+                .with_osd(id, |sh| sh.chunk_cache.insert(fp, &data, false))
+                .unwrap();
+        }
+    }
+    cluster.kill_server(old_home).unwrap();
+    cluster.remove_server(old_home).unwrap();
+    cluster.recovery_wait().unwrap();
+
+    let new_home = cluster
+        .with_osd(ServerId(0), |sh| sh.chunk_chain(fp.placement_key())[0])
+        .unwrap();
+    assert_ne!(new_home, old_home, "the chunk must have re-homed");
+    assert!(
+        !cluster
+            .with_osd(new_home, |sh| sh.chunk_cache.contains(&fp))
+            .unwrap(),
+        "the re-homed chunk must have been invalidated at its new home"
+    );
+    assert_eq!(client.get_object(&name).unwrap(), data);
+    cluster.shutdown();
+}
+
+#[test]
+fn kill_and_rejoin_wipe_clear_the_cache() {
+    let cluster = boot(4, |c| c.clock = ClockSource::Sim);
+    let data = unique_payload(1);
+    let fp = Fingerprint::of(&data);
+    let target = ServerId(2);
+
+    // kill clears the cache like the span ring
+    cluster
+        .with_osd(target, |sh| sh.chunk_cache.insert(fp, &data, false))
+        .unwrap();
+    cluster.kill_server(target).unwrap();
+    assert!(
+        cluster.with_osd(target, |sh| sh.chunk_cache.is_empty()).unwrap(),
+        "kill must clear the cache"
+    );
+
+    // and the rejoin wipe starts the new incarnation empty
+    cluster.remove_server(target).unwrap();
+    cluster
+        .with_osd(target, |sh| sh.chunk_cache.insert(fp, &data, false))
+        .unwrap();
+    cluster.rejoin_server(target).unwrap();
+    assert!(
+        cluster.with_osd(target, |sh| sh.chunk_cache.is_empty()).unwrap(),
+        "the rejoin wipe must clear the cache"
+    );
+    cluster.shutdown();
+}
+
+#[test]
+fn selective_duplication_plants_a_locality_copy() {
+    // cache off so repeat reads keep going over the fabric — exactly
+    // the fragmentation signal selective duplication keys on
+    let cluster = boot(4, |c| {
+        c.cache = CacheConfig {
+            capacity_bytes: 0,
+            hot_band: 2,
+        };
+        c.selective_dup = Some(DupPolicy {
+            fetch_threshold: 2,
+            min_mean_amp_x100: 0,
+            max_bytes: 16 << 20,
+        });
+    });
+    let client = cluster.client();
+    let data = unique_payload(1);
+    let fp = Fingerprint::of(&data);
+    let home = cluster
+        .with_osd(ServerId(0), |sh| sh.chunk_chain(fp.placement_key())[0])
+        .unwrap();
+    // the reader must not be the chunk's home, or nothing is remote
+    let name = name_with_primary(&cluster, home, true);
+    let reader = cluster
+        .with_osd(ServerId(0), |sh| sh.object_chain(&name)[0])
+        .unwrap();
+
+    client.put_object(&name, &data).unwrap();
+    for _ in 0..3 {
+        assert_eq!(client.get_object(&name).unwrap(), data);
+    }
+    let planted = cluster.stats();
+    assert!(
+        planted.dup_chunks_planted >= 1,
+        "a hot remote chunk must get a locality copy"
+    );
+    assert!(
+        cluster
+            .with_osd(reader, |sh| sh.chunk_cache.planted_contains(&fp))
+            .unwrap(),
+        "the reader must have planted the copy"
+    );
+
+    // after planting, the read is served from the local replica slot:
+    // no further batch messages
+    assert_eq!(client.get_object(&name).unwrap(), data);
+    let after = cluster.stats();
+    assert_eq!(
+        after.read_batches, planted.read_batches,
+        "a planted chunk must stop touching the fabric"
+    );
+    let audit = cluster.audit().unwrap();
+    assert!(audit.is_ok(), "{:?}", audit.violations);
+    cluster.shutdown();
+}
+
+#[test]
+fn raw_mode_reads_count_toward_read_amplification() {
+    let cluster = boot(3, |c| {
+        c.dedup = DedupMode::None;
+        c.replication = 2;
+    });
+    let client = cluster.client();
+    let data = unique_payload(2);
+    client.put_object("raw-obj", &data).unwrap();
+    let before = cluster.stats();
+    assert_eq!(client.get_object("raw-obj").unwrap(), data);
+    let after = cluster.stats();
+    assert_eq!(
+        after.read_amp_reads - before.read_amp_reads,
+        1,
+        "raw-mode reads must be counted"
+    );
+    assert_eq!(
+        after.read_amp_homes - before.read_amp_homes,
+        1,
+        "a raw-mode read is answered by exactly one home"
+    );
+    cluster.shutdown();
+}
