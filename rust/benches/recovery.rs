@@ -18,10 +18,11 @@
 //! appended to `bench_out/recovery.tsv` and a JSON summary is written
 //! to `BENCH_recovery.json` at the repository root.
 
-use snss_dedup::api::{Cluster, ClusterConfig, ScrubOptions};
+use snss_dedup::api::{Cluster, ClusterConfig, RedundancyPolicy, ScrubOptions};
 use snss_dedup::cluster::ServerId;
 use snss_dedup::dedup::Chunking;
 use snss_dedup::util::rng::XorShift128Plus;
+use snss_dedup::workload::{Generator, WorkloadSpec};
 use std::io::Write as _;
 use std::time::Instant;
 
@@ -102,6 +103,114 @@ fn run_point(objects: u64, replication: usize) -> Point {
     point
 }
 
+/// One flat-vs-banded redundancy point: space overhead at steady state
+/// and MTTR back to the full banded target after one server loss, with
+/// the top refcount band tracked separately (those are the chunks whose
+/// loss hurts the most objects — the banded policy exists to get *them*
+/// back to full redundancy first and keep them there).
+struct BandPoint {
+    policy: &'static str,
+    dedup_pct: u8,
+    objects: u64,
+    /// `copy_bytes / primary_bytes` at steady state, ×100.
+    overhead_x100: u64,
+    top_band_chunks: u64,
+    /// Seconds from the loss until the top band (all chunks, for flat)
+    /// is back at its full copy target.
+    mttr_secs: f64,
+    /// Scrub rounds the convergence loop needed after the backfill.
+    scrub_rounds: u32,
+}
+
+fn run_band_point(
+    policy: RedundancyPolicy,
+    policy_name: &'static str,
+    dedup_pct: u8,
+    objects: u64,
+) -> BandPoint {
+    let banded = !policy.is_flat();
+    let cluster = Cluster::new(ClusterConfig {
+        servers: SERVERS,
+        replication: 2,
+        redundancy: policy,
+        chunking: Chunking::Fixed { size: OBJECT_SIZE },
+        ..Default::default()
+    })
+    .expect("boot cluster");
+    let client = cluster.client();
+    // a small shared pool drives the hottest blocks far past the top
+    // band threshold at high dedup ratios; at 0% nothing crosses
+    let gen = Generator::new(WorkloadSpec {
+        object_size: OBJECT_SIZE * 8,
+        unit: OBJECT_SIZE,
+        dedup_pct,
+        pool_blocks: 16,
+        zipf_theta: 0.0,
+        seed: 0xBA4D ^ dedup_pct as u64,
+    });
+    for i in 0..objects {
+        let (name, data) = gen.named_object(i);
+        client.put_object(&name, &data).expect("populate");
+    }
+    cluster.flush_consistency().expect("flush");
+    // settle stragglers the online hooks missed (dry budget, races)
+    cluster.start_scrub(ScrubOptions::deep()).expect("scrub");
+    cluster.scrub_wait().expect("scrub_wait");
+    let steady = cluster.redundancy_report().expect("report");
+    assert!(
+        steady.is_converged(),
+        "{policy_name}/{dedup_pct}%: not at target before the loss: {steady:?}"
+    );
+    let overhead_x100 = if steady.primary_bytes > 0 {
+        steady.copy_bytes * 100 / steady.primary_bytes
+    } else {
+        0
+    };
+
+    let t0 = Instant::now();
+    cluster.remove_server(ServerId(1)).expect("remove");
+    let report = cluster.recovery_wait().expect("recovery");
+    assert!(
+        report.first_failure().is_none(),
+        "recovery failed: {report:?}"
+    );
+    // MTTR-to-full-target: the refcount-descending work list plus the
+    // repair-debt drain should leave little for the scrub rounds
+    let mut scrub_rounds = 0u32;
+    let mttr_secs = loop {
+        let r = cluster.redundancy_report().expect("report");
+        let healed = if banded {
+            r.top_band_below == 0
+        } else {
+            r.below_target == 0
+        };
+        if healed {
+            break t0.elapsed().as_secs_f64();
+        }
+        assert!(
+            scrub_rounds < 6,
+            "{policy_name}/{dedup_pct}%: top band never healed: {r:?}"
+        );
+        cluster.start_scrub(ScrubOptions::deep()).expect("scrub");
+        cluster.scrub_wait().expect("scrub_wait");
+        scrub_rounds += 1;
+    };
+
+    let audit = cluster.audit().expect("audit");
+    assert!(audit.is_ok(), "audit violations: {:?}", audit.violations);
+    let point = BandPoint {
+        policy: policy_name,
+        dedup_pct,
+        objects,
+        overhead_x100,
+        top_band_chunks: steady.top_band_chunks,
+        mttr_secs,
+        scrub_rounds,
+    };
+    cluster.shutdown();
+    point
+}
+
 fn main() {
     let sizes: &[u64] = match std::env::var("BENCH_SCALE").as_deref() {
         Ok("small") => &[10_000],
@@ -164,10 +273,67 @@ fn main() {
             ));
         }
     }
+    // ---- flat vs. banded redundancy: space overhead vs. MTTR ----
+    let band_objects: u64 = match std::env::var("BENCH_SCALE").as_deref() {
+        Ok("small") => 400,
+        _ => 1_200,
+    };
+    println!("== redundancy: space overhead vs. MTTR-to-full-target, flat vs. banded ==");
+    println!(
+        "{:<8} {:>6} {:>10} {:>12} {:>10} {:>7}",
+        "policy", "dedup%", "overhead%", "top-band", "mttr s", "scrubs"
+    );
+    let mut band_json = Vec::new();
+    for dedup_pct in [0u8, 50, 90] {
+        for (policy, name) in [
+            (RedundancyPolicy::flat(), "flat"),
+            (RedundancyPolicy::banded(), "banded"),
+        ] {
+            let p = run_band_point(policy, name, dedup_pct, band_objects);
+            println!(
+                "{:<8} {:>6} {:>10} {:>12} {:>10.3} {:>7}",
+                p.policy,
+                p.dedup_pct,
+                p.overhead_x100,
+                p.top_band_chunks,
+                p.mttr_secs,
+                p.scrub_rounds
+            );
+            record(
+                "recovery_banded",
+                "policy\tdedup_pct\tobjects\toverhead_x100\ttop_band_chunks\tmttr_secs\t\
+                 scrub_rounds",
+                &format!(
+                    "{}\t{}\t{}\t{}\t{}\t{:.3}\t{}",
+                    p.policy,
+                    p.dedup_pct,
+                    p.objects,
+                    p.overhead_x100,
+                    p.top_band_chunks,
+                    p.mttr_secs,
+                    p.scrub_rounds
+                ),
+            );
+            band_json.push(format!(
+                "    {{\"policy\": \"{}\", \"dedup_pct\": {}, \"objects\": {}, \
+                 \"overhead_x100\": {}, \"top_band_chunks\": {}, \"mttr_secs\": {:.3}, \
+                 \"scrub_rounds\": {}}}",
+                p.policy,
+                p.dedup_pct,
+                p.objects,
+                p.overhead_x100,
+                p.top_band_chunks,
+                p.mttr_secs,
+                p.scrub_rounds
+            ));
+        }
+    }
     let json = format!(
         "{{\n  \"bench\": \"recovery\",\n  \"servers\": {SERVERS},\n  \
-         \"object_size\": {OBJECT_SIZE},\n  \"points\": [\n{}\n  ]\n}}\n",
-        json_points.join(",\n")
+         \"object_size\": {OBJECT_SIZE},\n  \"points\": [\n{}\n  ],\n  \
+         \"band_points\": [\n{}\n  ]\n}}\n",
+        json_points.join(",\n"),
+        band_json.join(",\n")
     );
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_recovery.json");
     std::fs::write(path, json).expect("write BENCH_recovery.json");

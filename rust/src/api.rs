@@ -38,6 +38,7 @@ use std::sync::{Arc, Mutex, RwLock};
 pub use crate::dedup::cache::{CacheConfig, DupPolicy};
 pub use crate::dedup::consistency::ConsistencyMode as Consistency;
 pub use crate::dedup::engine::{DedupMode, ReadBatching, WriteBatching};
+pub use crate::dedup::redundancy::{RedundancyBand, RedundancyPolicy};
 pub use crate::recovery::{
     FailureDetection, ObserverHook, ObserverVerdict, RecoveryState, RecoveryStatus,
 };
@@ -95,6 +96,12 @@ pub struct ClusterConfig {
     pub servers: usize,
     /// Replica count for chunk data + OMAP copies (1 = no replication).
     pub replication: usize,
+    /// Refcount-banded redundancy policy layered on `replication`: the
+    /// more objects share a chunk, the more copies it gets (capped by
+    /// the live-server count). The default flat policy keeps every
+    /// chunk at exactly `replication` copies; see
+    /// [`RedundancyPolicy::banded`] and DESIGN.md §15.
+    pub redundancy: RedundancyPolicy,
     /// Placement groups (power of two).
     pub pg_count: u32,
     /// Dedup architecture.
@@ -162,6 +169,7 @@ impl Default for ClusterConfig {
         ClusterConfig {
             servers: 4,
             replication: 2,
+            redundancy: RedundancyPolicy::flat(),
             pg_count: 128,
             dedup: DedupMode::ClusterWide,
             consistency: ConsistencyMode::AsyncTagged,
@@ -324,6 +332,20 @@ pub struct ClusterStats {
     pub membership_wipes: u64,
     /// Map-change events that auto-enqueued a cluster-wide rebalance.
     pub membership_auto_rebalances: u64,
+    /// Replica-copy pushes that failed at any fan-out site (dead peer,
+    /// `Busy` shed, error reply) instead of being silently shrugged off.
+    pub replica_push_failures: u64,
+    /// Copy-adds applied by the online redundancy promotion hook.
+    pub redundancy_promotions: u64,
+    /// Copy-drops applied by the online demotion hook and the scrub's
+    /// excess sweep (plant-registry-aware).
+    pub redundancy_demotions: u64,
+    /// Sum of banded copy targets computed at write-time fan-out
+    /// (divide by `unique_chunks` for the mean target).
+    pub redundancy_target_copies: u64,
+    /// Orphaned locality plants reclaimed through the
+    /// `invalidate_chunk` choke point.
+    pub dup_plants_reclaimed: u64,
     /// Per-server snapshots.
     pub per_server: Vec<OsdStats>,
 }
@@ -336,6 +358,43 @@ impl ClusterStats {
         } else {
             1.0 - self.stored_bytes as f64 / self.logical_bytes as f64
         }
+    }
+}
+
+/// Cluster-wide redundancy census (see DESIGN.md §15): for every
+/// referenced chunk, the banded copy target (the [`RedundancyPolicy`]
+/// applied to its refcount) is compared against the copies actually on
+/// live servers — the primary plus the chain's replica-slot copies,
+/// *excluding* selective-duplication locality plants, which were never
+/// counted toward the target. Produced by
+/// [`Cluster::redundancy_report`]; tests and the recovery bench use it
+/// to assert exact convergence and measure space overhead.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RedundancyReport {
+    /// Referenced chunks examined (refcount > 0, home alive).
+    pub chunks: u64,
+    /// Chunks holding exactly their banded copy target.
+    pub at_target: u64,
+    /// Chunks with fewer live copies than their target (degraded).
+    pub below_target: u64,
+    /// Chunks with more live copies than their target (a missed
+    /// demotion; scrub's excess sweep drains these).
+    pub above_target: u64,
+    /// Chunks whose refcount is in the policy's top band.
+    pub top_band_chunks: u64,
+    /// Top-band chunks below their target (the MTTR numerator the
+    /// recovery bench drives to zero).
+    pub top_band_below: u64,
+    /// Bytes held as primary copies across examined chunks.
+    pub primary_bytes: u64,
+    /// Bytes held as redundancy copies across examined chunks.
+    pub copy_bytes: u64,
+}
+
+impl RedundancyReport {
+    /// Every examined chunk sits exactly at its banded target.
+    pub fn is_converged(&self) -> bool {
+        self.below_target == 0 && self.above_target == 0
     }
 }
 
@@ -526,7 +585,10 @@ impl Cluster {
             Placement::Straw2 => Box::new(Straw2),
             Placement::Rendezvous => Box::new(Rendezvous),
         };
-        let pgmap = Arc::new(PgMap::new(policy, cfg.pg_count, cfg.replication.max(2)));
+        // chains must be wide enough for the top redundancy band, not
+        // just the flat replication factor — promotion needs the slots
+        let chain_width = cfg.redundancy.max_copies(cfg.replication).max(2);
+        let pgmap = Arc::new(PgMap::new(policy, cfg.pg_count, chain_width));
         let dir: Dir = Dir::new();
         let obs = Registry::new(cfg.obs.clone());
         // the cluster-scope registry entry doubles as the old "shared"
@@ -655,6 +717,7 @@ impl Cluster {
                 write_batching: self.cfg.write_batching,
                 chunker: Chunker::new(self.cfg.chunking),
                 replication: self.cfg.replication,
+                redundancy: self.cfg.redundancy.clone(),
                 verify_read: self.cfg.verify_read,
                 verify_write: self.cfg.verify_write,
                 meta_io: self.cfg.meta_io,
@@ -683,6 +746,7 @@ impl Cluster {
             clock: self.clock.clone(),
             obj_lock: Mutex::new(()),
             probe_gap_hook: Mutex::new(None),
+            repair_debt: Mutex::new(std::collections::HashSet::new()),
         });
         let osd = Osd::spawn(shared, self.cfg.net);
         self.osds.lock().unwrap().insert(id, osd);
@@ -1118,6 +1182,11 @@ impl Cluster {
             membership_rejoins: sum(|m| &m.membership_rejoins),
             membership_wipes: sum(|m| &m.membership_wipes),
             membership_auto_rebalances: sum(|m| &m.membership_auto_rebalances),
+            replica_push_failures: sum(|m| &m.replica_push_failures),
+            redundancy_promotions: sum(|m| &m.redundancy_promotions),
+            redundancy_demotions: sum(|m| &m.redundancy_demotions),
+            redundancy_target_copies: sum(|m| &m.redundancy_target_copies),
+            dup_plants_reclaimed: sum(|m| &m.dup_plants_reclaimed),
             per_server: Vec::new(),
         };
         let mut ids = self.live_ids();
@@ -1267,6 +1336,74 @@ impl Cluster {
                     report
                         .violations
                         .push(format!("{fp:?} referenced but no CIT entry in scope"));
+                }
+            }
+        }
+        Ok(report)
+    }
+
+    /// Census every referenced chunk's live copy count against its
+    /// refcount-banded target (see [`RedundancyReport`]). Walks each
+    /// live home's CIT and checks the chain's replica slots directly;
+    /// locality plants are excluded from the copy count, and copies on
+    /// dead servers do not count toward durability.
+    pub fn redundancy_report(&self) -> Result<RedundancyReport> {
+        use crate::dedup::engine::chunk_copy_key;
+        let shares: HashMap<ServerId, Arc<OsdShared>> = {
+            let osds = self.osds.lock().unwrap();
+            osds.iter()
+                .filter(|(_, o)| !o.shared.injector.is_dead())
+                .map(|(id, o)| (*id, o.shared.clone()))
+                .collect()
+        };
+        let live = self.monitor.map().up_count();
+        let top_band = self.cfg.redundancy.top_band_min_refs();
+        let mut report = RedundancyReport::default();
+        let mut ids: Vec<ServerId> = shares.keys().copied().collect();
+        ids.sort();
+        for id in ids {
+            let sh = &shares[&id];
+            for fp in sh.shard.cit_fingerprints()? {
+                let Some(entry) = sh.shard.cit_get(&fp)? else {
+                    continue;
+                };
+                if entry.refcount == 0 {
+                    continue; // unreferenced: GC's business, no target
+                }
+                let chain = sh.chunk_chain(fp.placement_key());
+                if self.cfg.dedup == DedupMode::ClusterWide && chain.first() != Some(&id) {
+                    continue; // misplaced: the rebalancer owns the move
+                }
+                let target = self
+                    .cfg
+                    .redundancy
+                    .target_copies(entry.refcount, self.cfg.replication, live)
+                    as u64;
+                let mut copies = u64::from(sh.store.stat(&fp.to_bytes())?);
+                for peer in chain.iter().skip(1) {
+                    let Some(peer_sh) = shares.get(peer) else {
+                        continue; // dead holder: its copy is not durable
+                    };
+                    if *peer == id || peer_sh.chunk_cache.planted_contains(&fp) {
+                        continue; // locality plant ≠ redundancy copy
+                    }
+                    if peer_sh.replica_store.stat(&chunk_copy_key(&fp))? {
+                        copies += 1;
+                        report.copy_bytes += entry.len as u64;
+                    }
+                }
+                report.chunks += 1;
+                report.primary_bytes += entry.len as u64;
+                match copies.cmp(&target) {
+                    std::cmp::Ordering::Less => report.below_target += 1,
+                    std::cmp::Ordering::Equal => report.at_target += 1,
+                    std::cmp::Ordering::Greater => report.above_target += 1,
+                }
+                if top_band.is_some_and(|min| entry.refcount >= min) {
+                    report.top_band_chunks += 1;
+                    if copies < target {
+                        report.top_band_below += 1;
+                    }
                 }
             }
         }

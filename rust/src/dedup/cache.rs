@@ -348,6 +348,19 @@ impl ChunkCache {
         self.inner.lock().unwrap().planted.contains_key(fp)
     }
 
+    /// Deregister a planted locality copy, returning its recorded length
+    /// (`None` when `fp` was never planted here). The caller deletes the
+    /// replica-store entry — this is the bookkeeping half of the
+    /// `invalidate_chunk` choke point that keeps a plant from outliving
+    /// its chunk as an orphan.
+    pub fn plant_deregister(&self, fp: &Fingerprint) -> Option<u64> {
+        let mut g = self.inner.lock().unwrap();
+        let (seq, len) = g.planted.remove(fp)?;
+        g.planted_order.remove(&seq);
+        g.planted_bytes -= len;
+        Some(len)
+    }
+
     /// Total bytes of planted locality copies.
     pub fn planted_bytes(&self) -> u64 {
         self.inner.lock().unwrap().planted_bytes
@@ -438,5 +451,20 @@ mod tests {
         assert_eq!(victims, vec![fp(1)]);
         assert!(c.planted_contains(&fp(2)));
         assert_eq!(c.planted_bytes(), 300);
+    }
+
+    #[test]
+    fn plant_deregister_releases_budget() {
+        let c = cache(4096);
+        assert_eq!(c.plant_deregister(&fp(1)), None, "never planted");
+        c.plant_register(&fp(1), 300, 1000);
+        c.plant_register(&fp(2), 200, 1000);
+        assert_eq!(c.plant_deregister(&fp(1)), Some(300));
+        assert!(!c.planted_contains(&fp(1)));
+        assert_eq!(c.planted_bytes(), 200);
+        assert_eq!(c.plant_deregister(&fp(1)), None, "second call is a no-op");
+        // the freed budget admits a new plant without evicting fp(2)
+        assert!(c.plant_register(&fp(3), 300, 500).is_empty());
+        assert!(c.planted_contains(&fp(2)));
     }
 }

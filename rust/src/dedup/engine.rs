@@ -144,7 +144,10 @@ fn put_nodedup(sh: &OsdShared, name: &str, data: &[u8]) -> Result<(u64, u64)> {
     let key = raw_object_key(name);
     sh.store.put(&key, data)?;
     Metrics::add(&sh.metrics.bytes_stored, data.len() as u64);
-    replicate(sh, &sh.object_chain(name), &key, data)?;
+    let failures = replicate(sh, &sh.object_chain(name), &key, data, sh.cfg.replication)?;
+    if failures > 0 {
+        Metrics::add(&sh.metrics.replica_push_failures, failures as u64);
+    }
     Ok((data.len() as u64, data.len() as u64))
 }
 
@@ -231,7 +234,16 @@ fn put_dedup(sh: &OsdShared, name: &str, data: &[u8], local_only: bool) -> Resul
 
     // 5. replicate the OMAP record for read availability.
     let chain = sh.object_chain(name);
-    replicate(sh, &chain, &omap_copy_key(name), &entry.encode())?;
+    let failures = replicate(
+        sh,
+        &chain,
+        &omap_copy_key(name),
+        &entry.encode(),
+        sh.cfg.replication,
+    )?;
+    if failures > 0 {
+        Metrics::add(&sh.metrics.replica_push_failures, failures as u64);
+    }
 
     // 6. release the overwritten version's chunk references.
     if let Some(old) = old_entry {
@@ -612,10 +624,12 @@ pub fn store_chunk_local(
         _ => CommitFlag::Invalid,
     };
     let mut prior: Option<CommitFlag> = None;
+    let mut prior_refs = 0u64;
     sh.charge_meta_io(); // modeled DM-Shard write
     sh.shard.cit_update(fp, |cur| match cur {
         Some(mut e) => {
             prior = Some(e.flag);
+            prior_refs = e.refcount;
             e.refcount += refs;
             Some(e)
         }
@@ -642,6 +656,7 @@ pub fn store_chunk_local(
             Metrics::add(&sh.metrics.repairs, 1);
         }
         Metrics::add(&sh.metrics.dedup_hits, refs);
+        maybe_retarget(sh, fp, prior_refs, prior_refs + refs);
         return Ok(true);
     }
 
@@ -692,9 +707,11 @@ pub fn grant_ref_local(sh: &OsdShared, fp: &Fingerprint, refs: u64) -> Result<bo
         None
     };
     let mut granted = false;
+    let mut prior_refs = 0u64;
     sh.shard.cit_update(fp, |cur| match cur {
         Some(mut e) if e.flag == CommitFlag::Valid => {
             granted = true;
+            prior_refs = e.refcount;
             e.refcount += refs;
             Some(e)
         }
@@ -705,6 +722,7 @@ pub fn grant_ref_local(sh: &OsdShared, fp: &Fingerprint, refs: u64) -> Result<bo
     if granted {
         sh.charge_meta_io(); // modeled DM-Shard write
         Metrics::add(&sh.metrics.dedup_hits, refs);
+        maybe_retarget(sh, fp, prior_refs, prior_refs + refs);
     }
     Ok(granted)
 }
@@ -712,12 +730,18 @@ pub fn grant_ref_local(sh: &OsdShared, fp: &Fingerprint, refs: u64) -> Result<bo
 /// Refcount decrement (delete path / write rollback). Refcount-zero
 /// entries are left for the GC pass to reclaim.
 pub fn dec_ref_local(sh: &OsdShared, fp: &Fingerprint, refs: u64) -> Result<()> {
+    let mut crossed: Option<(u64, u64)> = None;
     sh.shard.cit_update(fp, |cur| {
         cur.map(|mut e| {
+            let old = e.refcount;
             e.refcount = e.refcount.saturating_sub(refs);
+            crossed = Some((old, e.refcount));
             e
         })
     })?;
+    if let Some((old, new)) = crossed {
+        maybe_retarget(sh, fp, old, new);
+    }
     Ok(())
 }
 
@@ -1166,12 +1190,26 @@ pub fn delete_object(sh: &OsdShared, name: &str) -> Result<bool> {
 /// Cache-coherence hook (DESIGN.md §14): drop one chunk from this
 /// server's hot-chunk cache after an event that retired or rewrote its
 /// local data — GC reclaim, scrub quarantine/repair, recovery
-/// re-homing, rebalance migration. Keeps the invariant that a cached
-/// chunk never outlives its CIT entry on the same server.
+/// re-homing, rebalance migration, or an incoming `DeleteCopy`. Keeps
+/// the invariant that a cached chunk never outlives its CIT entry on
+/// the same server, and — the same one-choke-point argument — that a
+/// planted locality copy never outlives the chunk it duplicates: a
+/// registered plant is deregistered and its replica-slot entry deleted
+/// here, so a reclaim can't leave an orphan behind.
 pub fn invalidate_chunk(sh: &OsdShared, fp: &Fingerprint) {
     if sh.chunk_cache.invalidate(fp) {
         Metrics::add(&sh.metrics.read_cache_invalidations, 1);
     }
+    if sh.chunk_cache.plant_deregister(fp).is_some() {
+        let _ = sh.replica_store.delete(&chunk_copy_key(fp));
+        Metrics::add(&sh.metrics.dup_plants_reclaimed, 1);
+    }
+}
+
+/// Inverse of [`chunk_copy_key`]: the fingerprint inside a replica-slot
+/// chunk-copy key (`None` for OMAP / raw-object / flag keys).
+pub fn chunk_copy_fp(key: &[u8]) -> Option<Fingerprint> {
+    key.strip_prefix(b"c:").and_then(Fingerprint::from_bytes)
 }
 
 /// Key for a whole raw object (no-dedup mode).
@@ -1211,33 +1249,55 @@ pub fn object_fingerprint(digests: &[Fingerprint]) -> Fingerprint {
     Fingerprint::of(&buf)
 }
 
-/// Replicate a chunk's data to the rest of its placement chain. With
-/// [`crate::storage::osd::OsdConfig::verify_write`] on, each replica is
-/// then asked to confirm its copy by content.
+/// Replicate a chunk's data to its banded share of the placement chain:
+/// the copy target comes from the redundancy policy applied to the
+/// chunk's *current* refcount, so the write-time fan-out, scrub,
+/// recovery and rebalance all agree on the same count (DESIGN.md §15).
+/// With [`crate::storage::osd::OsdConfig::verify_write`] on, each
+/// replica is then asked to confirm its copy by content.
 fn replicate_chunk(sh: &OsdShared, fp: &Fingerprint, data: &[u8]) -> Result<()> {
+    let refcount = sh
+        .shard
+        .cit_get(fp)
+        .ok()
+        .flatten()
+        .map(|e| e.refcount)
+        .unwrap_or(1);
+    let target = sh.redundancy_target(refcount);
+    Metrics::add(&sh.metrics.redundancy_target_copies, target as u64);
     let chain = sh.chunk_chain(fp.placement_key());
-    replicate(sh, &chain, &chunk_copy_key(fp), data)?;
+    let failures = replicate(sh, &chain, &chunk_copy_key(fp), data, target)?;
+    if failures > 0 {
+        // a dead/Busy replica slot left this chunk under target: record
+        // the debt so the next scrub window heals it first
+        Metrics::add(&sh.metrics.replica_push_failures, failures as u64);
+        sh.note_repair_debt(*fp);
+    }
     if sh.cfg.verify_write {
-        verify_replicas(sh, &chain, fp);
+        verify_replicas(sh, &chain, fp, target);
     }
     Ok(())
 }
 
-/// Write-time replica confirmation: ask each replica slot to hash its
-/// copy of `fp` and compare (`VerifyCopy` — only the verdict crosses the
-/// wire). Non-fatal by design: a missing or mismatched copy is counted
-/// in `write_verify_mismatches` and left for scrub/recovery to heal,
-/// never failing a write that already met its durability bar. A `Busy`
-/// shed or a dead peer is skipped (scrub re-probes later).
-fn verify_replicas(sh: &OsdShared, chain: &[ServerId], fp: &Fingerprint) {
-    if sh.cfg.replication <= 1 {
+/// Write-time replica confirmation: ask each of the `copies - 1`
+/// replica slots to hash its copy of `fp` and compare (`VerifyCopy` —
+/// only the verdict crosses the wire). Non-fatal by design: a missing
+/// or mismatched copy is counted in `write_verify_mismatches` and left
+/// for scrub/recovery to heal, never failing a write that already met
+/// its durability bar. A `Busy` shed or a dead peer is counted in
+/// `replica_push_failures` and recorded as repair debt, so the next
+/// scrub window re-probes it first.
+fn verify_replicas(sh: &OsdShared, chain: &[ServerId], fp: &Fingerprint, copies: usize) {
+    if copies <= 1 {
         return;
     }
-    for peer in chain.iter().skip(1).take(sh.cfg.replication - 1) {
+    for peer in chain.iter().skip(1).take(copies - 1) {
         if *peer == sh.id {
             continue;
         }
         let Ok(addr) = sh.dir.lookup(*peer, Lane::Replica) else {
+            Metrics::add(&sh.metrics.replica_push_failures, 1);
+            sh.note_repair_debt(*fp);
             continue;
         };
         let req = Req::VerifyCopy {
@@ -1251,44 +1311,143 @@ fn verify_replicas(sh: &OsdShared, chain: &[ServerId], fp: &Fingerprint) {
                 present: true,
                 matches: true,
             }) => {}
-            Ok(Resp::Busy) | Err(_) => {} // shed or dead peer: scrub's job
-            Ok(_) => Metrics::add(&sh.metrics.write_verify_mismatches, 1),
+            Ok(Resp::Busy) | Err(_) => {
+                // shed or dead peer: counted, and queued for the next
+                // scrub window instead of waiting for the full walk
+                Metrics::add(&sh.metrics.replica_push_failures, 1);
+                sh.note_repair_debt(*fp);
+            }
+            Ok(_) => {
+                Metrics::add(&sh.metrics.write_verify_mismatches, 1);
+                sh.note_repair_debt(*fp);
+            }
         }
     }
 }
 
-/// Replicate `key → data` to every chain member except ourselves.
-/// Replication failures are non-fatal (degraded durability, like Ceph
-/// acking with min_size); dead peers are skipped.
+/// Replicate `key → data` to the first `copies - 1` chain members after
+/// the primary, skipping ourselves. Replication failures are non-fatal
+/// (degraded durability, like Ceph acking with min_size) but no longer
+/// silent: the returned count says how many pushes failed (dead peer,
+/// send error, or a non-`Ok` reply) so callers can account the gap.
 fn replicate(
     sh: &OsdShared,
     chain: &[crate::cluster::ServerId],
     key: &[u8],
     data: &[u8],
-) -> Result<()> {
-    if sh.cfg.replication <= 1 {
-        return Ok(());
+    copies: usize,
+) -> Result<usize> {
+    if copies <= 1 {
+        return Ok(0);
     }
+    let mut failures = 0usize;
     let mut pendings = Vec::new();
-    for peer in chain.iter().skip(1).take(sh.cfg.replication - 1) {
+    for peer in chain.iter().skip(1).take(copies - 1) {
+        if *peer == sh.id {
+            continue;
+        }
+        let Ok(addr) = sh.dir.lookup(*peer, Lane::Replica) else {
+            failures += 1;
+            continue;
+        };
+        let req = Req::PutCopy {
+            key: key.to_vec(),
+            data: data.to_vec(),
+        };
+        let size = req.wire_size();
+        match addr.send(req, size) {
+            Ok(p) => pendings.push(p),
+            Err(_) => failures += 1,
+        }
+    }
+    for p in pendings {
+        match p.wait() {
+            Ok(Resp::Ok) => {}
+            _ => failures += 1,
+        }
+    }
+    Ok(failures)
+}
+
+/// Online promote/demote (DESIGN.md §15): when a refcount change moved
+/// a chunk across a redundancy band threshold, add or drop copies on
+/// the chunk's home so its redundancy tracks its blast radius.
+/// Flow-budgeted (rebalance class, non-blocking) and best-effort: a dry
+/// budget, dead peer or `Busy` shed leaves convergence to the scrub. A
+/// demotion computes its slots from the *new* refcount's target, so it
+/// can never drop a copy the current band still requires.
+fn maybe_retarget(sh: &OsdShared, fp: &Fingerprint, old_refs: u64, new_refs: u64) {
+    if sh.cfg.redundancy.is_flat() || sh.cfg.dedup == DedupMode::Central {
+        return;
+    }
+    let old_t = sh.redundancy_target(old_refs);
+    let new_t = sh.redundancy_target(new_refs);
+    if new_t > old_t {
+        promote_copies(sh, fp, old_t, new_t);
+    } else if new_t < old_t {
+        demote_copies(sh, fp, new_t, old_t);
+    }
+}
+
+/// Copy-add half of the online retarget: push the primary's payload to
+/// the chain slots the higher band newly demands.
+fn promote_copies(sh: &OsdShared, fp: &Fingerprint, old_t: usize, new_t: usize) {
+    let Ok(Some(data)) = sh.store.get(&fp.to_bytes()) else {
+        return; // no local primary (mid-migration): scrub converges it
+    };
+    let cost = data.len() as u64 * (new_t - old_t) as u64;
+    let Some(granted) = sh.flow.try_take(MaintClass::Rebalance, cost) else {
+        return; // dry budget: the next scrub pass converges stragglers
+    };
+    Metrics::add(&sh.metrics.flow_granted_rebalance, granted);
+    let chain = sh.chunk_chain(fp.placement_key());
+    for peer in chain.iter().skip(old_t).take(new_t - old_t) {
+        if *peer == sh.id {
+            continue;
+        }
+        let reply = sh.dir.lookup(*peer, Lane::Replica).ok().and_then(|addr| {
+            let req = Req::PutCopy {
+                key: chunk_copy_key(fp),
+                data: data.clone(),
+            };
+            let size = req.wire_size();
+            addr.call(req, size).ok()
+        });
+        match reply {
+            Some(Resp::Ok) => Metrics::add(&sh.metrics.redundancy_promotions, 1),
+            _ => {
+                Metrics::add(&sh.metrics.replica_push_failures, 1);
+                sh.note_repair_debt(*fp);
+            }
+        }
+    }
+}
+
+/// Copy-drop half of the online retarget: ask the chain slots beyond
+/// the new target to drop their redundancy copies. The holder consults
+/// its plant registry ([`Req::DemoteCopy`]) — a locality plant under
+/// the same key was never a redundancy copy and survives the demotion.
+fn demote_copies(sh: &OsdShared, fp: &Fingerprint, new_t: usize, old_t: usize) {
+    let Some(granted) = sh
+        .flow
+        .try_take(MaintClass::Rebalance, 64 * (old_t - new_t) as u64)
+    else {
+        return; // dry budget: scrub drops the excess later
+    };
+    Metrics::add(&sh.metrics.flow_granted_rebalance, granted);
+    let chain = sh.chunk_chain(fp.placement_key());
+    for peer in chain.iter().skip(new_t).take(old_t - new_t) {
         if *peer == sh.id {
             continue;
         }
         if let Ok(addr) = sh.dir.lookup(*peer, Lane::Replica) {
-            let req = Req::PutCopy {
-                key: key.to_vec(),
-                data: data.to_vec(),
-            };
+            let req = Req::DemoteCopy { fp: *fp };
             let size = req.wire_size();
-            if let Ok(p) = addr.send(req, size) {
-                pendings.push(p);
+            if let Ok(Resp::Ok) = addr.call(req, size) {
+                Metrics::add(&sh.metrics.redundancy_demotions, 1);
             }
         }
     }
-    for p in pendings {
-        let _ = p.wait();
-    }
-    Ok(())
 }
 
 /// Release every chunk reference held by an OMAP entry (delete path and

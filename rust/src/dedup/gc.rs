@@ -180,9 +180,22 @@ fn reclaim(sh: &OsdShared, fp: &Fingerprint) -> Result<()> {
             }
         }
     }
-    // drop replica copies
-    for peer in sh.chunk_chain(fp.placement_key()).iter().skip(1) {
-        if let Ok(addr) = sh.dir.lookup(*peer, Lane::Replica) {
+    // Drop replica copies. Broadcast to every Up server, not just the
+    // chain: selective duplication may have planted locality copies on
+    // off-chain readers, and a reclaim that skipped them would strand
+    // orphans under the same `c:` key (the holder's `DeleteCopy` path
+    // routes through `invalidate_chunk`, which also deregisters the
+    // plant). A Down server misses the broadcast; its stale copy is
+    // bounded by the plant budget and swept by its next scrub pass.
+    let peers: Vec<_> = {
+        let map = sh.map.read().unwrap();
+        map.up_servers().map(|s| s.id).collect()
+    };
+    for peer in peers {
+        if peer == sh.id {
+            continue;
+        }
+        if let Ok(addr) = sh.dir.lookup(peer, Lane::Replica) {
             let _ = addr.call(
                 Req::DeleteCopy {
                     key: chunk_copy_key(fp),

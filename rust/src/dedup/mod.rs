@@ -13,6 +13,8 @@
 //! * [`gc`] — the garbage-collection pass over invalid commit flags.
 //! * [`cache`] — the per-server hot-chunk cache and the
 //!   fragmentation-aware selective-duplication tracker (§14).
+//! * [`redundancy`] — the refcount-banded copy-count policy every
+//!   plant/repair path consults (§15).
 
 pub mod cache;
 pub mod chunker;
@@ -23,7 +25,9 @@ pub mod engine;
 pub mod fingerprint;
 pub mod gc;
 pub mod omap;
+pub mod redundancy;
 
 pub use chunker::{Chunker, Chunking};
 pub use consistency::ConsistencyMode;
 pub use fingerprint::{Fingerprint, FingerprintProvider, RustSha1Provider};
+pub use redundancy::{RedundancyBand, RedundancyPolicy};

@@ -1,0 +1,154 @@
+//! Refcount-banded redundancy policy (FASTEN, arXiv:2312.08309).
+//!
+//! Dedup concentrates risk: losing the last copy of a million-referrer
+//! chunk destroys every object that references it, while a refcount-1
+//! chunk at flat `replication` is over-protected. The policy here maps
+//! refcount *bands* to extra copy counts — e.g. refs ≥ 8 → +1 copy,
+//! refs ≥ 64 → +2 — so redundancy tracks blast radius instead of being
+//! uniform. Every path that plants or repairs copies (write-time
+//! fan-out, scrub, recovery re-replication, rebalance migrate-out, the
+//! online promote/demote hooks) asks [`RedundancyPolicy::target_copies`]
+//! for the same answer, which is what makes the copy count converge
+//! (DESIGN.md §15).
+
+/// One band of the policy: chunks whose refcount is at least
+/// [`RedundancyBand::min_refs`] get [`RedundancyBand::extra_copies`]
+/// copies on top of the base replication factor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RedundancyBand {
+    /// Inclusive refcount threshold that activates this band.
+    pub min_refs: u64,
+    /// Copies added on top of the configured base replication.
+    pub extra_copies: usize,
+}
+
+/// Refcount band → copy count mapping, consulted by every plant/repair
+/// path. The default (no bands) reproduces flat `replication`-copy
+/// behavior exactly.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct RedundancyPolicy {
+    bands: Vec<RedundancyBand>,
+}
+
+impl RedundancyPolicy {
+    /// Flat policy: every chunk gets the base replication count
+    /// regardless of refcount (the pre-banding behavior).
+    pub fn flat() -> Self {
+        Self::default()
+    }
+
+    /// Build a policy from `(min_refs, extra_copies)` pairs. Bands are
+    /// sorted by threshold; a higher band never grants fewer copies than
+    /// a lower one (extras are made monotone on construction, so a
+    /// refcount crossing a threshold can only raise the target).
+    pub fn new(bands: impl IntoIterator<Item = (u64, usize)>) -> Self {
+        let mut bands: Vec<RedundancyBand> = bands
+            .into_iter()
+            .map(|(min_refs, extra_copies)| RedundancyBand {
+                min_refs,
+                extra_copies,
+            })
+            .collect();
+        bands.sort_by_key(|b| b.min_refs);
+        let mut floor = 0usize;
+        for b in &mut bands {
+            b.extra_copies = b.extra_copies.max(floor);
+            floor = b.extra_copies;
+        }
+        RedundancyPolicy { bands }
+    }
+
+    /// The reference banded policy from the redundancy issue: refs ≥ 8
+    /// → one extra copy, refs ≥ 64 → two.
+    pub fn banded() -> Self {
+        Self::new([(8, 1), (64, 2)])
+    }
+
+    /// True when no bands are configured (flat replication).
+    pub fn is_flat(&self) -> bool {
+        self.bands.is_empty()
+    }
+
+    /// The configured bands (threshold-ascending).
+    pub fn bands(&self) -> &[RedundancyBand] {
+        &self.bands
+    }
+
+    /// Extra copies granted to a chunk with `refcount` references: the
+    /// highest band whose threshold it meets (0 below every band).
+    pub fn extra_copies(&self, refcount: u64) -> usize {
+        self.bands
+            .iter()
+            .rev()
+            .find(|b| refcount >= b.min_refs)
+            .map(|b| b.extra_copies)
+            .unwrap_or(0)
+    }
+
+    /// Target copy count (primary included) for a chunk with `refcount`
+    /// references under base replication `base`, capped by the number of
+    /// live servers (`live`) — a 3-server cluster cannot hold 4 distinct
+    /// copies — and floored at 1.
+    pub fn target_copies(&self, refcount: u64, base: usize, live: usize) -> usize {
+        (base + self.extra_copies(refcount)).clamp(1, live.max(1))
+    }
+
+    /// The most copies any band can demand (uncapped): the chain width
+    /// placement must provision so the top band has slots to fill.
+    pub fn max_copies(&self, base: usize) -> usize {
+        base + self.bands.last().map(|b| b.extra_copies).unwrap_or(0)
+    }
+
+    /// The threshold of the highest band (`None` when flat) — benches
+    /// and reports use it to isolate the hottest chunks.
+    pub fn top_band_min_refs(&self) -> Option<u64> {
+        self.bands.last().map(|b| b.min_refs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_policy_matches_base_replication() {
+        let p = RedundancyPolicy::flat();
+        assert!(p.is_flat());
+        for refs in [0, 1, 7, 8, 1_000_000] {
+            assert_eq!(p.target_copies(refs, 2, 5), 2);
+        }
+        assert_eq!(p.max_copies(2), 2);
+        assert_eq!(p.top_band_min_refs(), None);
+    }
+
+    #[test]
+    fn banded_targets_step_at_thresholds() {
+        let p = RedundancyPolicy::banded();
+        assert_eq!(p.target_copies(7, 2, 10), 2);
+        assert_eq!(p.target_copies(8, 2, 10), 3);
+        assert_eq!(p.target_copies(63, 2, 10), 3);
+        assert_eq!(p.target_copies(64, 2, 10), 4);
+        assert_eq!(p.max_copies(2), 4);
+        assert_eq!(p.top_band_min_refs(), Some(64));
+    }
+
+    #[test]
+    fn target_capped_by_live_servers_and_floored_at_one() {
+        let p = RedundancyPolicy::banded();
+        assert_eq!(p.target_copies(1_000, 2, 3), 3, "capped by live count");
+        assert_eq!(p.target_copies(1_000, 2, 0), 1, "empty cluster floors at 1");
+        assert_eq!(RedundancyPolicy::flat().target_copies(0, 0, 5), 1);
+    }
+
+    #[test]
+    fn bands_sorted_and_made_monotone() {
+        // deliberately unsorted and non-monotone input
+        let p = RedundancyPolicy::new([(64, 1), (8, 2)]);
+        assert_eq!(p.bands()[0].min_refs, 8);
+        assert_eq!(p.bands()[1].min_refs, 64);
+        // the 64-band is raised to the 8-band's extras: crossing a
+        // threshold upward can never lower the target
+        assert_eq!(p.extra_copies(8), 2);
+        assert_eq!(p.extra_copies(64), 2);
+    }
+}

@@ -190,6 +190,29 @@ pub struct Metrics {
     /// Rebalance scans auto-enqueued by membership changes (add, out,
     /// rejoin) — one per map-change event, fanned to every Up server.
     pub membership_auto_rebalances: AtomicU64,
+    /// Replica-copy pushes that failed (dead peer, `Busy` shed, or an
+    /// error reply) at any fan-out site — write-time replication, scrub
+    /// copy repair, recovery re-replication, rebalance OMAP refresh.
+    /// Each failure leaves the key under its target copy count until a
+    /// scrub/recovery pass converges it (0 on a healthy cluster).
+    pub replica_push_failures: AtomicU64,
+    /// Copy-add promotions executed because an IncRef carried a chunk's
+    /// refcount across a redundancy band threshold.
+    pub redundancy_promotions: AtomicU64,
+    /// Copy-drop demotions executed because a DecRef carried a chunk's
+    /// refcount below a redundancy band threshold (plant-registry-aware:
+    /// a locality plant is never dropped as a redundancy copy).
+    pub redundancy_demotions: AtomicU64,
+    /// Sum of banded target copy counts computed at write-time
+    /// replication fan-out — divide by `unique_chunks` for the mean
+    /// write-time target under the active [`RedundancyPolicy`].
+    ///
+    /// [`RedundancyPolicy`]: crate::dedup::redundancy::RedundancyPolicy
+    pub redundancy_target_copies: AtomicU64,
+    /// Orphaned locality plants reclaimed through the
+    /// `invalidate_chunk` choke point (a planted replica-slot copy
+    /// deleted + deregistered when its chunk was retired).
+    pub dup_plants_reclaimed: AtomicU64,
     /// Write-path (put) latency histogram.
     pub put_latency: Histogram,
     /// Read-path (get) latency histogram.
@@ -301,6 +324,11 @@ impl Metrics {
             membership_rejoins,
             membership_wipes,
             membership_auto_rebalances,
+            replica_push_failures,
+            redundancy_promotions,
+            redundancy_demotions,
+            redundancy_target_copies,
+            dup_plants_reclaimed,
         ]
     }
 

@@ -368,7 +368,7 @@ fn recover_omap_records(sh: &OsdShared, view: &LossView) -> Result<()> {
             st.bytes_recovered += data.len() as u64;
         });
         let name = String::from_utf8_lossy(&key[4..]).to_string();
-        for peer in replica_slots(sh, &sh.object_chain(&name)) {
+        for peer in replica_slots(sh, &sh.object_chain(&name), sh.cfg.replication) {
             push_copy(sh, peer, key.clone(), &data)?;
         }
     }
@@ -379,7 +379,7 @@ fn recover_omap_records(sh: &OsdShared, view: &LossView) -> Result<()> {
             continue;
         };
         let name = String::from_utf8_lossy(&key[4..]).to_string();
-        for peer in replica_slots(sh, &sh.object_chain(&name)) {
+        for peer in replica_slots(sh, &sh.object_chain(&name), sh.cfg.replication) {
             push_copy(sh, peer, key.clone(), &data)?;
         }
     }
@@ -401,7 +401,7 @@ fn recover_omap_records(sh: &OsdShared, view: &LossView) -> Result<()> {
             continue;
         };
         let value = entry.encode();
-        for peer in replica_slots(sh, &sh.object_chain(&name)) {
+        for peer in replica_slots(sh, &sh.object_chain(&name), sh.cfg.replication) {
             push_copy(sh, peer, omap_copy_key(&name), &value)?;
         }
     }
@@ -487,13 +487,16 @@ fn barrier_wait(sh: &OsdShared, lost: ServerId) -> Result<()> {
     }
 }
 
-/// The replica slots of a chain under the configured replication factor,
-/// excluding ourselves.
-fn replica_slots(sh: &OsdShared, chain: &[ServerId]) -> Vec<ServerId> {
+/// The replica slots of a chain under the given copy count (`copies`
+/// total including the primary), excluding ourselves. Object records
+/// (OMAP, raw) always heal to the flat `replication` factor; chunk
+/// healing passes the refcount-banded target instead
+/// ([`OsdShared::redundancy_target`]).
+fn replica_slots(sh: &OsdShared, chain: &[ServerId], copies: usize) -> Vec<ServerId> {
     chain
         .iter()
         .skip(1)
-        .take(sh.cfg.replication.saturating_sub(1))
+        .take(copies.saturating_sub(1))
         .filter(|id| **id != sh.id)
         .copied()
         .collect()
@@ -633,14 +636,20 @@ fn push_copy(sh: &OsdShared, peer: ServerId, key: Vec<u8>, data: &[u8]) -> Resul
 }
 
 /// Re-push replica copies for one chunk until its chain is back at the
-/// configured replication factor.
+/// chunk's banded copy target (the redundancy policy applied to the
+/// refcount the plan recorded — the work list is refcount-descending,
+/// so the highest bands heal first).
 fn re_replicate(sh: &OsdShared, task: &ChunkTask) -> Result<()> {
-    if sh.cfg.replication <= 1 || sh.cfg.dedup == DedupMode::Central {
+    if sh.cfg.dedup == DedupMode::Central {
         return Ok(()); // central fans no copies out
+    }
+    let target = sh.redundancy_target(task.refcount);
+    if target <= 1 {
+        return Ok(());
     }
     let chain = sh.chunk_chain(task.fp.placement_key());
     let mut data: Option<Vec<u8>> = None;
-    for peer in replica_slots(sh, &chain) {
+    for peer in replica_slots(sh, &chain, target) {
         ensure_alive(sh)?;
         match probe_copy(sh, peer, &task.fp) {
             Probe::Healthy | Probe::Unreachable | Probe::GaveUp => {}
@@ -780,7 +789,7 @@ pub(crate) fn recover_omap_local(sh: &OsdShared, value: Vec<u8>) -> Result<()> {
         None => value,
     };
     let chain = sh.object_chain(&entry.name);
-    for peer in replica_slots(sh, &chain) {
+    for peer in replica_slots(sh, &chain, sh.cfg.replication) {
         let Ok(addr) = sh.dir.lookup(peer, Lane::Replica) else {
             continue;
         };

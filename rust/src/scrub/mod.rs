@@ -334,11 +334,26 @@ pub fn scrub_loop(sh: Arc<OsdShared>, sd: Arc<AtomicBool>) {
     }
 }
 
-/// One full pass: walk the CIT snapshot in fingerprint order, one window
-/// at a time.
+/// One full pass: drain the write path's repair debt first (fingerprints
+/// whose replica fan-out hit a dead or `Busy` peer — scrubbed at deep
+/// strength regardless of the pass kind, since only the replica
+/// comparison can close a copy gap), then walk the CIT snapshot in
+/// fingerprint order, one window at a time.
 fn run_pass(sh: &OsdShared, opts: &ScrubOptions) -> Result<()> {
     let deep = opts.kind == ScrubKind::Deep;
     let mut bucket = TokenBucket::with_clock(opts.rate_bytes_per_sec, sh.clock.clone());
+    let mut debt = sh.take_repair_debt();
+    if !debt.is_empty() {
+        debt.sort();
+        debt.dedup();
+        for window in debt.chunks(opts.window.max(1)) {
+            ensure_alive(sh)?;
+            let t0 = Instant::now();
+            scrub_window(sh, /*deep=*/ true, &mut bucket, window)?;
+            sh.metrics.scrub_window_latency.record(t0.elapsed());
+            sh.scrub.update(|st| st.windows += 1);
+        }
+    }
     let mut fps = sh.shard.cit_fingerprints()?;
     fps.sort();
     for window in fps.chunks(opts.window.max(1)) {
@@ -702,17 +717,27 @@ fn deep_verify(sh: &OsdShared, mut reads: Vec<(Fingerprint, Vec<u8>)>) -> Result
         }
     }
 
-    // replica comparison for every chunk whose primary bytes are good
+    // Replica comparison for every chunk whose primary bytes are good
     // (central-mode raw placement never fans out copies; the write path
-    // never fans out a copy to the primary itself)
+    // never fans out a copy to the primary itself). The per-chunk copy
+    // target is *banded* — the redundancy policy applied to the chunk's
+    // current refcount — so scrub heals to the same count the write path
+    // planted and the online promote/demote hooks steer toward
+    // (DESIGN.md §15). Chain slots beyond the target hold stale copies
+    // left by a missed demotion (e.g. the holder was down): the scrub
+    // demotes them, so copy counts converge from above as well as below.
     let mut tasks: Vec<CopyTask> = Vec::new();
-    if sh.cfg.replication > 1 && sh.cfg.dedup != DedupMode::Central {
+    let mut demotions: Vec<(Fingerprint, ServerId)> = Vec::new();
+    if sh.cfg.dedup != DedupMode::Central {
         for (i, ok) in intact.iter().enumerate() {
             if !*ok {
                 continue;
             }
-            let chain = sh.chunk_chain(reads[i].0.placement_key());
-            for peer in chain.iter().skip(1).take(sh.cfg.replication - 1) {
+            let fp = reads[i].0;
+            let refcount = sh.shard.cit_get(&fp)?.map(|e| e.refcount).unwrap_or(0);
+            let target = sh.redundancy_target(refcount);
+            let chain = sh.chunk_chain(fp.placement_key());
+            for peer in chain.iter().skip(1).take(target.saturating_sub(1)) {
                 if *peer != sh.id {
                     tasks.push(CopyTask {
                         peer: *peer,
@@ -721,9 +746,37 @@ fn deep_verify(sh: &OsdShared, mut reads: Vec<(Fingerprint, Vec<u8>)>) -> Result
                     });
                 }
             }
+            if !sh.cfg.redundancy.is_flat() {
+                for peer in chain.iter().skip(target.max(1)) {
+                    if *peer != sh.id {
+                        demotions.push((fp, *peer));
+                    }
+                }
+            }
         }
     }
-    verify_copies_windowed(sh, &reads, tasks)
+    verify_copies_windowed(sh, &reads, tasks)?;
+    demote_excess_copies(sh, &demotions);
+    Ok(())
+}
+
+/// Drop stale redundancy copies on chain slots beyond a chunk's banded
+/// target (a demotion the online hook could not deliver — dead holder,
+/// dry flow budget). The holder consults its plant registry
+/// ([`Req::DemoteCopy`]): a locality plant under the same key was never
+/// counted toward the target and survives. Best-effort — an unreachable
+/// holder is retried by its or our next pass.
+fn demote_excess_copies(sh: &OsdShared, demotions: &[(Fingerprint, ServerId)]) {
+    for (fp, peer) in demotions {
+        let Ok(addr) = sh.dir.lookup(*peer, Lane::Replica) else {
+            continue;
+        };
+        let req = Req::DemoteCopy { fp: *fp };
+        let size = req.wire_size();
+        if let Ok(Resp::Ok) = addr.call(req, size) {
+            Metrics::add(&sh.metrics.redundancy_demotions, 1);
+        }
+    }
 }
 
 /// One pending replica comparison of a deep-scrub window: chunk
@@ -821,6 +874,8 @@ fn push_copy_repair(sh: &OsdShared, read: &(Fingerprint, Vec<u8>), peer: ServerI
         return Err(Error::ServerDown(sh.id.0));
     }
     let Ok(addr) = sh.dir.lookup(peer, Lane::Replica) else {
+        Metrics::add(&sh.metrics.replica_push_failures, 1);
+        sh.note_repair_debt(*fp);
         return Ok(());
     };
     let req = Req::PutCopy {
@@ -832,6 +887,11 @@ fn push_copy_repair(sh: &OsdShared, read: &(Fingerprint, Vec<u8>), peer: ServerI
         sh.scrub.update(|st| st.repaired += 1);
         Metrics::add(&sh.metrics.scrub_repaired, 1);
         Metrics::add(&sh.metrics.repairs, 1);
+    } else {
+        // dead peer or shed push: counted, and queued so the next pass
+        // re-tries this fingerprint ahead of the full walk
+        Metrics::add(&sh.metrics.replica_push_failures, 1);
+        sh.note_repair_debt(*fp);
     }
     Ok(())
 }

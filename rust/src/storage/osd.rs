@@ -30,7 +30,8 @@ use crate::dedup::consistency::{ConsistencyMode, PendingFlags};
 use crate::dedup::dmshard::DmShard;
 use crate::dedup::cache::{CacheConfig, ChunkCache, DupPolicy};
 use crate::dedup::engine::{self, DedupMode, ReadBatching, WriteBatching};
-use crate::dedup::fingerprint::FingerprintProvider;
+use crate::dedup::fingerprint::{Fingerprint, FingerprintProvider};
+use crate::dedup::redundancy::RedundancyPolicy;
 use crate::dedup::gc;
 use crate::dedup::Chunker;
 use crate::failure::FailureInjector;
@@ -85,6 +86,10 @@ pub struct OsdConfig {
     /// Fragmentation-aware selective duplication of hot remote chunks;
     /// `None` (the default) disables planting.
     pub selective_dup: Option<DupPolicy>,
+    /// Refcount-banded redundancy: maps refcount bands to copy counts
+    /// on top of `replication`. The default (flat) keeps every chunk at
+    /// exactly `replication` copies.
+    pub redundancy: RedundancyPolicy,
 }
 
 /// Everything a server owns that survives kill+restart (disk-like), plus
@@ -145,6 +150,11 @@ pub struct OsdShared {
     pub clock: Arc<dyn Clock>,
     /// SyncObject-mode transaction lock (held across a whole object write).
     pub obj_lock: Mutex<()>,
+    /// Volatile: fingerprints whose write-time replica fan-out failed
+    /// (dead/Busy peer) — the repair debt the next scrub pass drains
+    /// *first*, so a write-path durability gap closes at the next
+    /// maintenance window instead of whenever the full walk reaches it.
+    pub repair_debt: Mutex<std::collections::HashSet<Fingerprint>>,
     /// Test hook: runs once on the frontend thread in the gap between
     /// the batched write path's probe phase and its store phase, then
     /// clears itself. Lets tests force deterministic probe-hint
@@ -168,6 +178,30 @@ impl OsdShared {
     /// Current time in ms.
     pub fn now_ms(&self) -> u64 {
         self.clock.now_ms()
+    }
+
+    /// Banded target copy count (primary included) for a chunk with
+    /// `refcount` references — the single answer every plant/repair
+    /// path (write fan-out, scrub, recovery, rebalance, promote/demote)
+    /// agrees on: `cfg.redundancy` applied over `cfg.replication`,
+    /// capped by the number of Up servers.
+    pub fn redundancy_target(&self, refcount: u64) -> usize {
+        let live = self.map.read().unwrap().up_count();
+        self.cfg
+            .redundancy
+            .target_copies(refcount, self.cfg.replication, live)
+    }
+
+    /// Record a fingerprint whose replica push failed (dead/Busy peer):
+    /// the next scrub pass re-verifies and re-pushes it before the full
+    /// walk (see [`crate::scrub`]).
+    pub fn note_repair_debt(&self, fp: Fingerprint) {
+        self.repair_debt.lock().unwrap().insert(fp);
+    }
+
+    /// Drain the accumulated repair debt (scrub pass start).
+    pub fn take_repair_debt(&self) -> Vec<Fingerprint> {
+        self.repair_debt.lock().unwrap().drain().collect()
     }
 
     /// Charge one synchronous DM-Shard write against the metadata I/O
@@ -337,6 +371,7 @@ impl Osd {
         self.shared.rebalance.clear();
         self.shared.obs.clear_spans();
         self.shared.chunk_cache.clear();
+        self.shared.repair_debt.lock().unwrap().clear();
     }
 
     /// Restart after a kill/crash — see [`OsdShared::restart`].
@@ -714,9 +749,32 @@ fn dispatch(sh: &Arc<OsdShared>, lane: Lane, req: Req) -> Resp {
             }
         }
         (Lane::Replica, Req::DeleteCopy { key }) => match sh.replica_store.delete(&key) {
-            Ok(_) => Resp::Ok,
+            Ok(_) => {
+                // a retired chunk copy routes through the invalidation
+                // choke point: drop any cached payload and deregister a
+                // locality plant under the same key, so a reclaim can
+                // never leave an orphaned plant behind (DESIGN.md §14)
+                if let Some(fp) = engine::chunk_copy_fp(&key) {
+                    engine::invalidate_chunk(sh, &fp);
+                }
+                Resp::Ok
+            }
             Err(e) => err_str(e),
         },
+        (Lane::Replica, Req::DemoteCopy { fp }) => {
+            if sh.chunk_cache.planted_contains(&fp) {
+                // the slot holds a locality plant, not a redundancy
+                // copy — it was never counted toward the banded target,
+                // so a demotion must not drop it (or double-count it)
+                Resp::NotFound
+            } else {
+                match sh.replica_store.delete(&engine::chunk_copy_key(&fp)) {
+                    Ok(true) => Resp::Ok,
+                    Ok(false) => Resp::NotFound,
+                    Err(e) => err_str(e),
+                }
+            }
+        }
         (Lane::Replica, Req::FetchCopy { key }) => match sh.replica_store.get(&key) {
             Ok(Some(d)) => Resp::Data(d),
             Ok(None) => Resp::NotFound,

@@ -111,6 +111,13 @@ pub enum Req {
     PutCopy { key: Vec<u8>, data: Vec<u8> },
     /// Delete a replica copy.
     DeleteCopy { key: Vec<u8> },
+    /// Redundancy demotion: drop the chunk's replica-slot copy *iff* it
+    /// is a redundancy copy. A locality plant under the same key (see
+    /// [`crate::dedup::cache::ChunkCache`]) was never counted toward
+    /// the banded target, so the holder consults its plant registry and
+    /// keeps a planted copy — unlike [`Req::DeleteCopy`], which retires
+    /// the key unconditionally (GC reclaim, object delete).
+    DemoteCopy { fp: Fingerprint },
     /// Fetch a replica copy (degraded reads, repair).
     FetchCopy { key: Vec<u8> },
     /// Deep scrub: verify a replica copy against its expected
@@ -373,6 +380,7 @@ impl Req {
             Req::SetSchedule { .. } => 24,
             Req::PutCopy { key, data } => key.len() + data.len(),
             Req::DeleteCopy { key } | Req::FetchCopy { key } => key.len(),
+            Req::DemoteCopy { .. } => 20,
             Req::ApplyMap(m) => 16 * m.servers.len(),
             _ => 0,
         }

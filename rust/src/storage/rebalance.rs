@@ -324,14 +324,25 @@ pub fn run(sh: &OsdShared) -> Result<RebalanceReport> {
                 for peer in chain.iter().skip(1).take(sh.cfg.replication.saturating_sub(1)) {
                     if *peer == sh.id {
                         sh.replica_store.put(&omap_copy_key(&name), &value)?;
-                    } else if let Ok(r) = sh.dir.lookup(*peer, Lane::Replica) {
-                        let _ = r.call(
-                            Req::PutCopy {
-                                key: omap_copy_key(&name),
-                                data: value.clone(),
-                            },
-                            value.len() + 64,
-                        );
+                        continue;
+                    }
+                    // a dead peer or failed push leaves the record's
+                    // copy placement degraded — count it instead of
+                    // shrugging (the next scrub pass re-fans it)
+                    let pushed = sh.dir.lookup(*peer, Lane::Replica).is_ok_and(|r| {
+                        matches!(
+                            r.call(
+                                Req::PutCopy {
+                                    key: omap_copy_key(&name),
+                                    data: value.clone(),
+                                },
+                                value.len() + 64,
+                            ),
+                            Ok(Resp::Ok)
+                        )
+                    });
+                    if !pushed {
+                        Metrics::add(&sh.metrics.replica_push_failures, 1);
                     }
                 }
                 report.omap_moved += 1;

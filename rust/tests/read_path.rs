@@ -392,6 +392,79 @@ fn selective_duplication_plants_a_locality_copy() {
 }
 
 #[test]
+fn gc_reclaim_leaves_no_orphaned_plant() {
+    // plant a locality copy on an off-chain reader, then delete the
+    // object and GC: the reclaim broadcast must reach the plant holder,
+    // whose invalidate_chunk choke point deletes the replica-slot copy
+    // and deregisters the plant — no orphan bytes, no leaked budget
+    let cluster = boot(4, |c| {
+        c.clock = ClockSource::Sim;
+        c.cache = CacheConfig {
+            capacity_bytes: 0,
+            hot_band: 2,
+        };
+        c.selective_dup = Some(DupPolicy {
+            fetch_threshold: 2,
+            min_mean_amp_x100: 0,
+            max_bytes: 16 << 20,
+        });
+    });
+    let client = cluster.client();
+    let data = unique_payload(1);
+    let fp = Fingerprint::of(&data);
+    let home = cluster
+        .with_osd(ServerId(0), |sh| sh.chunk_chain(fp.placement_key())[0])
+        .unwrap();
+    let name = name_with_primary(&cluster, home, true);
+    let reader = cluster
+        .with_osd(ServerId(0), |sh| sh.object_chain(&name)[0])
+        .unwrap();
+
+    client.put_object(&name, &data).unwrap();
+    for _ in 0..3 {
+        assert_eq!(client.get_object(&name).unwrap(), data);
+    }
+    assert!(
+        cluster
+            .with_osd(reader, |sh| sh.chunk_cache.planted_contains(&fp))
+            .unwrap(),
+        "precondition: the reader planted a locality copy"
+    );
+
+    client.delete_object(&name).unwrap();
+    cluster.flush_consistency().unwrap();
+    cluster.advance_clock(10).unwrap();
+    let before = cluster.stats();
+    cluster.run_gc(0).unwrap();
+    let after = cluster.stats();
+    assert!(after.gc_reclaimed > before.gc_reclaimed, "GC must reclaim");
+    assert!(
+        after.dup_plants_reclaimed > before.dup_plants_reclaimed,
+        "the reclaim must be counted as a plant reclaim"
+    );
+    let (planted, orphan_bytes) = cluster
+        .with_osd(reader, |sh| {
+            (
+                sh.chunk_cache.planted_contains(&fp),
+                sh.chunk_cache.planted_bytes(),
+            )
+        })
+        .unwrap();
+    assert!(!planted, "the plant registration must be gone");
+    assert_eq!(orphan_bytes, 0, "the plant budget must be released");
+    assert!(
+        !cluster
+            .with_osd(reader, |sh| sh
+                .replica_store
+                .stat(&snss_dedup::dedup::engine::chunk_copy_key(&fp))
+                .unwrap())
+            .unwrap(),
+        "the planted replica-slot copy must be deleted, not orphaned"
+    );
+    cluster.shutdown();
+}
+
+#[test]
 fn raw_mode_reads_count_toward_read_amplification() {
     let cluster = boot(3, |c| {
         c.dedup = DedupMode::None;

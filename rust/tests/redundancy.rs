@@ -1,0 +1,330 @@
+//! Refcount-banded redundancy (DESIGN.md §15).
+//!
+//! * Property — under random kill/restart/GC interleavings while
+//!   refcounts are driven back and forth across the band thresholds,
+//!   the cluster converges to the *exact* banded copy count for every
+//!   chunk (no under-, no over-replication), with a clean audit and
+//!   zero abandoned backpressure probes, on every seed.
+//! * Under-replication is never silent — a replica peer killed mid-put
+//!   is counted in `replica_push_failures` and recorded as repair debt,
+//!   and the next scrub pass restores the target copy count.
+//! * A demotion landing on a server whose replica-slot entry is a
+//!   selective-duplication locality plant keeps the plant: it was never
+//!   counted toward the banded target, so dropping it would trade read
+//!   locality for nothing.
+
+use snss_dedup::api::{
+    ClockSource, Cluster, ClusterConfig, Consistency, RedundancyPolicy, ScrubOptions,
+};
+use snss_dedup::cluster::ServerId;
+use snss_dedup::dedup::engine::chunk_copy_key;
+use snss_dedup::dedup::Chunking;
+use snss_dedup::util::rng::SplitMix64;
+use snss_dedup::Fingerprint;
+use std::collections::HashMap;
+
+const CHUNK: usize = 1024;
+const TICK: u64 = 10;
+
+fn banded_config() -> ClusterConfig {
+    ClusterConfig {
+        servers: 5,
+        replication: 2,
+        redundancy: RedundancyPolicy::banded(),
+        consistency: Consistency::None,
+        chunking: Chunking::Fixed { size: CHUNK },
+        clock: ClockSource::Sim,
+        ..Default::default()
+    }
+}
+
+/// One of a handful of shared 1-chunk blocks; objects repeat these, so
+/// a block's refcount is the total repetition count across live
+/// objects — the knob the property test turns across band thresholds.
+fn block(k: u64) -> Vec<u8> {
+    let mut v = vec![0u8; CHUNK];
+    for (i, b) in v.iter_mut().enumerate() {
+        *b = ((k * 131 + 17) as usize * 251 + i * 7) as u8;
+    }
+    v
+}
+
+/// Object payload: `reps` repetitions of shared block `k`.
+fn payload(k: u64, reps: usize) -> Vec<u8> {
+    block(k).repeat(reps)
+}
+
+/// What the test believes the cluster holds: object name → (block,
+/// reps) of the last successful put. Failed puts and deletes drop the
+/// name — its durable state is legitimately unknown mid-failure.
+type Model = HashMap<String, (u64, usize)>;
+
+/// Drive refcounts across the 8/64 band thresholds under random
+/// kill/restart/GC interleavings. Data-path errors are tolerated (a
+/// server is dead on purpose roughly a third of the time); the virtual
+/// clock advances one tick per op.
+fn churn(cluster: &Cluster, rng: &mut SplitMix64, model: &mut Model, steps: usize) {
+    let client = cluster.client();
+    let mut dead: Option<ServerId> = None;
+    for step in 0..steps {
+        let name = format!("obj-{}", rng.below(12));
+        match rng.below(8) {
+            0..=3 => {
+                let k = rng.below(3);
+                // repetition counts straddling both band thresholds
+                let reps = [1, 4, 10, 30, 70][rng.below(5) as usize];
+                match client.put_object(&name, &payload(k, reps)) {
+                    Ok(_) => {
+                        model.insert(name, (k, reps));
+                    }
+                    Err(_) => {
+                        model.remove(&name);
+                    }
+                }
+            }
+            4 | 5 => {
+                let _ = client.delete_object(&name);
+                model.remove(&name);
+            }
+            6 => {
+                // toggle one server's liveness: kill one, or restart
+                // the previously killed one
+                match dead.take() {
+                    Some(id) => cluster.restart_server(id).unwrap(),
+                    None => {
+                        let id = ServerId(rng.below(5) as u32);
+                        cluster.kill_server(id).unwrap();
+                        dead = Some(id);
+                    }
+                }
+            }
+            _ => {
+                if step % 3 == 0 {
+                    cluster.run_gc(0).unwrap();
+                }
+            }
+        }
+        cluster.advance_clock(TICK).unwrap();
+    }
+    if let Some(id) = dead {
+        cluster.restart_server(id).unwrap();
+    }
+}
+
+/// Converge-and-verify: settle async state, heal + demote with deep
+/// scrubs, then demand a zero-finding audit, the *exact* banded copy
+/// count for every chunk, and every modeled object byte-for-byte.
+fn assert_banded_convergence(cluster: &Cluster, model: &Model, ctx: &str) {
+    cluster.flush_consistency().unwrap();
+    cluster.start_scrub(ScrubOptions::deep()).unwrap();
+    let heal = cluster.scrub_wait().unwrap();
+    assert!(heal.all_done(), "{ctx}: {:?}", heal.first_failure());
+    cluster.run_gc(0).unwrap();
+    let audit = cluster.audit().unwrap();
+    assert!(audit.is_ok(), "{ctx}: audit violations {:?}", audit.violations);
+    cluster.start_scrub(ScrubOptions::deep()).unwrap();
+    let scrub = cluster.scrub_wait().unwrap();
+    assert!(scrub.all_done(), "{ctx}: {:?}", scrub.first_failure());
+    let report = cluster.redundancy_report().unwrap();
+    assert!(report.chunks > 0, "{ctx}: nothing to census");
+    assert!(
+        report.is_converged(),
+        "{ctx}: copy counts off the banded target: {report:?}"
+    );
+    let client = cluster.client();
+    for (name, (k, reps)) in model {
+        assert_eq!(
+            client.get_object(name).unwrap(),
+            payload(*k, *reps),
+            "{ctx}: {name} lost in the churn"
+        );
+    }
+}
+
+#[test]
+fn banded_copy_counts_converge_under_churn_on_every_seed() {
+    for seed in 0..8u64 {
+        let mut rng = SplitMix64::new(seed);
+        let cluster = Cluster::new(banded_config()).unwrap();
+        let mut model = Model::new();
+        churn(&cluster, &mut rng, &mut model, 48);
+        assert_banded_convergence(&cluster, &model, &format!("seed {seed}"));
+        let stats = cluster.stats();
+        assert_eq!(
+            stats.backpressure_gave_up, 0,
+            "seed {seed}: probes abandoned under backpressure"
+        );
+        assert!(
+            stats.redundancy_target_copies > 0,
+            "seed {seed}: write path never consulted the policy"
+        );
+        cluster.shutdown();
+    }
+}
+
+/// The online hooks move copy counts in both directions without any
+/// scrub: pushing a chunk's refcount over a threshold promotes it at
+/// once, dropping back demotes it — and the demotion never goes below
+/// the new band's target.
+#[test]
+fn threshold_crossings_promote_and_demote_online() {
+    let cluster = Cluster::new(banded_config()).unwrap();
+    let client = cluster.client();
+
+    // refs 1 → target 2; refs 10 → target 3 (band ≥ 8)
+    client.put_object("base", &payload(0, 1)).unwrap();
+    client.put_object("bulk", &payload(0, 9)).unwrap();
+    let stats = cluster.stats();
+    assert!(
+        stats.redundancy_promotions >= 1,
+        "crossing the ≥8 band must promote online: {stats:?}"
+    );
+    let report = cluster.redundancy_report().unwrap();
+    assert!(report.is_converged(), "after promote: {report:?}");
+
+    client.delete_object("bulk").unwrap();
+    cluster.flush_consistency().unwrap();
+    let stats = cluster.stats();
+    assert!(
+        stats.redundancy_demotions >= 1,
+        "dropping below the band must demote online: {stats:?}"
+    );
+    let report = cluster.redundancy_report().unwrap();
+    assert!(report.is_converged(), "after demote: {report:?}");
+    let audit = cluster.audit().unwrap();
+    assert!(audit.is_ok(), "{:?}", audit.violations);
+    cluster.shutdown();
+}
+
+/// Satellite regression: a replica peer killed mid-put must be counted
+/// (`replica_push_failures`) and recorded as repair debt, and the next
+/// scrub pass must restore the target copy count on the revived peer.
+#[test]
+fn killed_replica_peer_is_counted_and_healed_by_next_scrub() {
+    let cluster = Cluster::new(ClusterConfig {
+        servers: 4,
+        replication: 2,
+        consistency: Consistency::None,
+        chunking: Chunking::Fixed { size: CHUNK },
+        clock: ClockSource::Sim,
+        ..Default::default()
+    })
+    .unwrap();
+    let client = cluster.client();
+    let data = block(7);
+    let fp = Fingerprint::of(&data);
+    let chain = cluster
+        .with_osd(ServerId(0), |sh| sh.chunk_chain(fp.placement_key()))
+        .unwrap();
+    let (home, replica_peer) = (chain[0], chain[1]);
+    assert_ne!(home, replica_peer);
+    // the object's frontend must not be the peer we are about to kill,
+    // or the put fails outright instead of degrading its fan-out
+    let name = (0..256)
+        .map(|i| format!("rc-{i}"))
+        .find(|n| {
+            cluster
+                .with_osd(ServerId(0), |sh| sh.object_chain(n)[0])
+                .unwrap()
+                != replica_peer
+        })
+        .expect("no object name avoiding the victim frontend");
+
+    cluster.kill_server(replica_peer).unwrap();
+    let before = cluster.stats();
+    client.put_object(&name, &data).unwrap();
+    let after = cluster.stats();
+    assert!(
+        after.replica_push_failures > before.replica_push_failures,
+        "the dead replica slot must be counted, not shrugged off"
+    );
+    assert!(
+        !cluster
+            .with_osd(replica_peer, |sh| sh
+                .replica_store
+                .stat(&chunk_copy_key(&fp))
+                .unwrap())
+            .unwrap(),
+        "precondition: the copy cannot have landed on a dead peer"
+    );
+
+    cluster.restart_server(replica_peer).unwrap();
+    cluster.start_scrub(ScrubOptions::light()).unwrap();
+    let scrub = cluster.scrub_wait().unwrap();
+    assert!(scrub.all_done(), "{:?}", scrub.first_failure());
+    assert!(
+        cluster
+            .with_osd(replica_peer, |sh| sh
+                .replica_store
+                .stat(&chunk_copy_key(&fp))
+                .unwrap())
+            .unwrap(),
+        "the scrub's repair-debt drain must restore the copy even on a \
+         light pass"
+    );
+    let report = cluster.redundancy_report().unwrap();
+    assert!(report.is_converged(), "{report:?}");
+    cluster.shutdown();
+}
+
+/// Satellite regression: a demotion landing on a locality plant keeps
+/// the plant — it was never counted toward the banded target, so the
+/// holder answers `NotFound` and the copy (and its registration)
+/// survive.
+#[test]
+fn demotion_spares_locality_plants() {
+    let cluster = Cluster::new(ClusterConfig {
+        servers: 4,
+        replication: 2,
+        // refs ≥ 2 → one extra copy, so a single duplicate object
+        // promotes and a single delete demotes
+        redundancy: RedundancyPolicy::new([(2, 1)]),
+        consistency: Consistency::None,
+        chunking: Chunking::Fixed { size: CHUNK },
+        clock: ClockSource::Sim,
+        ..Default::default()
+    })
+    .unwrap();
+    let client = cluster.client();
+    let data = block(3);
+    let fp = Fingerprint::of(&data);
+    let chain = cluster
+        .with_osd(ServerId(0), |sh| sh.chunk_chain(fp.placement_key()))
+        .unwrap();
+    // the chain slot a promotion fills and a demotion later drains
+    let extra_slot = chain[2];
+
+    client.put_object("dup-a", &data).unwrap();
+    // the extra slot independently planted a locality copy of the chunk
+    cluster
+        .with_osd(extra_slot, |sh| {
+            sh.replica_store.put(&chunk_copy_key(&fp), &data).unwrap();
+            sh.chunk_cache.plant_register(&fp, data.len() as u64, 1 << 20);
+        })
+        .unwrap();
+
+    // refs 1 → 2 promotes onto the extra slot (same key as the plant)
+    client.put_object("dup-b", &data).unwrap();
+    // refs 2 → 1 demotes the extra slot — which must keep the plant
+    client.delete_object("dup-b").unwrap();
+    cluster.flush_consistency().unwrap();
+
+    let (planted, copy_present) = cluster
+        .with_osd(extra_slot, |sh| {
+            (
+                sh.chunk_cache.planted_contains(&fp),
+                sh.replica_store.stat(&chunk_copy_key(&fp)).unwrap(),
+            )
+        })
+        .unwrap();
+    assert!(planted, "the plant registration must survive the demotion");
+    assert!(copy_present, "the planted copy must survive the demotion");
+
+    // the census agrees: the plant is not a redundancy copy, so the
+    // chunk sits exactly at its (flat-band) target of 2
+    let report = cluster.redundancy_report().unwrap();
+    assert!(report.is_converged(), "{report:?}");
+    let audit = cluster.audit().unwrap();
+    assert!(audit.is_ok(), "{:?}", audit.violations);
+    cluster.shutdown();
+}
