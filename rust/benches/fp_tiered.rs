@@ -1,0 +1,259 @@
+//! Fingerprint-pipeline macro-bench: tiered (weak prefilter + deferred
+//! batched strong hashing, `FpMode::Tiered`) vs inline strong hashing
+//! (`FpMode::Inline`), across dedup ratios, at 10k and 100k objects.
+//!
+//! ```text
+//! cargo bench --bench fp_tiered                  # 10k + 100k objects
+//! BENCH_SCALE=small cargo bench --bench fp_tiered    # 10k only
+//! ```
+//!
+//! For every data point both pipelines drive the *same* deterministic
+//! workload; after the tiered side's pending queue is flushed their end
+//! states are asserted byte-identical (per-server placement, chunk
+//! counts, stored bytes, plus content spot-checks) and both audits must
+//! be clean **before** any number is reported. On the 0%-dedup corpus
+//! the tiered pipeline must spend *strictly fewer* inline strong-hash
+//! invocations than the inline pipeline, and its deferred hashing must
+//! batch (mean hash-batch size > 1). Reported per point: put
+//! throughput and deep-scrub wall time (the scrub re-hash loop is
+//! batched through the provider too). Results go to stdout, to
+//! `bench_out/fp_tiered.tsv`, and to `BENCH_fptiered.json` at the
+//! repository root.
+
+use snss_dedup::api::{Cluster, ClusterConfig, Consistency, FpMode, ScrubOptions};
+use snss_dedup::dedup::Chunking;
+use snss_dedup::workload::{Generator, WorkloadSpec};
+use std::io::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+const SERVERS: usize = 4;
+const THREADS: usize = 4;
+const OBJECT_SIZE: usize = 8 << 10;
+const CHUNK: usize = 2 << 10;
+
+/// One pipeline run's outcome.
+struct Run {
+    secs: f64,
+    puts_per_s: f64,
+    scrub_secs: f64,
+    /// Inline strong-hash invocations on the write path.
+    strong_hashes: u64,
+    /// Deferred-resolution provider batches (tier 2).
+    batch_calls: u64,
+    batch_items: u64,
+    savings_pct: f64,
+    /// State fingerprint compared across pipelines: the per-server
+    /// placement ground truth (the global `unique_chunks`/`bytes_stored`
+    /// counters double-count pending→strong migration by design, so the
+    /// comparison uses backend-derived per-server numbers only).
+    state: Vec<(u32, usize, u64, usize)>,
+}
+
+fn run_one(objects: u64, dedup_pct: u8, fp_mode: FpMode) -> Run {
+    let cluster = Cluster::new(ClusterConfig {
+        servers: SERVERS,
+        replication: 1,
+        consistency: Consistency::None,
+        chunking: Chunking::Fixed { size: CHUNK },
+        fp_mode,
+        ..Default::default()
+    })
+    .expect("boot cluster");
+    let gen = Arc::new(Generator::new(WorkloadSpec {
+        object_size: OBJECT_SIZE,
+        unit: CHUNK,
+        dedup_pct,
+        pool_blocks: 512,
+        zipf_theta: 0.0,
+        seed: 0xF1BE ^ objects,
+    }));
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let client = cluster.client();
+        let gen = gen.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut idx = t as u64;
+            while idx < objects {
+                let (name, data) = gen.named_object(idx);
+                client.put_object(&name, &data).expect("bench put");
+                idx += THREADS as u64;
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+
+    // quiesce: drain the pending queue, settle flags, collect nothing
+    // (the workload deletes nothing), then demand a clean audit before
+    // any timing is trusted
+    cluster.fp_flush().expect("fp_flush");
+    cluster.flush_consistency().ok();
+    cluster.run_gc(0).expect("gc");
+    let audit = cluster.audit().expect("audit");
+    assert!(audit.is_ok(), "bench audit violations: {:?}", audit.violations);
+
+    // content spot-check against the generator (every 97th object), so
+    // "byte-identical" means bytes, not just matching counters
+    let client = cluster.client();
+    for idx in (0..objects).step_by(97) {
+        let (name, data) = gen.named_object(idx);
+        assert_eq!(client.get_object(&name).expect("read"), data, "{name} diverged");
+    }
+
+    // deep scrub wall time: every stored chunk is re-read and re-hashed
+    // (batched per window through the provider)
+    let t1 = Instant::now();
+    cluster.start_scrub(ScrubOptions::deep()).expect("scrub");
+    let report = cluster.scrub_wait().expect("scrub wait");
+    let scrub_secs = t1.elapsed().as_secs_f64();
+    assert!(report.all_done(), "deep scrub failed: {report:?}");
+
+    let stats = cluster.stats();
+    let run = Run {
+        secs,
+        puts_per_s: objects as f64 / secs,
+        scrub_secs,
+        strong_hashes: stats.fp_strong_hashes,
+        batch_calls: stats.fp_batch_calls,
+        batch_items: stats.fp_batch_items,
+        savings_pct: stats.savings() * 100.0,
+        state: stats
+            .per_server
+            .iter()
+            .map(|p| (p.server, p.chunks_stored, p.bytes_stored, p.objects))
+            .collect(),
+    };
+    cluster.shutdown();
+    run
+}
+
+fn main() {
+    let sizes: &[u64] = match std::env::var("BENCH_SCALE").as_deref() {
+        Ok("small") => &[10_000],
+        _ => &[10_000, 100_000],
+    };
+    let ratios: &[u8] = &[0, 50, 90];
+    println!("== fingerprint pipeline: tiered (weak prefilter + deferred batch) vs inline ==");
+    println!(
+        "{:<8} {:>6} {:>12} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "objects",
+        "dedup%",
+        "inl puts/s",
+        "tier puts/s",
+        "inl scrub s",
+        "tier scrub s",
+        "strong -%",
+        "batch mean"
+    );
+    let mut json_points = Vec::new();
+    for &objects in sizes {
+        for &pct in ratios {
+            let inl = run_one(objects, pct, FpMode::Inline);
+            let tier = run_one(objects, pct, FpMode::tiered());
+            // byte-identical end state is a precondition for every
+            // number below
+            assert_eq!(
+                inl.state,
+                tier.state,
+                "pipelines diverged at {objects} objects / {pct}% dedup"
+            );
+            if pct == 0 {
+                assert!(
+                    tier.strong_hashes < inl.strong_hashes,
+                    "tiered must spend strictly fewer inline strong hashes at 0% dedup: \
+                     {} vs {}",
+                    tier.strong_hashes,
+                    inl.strong_hashes
+                );
+            }
+            assert!(tier.batch_calls > 0, "tiered ran no deferred batches");
+            let batch_mean = tier.batch_items as f64 / tier.batch_calls as f64;
+            assert!(
+                batch_mean > 1.0,
+                "deferred hashing must batch: mean {batch_mean:.2} \
+                 ({} items / {} calls)",
+                tier.batch_items,
+                tier.batch_calls
+            );
+            let hash_ratio = tier.strong_hashes as f64 / inl.strong_hashes.max(1) as f64;
+            let strong_cut = 100.0 * (1.0 - hash_ratio);
+            println!(
+                "{:<8} {:>6} {:>12.0} {:>12.0} {:>12.2} {:>12.2} {:>11.1}% {:>10.1}",
+                objects,
+                pct,
+                inl.puts_per_s,
+                tier.puts_per_s,
+                inl.scrub_secs,
+                tier.scrub_secs,
+                strong_cut,
+                batch_mean
+            );
+            record(
+                "fp_tiered",
+                "objects\tdedup_pct\tinline_secs\ttiered_secs\tinline_scrub_secs\t\
+                 tiered_scrub_secs\tinline_strong\ttiered_strong\tbatch_calls\t\
+                 batch_items\tsavings_pct",
+                &format!(
+                    "{objects}\t{pct}\t{:.3}\t{:.3}\t{:.3}\t{:.3}\t{}\t{}\t{}\t{}\t{:.1}",
+                    inl.secs,
+                    tier.secs,
+                    inl.scrub_secs,
+                    tier.scrub_secs,
+                    inl.strong_hashes,
+                    tier.strong_hashes,
+                    tier.batch_calls,
+                    tier.batch_items,
+                    tier.savings_pct
+                ),
+            );
+            json_points.push(format!(
+                "    {{\"objects\": {objects}, \"dedup_pct\": {pct}, \
+                 \"inline_puts_per_s\": {:.0}, \"tiered_puts_per_s\": {:.0}, \
+                 \"inline_scrub_secs\": {:.3}, \"tiered_scrub_secs\": {:.3}, \
+                 \"inline_strong_hashes\": {}, \"tiered_strong_hashes\": {}, \
+                 \"strong_hash_reduction_pct\": {strong_cut:.1}, \
+                 \"batch_calls\": {}, \"batch_items\": {}, \
+                 \"batch_mean\": {batch_mean:.2}}}",
+                inl.puts_per_s,
+                tier.puts_per_s,
+                inl.scrub_secs,
+                tier.scrub_secs,
+                inl.strong_hashes,
+                tier.strong_hashes,
+                tier.batch_calls,
+                tier.batch_items
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"fp_tiered\",\n  \"servers\": {SERVERS},\n  \
+         \"object_size\": {OBJECT_SIZE},\n  \"chunk\": {CHUNK},\n  \"points\": [\n{}\n  ]\n}}\n",
+        json_points.join(",\n")
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fptiered.json");
+    std::fs::write(path, json).expect("write BENCH_fptiered.json");
+    println!("summary written to BENCH_fptiered.json");
+}
+
+/// Append one TSV row under `bench_out/` (same format as
+/// `common::record`; duplicated so this driver stays self-contained).
+fn record(bench: &str, header: &str, row: &str) {
+    let _ = std::fs::create_dir_all("bench_out");
+    let path = format!("bench_out/{bench}.tsv");
+    let new = !std::path::Path::new(&path).exists();
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+    {
+        if new {
+            let _ = writeln!(f, "{header}");
+        }
+        let _ = writeln!(f, "{row}");
+    }
+}

@@ -38,6 +38,7 @@ use std::sync::{Arc, Mutex, RwLock};
 pub use crate::dedup::cache::{CacheConfig, DupPolicy};
 pub use crate::dedup::consistency::ConsistencyMode as Consistency;
 pub use crate::dedup::engine::{DedupMode, ReadBatching, WriteBatching};
+pub use crate::dedup::fpipe::FpMode;
 pub use crate::dedup::redundancy::{RedundancyBand, RedundancyPolicy};
 pub use crate::recovery::{
     FailureDetection, ObserverHook, ObserverVerdict, RecoveryState, RecoveryStatus,
@@ -162,6 +163,13 @@ pub struct ClusterConfig {
     /// [`crate::recovery`]. Deterministic under [`ClockSource::Sim`]
     /// (the detector evaluates on every [`Cluster::advance_clock`]).
     pub failure_detection: Option<FailureDetection>,
+    /// Fingerprint pipeline mode (DESIGN.md §16): [`FpMode::Inline`]
+    /// (the default — every chunk strong-hashed on the write path,
+    /// bit-for-bit today's behavior) or [`FpMode::Tiered`] — a weak-hash
+    /// prefilter inline, deferred batched strong hashing in the
+    /// background, and verify-before-merge collision safety. Effective
+    /// for [`DedupMode::ClusterWide`] writes only.
+    pub fp_mode: FpMode,
 }
 
 impl Default for ClusterConfig {
@@ -190,6 +198,7 @@ impl Default for ClusterConfig {
             maint_flow: FlowConfig::default(),
             verify_inflight_cap: 64,
             failure_detection: None,
+            fp_mode: FpMode::Inline,
         }
     }
 }
@@ -346,6 +355,28 @@ pub struct ClusterStats {
     /// Orphaned locality plants reclaimed through the
     /// `invalidate_chunk` choke point.
     pub dup_plants_reclaimed: u64,
+    /// Tiered-pipeline writes whose weak hash hit the candidacy filter
+    /// (probable duplicates, strong-hashed inline).
+    pub fp_weak_hits: u64,
+    /// Tiered-pipeline writes whose weak hash missed the filter
+    /// (unique-looking; inline strong hash skipped).
+    pub fp_weak_misses: u64,
+    /// Chunks strong-hashed inline on the write path (every chunk under
+    /// [`FpMode::Inline`]; only filter hits and verify rejects under
+    /// [`FpMode::Tiered`]).
+    pub fp_strong_hashes: u64,
+    /// Chunks deferred with a pending identity for background hashing.
+    pub fp_deferred: u64,
+    /// Batched `digests` calls issued by the tier-2 migrator.
+    pub fp_batch_calls: u64,
+    /// Chunks hashed across all tier-2 batches (`fp_batch_items /
+    /// fp_batch_calls` = mean batch size).
+    pub fp_batch_items: u64,
+    /// Weak-hash matches rejected by byte-compare verification — the
+    /// verify-before-merge guard refusing a refcount merge.
+    pub fp_verify_rejects: u64,
+    /// Pending chunks migrated into the content-addressed dedup domain.
+    pub fp_migrations: u64,
     /// Per-server snapshots.
     pub per_server: Vec<OsdStats>,
 }
@@ -724,6 +755,7 @@ impl Cluster {
                 read_batching: self.cfg.read_batching,
                 cache: self.cfg.cache,
                 selective_dup: self.cfg.selective_dup,
+                fp_mode: self.cfg.fp_mode,
             },
             map: self.monitor.map_handle(),
             pgmap: self.pgmap.clone(),
@@ -747,6 +779,7 @@ impl Cluster {
             obj_lock: Mutex::new(()),
             probe_gap_hook: Mutex::new(None),
             repair_debt: Mutex::new(std::collections::HashSet::new()),
+            fpipe: crate::dedup::fpipe::FpipeCtl::for_mode(self.cfg.fp_mode),
         });
         let osd = Osd::spawn(shared, self.cfg.net);
         self.osds.lock().unwrap().insert(id, osd);
@@ -1027,6 +1060,17 @@ impl Cluster {
         Ok(())
     }
 
+    /// Drain every server's tier-2 fingerprint-migration queue
+    /// ([`FpMode::Tiered`], DESIGN.md §16): each pending chunk is
+    /// batch-hashed and moved into the content-addressed dedup domain
+    /// before this returns. A no-op under [`FpMode::Inline`].
+    pub fn fp_flush(&self) -> Result<()> {
+        for id in self.live_ids() {
+            let _ = self.control(id, Req::FpipeFlush);
+        }
+        Ok(())
+    }
+
     /// Run a GC pass everywhere with the given age threshold.
     pub fn run_gc(&self, threshold_ms: u64) -> Result<()> {
         for id in self.live_ids() {
@@ -1187,6 +1231,14 @@ impl Cluster {
             redundancy_demotions: sum(|m| &m.redundancy_demotions),
             redundancy_target_copies: sum(|m| &m.redundancy_target_copies),
             dup_plants_reclaimed: sum(|m| &m.dup_plants_reclaimed),
+            fp_weak_hits: sum(|m| &m.fp_weak_hits),
+            fp_weak_misses: sum(|m| &m.fp_weak_misses),
+            fp_strong_hashes: sum(|m| &m.fp_strong_hashes),
+            fp_deferred: sum(|m| &m.fp_deferred),
+            fp_batch_calls: sum(|m| &m.fp_batch_calls),
+            fp_batch_items: sum(|m| &m.fp_batch_items),
+            fp_verify_rejects: sum(|m| &m.fp_verify_rejects),
+            fp_migrations: sum(|m| &m.fp_migrations),
             per_server: Vec::new(),
         };
         let mut ids = self.live_ids();

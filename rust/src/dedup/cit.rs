@@ -7,13 +7,20 @@ use crate::error::Result;
 use crate::util::codec::{Reader, Writer};
 
 /// Commit-flag states (paper §2.4): 0 = invalid (chunk may be missing /
-/// transaction not yet confirmed), 1 = valid (content confirmed present).
+/// transaction not yet confirmed), 1 = valid (content confirmed present),
+/// 2 = pending (tier-1 deferred identity awaiting strong-fingerprint
+/// resolution by the [`crate::dedup::fpipe`] worker, DESIGN.md §16).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CommitFlag {
     /// Transaction not yet confirmed; the chunk data may be missing.
     Invalid,
     /// Content confirmed present on stable storage.
     Valid,
+    /// Deferred weak-hash identity: payload present locally, strong
+    /// fingerprint not yet computed. Never eligible for remote refcount
+    /// grants (`cit_valid_many` and [`crate::dedup::engine::grant_ref_local`]
+    /// both require `Valid`) — the verify-before-merge invariant.
+    Pending,
 }
 
 impl CommitFlag {
@@ -21,14 +28,15 @@ impl CommitFlag {
         match self {
             CommitFlag::Invalid => 0,
             CommitFlag::Valid => 1,
+            CommitFlag::Pending => 2,
         }
     }
 
     fn from_u8(v: u8) -> Self {
-        if v == 1 {
-            CommitFlag::Valid
-        } else {
-            CommitFlag::Invalid
+        match v {
+            1 => CommitFlag::Valid,
+            2 => CommitFlag::Pending,
+            _ => CommitFlag::Invalid,
         }
     }
 }
@@ -90,6 +98,18 @@ mod tests {
         assert_eq!(CommitFlag::from_u8(0), CommitFlag::Invalid);
         assert_eq!(CommitFlag::from_u8(7), CommitFlag::Invalid);
         assert_eq!(CommitFlag::from_u8(1), CommitFlag::Valid);
+    }
+
+    #[test]
+    fn pending_flag_roundtrip() {
+        let e = CitEntry {
+            refcount: 3,
+            flag: CommitFlag::Pending,
+            len: 9,
+            flagged_at_ms: 5,
+        };
+        assert_eq!(CitEntry::decode(&e.encode()).unwrap(), e);
+        assert_eq!(CommitFlag::from_u8(2), CommitFlag::Pending);
     }
 
     #[test]

@@ -111,7 +111,7 @@ type StoredRef = (Fingerprint, u64, bool);
 
 /// Look up a backend lane and fire one request, charging the engine's
 /// backend wire-byte accounting ([`Metrics::wire_bytes`]).
-fn backend_send(sh: &OsdShared, target: ServerId, req: Req) -> Result<Pending<Resp>> {
+pub(crate) fn backend_send(sh: &OsdShared, target: ServerId, req: Req) -> Result<Pending<Resp>> {
     let addr = sh.dir.lookup(target, Lane::Backend)?;
     let size = req.wire_size();
     Metrics::add(&sh.metrics.wire_bytes, size as u64);
@@ -119,7 +119,7 @@ fn backend_send(sh: &OsdShared, target: ServerId, req: Req) -> Result<Pending<Re
 }
 
 /// [`backend_send`] + wait: a synchronous backend RPC.
-fn backend_call(sh: &OsdShared, target: ServerId, req: Req) -> Result<Resp> {
+pub(crate) fn backend_call(sh: &OsdShared, target: ServerId, req: Req) -> Result<Resp> {
     backend_send(sh, target, req)?.wait()
 }
 
@@ -161,9 +161,19 @@ fn put_dedup(sh: &OsdShared, name: &str, data: &[u8], local_only: bool) -> Resul
         None
     };
 
-    // 1. split + fingerprint
+    // 1. split + fingerprint. Under the tiered pipeline (DESIGN.md §16)
+    //    unique-looking chunks skip the inline strong hash entirely and
+    //    carry a pending identity; the inline path strong-hashes every
+    //    chunk exactly as before.
     let chunks = sh.cfg.chunker.split(data);
-    let digests = sh.provider.digests(&chunks);
+    let tiered = !local_only && sh.cfg.fp_mode.is_tiered();
+    let (digests, pending) = if tiered {
+        let c = crate::dedup::fpipe::classify(sh, name, &chunks)?;
+        (c.digests, c.pending)
+    } else {
+        Metrics::add(&sh.metrics.fp_strong_hashes, chunks.len() as u64);
+        (sh.provider.digests(&chunks), HashSet::new())
+    };
 
     // 2. collapse intra-batch duplicates (multiplicity per unique fp);
     //    first occurrence keeps the payload.
@@ -181,12 +191,36 @@ fn put_dedup(sh: &OsdShared, name: &str, data: &[u8], local_only: bool) -> Resul
 
     // 3. route every unique chunk to its content home (scatter), gather
     //    acks. Local chunks bypass the fabric — same-machine shortcut.
+    //    Pending identities never enter the content-addressed scatter:
+    //    their placement key is the object's name hash, so they land on
+    //    this server by object locality (tier 1 of §16).
+    let mut stored: Vec<StoredRef> = Vec::new();
+    let mut failed: Option<Error> = None;
+    let mut scatter_order: Vec<Fingerprint> = Vec::new();
+    for fp in &order {
+        if pending.contains(fp) {
+            let (idx, refs) = uniq[fp];
+            match crate::dedup::fpipe::store_pending_local(sh, fp, chunks[idx], refs) {
+                Ok(hit) => stored.push((*fp, refs, hit)),
+                Err(e) => {
+                    failed = Some(e);
+                    break;
+                }
+            }
+        } else {
+            scatter_order.push(*fp);
+        }
+    }
     let batched = !local_only && sh.cfg.write_batching == WriteBatching::TwoPhase;
-    let (stored, failed) = if batched {
-        scatter_batched(sh, &order, &uniq, &chunks)
-    } else {
-        scatter_single(sh, &order, &uniq, &chunks, local_only)
-    };
+    if failed.is_none() {
+        let (mut granted, err) = if batched {
+            scatter_batched(sh, &scatter_order, &uniq, &chunks)
+        } else {
+            scatter_single(sh, &scatter_order, &uniq, &chunks, local_only)
+        };
+        stored.append(&mut granted);
+        failed = err;
+    }
     if let Some(e) = failed {
         // abort: roll back references we already took.
         rollback(sh, &stored, local_only);
@@ -248,6 +282,13 @@ fn put_dedup(sh: &OsdShared, name: &str, data: &[u8], local_only: bool) -> Resul
     // 6. release the overwritten version's chunk references.
     if let Some(old) = old_entry {
         release_refs(sh, &old, local_only);
+    }
+
+    // 7. hand pending identities to the tier-2 migrator only now that
+    //    the OMAP entry is durable, so its backref walk sees every
+    //    referencing object.
+    for fp in &pending {
+        sh.fpipe.enqueue(*fp);
     }
 
     let unique: u64 = stored
@@ -473,6 +514,7 @@ fn gather_batch_acks(
 /// without data behind it.
 fn put_central(sh: &OsdShared, name: &str, data: &[u8]) -> Result<(u64, u64)> {
     let chunks = sh.cfg.chunker.split(data);
+    Metrics::add(&sh.metrics.fp_strong_hashes, chunks.len() as u64);
     let digests = sh.provider.digests(&chunks);
 
     // collapse intra-object multiplicity so a deferred CIT insert still
@@ -846,7 +888,7 @@ pub fn get_object(sh: &OsdShared, name: &str) -> Result<Option<Vec<u8>>> {
                         len
                     )));
                 }
-                if sh.cfg.verify_read && Fingerprint::of(&data) != *fp {
+                if sh.cfg.verify_read && !crate::dedup::fpipe::chunk_matches(sh, fp, &data) {
                     return Err(Error::Corrupt(format!("chunk {fp} digest mismatch")));
                 }
                 out.extend_from_slice(&data);
@@ -996,7 +1038,7 @@ fn fetch_chunks_batched(
         // path would prefer the primary's bytes.
         if chain.contains(&sh.id) || sh.chunk_cache.planted_contains(fp) {
             if let Some(d) = sh.replica_store.get(&chunk_copy_key(fp))? {
-                if Fingerprint::of(&d) == *fp {
+                if crate::dedup::fpipe::chunk_matches(sh, fp, &d) {
                     homes.insert(sh.id);
                     cache_insert(sh, fp, &d);
                     out.insert(*fp, d);
@@ -1255,7 +1297,7 @@ pub fn object_fingerprint(digests: &[Fingerprint]) -> Fingerprint {
 /// recovery and rebalance all agree on the same count (DESIGN.md §15).
 /// With [`crate::storage::osd::OsdConfig::verify_write`] on, each
 /// replica is then asked to confirm its copy by content.
-fn replicate_chunk(sh: &OsdShared, fp: &Fingerprint, data: &[u8]) -> Result<()> {
+pub(crate) fn replicate_chunk(sh: &OsdShared, fp: &Fingerprint, data: &[u8]) -> Result<()> {
     let refcount = sh
         .shard
         .cit_get(fp)
@@ -1330,7 +1372,7 @@ fn verify_replicas(sh: &OsdShared, chain: &[ServerId], fp: &Fingerprint, copies:
 /// (degraded durability, like Ceph acking with min_size) but no longer
 /// silent: the returned count says how many pushes failed (dead peer,
 /// send error, or a non-`Ok` reply) so callers can account the gap.
-fn replicate(
+pub(crate) fn replicate(
     sh: &OsdShared,
     chain: &[crate::cluster::ServerId],
     key: &[u8],

@@ -1,0 +1,729 @@
+//! Tiered fingerprint pipeline (DESIGN.md §16).
+//!
+//! Cryptographic hashing is the dedup scaling ceiling: with
+//! [`FpMode::Inline`] (the default, bit-for-bit the pre-pipeline
+//! behavior) every `put` SHA-1s every chunk on the frontend thread.
+//! This module adds [`FpMode::Tiered`], a two-tier scheme:
+//!
+//! * **Tier 1 (inline, cheap).** At chunk boundaries the write path
+//!   computes a *weak* 64-bit hash ([`weak64`]: FNV-1a over the chunk
+//!   folded with the gear rolling hash that the CDC chunker already
+//!   uses) and consults a per-server direct-mapped candidacy filter.
+//!   A filter **hit** means "probably a duplicate": the chunk joins a
+//!   batch that gets the strong fingerprint from one
+//!   [`crate::dedup::fingerprint::FingerprintProvider::digests`] call
+//!   and then takes the normal content-addressed scatter path. A
+//!   filter **miss** means "looks unique": the chunk skips inline
+//!   SHA-1 entirely and is stored locally under a synthetic *pending*
+//!   fingerprint ([`pending_fp`]) with a
+//!   [`crate::dedup::cit::CommitFlag::Pending`] CIT state, placed by
+//!   object locality (its placement key is derived from the object
+//!   name, so the object's own primary is the chunk's home by
+//!   construction — reads, scrub, recovery and rebalance all agree).
+//! * **Tier 2 (background, batched).** A per-OSD worker drains the
+//!   pending queue, reads the deferred payloads and resolves their
+//!   strong fingerprints in real batches through the provider trait
+//!   (finally giving the XLA backend of DESIGN.md §8 a batch to
+//!   accelerate), then migrates each chunk into the content-addressed
+//!   domain under the flag-based consistency protocol: store the
+//!   strong-fingerprint chunk at its content home with the full
+//!   reference count, rewrite every referencing OMAP entry, reclaim
+//!   the pending identity. Three crash points
+//!   ([`CrashPoint::BeforeFpMigrateStore`],
+//!   [`CrashPoint::AfterFpMigrateStore`],
+//!   [`CrashPoint::AfterFpMigrateOmap`]) cover the migration; a crash
+//!   anywhere converges through the existing machinery — scrub's
+//!   refcount reconcile heals a double-granted store, GC reclaims an
+//!   orphaned pending identity, and a restart re-queues surviving
+//!   pending chunks ([`crate::dedup::gc::recovery_scan`]).
+//!
+//! **Verify-before-merge invariant.** A weak hit never grants a
+//! refcount: filter hits go through the strong fingerprint, and a
+//! pending chunk only accretes references after a byte-compare against
+//! the stored payload ([`store_pending_local`] via the classify
+//! pre-check). Weak collisions are therefore impossible to merge —
+//! they cost one inline strong hash ([`Metrics::fp_verify_rejects`])
+//! and nothing else.
+
+use crate::dedup::cit::{CitEntry, CommitFlag};
+use crate::dedup::engine;
+use crate::dedup::fingerprint::Fingerprint;
+use crate::dedup::omap::OmapEntry;
+use crate::error::{Error, Result};
+use crate::failure::CrashPoint;
+use crate::hash::fnv::fnv1a64;
+use crate::hash::gear::Gear;
+use crate::metrics::Metrics;
+use crate::storage::osd::OsdShared;
+use crate::storage::proto::{Req, Resp};
+use std::borrow::Cow;
+use std::collections::{HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Worker poll interval (mirrors the other OSD maintenance loops).
+const POLL: Duration = Duration::from_millis(50);
+
+/// Idle polls between self-healing sweeps of the CIT for pending
+/// entries that fell out of the in-memory queue (crash, rebalance).
+const SWEEP_IDLE_POLLS: usize = 20;
+
+/// Fingerprint pipeline mode (see [`crate::ClusterConfig::fp_mode`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FpMode {
+    /// Strong fingerprint computed inline for every chunk on the write
+    /// path — the default, bit-for-bit today's behavior.
+    Inline,
+    /// Two-tier pipeline: weak prefilter inline, strong hashing only
+    /// for probable duplicates, everything else deferred to the
+    /// batched background worker. Effective for
+    /// [`crate::DedupMode::ClusterWide`]; the other modes ignore it.
+    Tiered {
+        /// Direct-mapped weak-filter slots per server (each slot is
+        /// one `u64`); more slots → fewer aliasing evictions → fewer
+        /// false weak hits.
+        filter_slots: usize,
+        /// Max pending chunks resolved per background
+        /// [`crate::dedup::fingerprint::FingerprintProvider::digests`]
+        /// call.
+        batch: usize,
+        /// Significant low bits of the weak hash (≤ 64). Narrowing
+        /// this is a test hook for forcing weak collisions; production
+        /// keeps the full 64 bits.
+        weak_bits: u8,
+    },
+}
+
+impl FpMode {
+    /// The tiered mode with production defaults: 64 Ki filter slots,
+    /// batches of 64, full 64-bit weak hashes.
+    pub fn tiered() -> Self {
+        FpMode::Tiered {
+            filter_slots: 1 << 16,
+            batch: 64,
+            weak_bits: 64,
+        }
+    }
+
+    /// True for [`FpMode::Tiered`].
+    pub fn is_tiered(&self) -> bool {
+        matches!(self, FpMode::Tiered { .. })
+    }
+}
+
+/// Mask selecting the significant low bits of a weak hash.
+pub fn weak_mask(bits: u8) -> u64 {
+    if bits >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << bits) - 1
+    }
+}
+
+/// The tier-1 weak hash: FNV-1a over the whole chunk, folded with the
+/// final gear rolling-hash state. The gear state alone only covers the
+/// trailing window, so the FNV term supplies full-content coverage;
+/// the gear term reuses work the CDC chunker already does per byte.
+pub fn weak64(data: &[u8]) -> u64 {
+    let mut g = Gear::new();
+    for &b in data {
+        g.roll(b);
+    }
+    fnv1a64(data) ^ ((g.value() as u64) << 32)
+}
+
+/// Marker word stored in `w2` of a pending fingerprint. A real SHA-1
+/// digest matches it with probability 2⁻³², and a false match only
+/// makes that one chunk take the (correct, slower) pending read path —
+/// an availability rounding error, never a merge.
+const PENDING_MAGIC: u32 = 0xFEED_90D5;
+
+/// Synthetic CIT identity for a deferred chunk: `w0‖w1` is the FNV-1a
+/// of the *object name* — so [`Fingerprint::placement_key`] routes the
+/// pending chunk to the same chain as the object's OMAP record, i.e.
+/// the server performing the `put` is the chunk's home by construction
+/// — `w2` is [the pending marker](is_pending), and `w3‖w4` embeds the
+/// (masked) weak hash for later weak verification by deep scrub.
+pub fn pending_fp(name: &str, weak: u64) -> Fingerprint {
+    let h = fnv1a64(name.as_bytes());
+    Fingerprint([
+        (h >> 32) as u32,
+        h as u32,
+        PENDING_MAGIC,
+        (weak >> 32) as u32,
+        weak as u32,
+    ])
+}
+
+/// Is this fingerprint a pending (tier-1 deferred) identity?
+pub fn is_pending(fp: &Fingerprint) -> bool {
+    fp.0[2] == PENDING_MAGIC
+}
+
+/// The weak hash embedded in a pending fingerprint (`w3‖w4`).
+pub fn pending_weak(fp: &Fingerprint) -> u64 {
+    ((fp.0[3] as u64) << 32) | fp.0[4] as u64
+}
+
+/// Content check that understands both fingerprint domains: pending
+/// identities verify against their embedded weak hash, real ones
+/// against a strong digest computed through the server's
+/// [`crate::dedup::fingerprint::FingerprintProvider`] (so an
+/// accelerated provider is used on every verification path, not just
+/// the write path).
+pub fn chunk_matches(sh: &OsdShared, fp: &Fingerprint, data: &[u8]) -> bool {
+    if is_pending(fp) {
+        let mask = match sh.cfg.fp_mode {
+            FpMode::Tiered { weak_bits, .. } => weak_mask(weak_bits),
+            FpMode::Inline => u64::MAX,
+        };
+        (weak64(data) & mask) == pending_weak(fp)
+    } else {
+        sh.provider.digests(&[data])[0] == *fp
+    }
+}
+
+/// Per-server direct-mapped weak-hash candidacy filter. One atomic
+/// `u64` per slot; zero means empty. Both error directions are safe:
+/// a false positive costs one inline strong hash, a false negative
+/// defers a duplicate to tier 2 (where the strong hash merges it).
+pub struct WeakFilter {
+    slots: Vec<AtomicU64>,
+}
+
+impl WeakFilter {
+    /// A filter with `slots` entries (0 = disabled, every probe misses).
+    pub fn new(slots: usize) -> Self {
+        let mut v = Vec::with_capacity(slots);
+        v.resize_with(slots, || AtomicU64::new(0));
+        WeakFilter { slots: v }
+    }
+
+    /// Probe-and-insert: returns `true` when `weak` was already in its
+    /// slot (a *candidate duplicate*); otherwise records it and
+    /// returns `false`. `weak` 0 is encoded as 1 so the empty sentinel
+    /// stays unambiguous (the 0↔1 alias is one more false positive).
+    pub fn hit_or_insert(&self, weak: u64) -> bool {
+        if self.slots.is_empty() {
+            return false;
+        }
+        let enc = weak.max(1);
+        let slot = (weak % self.slots.len() as u64) as usize;
+        self.slots[slot].swap(enc, Ordering::Relaxed) == enc
+    }
+}
+
+struct FpipeInner {
+    /// Pending identities awaiting tier-2 resolution, FIFO.
+    queue: VecDeque<Fingerprint>,
+    /// Everything in `queue` *plus* batches currently being migrated —
+    /// suppresses duplicate enqueues of in-flight identities.
+    queued: HashSet<Fingerprint>,
+    /// Identities handed out by `take_*` and not yet `finish`ed.
+    inflight: usize,
+}
+
+/// Control block of the tier-2 worker: the pending queue, the
+/// in-flight set and the tier-1 weak filter (kept together so one
+/// `OsdShared` field carries the whole pipeline state).
+pub struct FpipeCtl {
+    inner: Mutex<FpipeInner>,
+    cv: Condvar,
+    filter: WeakFilter,
+}
+
+impl FpipeCtl {
+    /// A control block sized for `mode` (an empty filter for
+    /// [`FpMode::Inline`], where tier 1 never runs).
+    pub fn for_mode(mode: FpMode) -> Self {
+        let slots = match mode {
+            FpMode::Tiered { filter_slots, .. } => filter_slots,
+            FpMode::Inline => 0,
+        };
+        FpipeCtl {
+            inner: Mutex::new(FpipeInner {
+                queue: VecDeque::new(),
+                queued: HashSet::new(),
+                inflight: 0,
+            }),
+            cv: Condvar::new(),
+            filter: WeakFilter::new(slots),
+        }
+    }
+
+    /// The tier-1 weak filter.
+    pub fn filter(&self) -> &WeakFilter {
+        &self.filter
+    }
+
+    /// Queue a pending identity for tier-2 resolution. Dedups against
+    /// both the queue and in-flight batches; returns whether it was
+    /// actually added.
+    pub fn enqueue(&self, fp: Fingerprint) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if !g.queued.insert(fp) {
+            return false;
+        }
+        g.queue.push_back(fp);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Worker side: wait up to `timeout` for work, then take up to
+    /// `max` identities. Taken items stay in the dedup set until
+    /// [`FpipeCtl::finish`].
+    pub fn take_batch(&self, timeout: Duration, max: usize) -> Vec<Fingerprint> {
+        let mut g = self.inner.lock().unwrap();
+        if g.queue.is_empty() {
+            let (g2, _) = self.cv.wait_timeout(g, timeout).unwrap();
+            g = g2;
+        }
+        Self::pop(&mut g, max)
+    }
+
+    /// Non-blocking [`FpipeCtl::take_batch`] (the synchronous flush
+    /// path).
+    pub fn take_now(&self, max: usize) -> Vec<Fingerprint> {
+        let mut g = self.inner.lock().unwrap();
+        Self::pop(&mut g, max)
+    }
+
+    fn pop(g: &mut FpipeInner, max: usize) -> Vec<Fingerprint> {
+        let n = max.max(1).min(g.queue.len());
+        let out: Vec<Fingerprint> = g.queue.drain(..n).collect();
+        g.inflight += out.len();
+        out
+    }
+
+    /// Worker side: a batch from `take_*` has been fully processed
+    /// (migrated or intentionally skipped) — drop it from the dedup
+    /// set so later events can re-queue the survivors.
+    pub fn finish(&self, batch: &[Fingerprint]) {
+        let mut g = self.inner.lock().unwrap();
+        for fp in batch {
+            g.queued.remove(fp);
+        }
+        g.inflight = g.inflight.saturating_sub(batch.len());
+    }
+
+    /// Identities handed out and not yet finished.
+    pub fn inflight(&self) -> usize {
+        self.inner.lock().unwrap().inflight
+    }
+
+    /// Queued (not yet taken) identities.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Is the queue empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all queued state (server kill; a restart re-queues from
+    /// the CIT via [`crate::dedup::gc::recovery_scan`]).
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.queue.clear();
+        g.queued.clear();
+        g.inflight = 0;
+        self.cv.notify_all();
+    }
+}
+
+/// Tier-1 classification of one object's chunks.
+pub(crate) struct Classified {
+    /// Per-chunk identity: strong fingerprint (filter hit or collision
+    /// fallback) or pending identity (deferred).
+    pub digests: Vec<Fingerprint>,
+    /// The pending identities in `digests` — stored locally by the
+    /// caller and skipped by the content scatter.
+    pub pending: HashSet<Fingerprint>,
+}
+
+/// Tier 1: weak-hash every chunk, strong-hash the probable duplicates
+/// in one batched provider call, defer the rest under pending
+/// identities. A pending identity that already exists in the local CIT
+/// is only reused after a byte-compare against the stored payload —
+/// on mismatch (a weak collision on the same object) the chunk falls
+/// back to an inline strong hash and can never merge
+/// ([`Metrics::fp_verify_rejects`]).
+pub(crate) fn classify(sh: &OsdShared, name: &str, chunks: &[&[u8]]) -> Result<Classified> {
+    let FpMode::Tiered { weak_bits, .. } = sh.cfg.fp_mode else {
+        unreachable!("classify is only called in tiered mode");
+    };
+    let mask = weak_mask(weak_bits);
+    let mut digests: Vec<Option<Fingerprint>> = vec![None; chunks.len()];
+    let mut strong_idx: Vec<usize> = Vec::new();
+    let mut pending: HashSet<Fingerprint> = HashSet::new();
+    for (i, c) in chunks.iter().enumerate() {
+        let w = weak64(c) & mask;
+        if sh.fpipe.filter().hit_or_insert(w) {
+            Metrics::add(&sh.metrics.fp_weak_hits, 1);
+            strong_idx.push(i);
+            continue;
+        }
+        Metrics::add(&sh.metrics.fp_weak_misses, 1);
+        let pid = pending_fp(name, w);
+        let clean = if pending.contains(&pid) {
+            // same weak, same object, earlier chunk of this very put:
+            // the filter made that impossible (the first miss inserted
+            // the weak), but stay defensive — byte-compare below.
+            false
+        } else {
+            sh.shard.cit_get(&pid)?.is_none()
+        };
+        if clean {
+            digests[i] = Some(pid);
+            pending.insert(pid);
+            Metrics::add(&sh.metrics.fp_deferred, 1);
+        } else {
+            // the identity exists (an earlier deferral of this object
+            // with the same masked weak): verify by content before
+            // reusing it — the verify-before-merge invariant.
+            match sh.store.get(&pid.to_bytes())? {
+                Some(prev) if prev.as_slice() == *c => {
+                    digests[i] = Some(pid);
+                    pending.insert(pid);
+                    Metrics::add(&sh.metrics.fp_deferred, 1);
+                }
+                _ => {
+                    Metrics::add(&sh.metrics.fp_verify_rejects, 1);
+                    strong_idx.push(i);
+                }
+            }
+        }
+    }
+    if !strong_idx.is_empty() {
+        let subset: Vec<&[u8]> = strong_idx.iter().map(|&i| chunks[i]).collect();
+        let fps = sh.provider.digests(&subset);
+        Metrics::add(&sh.metrics.fp_strong_hashes, fps.len() as u64);
+        for (fp, &i) in fps.into_iter().zip(&strong_idx) {
+            digests[i] = Some(fp);
+        }
+    }
+    Ok(Classified {
+        digests: digests.into_iter().flatten().collect(),
+        pending,
+    })
+}
+
+fn died() -> Error {
+    Error::TxAborted("server crashed".into())
+}
+
+/// Store a tier-1 deferred chunk locally under its pending identity:
+/// CIT upsert with [`CommitFlag::Pending`], payload under the pending
+/// key, replica fan-out for durability. An existing identity accretes
+/// the references (the classify pre-check already byte-verified the
+/// payload). Returns `dedup_hit` like
+/// [`crate::dedup::engine::store_chunk_local`].
+pub(crate) fn store_pending_local(
+    sh: &OsdShared,
+    pid: &Fingerprint,
+    data: &[u8],
+    refs: u64,
+) -> Result<bool> {
+    Metrics::add(&sh.metrics.cit_lookups, 1);
+    let now = sh.now_ms();
+    let mut prior = false;
+    sh.charge_meta_io(); // modeled DM-Shard write
+    sh.shard.cit_update(pid, |cur| match cur {
+        Some(mut e) => {
+            prior = true;
+            e.refcount += refs;
+            Some(e)
+        }
+        None => Some(CitEntry {
+            refcount: refs,
+            flag: CommitFlag::Pending,
+            len: data.len() as u32,
+            flagged_at_ms: now,
+        }),
+    })?;
+    if prior {
+        Metrics::add(&sh.metrics.dedup_hits, refs);
+        return Ok(true);
+    }
+    if sh.injector.maybe_crash(CrashPoint::AfterCitInsert) {
+        return Err(died());
+    }
+    sh.store.put(&pid.to_bytes(), data)?;
+    if sh.injector.maybe_crash(CrashPoint::AfterDataStore) {
+        return Err(died());
+    }
+    Metrics::add(&sh.metrics.bytes_stored, data.len() as u64);
+    Metrics::add(&sh.metrics.unique_chunks, 1);
+    engine::replicate_chunk(sh, pid, data)?;
+    Ok(false)
+}
+
+/// The tier-2 worker loop (the OSD's tenth thread). Drains the pending
+/// queue in batches; when idle, periodically sweeps the CIT for
+/// referenced pending entries that fell out of the in-memory queue
+/// (crash before enqueue, rebalance hand-off) so the pipeline is
+/// self-healing.
+pub fn fpipe_loop(sh: Arc<OsdShared>, shutdown: Arc<AtomicBool>) {
+    let FpMode::Tiered { batch, .. } = sh.cfg.fp_mode else {
+        return;
+    };
+    let mut idle = 0usize;
+    while !shutdown.load(Ordering::SeqCst) {
+        if sh.injector.is_dead() {
+            std::thread::sleep(POLL);
+            continue;
+        }
+        let b = sh.fpipe.take_batch(POLL, batch);
+        if b.is_empty() {
+            idle += 1;
+            if idle >= SWEEP_IDLE_POLLS {
+                idle = 0;
+                sweep(&sh);
+            }
+            continue;
+        }
+        idle = 0;
+        let _ = migrate_batch(&sh, &b);
+        sh.fpipe.finish(&b);
+    }
+}
+
+/// Synchronous drain for the `FpipeFlush` control request: migrate
+/// everything queued and wait out batches the background worker holds
+/// in flight. Quiesces the pipeline for tests and benches.
+pub(crate) fn flush(sh: &OsdShared) -> Result<()> {
+    let FpMode::Tiered { batch, .. } = sh.cfg.fp_mode else {
+        return Ok(());
+    };
+    loop {
+        let b = sh.fpipe.take_now(batch);
+        if b.is_empty() {
+            if sh.fpipe.inflight() == 0 {
+                return Ok(());
+            }
+            std::thread::sleep(Duration::from_millis(1));
+            continue;
+        }
+        let r = migrate_batch(sh, &b);
+        sh.fpipe.finish(&b);
+        r?;
+    }
+}
+
+/// Self-healing sweep: re-queue every referenced pending CIT entry not
+/// already queued or in flight ([`FpipeCtl::enqueue`] dedups).
+fn sweep(sh: &OsdShared) {
+    let Ok(fps) = sh.shard.cit_fingerprints() else {
+        return;
+    };
+    for fp in fps {
+        if !is_pending(&fp) {
+            continue;
+        }
+        let Ok(Some(e)) = sh.shard.cit_get(&fp) else {
+            continue;
+        };
+        if e.flag != CommitFlag::Pending {
+            continue;
+        }
+        if sh.shard.backref_refs(&fp).unwrap_or(0) > 0 {
+            sh.fpipe.enqueue(fp);
+        }
+    }
+}
+
+/// Resolve one batch of pending identities: read the deferred
+/// payloads, strong-hash them in a single batched provider call
+/// ([`Metrics::fp_batch_calls`] / [`Metrics::fp_batch_items`]), then
+/// migrate each into the content-addressed domain. Returns how many
+/// migrated; identities whose entry or payload vanished (GC, overwrite
+/// rollback) are skipped and left to GC.
+pub(crate) fn migrate_batch(sh: &OsdShared, pids: &[Fingerprint]) -> Result<usize> {
+    let mut work: Vec<(Fingerprint, Vec<u8>)> = Vec::new();
+    for pid in pids {
+        let Some(e) = sh.shard.cit_get(pid)? else {
+            continue;
+        };
+        if e.flag != CommitFlag::Pending {
+            continue;
+        }
+        let Some(data) = sh.store.get(&pid.to_bytes())? else {
+            // payload lost before resolution: scrub's presence check
+            // repairs it from a replica copy and re-queues
+            continue;
+        };
+        work.push((*pid, data));
+    }
+    if work.is_empty() {
+        return Ok(0);
+    }
+    let payloads: Vec<&[u8]> = work.iter().map(|(_, d)| d.as_slice()).collect();
+    let fps = sh.provider.digests(&payloads);
+    Metrics::add(&sh.metrics.fp_batch_calls, 1);
+    Metrics::add(&sh.metrics.fp_batch_items, fps.len() as u64);
+    let mut migrated = 0usize;
+    for ((pid, data), fp) in work.iter().zip(&fps) {
+        match migrate_one(sh, pid, data, fp) {
+            Ok(true) => migrated += 1,
+            Ok(false) => {}
+            Err(e) => {
+                if sh.injector.is_dead() {
+                    return Err(e);
+                }
+                // transient (dead peer mid-store): the identity stays
+                // Pending; the idle sweep re-queues it later.
+            }
+        }
+    }
+    Ok(migrated)
+}
+
+/// Migrate one resolved chunk `pid → fp`:
+///
+/// 1. store the strong-fingerprint chunk at its content home carrying
+///    the pending identity's full reference count (a dedup hit there
+///    merges under strong-digest verification — never under the weak
+///    hash);
+/// 2. rewrite every referencing OMAP entry `pid → fp` under the object
+///    lock (backref-indexed: O(referrers), all local by placement);
+/// 3. reclaim the pending identity (CIT entry, payload, replica
+///    copies) through the GC choke point.
+///
+/// Crash between 1 and 2: re-migration double-grants the refcount and
+/// scrub's reconcile settles it. Crash between 2 and 3: the pending
+/// identity has zero references and ages into GC reclaim. Either way
+/// the audit converges clean.
+fn migrate_one(sh: &OsdShared, pid: &Fingerprint, data: &[u8], fp: &Fingerprint) -> Result<bool> {
+    let refs = sh.shard.backref_refs(pid)?;
+    Metrics::add(&sh.metrics.backref_lookups, 1);
+    if refs == 0 {
+        // orphaned deferral (rollback or overwrite): GC's pending arm
+        // reclaims it after aging
+        return Ok(false);
+    }
+    if sh.injector.maybe_crash(CrashPoint::BeforeFpMigrateStore) {
+        return Err(died());
+    }
+    let target = sh.chunk_chain(fp.placement_key())[0];
+    if target == sh.id {
+        engine::store_chunk_local(sh, fp, Cow::Borrowed(data), refs)?;
+    } else {
+        let req = Req::StoreChunk {
+            fp: *fp,
+            data: data.to_vec(),
+            refs,
+        };
+        match engine::backend_call(sh, target, req)? {
+            Resp::StoreAck { .. } => {}
+            Resp::Err(e) => return Err(Error::TxAborted(e)),
+            _ => return Err(Error::TxAborted("bad store reply".into())),
+        }
+    }
+    if sh.injector.maybe_crash(CrashPoint::AfterFpMigrateStore) {
+        return Err(died());
+    }
+    for br in sh.shard.backref_referrers(pid)? {
+        let _guard = sh.obj_lock.lock().unwrap();
+        let Some(old) = sh.shard.omap_get(&br.object)? else {
+            continue;
+        };
+        let chunks: Vec<(Fingerprint, u32)> = old
+            .chunks
+            .iter()
+            .map(|&(c, len)| if c == *pid { (*fp, len) } else { (c, len) })
+            .collect();
+        let fps: Vec<Fingerprint> = chunks.iter().map(|&(c, _)| c).collect();
+        let entry = OmapEntry::new(old.name.clone(), engine::object_fingerprint(&fps), chunks);
+        sh.charge_meta_io(); // modeled DM-Shard write
+        let deltas = sh.shard.omap_put(&entry)?;
+        if deltas.total() > 0 {
+            sh.charge_meta_io();
+            Metrics::add(&sh.metrics.backref_updates, deltas.total());
+        }
+        let chain = sh.object_chain(&old.name);
+        let failures = engine::replicate(
+            sh,
+            &chain,
+            &engine::omap_copy_key(&old.name),
+            &entry.encode(),
+            sh.cfg.replication,
+        )?;
+        if failures > 0 {
+            Metrics::add(&sh.metrics.replica_push_failures, failures as u64);
+        }
+    }
+    if sh.injector.maybe_crash(CrashPoint::AfterFpMigrateOmap) {
+        return Err(died());
+    }
+    crate::dedup::gc::reclaim(sh, pid)?;
+    Metrics::add(&sh.metrics.fp_migrations, 1);
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pending_identity_roundtrip() {
+        let w = 0xDEAD_BEEF_CAFE_F00Du64;
+        let pid = pending_fp("obj-7", w);
+        assert!(is_pending(&pid));
+        assert_eq!(pending_weak(&pid), w);
+        // placement agrees with the object's chain key
+        assert_eq!(pid.placement_key(), fnv1a64(b"obj-7"));
+        // a real digest is not pending (up to the 2^-32 marker alias)
+        let real = Fingerprint::of(b"some chunk");
+        assert_eq!(is_pending(&real), real.0[2] == 0xFEED_90D5);
+    }
+
+    #[test]
+    fn weak64_is_content_sensitive() {
+        let a = vec![7u8; 4096];
+        let mut b = a.clone();
+        b[0] ^= 1; // a leading flip: outside the gear window, caught by fnv
+        assert_ne!(weak64(&a), weak64(&b));
+        assert_eq!(weak64(&a), weak64(&a.clone()));
+    }
+
+    #[test]
+    fn weak_mask_bounds() {
+        assert_eq!(weak_mask(64), u64::MAX);
+        assert_eq!(weak_mask(8), 0xFF);
+        assert_eq!(weak_mask(0), 0);
+    }
+
+    #[test]
+    fn filter_hit_and_eviction() {
+        let f = WeakFilter::new(2);
+        assert!(!f.hit_or_insert(10)); // miss, inserted (slot 0)
+        assert!(f.hit_or_insert(10)); // hit
+        assert!(!f.hit_or_insert(12)); // same slot, different weak: evicts
+        assert!(!f.hit_or_insert(10)); // evicted → miss again
+        let off = WeakFilter::new(0);
+        assert!(!off.hit_or_insert(10));
+        assert!(!off.hit_or_insert(10)); // disabled filter never hits
+    }
+
+    #[test]
+    fn ctl_dedups_and_tracks_inflight() {
+        let ctl = FpipeCtl::for_mode(FpMode::tiered());
+        let a = pending_fp("a", 1);
+        let b = pending_fp("b", 2);
+        assert!(ctl.enqueue(a));
+        assert!(!ctl.enqueue(a)); // queued dedup
+        assert!(ctl.enqueue(b));
+        let batch = ctl.take_now(10);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(ctl.inflight(), 2);
+        assert!(!ctl.enqueue(a)); // in-flight dedup
+        ctl.finish(&batch);
+        assert_eq!(ctl.inflight(), 0);
+        assert!(ctl.enqueue(a)); // finished → re-queue allowed
+        ctl.clear();
+        assert!(ctl.is_empty());
+        assert_eq!(ctl.inflight(), 0);
+    }
+}

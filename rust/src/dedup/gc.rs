@@ -43,12 +43,18 @@ pub struct GcReport {
     pub lost: usize,
 }
 
-/// Consistency-manager confirmation: chunk present → flag valid.
+/// Consistency-manager confirmation: chunk present → flag valid. Only an
+/// `Invalid` flag is flipped — a `Pending` entry (tier 1 of the
+/// fingerprint pipeline, DESIGN.md §16) is awaiting its strong digest and
+/// must never be confirmed into the dedup domain on presence alone.
 pub fn confirm_flag(sh: &OsdShared, fp: &Fingerprint) -> Result<()> {
     let present = sh.store.stat(&fp.to_bytes())?;
     if present {
-        sh.charge_meta_io(); // modeled DM-Shard write
-        sh.shard.cit_set_flag(fp, CommitFlag::Valid, sh.now_ms())?;
+        let cur = sh.shard.cit_get(fp)?;
+        if cur.map(|e| e.flag) == Some(CommitFlag::Invalid) {
+            sh.charge_meta_io(); // modeled DM-Shard write
+            sh.shard.cit_set_flag(fp, CommitFlag::Valid, sh.now_ms())?;
+        }
     }
     Ok(())
 }
@@ -113,6 +119,44 @@ pub fn run(sh: &OsdShared, threshold_ms: u64) -> Result<GcReport> {
                     report.lost += 1;
                 }
             }
+            (CommitFlag::Pending, _) if !aged => report.young += 1,
+            (CommitFlag::Pending, 0) => {
+                // a migrated (or rolled-back) pending identity: the
+                // strong-fingerprint chunk took over its references.
+                // Index-checked like every reclaim — leaked live refs
+                // put it back on the migration queue instead.
+                if let Some(live) = indexed_live_refs(sh, &fp)? {
+                    sh.charge_meta_io(); // modeled DM-Shard write
+                    sh.shard.cit_update(&fp, |cur| {
+                        cur.map(|mut e| {
+                            e.refcount = e.refcount.max(live);
+                            e
+                        })
+                    })?;
+                    sh.fpipe.enqueue(fp);
+                    Metrics::add(&sh.metrics.repairs, 1);
+                    report.repaired += 1;
+                } else {
+                    reclaim(sh, &fp)?;
+                    report.reclaimed += 1;
+                }
+            }
+            (CommitFlag::Pending, _) => {
+                // referenced by count — cross-match the index. Live
+                // references make it strictly the migrator's business:
+                // GC must never "repair" a pending identity with a
+                // strong hash (that is exactly the inline work tier 1
+                // deferred), so it only re-queues. No surviving OMAP
+                // reference means the count is stale (a crash between
+                // the migrator's OMAP rewrite and its reclaim) and the
+                // identity is garbage.
+                if indexed_live_refs(sh, &fp)?.is_some() {
+                    sh.fpipe.enqueue(fp);
+                } else {
+                    reclaim(sh, &fp)?;
+                    report.reclaimed += 1;
+                }
+            }
         }
     }
     Metrics::add(&sh.metrics.gc_reclaimed, report.reclaimed as u64);
@@ -130,6 +174,11 @@ pub fn recovery_scan(sh: &OsdShared) -> Result<usize> {
         };
         if e.flag == CommitFlag::Invalid && sh.store.stat(&fp.to_bytes())? {
             sh.pending.push(fp);
+            re_registered += 1;
+        } else if e.flag == CommitFlag::Pending && sh.store.stat(&fp.to_bytes())? {
+            // the tier-2 migration queue is volatile too: a restart
+            // re-queues every present pending chunk (DESIGN.md §16)
+            sh.fpipe.enqueue(fp);
             re_registered += 1;
         }
     }
@@ -156,7 +205,7 @@ fn indexed_live_refs(sh: &OsdShared, fp: &Fingerprint) -> Result<Option<u64>> {
     Ok(if n > 0 { Some(n) } else { None })
 }
 
-fn reclaim(sh: &OsdShared, fp: &Fingerprint) -> Result<()> {
+pub(crate) fn reclaim(sh: &OsdShared, fp: &Fingerprint) -> Result<()> {
     // coherence: the CIT entry dies, so the cached payload must too
     crate::dedup::engine::invalidate_chunk(sh, fp);
     sh.shard.cit_delete(fp)?;
@@ -216,10 +265,19 @@ fn reclaim(sh: &OsdShared, fp: &Fingerprint) -> Result<()> {
 /// chain's healthy copies, then the off-chain sweep), then flipped.
 /// Returns false when no healthy copy exists anywhere.
 fn repair(sh: &OsdShared, fp: &Fingerprint) -> Result<bool> {
+    // a pending identity (DESIGN.md §16) is repaired back to Pending,
+    // never Valid: its strong digest is unresolved and only the tier-2
+    // migrator may admit it to the dedup domain
+    let healthy_flag = if crate::dedup::fpipe::is_pending(fp) {
+        sh.fpipe.enqueue(*fp);
+        CommitFlag::Pending
+    } else {
+        CommitFlag::Valid
+    };
     if let Some(data) = sh.store.get(&fp.to_bytes())? {
-        if Fingerprint::of(&data) == *fp {
+        if crate::dedup::fpipe::chunk_matches(sh, fp, &data) {
             sh.charge_meta_io(); // modeled DM-Shard write
-            sh.shard.cit_set_flag(fp, CommitFlag::Valid, sh.now_ms())?;
+            sh.shard.cit_set_flag(fp, healthy_flag, sh.now_ms())?;
             Metrics::add(&sh.metrics.repairs, 1);
             return Ok(true);
         }
@@ -238,7 +296,7 @@ fn repair(sh: &OsdShared, fp: &Fingerprint) -> Result<bool> {
         Metrics::add(&sh.metrics.bytes_stored, data.len() as u64);
     }
     sh.charge_meta_io(); // modeled DM-Shard write
-    sh.shard.cit_set_flag(fp, CommitFlag::Valid, sh.now_ms())?;
+    sh.shard.cit_set_flag(fp, healthy_flag, sh.now_ms())?;
     Metrics::add(&sh.metrics.repairs, 1);
     Ok(true)
 }

@@ -15,6 +15,9 @@
 //!   fragmentation-aware selective-duplication tracker (§14).
 //! * [`redundancy`] — the refcount-banded copy-count policy every
 //!   plant/repair path consults (§15).
+//! * [`fpipe`] — the tiered fingerprint pipeline: weak-hash prefilter
+//!   inline, deferred batched strong hashing in the background, and
+//!   verify-before-merge collision safety (§16).
 
 pub mod cache;
 pub mod chunker;
@@ -23,6 +26,7 @@ pub mod consistency;
 pub mod dmshard;
 pub mod engine;
 pub mod fingerprint;
+pub mod fpipe;
 pub mod gc;
 pub mod omap;
 pub mod redundancy;
@@ -30,4 +34,5 @@ pub mod redundancy;
 pub use chunker::{Chunker, Chunking};
 pub use consistency::ConsistencyMode;
 pub use fingerprint::{Fingerprint, FingerprintProvider, RustSha1Provider};
+pub use fpipe::FpMode;
 pub use redundancy::{RedundancyBand, RedundancyPolicy};

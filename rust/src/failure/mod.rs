@@ -47,6 +47,23 @@ pub enum CrashPoint {
     /// pushed — the stored-but-invalid state the flag-based consistency
     /// argument already covers (GC/scrub re-validate or reclaim it).
     AfterRecoveryCopy,
+    /// Fingerprint-pipeline worker: a pending chunk's strong
+    /// fingerprint was resolved, but the server dies before the
+    /// strong-fingerprint chunk is stored — nothing changed; the
+    /// pending identity survives and a restart re-queues it.
+    BeforeFpMigrateStore,
+    /// Fingerprint-pipeline worker: the strong-fingerprint chunk was
+    /// stored with the full reference count, but the server dies
+    /// before the referencing OMAP entries are rewritten — the OMAP
+    /// still references the pending identity; re-migration
+    /// double-grants the strong chunk's refcount and scrub's
+    /// reconcile settles it.
+    AfterFpMigrateStore,
+    /// Fingerprint-pipeline worker: OMAP entries now reference the
+    /// strong fingerprint, but the server dies before the pending
+    /// identity is reclaimed — it lingers with zero references and
+    /// ages into GC reclaim.
+    AfterFpMigrateOmap,
 }
 
 /// Per-server failure injector.

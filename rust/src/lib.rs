@@ -57,6 +57,12 @@
 //!   hot-shard detection), per-op-class latency histograms with
 //!   p50/p90/p99 readout, and std-only Prometheus-text/JSON exposition
 //!   ([`obs`], DESIGN.md §12);
+//! * a **tiered fingerprint pipeline**: a weak-hash prefilter at chunk
+//!   boundaries so unique-looking chunks skip the inline strong hash,
+//!   deferred batched strong hashing on a per-OSD background worker,
+//!   and verify-before-merge collision safety — a weak match never
+//!   grants a refcount without byte-compare or strong-digest
+//!   verification ([`dedup::fpipe`], DESIGN.md §16);
 //! * evaluation machinery: an FIO-like workload generator ([`workload`]),
 //!   crash-point failure injection ([`failure`]) and metrics ([`metrics`]).
 //!

@@ -213,6 +213,32 @@ pub struct Metrics {
     /// `invalidate_chunk` choke point (a planted replica-slot copy
     /// deleted + deregistered when its chunk was retired).
     pub dup_plants_reclaimed: AtomicU64,
+    /// Tier-1 weak-filter hits: chunks classified as probable
+    /// duplicates and strong-hashed inline (DESIGN.md §16).
+    pub fp_weak_hits: AtomicU64,
+    /// Tier-1 weak-filter misses: chunks that looked unique at the
+    /// weak tier.
+    pub fp_weak_misses: AtomicU64,
+    /// Strong fingerprints computed *inline on the write path* (all
+    /// chunks under `FpMode::Inline`; only probable duplicates and
+    /// collision fallbacks under `FpMode::Tiered`).
+    pub fp_strong_hashes: AtomicU64,
+    /// Chunks deferred under a pending identity for background
+    /// resolution.
+    pub fp_deferred: AtomicU64,
+    /// Batched `FingerprintProvider::digests` calls made by the tier-2
+    /// worker.
+    pub fp_batch_calls: AtomicU64,
+    /// Chunks hashed across all tier-2 batched calls
+    /// (`fp_batch_items / fp_batch_calls` = mean batch size).
+    pub fp_batch_items: AtomicU64,
+    /// Weak collisions caught by byte-compare before any merge (the
+    /// chunk fell back to an inline strong hash; nothing was merged).
+    pub fp_verify_rejects: AtomicU64,
+    /// Pending identities fully migrated into the content-addressed
+    /// domain (strong chunk stored, OMAP rewritten, identity
+    /// reclaimed).
+    pub fp_migrations: AtomicU64,
     /// Write-path (put) latency histogram.
     pub put_latency: Histogram,
     /// Read-path (get) latency histogram.
@@ -329,6 +355,14 @@ impl Metrics {
             redundancy_demotions,
             redundancy_target_copies,
             dup_plants_reclaimed,
+            fp_weak_hits,
+            fp_weak_misses,
+            fp_strong_hashes,
+            fp_deferred,
+            fp_batch_calls,
+            fp_batch_items,
+            fp_verify_rejects,
+            fp_migrations,
         ]
     }
 

@@ -538,8 +538,16 @@ fn restore_primary(sh: &OsdShared, task: &ChunkTask) -> Result<()> {
         return Err(Error::ServerDown(sh.id.0));
     }
     sh.charge_meta_io();
-    sh.shard
-        .cit_set_flag(&task.fp, CommitFlag::Valid, sh.now_ms())?;
+    let flag = if crate::dedup::fpipe::is_pending(&task.fp) {
+        // a pending identity stays pending: its strong digest is still
+        // unresolved, so recovery must not admit it to the dedup domain
+        // — put it back on the migration queue instead
+        sh.fpipe.enqueue(task.fp);
+        CommitFlag::Pending
+    } else {
+        CommitFlag::Valid
+    };
+    sh.shard.cit_set_flag(&task.fp, flag, sh.now_ms())?;
     sh.charge_maint(MaintClass::Recovery, data.len() as u64);
     sh.recovery.update(|st| {
         st.chunks_restored += 1;
@@ -726,12 +734,14 @@ fn central_restore(sh: &OsdShared, task: &ChunkTask) -> Result<()> {
     Ok(())
 }
 
-/// Our own replica slot for a chunk, digest-verified.
+/// Our own replica slot for a chunk, content-verified (strong digest,
+/// or the weak identity for a pending chunk — see
+/// [`crate::dedup::fpipe::chunk_matches`]).
 fn own_copy(sh: &OsdShared, fp: &Fingerprint) -> Result<Option<Vec<u8>>> {
     Ok(sh
         .replica_store
         .get(&chunk_copy_key(fp))?
-        .filter(|d| Fingerprint::of(d) == *fp))
+        .filter(|d| crate::dedup::fpipe::chunk_matches(sh, fp, d)))
 }
 
 /// Fetch a digest-verified copy of a chunk from *anywhere*: our own
@@ -765,7 +775,7 @@ pub(crate) fn fetch_any_copy(sh: &OsdShared, fp: &Fingerprint) -> Result<Option<
         };
         let size = req.wire_size();
         if let Ok(Resp::Data(d)) = addr.call(req, size) {
-            if Fingerprint::of(&d) == *fp {
+            if crate::dedup::fpipe::chunk_matches(sh, fp, &d) {
                 return Ok(Some(d));
             }
         }

@@ -511,6 +511,10 @@ pub(crate) fn reconcile_refcounts(
 /// re-read, batched re-fingerprint and replica comparison/repair.
 fn check_presence_and_data(sh: &OsdShared, deep: bool, targets: &[Fingerprint]) -> Result<()> {
     let mut reads: Vec<(Fingerprint, Vec<u8>)> = Vec::new();
+    // stored-but-unconfirmed entries are confirmed by *content*: gather
+    // the window's candidates and re-fingerprint them through one
+    // batched provider call instead of one scalar hash per chunk
+    let mut confirms: Vec<(Fingerprint, Vec<u8>)> = Vec::new();
     for fp in targets {
         ensure_alive(sh)?;
         let Some(entry) = sh.shard.cit_get(fp)? else {
@@ -537,24 +541,23 @@ fn check_presence_and_data(sh: &OsdShared, deep: bool, targets: &[Fingerprint]) 
         let present = sh.store.stat(&fp.to_bytes())?;
         match (entry.flag, present) {
             (CommitFlag::Valid, true) => {}
+            (CommitFlag::Pending, true) => {
+                // awaiting its strong digest (DESIGN.md §16): the flag
+                // is the tier-2 migrator's to flip, but scrub makes
+                // sure the chunk stays on the migration queue; the deep
+                // pass below still verifies its bytes against the weak
+                // identity.
+                sh.fpipe.enqueue(*fp);
+            }
             (CommitFlag::Invalid, true) => {
                 // stored but never confirmed (e.g. a crash wiped the
                 // registration queue) — or rot deep scrub quarantined
                 // earlier. Confirm by *content*, not mere presence, so
-                // the quarantine of a corrupt chunk is never undone.
+                // the quarantine of a corrupt chunk is never undone;
+                // hashed after the loop in one batched call.
                 let data = sh.store.get(&fp.to_bytes())?.unwrap_or_default();
-                if Fingerprint::of(&data) == *fp {
-                    sh.charge_meta_io();
-                    sh.shard.cit_set_flag(fp, CommitFlag::Valid, sh.now_ms())?;
-                    sh.scrub.update(|st| st.flags_confirmed += 1);
-                } else {
-                    sh.scrub.update(|st| st.corruptions_found += 1);
-                    Metrics::add(&sh.metrics.scrub_corruptions_found, 1);
-                    if !repair_primary_from_copy(sh, fp)? {
-                        sh.scrub.update(|st| st.lost += 1);
-                        continue; // stays quarantined behind the flag
-                    }
-                }
+                confirms.push((*fp, data));
+                continue; // the batch pass queues its own deep read
             }
             (_, false) => {
                 // lost primary: restore from a digest-verified replica.
@@ -581,8 +584,53 @@ fn check_presence_and_data(sh: &OsdShared, deep: bool, targets: &[Fingerprint]) 
         }
     }
 
+    if !confirms.is_empty() {
+        confirm_flags_batched(sh, deep, &mut reads, confirms)?;
+    }
     if !reads.is_empty() {
         deep_verify(sh, reads)?;
+    }
+    Ok(())
+}
+
+/// Content-confirm one window's stored-but-invalid entries with a
+/// single batched [`crate::dedup::fingerprint::FingerprintProvider`]
+/// call: matches flip Valid (and join the deep reads), mismatches go
+/// through the corruption repair path exactly as the per-chunk confirm
+/// did.
+fn confirm_flags_batched(
+    sh: &OsdShared,
+    deep: bool,
+    reads: &mut Vec<(Fingerprint, Vec<u8>)>,
+    confirms: Vec<(Fingerprint, Vec<u8>)>,
+) -> Result<()> {
+    let digests = {
+        let refs: Vec<&[u8]> = confirms.iter().map(|(_, d)| d.as_slice()).collect();
+        sh.provider.digests(&refs)
+    };
+    for ((fp, data), got) in confirms.into_iter().zip(digests) {
+        ensure_alive(sh)?;
+        if got == fp {
+            sh.charge_meta_io();
+            sh.shard.cit_set_flag(&fp, CommitFlag::Valid, sh.now_ms())?;
+            sh.scrub.update(|st| st.flags_confirmed += 1);
+            if deep {
+                reads.push((fp, data));
+            }
+        } else {
+            sh.scrub.update(|st| st.corruptions_found += 1);
+            Metrics::add(&sh.metrics.scrub_corruptions_found, 1);
+            if repair_primary_from_copy(sh, &fp)? {
+                if deep {
+                    if let Some(good) = sh.store.get(&fp.to_bytes())? {
+                        reads.push((fp, good));
+                    }
+                }
+            } else {
+                sh.scrub.update(|st| st.lost += 1);
+                // stays quarantined behind the flag
+            }
+        }
     }
     Ok(())
 }
@@ -607,7 +655,16 @@ fn repair_primary_from_copy(sh: &OsdShared, fp: &Fingerprint) -> Result<bool> {
         return Err(Error::ServerDown(sh.id.0));
     }
     sh.charge_meta_io();
-    sh.shard.cit_set_flag(fp, CommitFlag::Valid, sh.now_ms())?;
+    let flag = if crate::dedup::fpipe::is_pending(fp) {
+        // a pending identity stays pending: its strong digest is still
+        // unresolved, so a repair must not admit it to the dedup domain
+        // — put it back on the migration queue instead
+        sh.fpipe.enqueue(*fp);
+        CommitFlag::Pending
+    } else {
+        CommitFlag::Valid
+    };
+    sh.shard.cit_set_flag(fp, flag, sh.now_ms())?;
     sh.scrub.update(|st| st.repaired += 1);
     Metrics::add(&sh.metrics.scrub_repaired, 1);
     Metrics::add(&sh.metrics.repairs, 1);
@@ -681,19 +738,32 @@ fn deep_verify_remote_raw(sh: &OsdShared, fp: &Fingerprint, entry: &CitEntry) ->
 /// backpressure-aware replica comparison over the whole window
 /// ([`verify_copies_windowed`]).
 fn deep_verify(sh: &OsdShared, mut reads: Vec<(Fingerprint, Vec<u8>)>) -> Result<()> {
+    // pending identities (DESIGN.md §16) are verified against their
+    // weak identity — the strong digest is exactly what tier 2 has not
+    // computed yet — everything else through one batched digest call
     let digests = {
-        let refs: Vec<&[u8]> = reads.iter().map(|(_, d)| d.as_slice()).collect();
+        let refs: Vec<&[u8]> = reads
+            .iter()
+            .filter(|(fp, _)| !crate::dedup::fpipe::is_pending(fp))
+            .map(|(_, d)| d.as_slice())
+            .collect::<Vec<_>>();
         sh.provider.digests(&refs)
     };
+    let mut strong = digests.into_iter();
     // `intact[i]` ⇔ reads[i] holds known-good primary bytes afterwards
     let mut intact = vec![false; reads.len()];
-    for (i, got) in digests.into_iter().enumerate() {
+    for i in 0..reads.len() {
         ensure_alive(sh)?;
         let fp = reads[i].0;
         let len = reads[i].1.len() as u64;
         sh.scrub.update(|st| st.bytes_verified += len);
         Metrics::add(&sh.metrics.scrub_bytes_verified, len);
-        if got == fp {
+        let ok = if crate::dedup::fpipe::is_pending(&fp) {
+            crate::dedup::fpipe::chunk_matches(sh, &fp, &reads[i].1)
+        } else {
+            strong.next().map(|got| got == fp).unwrap_or(false)
+        };
+        if ok {
             intact[i] = true;
             continue;
         }
@@ -918,7 +988,7 @@ pub(crate) fn fetch_healthy_copy(sh: &OsdShared, fp: &Fingerprint) -> Result<Opt
             None
         };
         if let Some(d) = data {
-            if Fingerprint::of(&d) == *fp {
+            if crate::dedup::fpipe::chunk_matches(sh, fp, &d) {
                 return Ok(Some(d));
             }
         }
@@ -1031,18 +1101,30 @@ pub fn ensure_referenced(sh: &OsdShared) -> Result<usize> {
 pub fn ensure_cit_local(sh: &OsdShared, fp: &Fingerprint, len: u32) -> Result<bool> {
     let now = sh.now_ms();
     let mut created = false;
+    // a pending identity (DESIGN.md §16) is re-created Pending, never
+    // Invalid: its strong digest is unresolved, so GC's invalid-entry
+    // repair (which re-fingerprints) must not touch it — the migration
+    // queue finishes the job instead
+    let flag = if crate::dedup::fpipe::is_pending(fp) {
+        CommitFlag::Pending
+    } else {
+        CommitFlag::Invalid
+    };
     sh.shard.cit_update(fp, |cur| match cur {
         Some(e) => Some(e),
         None => {
             created = true;
             Some(CitEntry {
                 refcount: 0,
-                flag: CommitFlag::Invalid,
+                flag,
                 len,
                 flagged_at_ms: now,
             })
         }
     })?;
+    if created && flag == CommitFlag::Pending {
+        sh.fpipe.enqueue(*fp);
+    }
     Ok(created)
 }
 

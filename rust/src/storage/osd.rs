@@ -1,6 +1,6 @@
 //! The object storage server (OSS/OSD).
 //!
-//! One `Osd` runs nine threads over a shared per-server state
+//! One `Osd` runs ten threads over a shared per-server state
 //! ([`OsdShared`], which models everything that survives a crash — the
 //! chunk store, the replica store and the DM-Shard are "disk"; the
 //! pending-flag queue and any in-flight scrub or recovery job are
@@ -17,7 +17,10 @@
 //! * **recovery worker** — re-replicates after a server loss
 //!   ([`crate::recovery`]);
 //! * **rebalance worker** — migrates holdings after a map change
-//!   ([`crate::storage::rebalance`]).
+//!   ([`crate::storage::rebalance`]);
+//! * **fingerprint-pipeline worker** — resolves tier-1 deferred chunks
+//!   through batched strong hashing and migrates them into the
+//!   content-addressed domain ([`crate::dedup::fpipe`]).
 //!
 //! Kill/crash semantics: lanes keep running but silently *drop* every
 //! envelope while the injector reports dead — callers observe a closed
@@ -90,6 +93,9 @@ pub struct OsdConfig {
     /// on top of `replication`. The default (flat) keeps every chunk at
     /// exactly `replication` copies.
     pub redundancy: RedundancyPolicy,
+    /// Fingerprint pipeline mode: inline strong hashing (the default)
+    /// or the tiered weak-prefilter/deferred scheme (DESIGN.md §16).
+    pub fp_mode: crate::dedup::fpipe::FpMode,
 }
 
 /// Everything a server owns that survives kill+restart (disk-like), plus
@@ -161,6 +167,10 @@ pub struct OsdShared {
     /// staleness (e.g. run GC at a chunk home between the phases);
     /// always `None` in production.
     pub probe_gap_hook: Mutex<Option<Box<dyn FnOnce() + Send>>>,
+    /// Tiered fingerprint pipeline state: the tier-1 weak filter plus
+    /// the volatile tier-2 pending queue (cleared on kill; a restart
+    /// re-queues from the CIT via [`crate::dedup::gc::recovery_scan`]).
+    pub fpipe: crate::dedup::fpipe::FpipeCtl,
 }
 
 impl OsdShared {
@@ -353,6 +363,20 @@ impl Osd {
             );
         }
 
+        // fingerprint-pipeline worker thread: batched strong-hash
+        // resolution of tier-1 deferred chunks (see `crate::dedup::fpipe`;
+        // only spawned in tiered mode — inline mode has no tier 2).
+        if shared.cfg.fp_mode.is_tiered() {
+            let sh = shared.clone();
+            let sd = shutdown.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("{}-fpipe", shared.id))
+                    .spawn(move || crate::dedup::fpipe::fpipe_loop(sh, sd))
+                    .expect("spawn fpipe"),
+            );
+        }
+
         Osd {
             shared,
             shutdown,
@@ -372,6 +396,7 @@ impl Osd {
         self.shared.obs.clear_spans();
         self.shared.chunk_cache.clear();
         self.shared.repair_debt.lock().unwrap().clear();
+        self.shared.fpipe.clear();
     }
 
     /// Restart after a kill/crash — see [`OsdShared::restart`].
@@ -710,10 +735,11 @@ fn dispatch(sh: &Arc<OsdShared>, lane: Lane, req: Req) -> Resp {
             }
         }
         (Lane::Backend, Req::VerifyRaw { key, fp }) => match sh.store.get(&key) {
-            // hash locally; only the verdict crosses the wire
+            // hash locally through the provider (pending-aware); only
+            // the verdict crosses the wire
             Ok(Some(d)) => Resp::CopyState {
                 present: true,
-                matches: crate::dedup::fingerprint::Fingerprint::of(&d) == fp,
+                matches: crate::dedup::fpipe::chunk_matches(sh, &fp, &d),
             },
             Ok(None) => Resp::CopyState {
                 present: false,
@@ -781,10 +807,11 @@ fn dispatch(sh: &Arc<OsdShared>, lane: Lane, req: Req) -> Resp {
             Err(e) => err_str(e),
         },
         (Lane::Replica, Req::VerifyCopy { key, fp }) => match sh.replica_store.get(&key) {
-            // hash locally; only the verdict crosses the wire
+            // hash locally through the provider (pending-aware); only
+            // the verdict crosses the wire
             Ok(Some(d)) => Resp::CopyState {
                 present: true,
-                matches: crate::dedup::fingerprint::Fingerprint::of(&d) == fp,
+                matches: crate::dedup::fpipe::chunk_matches(sh, &fp, &d),
             },
             Ok(None) => Resp::CopyState {
                 present: false,
@@ -805,6 +832,10 @@ fn dispatch(sh: &Arc<OsdShared>, lane: Lane, req: Req) -> Resp {
             }
             Resp::Ok
         }
+        (Lane::Control, Req::FpipeFlush) => match crate::dedup::fpipe::flush(sh) {
+            Ok(()) => Resp::Ok,
+            Err(e) => err_str(e),
+        },
         (Lane::Control, Req::RunGc { threshold_ms }) => match gc::run(sh, threshold_ms) {
             Ok(_) => Resp::Ok,
             Err(e) => err_str(e),

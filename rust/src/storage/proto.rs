@@ -191,6 +191,10 @@ pub enum Req {
         /// The lost server the barrier synchronizes on.
         lost: u32,
     },
+    /// Drain the tiered fingerprint pipeline: synchronously resolve and
+    /// migrate every queued pending identity (tests/benches quiesce;
+    /// see [`crate::dedup::fpipe`]). A no-op under `FpMode::Inline`.
+    FpipeFlush,
     /// Flush persistent stores.
     Sync,
 }

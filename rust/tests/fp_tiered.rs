@@ -1,0 +1,355 @@
+//! Integration: the tiered fingerprint pipeline.
+//!
+//! * State parity — an inline-hashing cluster and a tiered cluster
+//!   driven by the same workload end in byte-identical per-server state
+//!   once the pending queue is flushed, while the tiered cluster spends
+//!   strictly fewer inline strong hashes and batches its deferred ones.
+//! * Verify-before-merge — an adversarial weak-hash collision (two
+//!   distinct payloads with equal masked weak64) never merges chunk
+//!   identities: the collision is detected by byte-compare, counted in
+//!   `fp_verify_rejects`, and both payloads stay readable bit-for-bit.
+//! * Crash matrix — every pending→content-addressed migration crash
+//!   point converges to a clean audit after restart + flush + deep
+//!   scrub + GC, with pre-crash data intact.
+//! * Restart re-queue — pending chunks survive losing the in-memory
+//!   queue: the recovery scan re-registers them and a flush drains them
+//!   into the content-addressed domain.
+
+use std::collections::HashMap;
+
+use snss_dedup::api::{Cluster, ClusterConfig, Consistency, FpMode, ScrubOptions};
+use snss_dedup::cluster::ServerId;
+use snss_dedup::dedup::cit::{CitEntry, CommitFlag};
+use snss_dedup::dedup::fpipe::{pending_fp, weak64, weak_mask};
+use snss_dedup::dedup::Chunking;
+use snss_dedup::failure::CrashPoint;
+use snss_dedup::workload::{Generator, WorkloadSpec};
+
+const CHUNK: usize = 2048;
+
+/// Inline-valid consistency keeps commit flags deterministic, so the
+/// parity and collision tests compare state without async-flag races.
+fn boot(servers: usize, fp_mode: FpMode) -> Cluster {
+    Cluster::new(ClusterConfig {
+        servers,
+        replication: 1,
+        consistency: Consistency::None,
+        chunking: Chunking::Fixed { size: CHUNK },
+        fp_mode,
+        ..Default::default()
+    })
+    .expect("boot")
+}
+
+/// One deterministic chunk-sized payload per tag.
+fn payload(tag: u64) -> Vec<u8> {
+    let mut v = vec![0u8; CHUNK];
+    for (j, b) in v.iter_mut().enumerate() {
+        *b = (tag
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((j as u64).wrapping_mul(131))
+            % 251) as u8;
+    }
+    v
+}
+
+/// Brute-force an adversarial pair: two *distinct* payloads whose weak
+/// hashes agree under an 8-bit mask (256 buckets — a handful of tries by
+/// birthday), plus a third payload from a *different* bucket to use as
+/// filter-eviction traffic.
+fn collision_pair() -> (Vec<u8>, Vec<u8>, Vec<u8>) {
+    let mask = weak_mask(8);
+    let mut seen: HashMap<u64, Vec<u8>> = HashMap::new();
+    for tag in 0u64..4096 {
+        let p = payload(tag);
+        let m = weak64(&p) & mask;
+        if let Some(prev) = seen.get(&m) {
+            if *prev != p {
+                let a = prev.clone();
+                let evict = (0u64..4096)
+                    .map(payload)
+                    .find(|c| weak64(c) & mask != m)
+                    .expect("an off-bucket payload");
+                return (a, p, evict);
+            }
+        } else {
+            seen.insert(m, p);
+        }
+    }
+    panic!("no masked weak64 collision in 4096 candidates");
+}
+
+#[test]
+fn tiered_and_inline_reach_identical_state() {
+    let gen = Generator::new(WorkloadSpec {
+        object_size: 16 << 10,
+        unit: CHUNK,
+        dedup_pct: 50,
+        pool_blocks: 32,
+        zipf_theta: 0.0,
+        seed: 0xF1BE,
+    });
+    let mut snapshots = Vec::new();
+    let mut strong_hashes = Vec::new();
+    for mode in [FpMode::Inline, FpMode::tiered()] {
+        let cluster = boot(4, mode);
+        let client = cluster.client();
+        for i in 0..24 {
+            let (name, data) = gen.named_object(i);
+            client.put_object(&name, &data).expect("put");
+        }
+        // overwrites and deletes exercise pending-chunk release too
+        let (name1, _) = gen.named_object(1);
+        client.put_object(&name1, &gen.object(100)).expect("overwrite");
+        for i in [0u64, 6, 12] {
+            let (name, _) = gen.named_object(i);
+            client.delete_object(&name).expect("delete");
+        }
+        // drain the pending queue, then let GC reclaim the zero-ref
+        // leftovers both pipelines produce (orphaned pending chunks on
+        // the tiered side, orphaned strong chunks on the inline side)
+        cluster.fp_flush().unwrap();
+        cluster.flush_consistency().unwrap();
+        cluster.run_gc(0).unwrap();
+        for i in [2u64, 7, 23] {
+            let (name, data) = gen.named_object(i);
+            assert_eq!(client.get_object(&name).unwrap(), data, "{mode:?}");
+        }
+        let audit = cluster.audit().unwrap();
+        assert!(audit.is_ok(), "{mode:?}: {:?}", audit.violations);
+        let stats = cluster.stats();
+        let per_server: Vec<(u32, usize, u64, usize)> = stats
+            .per_server
+            .iter()
+            .map(|p| (p.server, p.chunks_stored, p.bytes_stored, p.objects))
+            .collect();
+        snapshots.push(per_server);
+        strong_hashes.push(stats.fp_strong_hashes);
+        if mode.is_tiered() {
+            assert!(stats.fp_deferred > 0, "nothing was deferred: {stats:?}");
+            assert!(stats.fp_weak_hits > 0, "50% dedup must hit the filter");
+            assert!(stats.fp_migrations > 0, "flush migrated nothing");
+            assert!(stats.fp_batch_calls > 0, "no batched digest calls");
+            assert!(
+                stats.fp_batch_items > stats.fp_batch_calls,
+                "deferred hashing must batch (mean batch size > 1): \
+                 {} items over {} calls",
+                stats.fp_batch_items,
+                stats.fp_batch_calls
+            );
+        }
+        cluster.shutdown();
+    }
+    assert_eq!(
+        snapshots[0], snapshots[1],
+        "inline and tiered pipelines must land byte-identical state"
+    );
+    assert!(
+        strong_hashes[1] < strong_hashes[0],
+        "tiered must spend fewer inline strong hashes: {} vs {}",
+        strong_hashes[1],
+        strong_hashes[0]
+    );
+}
+
+#[test]
+fn same_put_weak_collision_is_rejected_not_merged() {
+    let (a, b, evict) = collision_pair();
+    // a single filter slot makes eviction deterministic: the off-bucket
+    // middle chunk evicts the first chunk's weak, so the third chunk
+    // (same masked weak as the first, different bytes) misses the
+    // filter and resolves to the *same pending identity* as chunk one —
+    // the byte-verify must reject it onto the inline strong path
+    let mode = FpMode::Tiered {
+        filter_slots: 1,
+        batch: 8,
+        weak_bits: 8,
+    };
+    let cluster = boot(3, mode);
+    let client = cluster.client();
+
+    let mut three = a.clone();
+    three.extend_from_slice(&evict);
+    three.extend_from_slice(&b);
+    client.put_object("three", &three).unwrap();
+    let stats = cluster.stats();
+    assert!(stats.fp_deferred >= 2, "chunks 1+2 should defer: {stats:?}");
+    assert!(
+        stats.fp_verify_rejects >= 1,
+        "the colliding third chunk must be rejected, not merged: {stats:?}"
+    );
+    assert_eq!(client.get_object("three").unwrap(), three, "pre-flush read");
+
+    cluster.fp_flush().unwrap();
+    cluster.flush_consistency().unwrap();
+    assert_eq!(client.get_object("three").unwrap(), three, "post-flush read");
+    let audit = cluster.audit().unwrap();
+    assert!(audit.is_ok(), "{:?}", audit.violations);
+    cluster.shutdown();
+}
+
+#[test]
+fn weak_collision_against_stored_pending_chunk_is_verified() {
+    let (a, b, _) = collision_pair();
+    let mode = FpMode::Tiered {
+        filter_slots: 1 << 12,
+        batch: 8,
+        weak_bits: 8,
+    };
+    let cluster = boot(3, mode);
+    let client = cluster.client();
+
+    // plant a quarantined pending chunk holding `a` directly in the
+    // object primary's CIT + store — the deterministic equivalent of an
+    // earlier deferred put that has not been migrated yet (going
+    // through a real put would race the tier-2 worker)
+    let primary = cluster
+        .with_osd(ServerId(0), |sh| sh.object_chain("obj")[0])
+        .unwrap();
+    let pid = pending_fp("obj", weak64(&a) & weak_mask(8));
+    cluster
+        .with_osd(primary, |sh| {
+            sh.shard.cit_put(
+                &pid,
+                &CitEntry {
+                    refcount: 1,
+                    flag: CommitFlag::Pending,
+                    len: a.len() as u32,
+                    flagged_at_ms: sh.now_ms(),
+                },
+            )?;
+            sh.store.put(&pid.to_bytes(), &a)
+        })
+        .unwrap()
+        .unwrap();
+
+    // `b` has the same masked weak64 and the same object name, so tier 1
+    // resolves it to the planted identity; the bytes differ, so
+    // verify-before-merge must reject and strong-hash inline
+    client.put_object("obj", &b).unwrap();
+    let stats = cluster.stats();
+    assert!(
+        stats.fp_verify_rejects >= 1,
+        "colliding put must be rejected by byte-compare: {stats:?}"
+    );
+    assert_eq!(client.get_object("obj").unwrap(), b, "collision merged!");
+
+    // the planted identity is now an orphan (refcount with no indexed
+    // referrers — the post-crash shape): GC must reclaim it, after
+    // which the audit is clean
+    cluster.fp_flush().unwrap();
+    cluster.flush_consistency().unwrap();
+    cluster.run_gc(0).unwrap();
+    assert_eq!(client.get_object("obj").unwrap(), b, "post-GC read");
+    let audit = cluster.audit().unwrap();
+    assert!(audit.is_ok(), "{:?}", audit.violations);
+    cluster.shutdown();
+}
+
+#[test]
+fn migration_crash_matrix_converges_to_clean_audit() {
+    let points = [
+        CrashPoint::BeforeFpMigrateStore,
+        CrashPoint::AfterFpMigrateStore,
+        CrashPoint::AfterFpMigrateOmap,
+    ];
+    let gen = Generator::new(WorkloadSpec {
+        object_size: 8 << 10,
+        unit: CHUNK,
+        dedup_pct: 50,
+        pool_blocks: 16,
+        zipf_theta: 0.0,
+        seed: 0xF1BE,
+    });
+    for point in points {
+        let cluster = Cluster::new(ClusterConfig {
+            servers: 3,
+            replication: 2,
+            chunking: Chunking::Fixed { size: CHUNK },
+            fp_mode: FpMode::tiered(),
+            ..Default::default()
+        })
+        .expect("boot");
+        let client = cluster.client();
+        for i in 0..4 {
+            let (name, data) = gen.named_object(i);
+            client.put_object(&name, &data).expect("seed put");
+        }
+        for s in 0..3 {
+            cluster.arm_crash(ServerId(s), point).unwrap();
+        }
+        // aborts and ServerDown errors are expected while servers die:
+        // the armed points fire inside pending→strong migration, driven
+        // either by the background worker or by the explicit flush
+        for i in 4..10 {
+            let (name, data) = gen.named_object(i);
+            let _ = client.put_object(&name, &data);
+        }
+        let _ = cluster.fp_flush();
+        for s in 0..3 {
+            let _ = cluster.restart_server(ServerId(s));
+        }
+        cluster.fp_flush().unwrap();
+        cluster.flush_consistency().unwrap();
+        cluster.start_scrub(ScrubOptions::deep()).unwrap();
+        cluster.scrub_wait().unwrap();
+        cluster.run_gc(0).unwrap();
+        let audit = cluster.audit().unwrap();
+        assert!(audit.is_ok(), "{point:?}: {:?}", audit.violations);
+        // pre-crash data stays readable
+        for i in 0..4 {
+            let (name, data) = gen.named_object(i);
+            assert_eq!(client.get_object(&name).unwrap(), data, "{point:?}");
+        }
+        cluster.shutdown();
+    }
+}
+
+#[test]
+fn restart_requeues_pending_chunks() {
+    let gen = Generator::new(WorkloadSpec {
+        object_size: 8 << 10,
+        unit: CHUNK,
+        dedup_pct: 0,
+        pool_blocks: 16,
+        zipf_theta: 0.0,
+        seed: 0x5EED,
+    });
+    let cluster = boot(3, FpMode::tiered());
+    let client = cluster.client();
+    for i in 0..6 {
+        let (name, data) = gen.named_object(i);
+        client.put_object(&name, &data).expect("put");
+    }
+    let stats = cluster.stats();
+    assert!(stats.fp_deferred > 0, "unique chunks should defer: {stats:?}");
+
+    // kill wipes each server's in-memory pending queue; restart's
+    // recovery scan must rebuild it from the Pending commit flags
+    for s in 0..3 {
+        cluster.kill_server(ServerId(s)).unwrap();
+    }
+    for s in 0..3 {
+        cluster.restart_server(ServerId(s)).unwrap();
+    }
+    cluster.fp_flush().unwrap();
+    cluster.flush_consistency().unwrap();
+    let stats = cluster.stats();
+    assert!(stats.fp_migrations > 0, "nothing migrated after restart: {stats:?}");
+    for s in 0..3 {
+        let drained = cluster
+            .with_osd(ServerId(s), |sh| {
+                sh.fpipe.is_empty() && sh.fpipe.inflight() == 0
+            })
+            .unwrap();
+        assert!(drained, "server {s} still holds queued pending chunks");
+    }
+    cluster.run_gc(0).unwrap();
+    let audit = cluster.audit().unwrap();
+    assert!(audit.is_ok(), "{:?}", audit.violations);
+    for i in 0..6 {
+        let (name, data) = gen.named_object(i);
+        assert_eq!(client.get_object(&name).unwrap(), data);
+    }
+    cluster.shutdown();
+}
